@@ -1,0 +1,38 @@
+//! Figure 10 (appendix): runs at different total step budgets — Sophia
+//! beats AdamW and Lion at every budget, each with its own schedule.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 10: different total-step budgets (b0) ==\n");
+    if !common::require(&["b0"]) {
+        return Ok(());
+    }
+    let budgets = [scaled(150), scaled(300), scaled(600)];
+    let mut table = Table::new(&["T", "adamw", "lion", "sophia_g"]);
+    let mut rows = Vec::new();
+    for &t in &budgets {
+        let (a, _) = common::run("b0", Optimizer::AdamW, 0.0, t, 10, t)?;
+        let (l, _) = common::run("b0", Optimizer::Lion, 0.0, t, 10, t)?;
+        let (s, _) = common::run("b0", Optimizer::SophiaG, 0.0, t, 10, t)?;
+        table.row(&[
+            t.to_string(),
+            format!("{:.4}", a.final_val_loss),
+            format!("{:.4}", l.final_val_loss),
+            format!("{:.4}", s.final_val_loss),
+        ]);
+        rows.push(vec![
+            t.to_string(),
+            a.final_val_loss.to_string(),
+            l.final_val_loss.to_string(),
+            s.final_val_loss.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper shape: Sophia's column is the lowest at every budget.");
+    common::save_csv("fig10_budgets.csv", &["T", "adamw", "lion", "sophia_g"], &rows);
+    Ok(())
+}

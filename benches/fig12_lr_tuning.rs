@@ -1,0 +1,57 @@
+//! Figure 12 (appendix B.1): peak-LR grid results including blow-ups —
+//! the protocol for picking the Table 2 peak LRs.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::coordinator::sweep::{run_point, SweepPoint};
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 12: peak-LR grid (b0) ==\n");
+    if !common::require(&["b0"]) {
+        return Ok(());
+    }
+    let steps = scaled(100);
+    let grid = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2];
+    let mut base = common::base_cfg();
+    base.preset = "b0".into();
+    base.warmup = 5;
+    base.eval_every = steps;
+    base.eval_batches = 2;
+    let mut table = Table::new(&["optimizer", "lr", "val loss", "diverged"]);
+    let mut rows = Vec::new();
+    let mut winners = Vec::new();
+    for opt in [Optimizer::AdamW, Optimizer::Lion, Optimizer::SophiaG] {
+        let mut best: Option<(f64, f64)> = None;
+        for &lr in &grid {
+            let p = SweepPoint {
+                optimizer: opt, lr, steps,
+                hess_interval: 10, preset: "b0".into(),
+            };
+            let r = run_point(&base, &p, false)?;
+            table.row(&[
+                opt.name().into(),
+                format!("{lr:.0e}"),
+                format!("{:.4}", r.outcome.final_val_loss),
+                r.outcome.diverged.to_string(),
+            ]);
+            rows.push(vec![
+                opt.name().to_string(), lr.to_string(),
+                r.outcome.final_val_loss.to_string(), r.outcome.diverged.to_string(),
+            ]);
+            if !r.outcome.diverged
+                && best.map(|(_, v)| r.outcome.final_val_loss < v).unwrap_or(true)
+            {
+                best = Some((lr, r.outcome.final_val_loss));
+            }
+        }
+        if let Some((lr, v)) = best {
+            winners.push(format!("{}: lr {lr:.0e} (val {v:.4})", opt.name()));
+        }
+    }
+    println!("{}", table.render());
+    println!("grid winners (feed Table 2): {}", winners.join("; "));
+    common::save_csv("fig12_lr_grid.csv", &["optimizer", "lr", "val_loss", "diverged"], &rows);
+    Ok(())
+}

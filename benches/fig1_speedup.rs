@@ -1,0 +1,64 @@
+//! Figure 1(a-c) / Figure 4(b-d): "Sophia is 2x faster" under the paper's
+//! Section 3.2 protocol — compare AdamW tuned for budget T against Sophia
+//! run for T/2 (each with its own cosine schedule), plus the
+//! steps-to-equal-loss curve comparison.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::metrics::steps_to_loss;
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 1(a-c)/4: steps & compute to reach equal validation loss ==\n");
+    if !common::require(&["b1", "b2"]) {
+        return Ok(());
+    }
+    let mut table = Table::new(&[
+        "preset", "T", "adamw@T", "sophia@T/2", "sophia@T",
+        "steps_to_adamw_loss", "speedup",
+    ]);
+    let mut rows = Vec::new();
+    for preset in ["b1", "b2"] {
+        let t_budget = scaled(400);
+        let (adamw, _) = common::run(preset, Optimizer::AdamW, 0.0, t_budget, 10, t_budget / 8)?;
+        let (sophia_half, _) =
+            common::run(preset, Optimizer::SophiaG, 0.0, t_budget / 2, 10, t_budget / 16)?;
+        let (sophia_full, curve) =
+            common::run(preset, Optimizer::SophiaG, 0.0, t_budget, 10, t_budget / 40)?;
+        let reach = steps_to_loss(&curve, adamw.final_val_loss);
+        let speedup = reach
+            .map(|s| format!("{:.2}x", t_budget as f64 / s as f64))
+            .unwrap_or_else(|| "-".into());
+        table.row(&[
+            preset.into(),
+            t_budget.to_string(),
+            format!("{:.4}", adamw.final_val_loss),
+            format!("{:.4}", sophia_half.final_val_loss),
+            format!("{:.4}", sophia_full.final_val_loss),
+            reach.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            speedup.clone(),
+        ]);
+        rows.push(vec![
+            preset.to_string(),
+            t_budget.to_string(),
+            adamw.final_val_loss.to_string(),
+            sophia_half.final_val_loss.to_string(),
+            sophia_full.final_val_loss.to_string(),
+            reach.map(|s| s.to_string()).unwrap_or_default(),
+        ]);
+        let verdict = if sophia_half.final_val_loss <= adamw.final_val_loss {
+            "PASS: Eval(Sophia, T/2) <= Eval(AdamW, T)  — the paper's 2x criterion"
+        } else {
+            "note: Sophia@T/2 above AdamW@T on this run (shape check: see curve)"
+        };
+        println!("[{preset}] {verdict}");
+    }
+    println!("\n{}", table.render());
+    common::save_csv(
+        "fig1_speedup.csv",
+        &["preset", "T", "adamw_T", "sophia_halfT", "sophia_T", "steps_to_adamw_loss"],
+        &rows,
+    );
+    Ok(())
+}

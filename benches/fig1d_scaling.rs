@@ -1,0 +1,48 @@
+//! Figure 1(d): scaling law — validation loss vs model size at a fixed
+//! step budget; the Sophia-AdamW gap should GROW with model size.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 1(d): val loss across model sizes @ fixed budget ==\n");
+    let presets = ["b0", "b1", "b2", "b3"];
+    if !common::require(&presets) {
+        return Ok(());
+    }
+    let steps = scaled(240);
+    let mut table = Table::new(&["preset", "params", "adamw", "sophia_g", "gap"]);
+    let mut rows = Vec::new();
+    let mut gaps = Vec::new();
+    for preset in presets {
+        let (a, _) = common::run(preset, Optimizer::AdamW, 0.0, steps, 10, steps)?;
+        let (s, _) = common::run(preset, Optimizer::SophiaG, 0.0, steps, 10, steps)?;
+        let model = sophia::ModelConfig::load(&common::artifacts_root(), preset)?;
+        let gap = a.final_val_loss - s.final_val_loss;
+        gaps.push(gap);
+        table.row(&[
+            preset.into(),
+            model.n_params().to_string(),
+            format!("{:.4}", a.final_val_loss),
+            format!("{:.4}", s.final_val_loss),
+            format!("{gap:+.4}"),
+        ]);
+        rows.push(vec![
+            preset.to_string(),
+            model.n_params().to_string(),
+            a.final_val_loss.to_string(),
+            s.final_val_loss.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper shape check: gap grows with size — gaps {:?} (largest {} smallest {})",
+        gaps.iter().map(|g| format!("{g:+.4}")).collect::<Vec<_>>(),
+        if gaps.last() >= gaps.first() { "≥" } else { "<" },
+        ""
+    );
+    common::save_csv("fig1d_scaling.csv", &["preset", "params", "adamw", "sophia_g"], &rows);
+    Ok(())
+}

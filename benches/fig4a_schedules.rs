@@ -1,0 +1,41 @@
+//! Figure 4(a): cosine LR schedules for budgets T and T/2 share the peak
+//! but decay differently — the T/2 run is NOT a truncation of the T run
+//! (the core of the paper's Section 3.2 comparison methodology).
+
+mod common;
+
+use sophia::schedule::Schedule;
+use sophia::util::bench::Table;
+
+fn main() {
+    println!("== Figure 4(a): LR schedules for T vs T/2 ==\n");
+    let t_total = 800;
+    let full = Schedule::cosine(1e-3, 40, t_total, 0.05);
+    let half = Schedule::cosine(1e-3, 40, t_total / 2, 0.05);
+    let mut table = Table::new(&["step", "lr(T)", "lr(T/2)", "ratio"]);
+    let mut rows = Vec::new();
+    for t in (50..=t_total).step_by(50) {
+        let lf = full.lr(t);
+        let lh = if t <= t_total / 2 { half.lr(t) } else { f64::NAN };
+        table.row(&[
+            t.to_string(),
+            format!("{lf:.2e}"),
+            if lh.is_nan() { "-".into() } else { format!("{lh:.2e}") },
+            if lh.is_nan() { "-".into() } else { format!("{:.3}", lh / lf) },
+        ]);
+        rows.push(vec![t.to_string(), lf.to_string(), lh.to_string()]);
+    }
+    println!("{}", table.render());
+    // assertion of the paper's point
+    let mut always_leq = true;
+    for t in 41..=t_total / 2 {
+        if half.lr(t) > full.lr(t) + 1e-15 {
+            always_leq = false;
+        }
+    }
+    println!(
+        "shape check: lr_T/2(t) <= lr_T(t) for all t after warmup: {}",
+        if always_leq { "PASS" } else { "FAIL" }
+    );
+    common::save_csv("fig4a_schedules.csv", &["step", "lr_T", "lr_halfT"], &rows);
+}

@@ -1,0 +1,47 @@
+//! Figure 5: validation-loss curves for AdamW, Lion, AdaHessian, Sophia-H
+//! and Sophia-G at the same step budget (per-optimizer tuned peak LRs).
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 5: validation loss curves (preset b1) ==\n");
+    if !common::require(&["b1"]) {
+        return Ok(());
+    }
+    let steps = scaled(360);
+    let opts = [
+        Optimizer::AdamW,
+        Optimizer::Lion,
+        Optimizer::AdaHessianClip,
+        Optimizer::SophiaH,
+        Optimizer::SophiaG,
+    ];
+    let mut table = Table::new(&["optimizer", "final val loss", "clip-trigger frac"]);
+    let mut rows = Vec::new();
+    let mut finals = Vec::new();
+    for opt in opts {
+        let (out, curve) = common::run("b1", opt, 0.0, steps, 10, steps / 12)?;
+        table.row(&[
+            opt.name().into(),
+            format!("{:.4}", out.final_val_loss),
+            format!("{:.3}", out.clip_trigger_frac),
+        ]);
+        for (s, v) in &curve {
+            rows.push(vec![opt.name().to_string(), s.to_string(), v.to_string()]);
+        }
+        finals.push((opt, out.final_val_loss));
+    }
+    println!("{}", table.render());
+    let adamw = finals.iter().find(|(o, _)| *o == Optimizer::AdamW).unwrap().1;
+    let sg = finals.iter().find(|(o, _)| *o == Optimizer::SophiaG).unwrap().1;
+    let sh = finals.iter().find(|(o, _)| *o == Optimizer::SophiaH).unwrap().1;
+    println!(
+        "paper shape: Sophia-G ({sg:.4}) <= Sophia-H ({sh:.4}) < AdamW ({adamw:.4}): {}",
+        if sg <= adamw && sh <= adamw { "PASS" } else { "check curves" }
+    );
+    common::save_csv("fig5_losscurves.csv", &["optimizer", "step", "val_loss"], &rows);
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Figure 7: training stability.
+//!  (a) gradient-clip trigger fraction per optimizer
+//!  (b) largest stable LR with/without the attention-temperature trick
+//!  (c) Sophia's insensitivity to (gamma, beta2)
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::coordinator::sweep;
+use sophia::util::bench::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    if !common::require(&["b0", "b1"]) {
+        return Ok(());
+    }
+    let steps = scaled(150);
+
+    println!("== Figure 7(a): grad-clip trigger fraction (b1, {steps} steps) ==\n");
+    let mut ta = Table::new(&["optimizer", "trigger frac", "final val"]);
+    for opt in [Optimizer::AdamW, Optimizer::Lion, Optimizer::SophiaH, Optimizer::SophiaG] {
+        let (out, _) = common::run("b1", opt, 0.0, steps, 10, steps)?;
+        ta.row(&[
+            opt.name().into(),
+            format!("{:.3}", out.clip_trigger_frac),
+            format!("{:.4}", out.final_val_loss),
+        ]);
+    }
+    println!("{}", ta.render());
+    println!("paper shape: Sophia triggers global grad clipping far less often.\n");
+
+    println!("== Figure 7(b): max stable LR, attention-temperature trick ==\n");
+    let mut base = common::base_cfg();
+    base.preset = "b1".into();
+    base.warmup = 5;
+    let grid = [3e-4, 1e-3, 3e-3, 1e-2, 3e-2];
+    let sweep_steps = scaled(60);
+    let mut tb = Table::new(&["variant", "max stable lr", "first blow-up lr"]);
+    // AdamW without the trick
+    let (s, b) = sweep::max_stable_lr(&base, Optimizer::AdamW, "b1", sweep_steps, &grid)?;
+    tb.row(&["adamw (no trick)".into(), fmt(s), fmt(b)]);
+    // AdamW with the trick (artifact override)
+    let mut base_trick = base.clone();
+    base_trick.train_artifact_override = Some("train_adamw_trick".into());
+    let (s, b) = sweep::max_stable_lr(&base_trick, Optimizer::AdamW, "b1", sweep_steps, &grid)?;
+    tb.row(&["adamw (trick)".into(), fmt(s), fmt(b)]);
+    // Sophia without the trick
+    let (s, b) = sweep::max_stable_lr(&base, Optimizer::SophiaG, "b1", sweep_steps, &grid)?;
+    tb.row(&["sophia_g (no trick)".into(), fmt(s), fmt(b)]);
+    println!("{}", tb.render());
+    println!("paper shape: Sophia stays stable at LRs where plain AdamW blows up\n(and does not need the trick).\n");
+
+    println!("== Figure 7(c): (gamma, beta2) sensitivity (b0, {steps} steps) ==\n");
+    let mut tc = Table::new(&["gamma", "beta2", "final val loss"]);
+    let mut rows = Vec::new();
+    for (tag, gamma) in [("0p005", 0.005), ("0p01", 0.01), ("0p02", 0.02), ("0p2", 0.2)] {
+        let mut cfg = common::base_cfg();
+        cfg.preset = "b0".into();
+        cfg.optimizer = Optimizer::SophiaG;
+        cfg.steps = steps;
+        cfg.eval_every = steps;
+        cfg.train_artifact_override = Some(format!("train_sophia_gamma{tag}"));
+        let mut t = sophia::Trainer::new(cfg)?;
+        let out = t.train_steps(steps, false)?;
+        tc.row(&[gamma.to_string(), "0.99".into(), format!("{:.4}", out.final_val_loss)]);
+        rows.push(vec![gamma.to_string(), "0.99".into(), out.final_val_loss.to_string()]);
+    }
+    for (tag, b2) in [("0p9", 0.9), ("0p95", 0.95)] {
+        let mut cfg = common::base_cfg();
+        cfg.preset = "b0".into();
+        cfg.optimizer = Optimizer::SophiaG;
+        cfg.steps = steps;
+        cfg.eval_every = steps;
+        cfg.hess_artifact_override = Some(format!("hess_gnb_b2{tag}"));
+        let mut t = sophia::Trainer::new(cfg)?;
+        let out = t.train_steps(steps, false)?;
+        tc.row(&["0.05".into(), b2.to_string(), format!("{:.4}", out.final_val_loss)]);
+        rows.push(vec!["0.05".into(), b2.to_string(), out.final_val_loss.to_string()]);
+    }
+    println!("{}", tc.render());
+    println!("paper shape: all combinations land within a narrow loss band.");
+    common::save_csv("fig7c_sensitivity.csv", &["gamma", "beta2", "val_loss"], &rows);
+    Ok(())
+}
+
+fn fmt(x: Option<f64>) -> String {
+    x.map(|v| format!("{v:.0e}")).unwrap_or_else(|| "-".into())
+}

@@ -1,0 +1,85 @@
+//! L3 perf probe (EXPERIMENTS.md §Perf): how much of a training step is
+//! coordinator overhead (literal construction, state threading, batching,
+//! logging) versus PJRT execute time? Target: < 5% outside execute.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::data::{self, Split};
+use sophia::runtime::{lit_i32, run as run_exe, scalar_f32, ModelState, Runtime};
+use sophia::util::bench::{bench, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Perf: L3 coordinator overhead breakdown ==\n");
+    if !common::require(&["b1"]) {
+        return Ok(());
+    }
+    let preset = "b1";
+    let model = sophia::ModelConfig::load(&common::artifacts_root(), preset)?;
+    let mut rt = Runtime::cpu()?;
+    let state = ModelState::init(&model, 0)?;
+    let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
+    let mut loader = data::Loader::new(tok, 1, Split::Train, model.batch, model.ctx);
+    let batch = loader.next_batch();
+
+    // (1) raw execute with pre-built inputs (the floor)
+    let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
+    let lr = scalar_f32(1e-3);
+    let t = scalar_f32(1.0);
+    let n = state.n_leaves();
+    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
+    inputs.extend(state.params.iter());
+    inputs.extend(state.m.iter());
+    inputs.extend(state.h.iter());
+    inputs.push(&tokens);
+    inputs.push(&lr);
+    inputs.push(&t);
+    rt.load_artifact(&model, "train_adamw")?;
+    let exe_path = model.artifact_path("train_adamw");
+    let exe = rt.load(&exe_path)?;
+    let raw = bench(3, 15, || {
+        let _ = run_exe(exe, &inputs).unwrap();
+    });
+
+    // (2) full Trainer step (includes batch fetch, literals, logging)
+    let mut cfg = common::base_cfg();
+    cfg.preset = preset.into();
+    cfg.optimizer = Optimizer::AdamW;
+    cfg.steps = 10_000;
+    let mut trainer = sophia::Trainer::new(cfg)?;
+    let full = bench(3, 15, || {
+        let _ = trainer.train_step().unwrap();
+    });
+
+    // (3) data pipeline alone
+    let data_t = bench(3, 15, || {
+        let _ = loader.next_batch();
+    });
+
+    let mut table = Table::new(&["component", "median ms", "min ms", "max ms"]);
+    for (name, s) in [("execute only", &raw), ("full train_step", &full), ("next_batch", &data_t)] {
+        table.row(&[
+            name.into(),
+            format!("{:.2}", s.median_ms),
+            format!("{:.2}", s.min_ms),
+            format!("{:.2}", s.max_ms),
+        ]);
+    }
+    println!("{}", table.render());
+    let overhead = (full.median_ms - raw.median_ms).max(0.0);
+    println!(
+        "coordinator overhead: {:.2} ms = {:.1}% of the step (target < 5%)",
+        overhead,
+        100.0 * overhead / full.median_ms
+    );
+    common::save_csv(
+        "perf_l3_overhead.csv",
+        &["component", "median_ms"],
+        &[
+            vec!["execute".into(), raw.median_ms.to_string()],
+            vec!["train_step".into(), full.median_ms.to_string()],
+            vec!["next_batch".into(), data_t.median_ms.to_string()],
+        ],
+    );
+    Ok(())
+}

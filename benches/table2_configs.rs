@@ -1,0 +1,46 @@
+//! Table 2: model configurations and peak learning rates. Prints the
+//! preset family (the paper's 30M..770M analog) with parameter counts and
+//! the per-optimizer default peak LRs; cross-checks every manifest.
+
+mod common;
+
+use sophia::config::Optimizer;
+use sophia::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table 2: model configurations & peak learning rates ==\n");
+    let mut table = Table::new(&[
+        "preset", "params", "d_model", "n_head", "depth", "ctx", "vocab",
+        "adamw lr", "lion lr", "sophia lr",
+    ]);
+    let mut rows = Vec::new();
+    for preset in ["nano", "b0", "b1", "b2", "b3", "e2e"] {
+        if !common::have(preset) {
+            continue;
+        }
+        let m = sophia::ModelConfig::load(&common::artifacts_root(), preset)?;
+        table.row(&[
+            preset.into(),
+            m.n_params().to_string(),
+            m.d_model.to_string(),
+            m.n_head.to_string(),
+            m.depth.to_string(),
+            m.ctx.to_string(),
+            m.vocab.to_string(),
+            format!("{:.0e}", Optimizer::AdamW.default_lr()),
+            format!("{:.0e}", Optimizer::Lion.default_lr()),
+            format!("{:.0e}", Optimizer::SophiaG.default_lr()),
+        ]);
+        rows.push(vec![
+            preset.to_string(), m.n_params().to_string(), m.d_model.to_string(),
+            m.n_head.to_string(), m.depth.to_string(),
+        ]);
+        // manifest consistency checks (the "table" must describe reality)
+        assert_eq!(m.params.len(), 9, "{preset}: unexpected param-leaf count");
+        assert_eq!(m.d_model % m.n_head, 0, "{preset}: head split");
+    }
+    println!("{}", table.render());
+    println!("(paper Table 2 analog; see fig12_lr_tuning for the grid evidence)");
+    common::save_csv("table2_configs.csv", &["preset", "params", "d_model", "n_head", "depth"], &rows);
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Figure 6 style demo: pre-train `b1` briefly with AdamW and Sophia-G,
+//! then run the 4 synthetic few-shot subtasks on both checkpoints.
+//!
+//!     cargo run --release --example downstream_eval [STEPS]
+
+use anyhow::Result;
+use sophia::runtime::Runtime;
+use sophia::{data, eval, Optimizer, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let n_items = 12;
+
+    for opt in [Optimizer::AdamW, Optimizer::SophiaG] {
+        let cfg = TrainConfig {
+            preset: "b1".into(),
+            optimizer: opt,
+            steps,
+            eval_every: steps,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let out = trainer.train_steps(steps, false)?;
+        println!(
+            "\n{} after {} steps (val loss {:.4}):",
+            opt.name(),
+            steps,
+            out.final_val_loss
+        );
+
+        let model = trainer.model.clone();
+        let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
+        let mut rt = Runtime::cpu()?;
+        for task in eval::SUBTASKS {
+            let items = eval::build(task, n_items, 5);
+            let mut dec = eval::Decoder {
+                rt: &mut rt,
+                model: &model,
+                tok: tok.clone(),
+                params: &trainer.state.params,
+            };
+            let acc = eval::score_mc(&mut dec, &items)?;
+            let floor = 1.0 / items[0].n_candidates as f64;
+            println!("  {task:>12}: acc {acc:.3} (random floor {floor:.3})");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Quickstart: train the tiny `nano` preset for 60 steps with Sophia-G and
+//! AdamW and compare validation losses.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use sophia::{Optimizer, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let steps = 60;
+    for opt in [Optimizer::AdamW, Optimizer::SophiaG] {
+        let cfg = TrainConfig {
+            preset: "nano".into(),
+            optimizer: opt,
+            steps,
+            hess_interval: 10,
+            eval_every: steps,
+            eval_batches: 8,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let out = trainer.train_steps(steps, false)?;
+        println!(
+            "{:>9}: train {:.4}  val {:.4}  ({:.1} ms/step, hessian {:.1} ms avg)",
+            opt.name(),
+            out.final_train_loss,
+            out.final_val_loss,
+            out.avg_step_ms,
+            out.avg_hess_ms
+        );
+    }
+    println!("\nExpected: sophia_g reaches a lower validation loss than adamw in the same budget.");
+    Ok(())
+}

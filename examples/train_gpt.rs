@@ -1,0 +1,70 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): pre-train the largest
+//! CPU-feasible GPT preset (`e2e`, ~1.9M params, BPE-512 tokenizer,
+//! ctx 128) for several hundred steps with BOTH AdamW and Sophia-G on the
+//! synthetic corpus, streaming loss curves to runs/e2e_<opt>.jsonl,
+//! then report the paper's headline comparison: validation loss at equal
+//! steps and the step at which Sophia matches AdamW's final loss.
+//!
+//!     cargo run --release --example train_gpt [STEPS]
+
+use anyhow::Result;
+use sophia::metrics::steps_to_loss;
+use sophia::{Optimizer, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    std::fs::create_dir_all("runs")?;
+
+    let mut curves = Vec::new();
+    for opt in [Optimizer::AdamW, Optimizer::SophiaG] {
+        eprintln!("=== training e2e ({} steps) with {} ===", steps, opt.name());
+        let cfg = TrainConfig {
+            preset: "e2e".into(),
+            optimizer: opt,
+            steps,
+            hess_interval: 10,
+            eval_every: (steps / 12).max(5),
+            eval_batches: 2,
+            log_path: Some(format!("runs/e2e_{}.jsonl", opt.name()).into()),
+            ckpt_dir: Some(format!("runs/e2e_{}_ckpt", opt.name()).into()),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let out = trainer.train()?;
+        trainer.save_checkpoint(&std::path::PathBuf::from(format!(
+            "runs/e2e_{}_ckpt",
+            opt.name()
+        )))?;
+        println!(
+            "{:>9}: final val {:.4}  ({} steps, {:.0} ms/step, hess {:.0} ms, clip-trigger {:.2})",
+            opt.name(), out.final_val_loss, out.steps, out.avg_step_ms,
+            out.avg_hess_ms, out.clip_trigger_frac
+        );
+        curves.push((opt, trainer.log.val_curve(), out));
+    }
+
+    let (_, adamw_curve, adamw_out) = &curves[0];
+    let (_, sophia_curve, sophia_out) = &curves[1];
+    println!("\n=== paper headline (Fig 1/4 protocol) ===");
+    println!("AdamW  final val loss @ {steps}: {:.4}", adamw_out.final_val_loss);
+    println!("Sophia final val loss @ {steps}: {:.4}", sophia_out.final_val_loss);
+    match steps_to_loss(sophia_curve, adamw_out.final_val_loss) {
+        Some(s) => println!(
+            "Sophia reaches AdamW's final loss at step {} ({:.2}x speed-up in steps)",
+            s,
+            steps as f64 / s as f64
+        ),
+        None => println!("Sophia did not reach AdamW's final loss (increase steps)"),
+    }
+    match steps_to_loss(adamw_curve, sophia_out.final_val_loss) {
+        Some(_) => {}
+        None => println!(
+            "AdamW never reaches Sophia's final loss within {steps} steps"
+        ),
+    }
+    println!("loss curves: runs/e2e_adamw.jsonl runs/e2e_sophia_g.jsonl");
+    Ok(())
+}

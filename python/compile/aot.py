@@ -1,0 +1,232 @@
+"""AOT compile path: lower every (preset, artifact) pair to HLO *text* and
+write artifacts/<preset>/{*.hlo.txt, manifest.json} (+ golden.json for the
+`nano` preset, used by the Rust integration tests).
+
+HLO text — not `lowered.compile()` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Runs once at build time (`make artifacts`); Python is never on the training
+path.
+
+Usage:  python -m compile.aot [--out ../artifacts] [--presets nano,b0,...]
+                              [--force]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, optim
+from .configs import HESS_VARIANTS, HYPERS, PRESETS, TRAIN_VARIANTS
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg):
+    p = [jax.ShapeDtypeStruct(s, F32) for _, s, _ in cfg.param_table()]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.ctx + 1), I32)
+    toks_ctx = jax.ShapeDtypeStruct((cfg.batch, cfg.ctx), I32)
+    f = jax.ShapeDtypeStruct((), F32)
+    i = jax.ShapeDtypeStruct((), I32)
+    return p, tok, toks_ctx, f, i
+
+
+def artifact_plan(cfg):
+    """Which artifacts to lower for a preset (full set for the test + small
+    bench presets; trimmed for the larger ones to keep `make artifacts`
+    fast).  Returns {artifact_name: (builder_fn, arg_specs)}."""
+    p, tok, toks_ctx, f, i = _specs(cfg)
+    plan = {}
+
+    trains = list(TRAIN_VARIANTS)
+    hesses = list(HESS_VARIANTS)
+    if cfg.name in ("b2", "b3"):
+        trains = ["adamw", "lion", "sophia", "sophia_h"]
+        hesses = ["gnb", "hutchinson"]
+    elif cfg.name == "e2e":
+        trains = ["adamw", "sophia"]
+        hesses = ["gnb"]
+
+    for v in trains:
+        plan[f"train_{v}"] = (optim.make_train_step(cfg, v), (p, p, p, tok, f, f))
+    for v in hesses:
+        plan[f"hess_{v}"] = (optim.make_hess_step(cfg, v), (p, p, tok, i))
+    plan["eval_step"] = (optim.make_eval_step(cfg), (p, tok))
+    plan["logits_last"] = (optim.make_logits_last(cfg), (p, toks_ctx))
+    plan["hess_diag"] = (optim.make_hess_diag(cfg), (p, tok, i))
+
+    if cfg.name == "b1":
+        # Figure 7(b): the attention-temperature stability trick variants.
+        plan["train_adamw_trick"] = (
+            optim.make_train_step(cfg, "adamw", attn_temp=True), (p, p, p, tok, f, f))
+        plan["train_sophia_trick"] = (
+            optim.make_train_step(cfg, "sophia", attn_temp=True), (p, p, p, tok, f, f))
+    if cfg.name == "b0":
+        # Figure 7(c): gamma / beta2 sensitivity (compile-time statics).
+        for g in (0.005, 0.01, 0.02, 0.2):
+            tag = str(g).replace(".", "p")
+            plan[f"train_sophia_gamma{tag}"] = (
+                optim.make_train_step(cfg, "sophia", gamma_override=g),
+                (p, p, p, tok, f, f))
+        for b2 in (0.9, 0.95):
+            tag = str(b2).replace(".", "p")
+            plan[f"hess_gnb_b2{tag}"] = (
+                optim.make_hess_step(cfg, "gnb", beta2_override=b2),
+                (p, p, tok, i))
+    if cfg.name == "nano":
+        # Full-Pallas-model composition proof: LN + CE kernels on the fwd/bwd
+        # path inside the same artifact as the Sophia update kernel.
+        plan["train_sophia_pk"] = (
+            optim.make_train_step(cfg, "sophia", use_pallas_model=True),
+            (p, p, p, tok, f, f))
+        plan["eval_step_pk"] = (
+            optim.make_eval_step(cfg, use_pallas_model=True), (p, tok))
+    return plan
+
+
+def write_manifest(cfg, outdir, names):
+    man = {
+        "config": cfg.to_dict(),
+        "params": [
+            {"name": n, "shape": list(s), "init_std": std}
+            for n, s, std in cfg.param_table()
+        ],
+        "artifacts": {n: f"{n}.hlo.txt" for n in names},
+        "hypers": HYPERS,
+        "io": {
+            "train_inputs": "params*, m*, h*, tokens[B,T+1]:i32, lr:f32, t:f32",
+            "train_outputs": "params*, m*, h*, loss, gnorm, clipfrac",
+            "hess_inputs": "params*, h*, tokens[B,T+1]:i32, seed:i32",
+            "hess_outputs": "h*, hnorm",
+            "eval": "(params*, tokens) -> (loss,)",
+            "logits_last": "(params*, tokens[B,T]) -> (logits[B,V],)",
+            "hess_diag": "(params*, tokens, seed) -> (hhat*,)",
+        },
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as fh:
+        json.dump(man, fh, indent=1)
+
+
+def write_golden(cfg, outdir):
+    """Deterministic 3-step Sophia-G trace + one AdamW step + eval, recorded
+    so the Rust runtime integration test can assert bit-comparable numbers
+    against the very HLO artifacts it loads."""
+    key = jax.random.PRNGKey(1234)
+    params = model.param_list(model.init_params(cfg, key))
+    zeros = model.zeros_like_params(cfg)
+    tokens = (
+        jnp.arange(cfg.batch * (cfg.ctx + 1), dtype=jnp.int32).reshape(
+            cfg.batch, cfg.ctx + 1
+        )
+        * 7919
+    ) % cfg.vocab
+
+    train = jax.jit(optim.make_train_step(cfg, "sophia"))
+    hess = jax.jit(optim.make_hess_step(cfg, "gnb"))
+    evalf = jax.jit(optim.make_eval_step(cfg))
+
+    np_ = len(params)
+    m, h = list(zeros), list(zeros)
+    losses, gnorms, clipfracs = [], [], []
+    hnorm = 0.0
+    for t in range(1, 4):
+        if (t - 1) % 2 == 0:  # refresh cadence k=2 in the golden trace
+            out = hess(params, h, tokens, t)
+            h, hnorm = list(out[:np_]), float(out[np_])
+        out = train(params, m, h, tokens, jnp.float32(1e-3), jnp.float32(t))
+        params = list(out[:np_])
+        m = list(out[np_ : 2 * np_])
+        h2 = list(out[2 * np_ : 3 * np_])
+        assert all((a == b).all() for a, b in zip(h, h2))
+        losses.append(float(out[3 * np_]))
+        gnorms.append(float(out[3 * np_ + 1]))
+        clipfracs.append(float(out[3 * np_ + 2]))
+    eval_loss = float(evalf(params, tokens)[0])
+    checksum = float(sum(jnp.sum(jnp.abs(p)) for p in params))
+
+    golden = {
+        "seed": 1234,
+        "lr": 1e-3,
+        "k": 2,
+        "token_formula": "(iota * 7919) % vocab",
+        "losses": losses,
+        "gnorms": gnorms,
+        "clipfracs": clipfracs,
+        "hnorm_last": hnorm,
+        "eval_loss": eval_loss,
+        "param_abs_sum": checksum,
+        "init_params_abs_sum": float(
+            sum(
+                jnp.sum(jnp.abs(p))
+                for p in model.param_list(model.init_params(cfg, key))
+            )
+        ),
+    }
+    # Dump the exact initial parameters so Rust replays from identical state
+    # (Rust has its own initializer; golden runs must not depend on it).
+    init = model.param_list(model.init_params(cfg, key))
+    with open(os.path.join(outdir, "golden_init.bin"), "wb") as fh:
+        import numpy as np
+
+        for leaf in init:
+            fh.write(np.asarray(leaf, dtype=np.float32).tobytes())
+    with open(os.path.join(outdir, "golden.json"), "w") as fh:
+        json.dump(golden, fh, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="nano,b0,b1,b2,b3,e2e")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    for name in args.presets.split(","):
+        cfg = PRESETS[name]
+        outdir = os.path.join(args.out, name)
+        os.makedirs(outdir, exist_ok=True)
+        plan = artifact_plan(cfg)
+        done = all(
+            os.path.exists(os.path.join(outdir, f"{n}.hlo.txt")) for n in plan
+        ) and os.path.exists(os.path.join(outdir, "manifest.json"))
+        if done and not args.force:
+            print(f"[aot] {name}: up to date, skipping")
+            continue
+        t0 = time.time()
+        for art, (fn, specs) in plan.items():
+            path = os.path.join(outdir, f"{art}.hlo.txt")
+            if os.path.exists(path) and not args.force:
+                continue
+            ta = time.time()
+            # keep_unused: optimizers that ignore an input (e.g. Sophia's
+            # step counter t) must still present the uniform signature the
+            # Rust coordinator feeds.
+            text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+            with open(path, "w") as fh:
+                fh.write(text)
+            print(f"[aot] {name}/{art}: {len(text)} chars in {time.time()-ta:.1f}s")
+        write_manifest(cfg, outdir, plan.keys())
+        if name == "nano":
+            write_golden(cfg, outdir)
+        print(f"[aot] {name}: done in {time.time()-t0:.1f}s "
+              f"({cfg.n_params():,} params)")
+
+
+if __name__ == "__main__":
+    main()

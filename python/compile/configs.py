@@ -1,0 +1,120 @@
+"""Model / training presets shared between the JAX compile path and the Rust
+coordinator (via artifacts/<preset>/manifest.json).
+
+The paper's GPT-2 family (125M..770M, Table 2) is reproduced *in shape* by a
+geometrically scaled-down family so every experiment runs on the CPU PJRT
+backend (see DESIGN.md §3).  Width/depth ratios follow Table 2 (head dim is
+16 here instead of 64; depth grows with width exactly like the paper's
+small->large progression).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    ctx: int
+    d_model: int
+    n_head: int
+    depth: int
+    batch: int
+    # reduced batches used for the Hessian estimators (paper: 32/480 for
+    # Sophia-H, 240/480 for Sophia-G)
+    hess_batch_h: int = 0
+    hess_batch_g: int = 0
+
+    def __post_init__(self):
+        assert self.d_model % self.n_head == 0
+        if self.hess_batch_h == 0:
+            object.__setattr__(self, "hess_batch_h", max(1, self.batch // 4))
+        if self.hess_batch_g == 0:
+            object.__setattr__(self, "hess_batch_g", max(1, self.batch // 2))
+
+    @property
+    def mlp_dim(self) -> int:
+        return 4 * self.d_model
+
+    def param_table(self):
+        """Ordered (name, shape, init_std) table: the flattened-pytree layout
+        every artifact uses at its parameter boundary.  Matches model.py's
+        init_params / param_leaves ordering.  Residual-output projections use
+        the nanoGPT scaled init 0.02/sqrt(2*depth)."""
+        d, f, l = self.d_model, self.mlp_dim, self.depth
+        resid = 0.02 / (2 * l) ** 0.5
+        return [
+            ("wte", (self.vocab, d), 0.02),
+            ("wpe", (self.ctx, d), 0.02),
+            ("ln1_g", (l, d), -1.0),        # init_std < 0 means "constant 1"
+            ("w_qkv", (l, d, 3 * d), 0.02),
+            ("w_o", (l, d, d), resid),
+            ("ln2_g", (l, d), -1.0),
+            ("w_fc", (l, d, f), 0.02),
+            ("w_proj", (l, f, d), resid),
+            ("lnf_g", (d,), -1.0),
+        ]
+
+    def n_params(self) -> int:
+        n = 0
+        for _, shape, _ in self.param_table():
+            size = 1
+            for s in shape:
+                size *= s
+            n += size
+        return n
+
+    def to_dict(self):
+        d = asdict(self)
+        d["n_params"] = self.n_params()
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Preset families (see DESIGN.md §3 / §6).
+#
+#  nano     tiny config used by unit/integration tests and the quickstart
+#  b0..b3   the bench family: the paper's 30M..355M progression scaled down,
+#           used for every loss-curve / ablation / sweep experiment
+#  e2e      the largest CPU-feasible config, used by examples/train_gpt.rs
+#           (the paper's "GPT-2 small" stand-in)
+# ---------------------------------------------------------------------------
+PRESETS = {
+    "nano": ModelConfig("nano", vocab=256, ctx=64, d_model=32, n_head=2, depth=2, batch=4),
+    "b0": ModelConfig("b0", vocab=256, ctx=64, d_model=32, n_head=2, depth=2, batch=4),
+    "b1": ModelConfig("b1", vocab=256, ctx=64, d_model=48, n_head=3, depth=3, batch=4),
+    "b2": ModelConfig("b2", vocab=256, ctx=64, d_model=64, n_head=4, depth=4, batch=4),
+    "b3": ModelConfig("b3", vocab=256, ctx=64, d_model=96, n_head=6, depth=6, batch=4),
+    "e2e": ModelConfig("e2e", vocab=512, ctx=128, d_model=192, n_head=6, depth=4, batch=8),
+}
+
+# The optimizer/train-step artifact variants lowered per preset.  The
+# estimator choice (GNB / Hutchinson / E-F / AdaHessian^2) lives in the
+# separate hessian_step artifacts, so Sophia-G and Sophia-H share train_sophia.
+TRAIN_VARIANTS = [
+    "adamw",            # decoupled weight decay Adam (paper's main baseline)
+    "lion",             # Chen et al. 2023 baseline
+    "signum",           # sign-momentum == the paper's "Clip" ablation (Fig 8c)
+    "normalize",        # update normalization ablation (Fig 8c)
+    "sophia",           # the paper's contribution (Alg. 3), gamma = 0.05 (Sophia-G)
+    "sophia_h",         # same update, gamma = 0.01 (the Sophia-H setting)
+    "sophia_noclip",    # "GNB" ablation in Fig 8c: preconditioner, no clip
+    "adahessian",       # Yao et al. 2021 baseline (no clip)
+    "adahessian_clip",  # "AH+clip" in Fig 8b
+]
+
+HESS_VARIANTS = [
+    "gnb",          # Gauss-Newton-Bartlett (Alg. 2)
+    "hutchinson",   # Hutchinson HVP estimator (Alg. 1)
+    "ef",           # Empirical Fisher: B*g⊙g with the TRUE labels (Fig 8b)
+    "ah",           # AdaHessian: EMA of the SQUARED Hutchinson estimate
+]
+
+# Optimizer hyperparameters fixed across the repo (paper Section 3.1 / B.1).
+HYPERS = {
+    "sophia": {"beta1": 0.96, "beta2": 0.99, "eps": 1e-12, "gamma_g": 0.05, "gamma_h": 0.01, "wd": 0.2, "k": 10},
+    "adamw": {"beta1": 0.9, "beta2": 0.95, "eps": 1e-8, "wd": 0.1},
+    "lion": {"beta1": 0.95, "beta2": 0.98, "wd": 0.2},
+    "adahessian": {"beta1": 0.92, "beta2": 0.99, "eps": 1e-8, "wd": 0.1, "k": 10},
+    "grad_clip": 1.0,
+}

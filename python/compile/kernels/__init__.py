@@ -1,0 +1,36 @@
+"""L1 Pallas kernels — the paper's per-step compute hot spots.
+
+Optimizer updates (element-wise, blocked 1-D over flat parameter buffers):
+    sophia_update, sophia_noclip_update, adamw_update, lion_update,
+    signum_update, ema_update, scaled_step, adahessian_update
+Estimator assembly + Hessian-EMA refresh (Alg. 1/2 + Alg. 3 line 9):
+    gnb_ema, hutchinson_ema, ah_sq_ema
+Model-path kernels (custom-VJP fwd+bwd):
+    layernorm, cross_entropy
+"""
+
+from .adahessian_update import adahessian_update
+from .adamw_update import adamw_update
+from .cross_entropy import cross_entropy, cross_entropy_ref
+from .hessian_ema import ah_sq_ema, gnb_ema, hutchinson_ema, sophia_noclip_update
+from .layernorm import layernorm, layernorm_ref
+from .lion_update import ema_update, lion_update, scaled_step, signum_update
+from .sophia_update import sophia_update
+
+__all__ = [
+    "adahessian_update",
+    "adamw_update",
+    "ah_sq_ema",
+    "cross_entropy",
+    "cross_entropy_ref",
+    "ema_update",
+    "gnb_ema",
+    "hutchinson_ema",
+    "layernorm",
+    "layernorm_ref",
+    "lion_update",
+    "scaled_step",
+    "signum_update",
+    "sophia_noclip_update",
+    "sophia_update",
+]

@@ -1,0 +1,31 @@
+"""L1 Pallas kernel: AdaHessian step (Yao et al. 2021).
+
+AdaHessian divides the bias-corrected momentum by the square root of the
+bias-corrected EMA of *squared* diagonal-Hessian estimates.  The paper's
+Figure 8(b) "AH+clip" variant additionally applies Sophia's element-wise
+clip(., 1) to the pre-conditioned update; plain AdaHessian (clip=False) is
+the Figure 8(c) no-clip ablation that diverges at k >= 2.
+"""
+
+import jax.numpy as jnp
+
+from .blocked import blocked_call
+
+
+def adahessian_update(p, m, vh, g, lr, t, *, beta1, beta2, eps, wd, clip):
+    """Returns (p_new, m_new).  `vh` (EMA of squared Hessian estimates) is
+    refreshed separately by the `ah` hessian artifact every k steps."""
+
+    def body(p_ref, m_ref, vh_ref, g_ref, lr_ref, t_ref, p_out, m_out):
+        lr, t = lr_ref[0], t_ref[0]
+        m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+        mhat = m / (1.0 - beta1**t)
+        vhat = vh_ref[...] / (1.0 - beta2**t)
+        u = mhat / (jnp.sqrt(jnp.maximum(vhat, 0.0)) + eps)
+        if clip:
+            u = jnp.clip(u, -1.0, 1.0)
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * u
+        m_out[...] = m
+
+    return blocked_call(body, 2, p, m, vh, g, scalars=(lr, t))

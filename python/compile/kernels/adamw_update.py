@@ -1,0 +1,29 @@
+"""L1 Pallas kernel: fused AdamW step (Loshchilov & Hutter 2017), the
+paper's primary baseline.  Bias-corrected, decoupled weight decay."""
+
+import jax.numpy as jnp
+
+from .blocked import blocked_call
+
+
+def make_body(beta1, beta2, eps, wd):
+    def body(p_ref, m_ref, v_ref, g_ref, lr_ref, t_ref, p_out, m_out, v_out):
+        lr, t = lr_ref[0], t_ref[0]
+        g = g_ref[...]
+        m = beta1 * m_ref[...] + (1.0 - beta1) * g
+        v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+        mhat = m / (1.0 - beta1**t)
+        vhat = v / (1.0 - beta2**t)
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+        m_out[...] = m
+        v_out[...] = v
+
+    return body
+
+
+def adamw_update(p, m, v, g, lr, t, *, beta1, beta2, eps, wd):
+    """Returns (p_new, m_new, v_new).  `t` is the 1-based step (traced)."""
+    return blocked_call(
+        make_body(beta1, beta2, eps, wd), 3, p, m, v, g, scalars=(lr, t)
+    )

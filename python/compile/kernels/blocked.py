@@ -1,0 +1,71 @@
+"""Blocked 1-D Pallas launch helper.
+
+Every optimizer-update / estimator kernel in this package is element-wise
+over flat parameter buffers.  On a real TPU the natural schedule is: stream
+BLOCK-sized tiles HBM->VMEM, do VPU element-wise math, stream results back.
+`blocked_call` expresses exactly that schedule with a 1-D grid + BlockSpec;
+under `interpret=True` (required for the CPU PJRT backend, see DESIGN.md §3)
+it lowers to a plain HLO loop with the same tiling structure.
+
+Traced *scalars* (e.g. the learning-rate from the LR schedule, the step
+counter for bias correction) are passed as shape-(1,) operands that every
+block maps to offset 0, mirroring SMEM scalar prefetch on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4096 f32 = 16 KiB per buffer per block: a handful of operands fits
+# comfortably in a 16 MiB VMEM budget with room for double buffering.
+BLOCK = 4096
+
+
+def _pad_to_block(x):
+    n = x.size
+    r = (-n) % BLOCK
+    flat = x.reshape(-1)
+    if r:
+        flat = jnp.concatenate([flat, jnp.zeros((r,), x.dtype)])
+    return flat, n
+
+
+def blocked_call(body, n_out, *arrays, scalars=()):
+    """Run `body(*array_refs, *scalar_refs, *out_refs)` over BLOCK-tiles.
+
+    arrays  -- equally-sized tensors (any shape); flattened + zero-padded.
+    scalars -- traced 0-d/1-element values visible to every block.
+    n_out   -- number of outputs, each with the arrays' original shape/dtype.
+
+    Returns a tuple of n_out tensors (or the tensor itself if n_out == 1).
+    """
+    shape, dtype = arrays[0].shape, arrays[0].dtype
+    flats = []
+    for a in arrays:
+        assert a.shape == shape, f"operand shape {a.shape} != {shape}"
+        f, n = _pad_to_block(a)
+        flats.append(f)
+    padded = flats[0].size
+    grid = padded // BLOCK
+
+    scal = [jnp.asarray(s, jnp.float32).reshape(1) for s in scalars]
+
+    in_specs = [pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in flats] + [
+        pl.BlockSpec((1,), lambda i: (0,)) for _ in scal
+    ]
+    out_specs = [pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in range(n_out)]
+    out_shape = [jax.ShapeDtypeStruct((padded,), dtype) for _ in range(n_out)]
+
+    outs = pl.pallas_call(
+        body,
+        grid=(grid,),
+        in_specs=in_specs,
+        out_specs=out_specs if n_out > 1 else out_specs[0],
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=True,
+    )(*flats, *scal)
+
+    if n_out == 1:
+        outs = (outs,)
+    outs = tuple(o[:n].reshape(shape) for o in outs)
+    return outs if n_out > 1 else outs[0]

@@ -1,0 +1,62 @@
+"""L1 Pallas kernels: the diagonal-Hessian estimator assembly + EMA refresh
+(Algorithm 3, line 9: h <- beta2 * h + (1 - beta2) * hhat), fused with each
+estimator's final element-wise form:
+
+gnb_ema        -- Alg. 2 line 6:  hhat = B * ghat ⊙ ghat  (ghat: grad on
+                  labels resampled from the model; also the Empirical-Fisher
+                  ablation when ghat is the true-label gradient)
+hutchinson_ema -- Alg. 1 line 4:  hhat = u ⊙ (∇²L u)
+ah_sq_ema      -- AdaHessian:     vh <- beta2*vh + (1-beta2) * (u ⊙ Hu)²
+sophia_noclip  -- raw preconditioned step for the Fig 8(c) no-clip ablation
+"""
+
+import jax.numpy as jnp
+
+from .blocked import blocked_call
+
+
+def gnb_ema(h, ghat, scale, *, beta2):
+    """h' = beta2*h + (1-beta2) * scale * ghat², scale = hessian batch size B."""
+
+    def body(h_ref, g_ref, s_ref, h_out):
+        s = s_ref[0]
+        g = g_ref[...]
+        h_out[...] = beta2 * h_ref[...] + (1.0 - beta2) * s * g * g
+
+    return blocked_call(body, 1, h, ghat, scalars=(scale,))
+
+
+def hutchinson_ema(h, u, hvp, *, beta2):
+    """h' = beta2*h + (1-beta2) * u ⊙ (Hu)."""
+
+    def body(h_ref, u_ref, hvp_ref, h_out):
+        h_out[...] = beta2 * h_ref[...] + (1.0 - beta2) * u_ref[...] * hvp_ref[...]
+
+    return blocked_call(body, 1, h, u, hvp)
+
+
+def ah_sq_ema(vh, u, hvp, *, beta2):
+    """vh' = beta2*vh + (1-beta2) * (u ⊙ Hu)²  (AdaHessian's second moment)."""
+
+    def body(v_ref, u_ref, hvp_ref, v_out):
+        d = u_ref[...] * hvp_ref[...]
+        v_out[...] = beta2 * v_ref[...] + (1.0 - beta2) * d * d
+
+    return blocked_call(body, 1, vh, u, hvp)
+
+
+def sophia_noclip_update(p, m, h, g, lr, *, beta1, gamma, eps, wd, cap):
+    """The Figure 8(c) "GNB without clipping" ablation: same preconditioned
+    direction, no clip(., 1).  `cap` bounds |update| only at a huge value
+    (1e6) so divergence happens by parameter blow-up, not inf/nan traps."""
+
+    def body(p_ref, m_ref, h_ref, g_ref, lr_ref, p_out, m_out):
+        lr = lr_ref[0]
+        m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+        r = m / jnp.maximum(gamma * h_ref[...], eps)
+        r = jnp.clip(r, -cap, cap)
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * r
+        m_out[...] = m
+
+    return blocked_call(body, 2, p, m, h, g, scalars=(lr,))

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: LayerNorm (gain-only, nanoGPT style: no bias) with a
+custom VJP whose forward AND backward are both Pallas kernels, so the whole
+model fwd/bwd lowers through the same kernel path.
+
+Grid: 1-D over row blocks; each block normalizes ROWS x D in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 64  # rows per block; D (model width) rides along whole
+
+
+def _fwd_body(x_ref, g_ref, y_ref, mu_ref, rstd_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    y_ref[...] = xc * rstd * g_ref[...]
+    mu_ref[...] = mu[:, 0]
+    rstd_ref[...] = rstd[:, 0]
+
+
+def _bwd_body(x_ref, g_ref, mu_ref, rstd_ref, dy_ref, dx_ref, dgp_ref):
+    x, g, dy = x_ref[...], g_ref[...], dy_ref[...]
+    mu = mu_ref[...][:, None]
+    rstd = rstd_ref[...][:, None]
+    xhat = (x - mu) * rstd
+    dgp_ref[...] = dy * xhat  # per-row dgamma contribution (summed outside)
+    w = dy * g
+    m1 = jnp.mean(w, axis=-1, keepdims=True)
+    m2 = jnp.mean(w * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (w - m1 - xhat * m2) * rstd
+
+
+def _pad_rows(x, rows):
+    r = (-x.shape[0]) % rows
+    if r:
+        x = jnp.concatenate([x, jnp.zeros((r,) + x.shape[1:], x.dtype)])
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def layernorm(x, gain, eps=1e-5):
+    """x: (..., D), gain: (D,) -> normalized (..., D)."""
+    return _fwd(x, gain, eps)[0]
+
+
+def _fwd(x, gain, eps):
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    x2p = _pad_rows(x2, ROWS)
+    np_ = x2p.shape[0]
+    grid = (np_ // ROWS,)
+    y, mu, rstd = pl.pallas_call(
+        functools.partial(_fwd_body, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, d), x.dtype),
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+        ],
+        interpret=True,
+    )(x2p, gain)
+    return y[:n].reshape(shape), (x, gain, mu[:n], rstd[:n])
+
+
+def _vjp_fwd(x, gain, eps):
+    y, res = _fwd(x, gain, eps)
+    return y, res
+
+
+def _vjp_bwd(eps, res, dy):
+    x, gain, mu, rstd = res
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    dy2 = dy.reshape(-1, d)
+    n = x2.shape[0]
+    x2p, dy2p = _pad_rows(x2, ROWS), _pad_rows(dy2, ROWS)
+    mup, rstdp = _pad_rows(mu, ROWS), _pad_rows(rstd, ROWS)
+    np_ = x2p.shape[0]
+    dx, dgp = pl.pallas_call(
+        _bwd_body,
+        grid=(np_ // ROWS,),
+        in_specs=[
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, d), x.dtype),
+            jax.ShapeDtypeStruct((np_, d), x.dtype),
+        ],
+        interpret=True,
+    )(x2p, gain, mup, rstdp, dy2p)
+    dgain = jnp.sum(dgp[:n], axis=0)
+    return dx[:n].reshape(shape), dgain
+
+
+layernorm.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def layernorm_ref(x, gain, eps=1e-5):
+    """Pure-jnp oracle."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gain

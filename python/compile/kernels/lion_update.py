@@ -1,0 +1,61 @@
+"""L1 Pallas kernels for the first-order baselines.
+
+lion_update   -- Lion (Chen et al. 2023): sign of the interpolated momentum.
+signum_update -- sign-momentum SGD; identical to the paper's "Clip"
+                 ablation in Figure 8(c) (element-wise clipping with no
+                 pre-conditioner reduces to sign momentum).
+ema_update    -- plain momentum EMA; building block of the "Normalize"
+                 ablation (the cross-tensor L2 norm is a global reduction
+                 applied at the pytree level in optim.py).
+"""
+
+import jax.numpy as jnp
+
+from .blocked import blocked_call
+
+
+def lion_update(p, m, g, lr, *, beta1, beta2, wd):
+    """Returns (p_new, m_new)."""
+
+    def body(p_ref, m_ref, g_ref, lr_ref, p_out, m_out):
+        lr = lr_ref[0]
+        g = g_ref[...]
+        u = jnp.sign(beta1 * m_ref[...] + (1.0 - beta1) * g)
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * u
+        m_out[...] = beta2 * m_ref[...] + (1.0 - beta2) * g
+
+    return blocked_call(body, 2, p, m, g, scalars=(lr,))
+
+
+def signum_update(p, m, g, lr, *, beta1, wd):
+    """Returns (p_new, m_new)."""
+
+    def body(p_ref, m_ref, g_ref, lr_ref, p_out, m_out):
+        lr = lr_ref[0]
+        m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * jnp.sign(m)
+        m_out[...] = m
+
+    return blocked_call(body, 2, p, m, g, scalars=(lr,))
+
+
+def ema_update(m, g, *, beta1):
+    """Returns the updated momentum EMA only."""
+
+    def body(m_ref, g_ref, m_out):
+        m_out[...] = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+
+    return blocked_call(body, 1, m, g)
+
+
+def scaled_step(p, u, lr, scale, *, wd):
+    """p' = p*(1-lr*wd) - lr*scale*u  (used by the Normalize ablation;
+    `scale` is the traced global 1/||m||)."""
+
+    def body(p_ref, u_ref, lr_ref, s_ref, p_out):
+        lr, s = lr_ref[0], s_ref[0]
+        p_out[...] = p_ref[...] * (1.0 - lr * wd) - lr * s * u_ref[...]
+
+    return blocked_call(body, 1, p, u, scalars=(lr, scale))

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every L1 kernel.  pytest asserts kernel == ref
+(allclose) across shapes/dtypes via hypothesis sweeps; these references are
+also the ground truth mirrored by the pure-Rust optimizer substrate
+(rust/src/optim/), which has its own golden tests against values exported
+from here.
+"""
+
+import jax.numpy as jnp
+
+
+def sophia_update_ref(p, m, h, g, lr, *, beta1, gamma, eps, wd):
+    m_new = beta1 * m + (1 - beta1) * g
+    r = m_new / jnp.maximum(gamma * h, eps)
+    u = jnp.clip(r, -1.0, 1.0)
+    p_new = p * (1 - lr * wd) - lr * u
+    return p_new, m_new, (jnp.abs(r) >= 1.0).astype(jnp.float32)
+
+
+def adamw_update_ref(p, m, v, g, lr, t, *, beta1, beta2, eps, wd):
+    m_new = beta1 * m + (1 - beta1) * g
+    v_new = beta2 * v + (1 - beta2) * g * g
+    mhat = m_new / (1 - beta1**t)
+    vhat = v_new / (1 - beta2**t)
+    p_new = p * (1 - lr * wd) - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new, m_new, v_new
+
+
+def lion_update_ref(p, m, g, lr, *, beta1, beta2, wd):
+    u = jnp.sign(beta1 * m + (1 - beta1) * g)
+    p_new = p * (1 - lr * wd) - lr * u
+    return p_new, beta2 * m + (1 - beta2) * g
+
+
+def signum_update_ref(p, m, g, lr, *, beta1, wd):
+    m_new = beta1 * m + (1 - beta1) * g
+    return p * (1 - lr * wd) - lr * jnp.sign(m_new), m_new
+
+
+def adahessian_update_ref(p, m, vh, g, lr, t, *, beta1, beta2, eps, wd, clip):
+    m_new = beta1 * m + (1 - beta1) * g
+    mhat = m_new / (1 - beta1**t)
+    vhat = vh / (1 - beta2**t)
+    u = mhat / (jnp.sqrt(jnp.maximum(vhat, 0.0)) + eps)
+    if clip:
+        u = jnp.clip(u, -1.0, 1.0)
+    return p * (1 - lr * wd) - lr * u, m_new
+
+
+def gnb_ema_ref(h, ghat, scale, *, beta2):
+    return beta2 * h + (1 - beta2) * scale * ghat * ghat
+
+
+def hutchinson_ema_ref(h, u, hvp, *, beta2):
+    return beta2 * h + (1 - beta2) * u * hvp
+
+
+def ah_sq_ema_ref(vh, u, hvp, *, beta2):
+    d = u * hvp
+    return beta2 * vh + (1 - beta2) * d * d
+
+
+def sophia_noclip_update_ref(p, m, h, g, lr, *, beta1, gamma, eps, wd, cap):
+    m_new = beta1 * m + (1 - beta1) * g
+    r = jnp.clip(m_new / jnp.maximum(gamma * h, eps), -cap, cap)
+    return p * (1 - lr * wd) - lr * r, m_new

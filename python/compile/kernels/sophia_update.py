@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: the fused Sophia parameter update (Algorithm 3, lines
+6, 12, 13).
+
+Per coordinate, given gradient g, momentum m, Hessian-EMA h:
+
+    m'     = beta1 * m + (1 - beta1) * g
+    theta  = theta - lr * wd * theta                      (decoupled decay)
+    r      = m' / max(gamma * h, eps)
+    theta' = theta - lr * clip(r, 1)
+
+The kernel also emits the per-coordinate "clip active" indicator
+(|r| >= 1), whose mean is the clip-fraction statistic the paper tracks to
+tune gamma (Section 3.1) and plots in Figure 9(a).
+
+When h <= 0 (negative or mis-estimated curvature), max(gamma*h, eps) = eps
+so the update degenerates to lr * sign(m'): stochastic sign-momentum is the
+built-in safety fallback (Section 2.2).
+"""
+
+import jax.numpy as jnp
+
+from .blocked import blocked_call
+
+
+def make_body(beta1, gamma, eps, wd):
+    def body(p_ref, m_ref, h_ref, g_ref, lr_ref, p_out, m_out, clip_out):
+        lr = lr_ref[0]
+        m = beta1 * m_ref[...] + (1.0 - beta1) * g_ref[...]
+        denom = jnp.maximum(gamma * h_ref[...], eps)
+        r = m / denom
+        u = jnp.clip(r, -1.0, 1.0)
+        p = p_ref[...] * (1.0 - lr * wd)
+        p_out[...] = p - lr * u
+        m_out[...] = m
+        clip_out[...] = (jnp.abs(r) >= 1.0).astype(jnp.float32)
+
+    return body
+
+
+def sophia_update(p, m, h, g, lr, *, beta1, gamma, eps, wd):
+    """Returns (p_new, m_new, clip_indicator) with p's shape."""
+    return blocked_call(
+        make_body(beta1, gamma, eps, wd), 3, p, m, h, g, scalars=(lr,)
+    )

@@ -1,0 +1,128 @@
+"""L2: GPT-2-style decoder-only transformer in JAX (the paper's workload).
+
+Follows the paper's nanoGPT configuration (Section B.2): pre-LN blocks,
+GELU MLP, no biases, no dropout, learned positional embeddings, weight-tied
+LM head.  Layer parameters are stacked on a leading depth axis and the
+forward pass is a `lax.scan` over layers, so the lowered HLO stays compact
+at any depth.
+
+Two model-kernel paths:
+  use_pallas=False  -- pure-jnp LN/CE (default for trained artifacts)
+  use_pallas=True   -- the L1 `layernorm` / `cross_entropy` Pallas kernels
+                       with custom VJPs; both paths are pytest-verified to
+                       produce identical losses and gradients.
+
+`attn_temp=True` enables the Mistral/HuggingFace stability trick the paper
+discusses in Figure 7(b): attention logits additionally scaled by the
+inverse of the 1-based layer index.  AdamW/Lion need it at large scale;
+Sophia does not.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+
+PARAM_ORDER = [
+    "wte", "wpe", "ln1_g", "w_qkv", "w_o", "ln2_g", "w_fc", "w_proj", "lnf_g",
+]
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters as a dict keyed per PARAM_ORDER (GPT-2 init:
+    N(0, 0.02), residual projections scaled by 1/sqrt(2*depth), gains 1)."""
+    params = {}
+    for (name, shape, std), k in zip(
+        cfg.param_table(), jax.random.split(key, len(PARAM_ORDER))
+    ):
+        if std < 0:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def param_list(params):
+    """dict -> ordered leaf list (the artifact parameter boundary)."""
+    return [params[n] for n in PARAM_ORDER]
+
+
+def param_dict(leaves):
+    return dict(zip(PARAM_ORDER, leaves))
+
+
+def zeros_like_params(cfg: ModelConfig):
+    return [jnp.zeros(shape, jnp.float32) for _, shape, _ in cfg.param_table()]
+
+
+def _ln(x, g, use_pallas):
+    if use_pallas:
+        return kernels.layernorm(x, g)
+    return kernels.layernorm_ref(x, g)
+
+
+def forward(params, cfg: ModelConfig, x, use_pallas=False, attn_temp=False):
+    """x: (B, T) int32 -> logits (B, T, V)."""
+    b, t = x.shape
+    d, nh = cfg.d_model, cfg.n_head
+    hd = d // nh
+
+    hcur = params["wte"][x] + params["wpe"][:t][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    def block(h, layer):
+        ln1, wqkv, wo, ln2, wfc, wproj, idx = layer
+        a = _ln(h, ln1, use_pallas)
+        qkv = a @ wqkv  # (B,T,3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        if attn_temp:
+            att = att / (idx + 1.0)
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+        h = h + o @ wo
+        a2 = _ln(h, ln2, use_pallas)
+        h = h + jax.nn.gelu(a2 @ wfc, approximate=True) @ wproj
+        return h, None
+
+    layers = (
+        params["ln1_g"], params["w_qkv"], params["w_o"],
+        params["ln2_g"], params["w_fc"], params["w_proj"],
+        jnp.arange(cfg.depth, dtype=jnp.float32),
+    )
+    hcur, _ = jax.lax.scan(block, hcur, layers)
+    hcur = _ln(hcur, params["lnf_g"], use_pallas)
+    return hcur @ params["wte"].T  # weight-tied head
+
+
+def loss_fn(params, cfg, x, y, use_pallas=False, attn_temp=False):
+    """Mean token-level CE (the paper's log-perplexity metric)."""
+    logits = forward(params, cfg, x, use_pallas=use_pallas, attn_temp=attn_temp)
+    n = x.shape[0] * x.shape[1]
+    flat = logits.reshape(n, cfg.vocab)
+    labels = y.reshape(n)
+    if use_pallas:
+        per_tok = kernels.cross_entropy(flat, labels)
+    else:
+        per_tok = kernels.cross_entropy_ref(flat, labels)
+    return jnp.mean(per_tok)
+
+
+def loss_resampled(params, cfg, x, key, use_pallas=False, attn_temp=False):
+    """The GNB estimator's inner loss (Alg. 2): CE against labels *sampled
+    from the model's own softmax* (stop-gradient through the sampling)."""
+    logits = forward(params, cfg, x, use_pallas=use_pallas, attn_temp=attn_temp)
+    n = x.shape[0] * x.shape[1]
+    flat = logits.reshape(n, cfg.vocab)
+    yhat = jax.random.categorical(key, jax.lax.stop_gradient(flat), axis=-1)
+    if use_pallas:
+        per_tok = kernels.cross_entropy(flat, yhat)
+    else:
+        per_tok = kernels.cross_entropy_ref(flat, yhat)
+    return jnp.mean(per_tok)

@@ -1,0 +1,225 @@
+"""L2: optimizer train-steps and Hessian-refresh steps as jittable pytree
+functions over the L1 kernels.
+
+Artifact calling conventions (mirrored by rust/src/runtime/manifest.rs):
+
+  train_step(params.., m.., h.., tokens[B,T+1] i32, lr f32, t f32)
+      -> (params'.., m'.., h'.., loss, gnorm, clipfrac)
+  hess_step(params.., h.., tokens[B,T+1] i32, seed i32)
+      -> (h'.., hnorm)
+  eval_step(params.., tokens) -> (loss,)
+  logits_last(params.., tokens[B,T]) -> (logits[B,V],)
+  hess_diag(params.., tokens, seed) -> (hhat..,)
+
+The `h` slot is the optimizer's second state buffer whatever the variant:
+Sophia's Hessian EMA, AdamW's v, AdaHessian's EMA of squared estimates;
+Lion/signum/normalize pass it through untouched (zeros).  Keeping the
+signature uniform lets the Rust coordinator treat every optimizer as
+(params, m, h) state threaded through `execute_b` with no host copies.
+
+Every train step applies the paper's global gradient clipping (by norm,
+threshold 1.0) and reports gnorm so the coordinator can log the Figure 7(a)
+trigger statistic.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, model
+from .configs import HYPERS, ModelConfig
+
+GRAD_CLIP = HYPERS["grad_clip"]
+NOCLIP_CAP = 1e6  # Fig 8(c) no-clip ablation: diverge by blow-up, not NaN
+
+
+def _global_norm(leaves):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+
+
+def _clip_by_global_norm(leaves, norm):
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(norm, 1e-12))
+    return [g * scale for g in leaves]
+
+
+def _split_tokens(tokens):
+    return tokens[:, :-1], tokens[:, 1:]
+
+
+def make_train_step(cfg: ModelConfig, variant: str, use_pallas_model=False,
+                    attn_temp=False, gamma_override=None):
+    """Build the jittable train step for an optimizer variant.
+    `gamma_override` lowers extra Sophia variants for the Figure 7(c)
+    hyperparameter-sensitivity study (gamma is compile-time static)."""
+    hyp = {
+        "adamw": HYPERS["adamw"],
+        "lion": HYPERS["lion"],
+        "signum": HYPERS["lion"],
+        "normalize": HYPERS["lion"],
+        "sophia": HYPERS["sophia"],
+        "sophia_h": HYPERS["sophia"],
+        "sophia_noclip": HYPERS["sophia"],
+        "adahessian": HYPERS["adahessian"],
+        "adahessian_clip": HYPERS["adahessian"],
+    }[variant]
+    # gamma differs between Sophia-G (0.05) and Sophia-H (0.01); the shared
+    # "sophia" artifact uses gamma as lowered -- Sophia-G's by default, and
+    # aot.py lowers a second "sophia_h" variant with gamma_h.
+    gamma = hyp.get("gamma_h" if variant == "sophia_h" else "gamma_g", 0.0)
+    if gamma_override is not None:
+        gamma = gamma_override
+
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+    def train_step(params, m, h, tokens, lr, t):
+        x, y = _split_tokens(tokens)
+        loss, grads = jax.value_and_grad(loss_of)(params, x, y)
+        gnorm = _global_norm(grads)
+        grads = _clip_by_global_norm(grads, gnorm)
+
+        new_p, new_m, new_h = [], [], []
+        clip_hits, n_coords = 0.0, 0.0
+
+        if variant == "normalize":
+            new_m = [kernels.ema_update(mi, gi, beta1=hyp["beta1"])
+                     for mi, gi in zip(m, grads)]
+            mnorm = _global_norm(new_m)
+            scale = 1.0 / jnp.maximum(mnorm, 1e-12)
+            new_p = [kernels.scaled_step(pi, mi, lr, scale, wd=hyp["wd"])
+                     for pi, mi in zip(params, new_m)]
+            new_h = h
+        else:
+            for pi, mi, hi, gi in zip(params, m, h, grads):
+                if variant == "adamw":
+                    pn, mn, hn = kernels.adamw_update(
+                        pi, mi, hi, gi, lr, t, beta1=hyp["beta1"],
+                        beta2=hyp["beta2"], eps=hyp["eps"], wd=hyp["wd"])
+                elif variant == "lion":
+                    pn, mn = kernels.lion_update(
+                        pi, mi, gi, lr, beta1=hyp["beta1"],
+                        beta2=hyp["beta2"], wd=hyp["wd"])
+                    hn = hi
+                elif variant == "signum":
+                    pn, mn = kernels.signum_update(
+                        pi, mi, gi, lr, beta1=hyp["beta1"], wd=hyp["wd"])
+                    hn = hi
+                elif variant in ("sophia", "sophia_h"):
+                    pn, mn, clipped = kernels.sophia_update(
+                        pi, mi, hi, gi, lr, beta1=hyp["beta1"], gamma=gamma,
+                        eps=hyp["eps"], wd=hyp["wd"])
+                    hn = hi
+                    clip_hits += jnp.sum(clipped)
+                    n_coords += clipped.size
+                elif variant == "sophia_noclip":
+                    pn, mn = kernels.sophia_noclip_update(
+                        pi, mi, hi, gi, lr, beta1=hyp["beta1"], gamma=gamma,
+                        eps=hyp["eps"], wd=hyp["wd"], cap=NOCLIP_CAP)
+                    hn = hi
+                elif variant in ("adahessian", "adahessian_clip"):
+                    pn, mn = kernels.adahessian_update(
+                        pi, mi, hi, gi, lr, t, beta1=hyp["beta1"],
+                        beta2=hyp["beta2"], eps=hyp["eps"], wd=hyp["wd"],
+                        clip=(variant == "adahessian_clip"))
+                    hn = hi
+                else:
+                    raise ValueError(variant)
+                new_p.append(pn)
+                new_m.append(mn)
+                new_h.append(hn)
+
+        clipfrac = (clip_hits / n_coords) if n_coords else jnp.float32(0.0)
+        return tuple(new_p) + tuple(new_m) + tuple(new_h) + (
+            loss, gnorm, jnp.float32(clipfrac))
+
+    return train_step
+
+
+def make_hess_step(cfg: ModelConfig, variant: str, use_pallas_model=False,
+                   attn_temp=False, beta2_override=None):
+    """Build the jittable Hessian-estimator refresh (runs every k steps).
+
+    gnb        -- Alg. 2 with resampled labels on hess_batch_g examples
+    ef         -- Empirical Fisher: same form, TRUE labels (Fig 8b ablation)
+    hutchinson -- Alg. 1 via one HVP on hess_batch_h examples
+    ah         -- AdaHessian: EMA of the SQUARED Hutchinson estimate
+    """
+    beta2 = (HYPERS["adahessian"] if variant == "ah" else HYPERS["sophia"])["beta2"]
+    if beta2_override is not None:
+        beta2 = beta2_override
+
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+    def hess_step(params, h, tokens, seed):
+        key = jax.random.PRNGKey(seed)
+        if variant in ("gnb", "ef"):
+            bh = cfg.hess_batch_g
+            x, y = _split_tokens(tokens[:bh])
+            n_terms = jnp.float32(x.shape[0] * x.shape[1])
+            if variant == "gnb":
+                def sampled(leaves):
+                    return model.loss_resampled(
+                        model.param_dict(leaves), cfg, x, key,
+                        use_pallas=use_pallas_model, attn_temp=attn_temp)
+                ghat = jax.grad(sampled)(params)
+            else:
+                ghat = jax.grad(lambda lv: loss_of(lv, x, y))(params)
+            new_h = [kernels.gnb_ema(hi, gi, n_terms, beta2=beta2)
+                     for hi, gi in zip(h, ghat)]
+        elif variant in ("hutchinson", "ah"):
+            bh = cfg.hess_batch_h
+            x, y = _split_tokens(tokens[:bh])
+            keys = jax.random.split(key, len(params))
+            u = [jax.random.normal(k, p.shape, jnp.float32)
+                 for k, p in zip(keys, params)]
+            grad_fn = jax.grad(lambda lv: loss_of(lv, x, y))
+            _, hvp = jax.jvp(grad_fn, (params,), (u,))
+            if variant == "hutchinson":
+                new_h = [kernels.hutchinson_ema(hi, ui, hv, beta2=beta2)
+                         for hi, ui, hv in zip(h, u, hvp)]
+            else:
+                new_h = [kernels.ah_sq_ema(hi, ui, hv, beta2=beta2)
+                         for hi, ui, hv in zip(h, u, hvp)]
+        else:
+            raise ValueError(variant)
+        hnorm = _global_norm(new_h)
+        return tuple(new_h) + (hnorm,)
+
+    return hess_step
+
+
+def make_eval_step(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
+    def eval_step(params, tokens):
+        x, y = _split_tokens(tokens)
+        return (model.loss_fn(model.param_dict(params), cfg, x, y,
+                              use_pallas=use_pallas_model,
+                              attn_temp=attn_temp),)
+    return eval_step
+
+
+def make_logits_last(cfg: ModelConfig, attn_temp=False):
+    def logits_last(params, tokens):
+        logits = model.forward(model.param_dict(params), cfg, tokens,
+                               attn_temp=attn_temp)
+        return (logits[:, -1, :],)
+    return logits_last
+
+
+def make_hess_diag(cfg: ModelConfig, attn_temp=False):
+    """Raw (un-EMA'd) Hutchinson diagonal estimate: the Figure 3 histogram
+    source."""
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             attn_temp=attn_temp)
+
+    def hess_diag(params, tokens, seed):
+        x, y = _split_tokens(tokens)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(params))
+        u = [jax.random.normal(k, p.shape, jnp.float32)
+             for k, p in zip(keys, params)]
+        _, hvp = jax.jvp(jax.grad(lambda lv: loss_of(lv, x, y)), (params,), (u,))
+        return tuple(ui * hv for ui, hv in zip(u, hvp))
+
+    return hess_diag

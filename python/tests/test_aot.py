@@ -1,0 +1,74 @@
+"""AOT artifact sanity: manifests consistent with configs.py, HLO text
+artifacts present and well-formed, golden trace reproducible."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import PRESETS
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest(preset):
+    path = os.path.join(ART, preset, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for {preset} not built (run `make artifacts`)")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+@pytest.mark.parametrize("preset", ["nano", "b0", "b1"])
+def test_manifest_matches_config(preset):
+    man = _manifest(preset)
+    cfg = PRESETS[preset]
+    assert man["config"]["d_model"] == cfg.d_model
+    assert man["config"]["n_params"] == cfg.n_params()
+    table = cfg.param_table()
+    assert len(man["params"]) == len(table)
+    for entry, (name, shape, std) in zip(man["params"], table):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == tuple(shape)
+
+
+@pytest.mark.parametrize("preset", ["nano", "b0"])
+def test_artifacts_exist_and_look_like_hlo(preset):
+    man = _manifest(preset)
+    for name, fname in man["artifacts"].items():
+        path = os.path.join(ART, preset, fname)
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} missing HloModule header"
+
+
+def test_golden_trace_losses_decrease():
+    path = os.path.join(ART, "nano", "golden.json")
+    if not os.path.exists(path):
+        pytest.skip("nano artifacts not built")
+    g = json.load(open(path))
+    assert g["losses"][-1] < g["losses"][0]
+    assert g["eval_loss"] < g["losses"][0]
+    assert all(f == f for f in g["losses"])  # no NaN
+
+
+def test_golden_init_bin_size_matches_param_count():
+    path = os.path.join(ART, "nano", "golden_init.bin")
+    if not os.path.exists(path):
+        pytest.skip("nano artifacts not built")
+    n = os.path.getsize(path) // 4
+    assert n == PRESETS["nano"].n_params()
+
+
+def test_artifact_plan_covers_figures():
+    """The per-experiment index in DESIGN.md needs these variants."""
+    plan = aot.artifact_plan(PRESETS["b0"])
+    for needed in [
+        "train_adamw", "train_lion", "train_sophia", "train_sophia_h",
+        "train_signum", "train_normalize", "train_sophia_noclip",
+        "train_adahessian", "train_adahessian_clip",
+        "hess_gnb", "hess_hutchinson", "hess_ef", "hess_ah",
+        "eval_step", "logits_last", "hess_diag",
+    ]:
+        assert needed in plan, needed

@@ -1,0 +1,183 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes (including non-block-multiple and tiny
+sizes) and value regimes.  This is the CORE correctness signal for the
+compute hot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SHAPES = st.sampled_from(
+    [(7,), (128,), (4096,), (4097,), (33, 65), (2, 3, 5), (8192,), (1,)]
+)
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def split(seed, n, shape, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return [rand(jax.random.fold_in(key, i), shape, scale) for i in range(n)]
+
+
+def assert_close(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(SHAPES, SEEDS)
+def test_sophia_update_matches_ref(shape, seed):
+    p, m, h, g = split(seed, 4, shape)
+    kw = dict(beta1=0.96, gamma=0.05, eps=1e-12, wd=0.2)
+    got = kernels.sophia_update(p, m, h, g, 1e-3, **kw)
+    exp = ref.sophia_update_ref(p, m, h, g, 1e-3, **kw)
+    for a, b in zip(got, exp):
+        assert_close(a, b)
+
+
+@settings(max_examples=12, deadline=None)
+@given(SHAPES, SEEDS, st.floats(1.0, 500.0))
+def test_adamw_update_matches_ref(shape, seed, t):
+    p, m, v, g = split(seed, 4, shape)
+    v = jnp.abs(v)
+    kw = dict(beta1=0.9, beta2=0.95, eps=1e-8, wd=0.1)
+    got = kernels.adamw_update(p, m, v, g, 3e-4, t, **kw)
+    exp = ref.adamw_update_ref(p, m, v, g, 3e-4, t, **kw)
+    for a, b in zip(got, exp):
+        assert_close(a, b, 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(SHAPES, SEEDS)
+def test_lion_and_signum_match_ref(shape, seed):
+    p, m, g = split(seed, 3, shape)
+    got = kernels.lion_update(p, m, g, 1e-4, beta1=0.95, beta2=0.98, wd=0.2)
+    exp = ref.lion_update_ref(p, m, g, 1e-4, beta1=0.95, beta2=0.98, wd=0.2)
+    for a, b in zip(got, exp):
+        assert_close(a, b)
+    got = kernels.signum_update(p, m, g, 1e-4, beta1=0.95, wd=0.2)
+    exp = ref.signum_update_ref(p, m, g, 1e-4, beta1=0.95, wd=0.2)
+    for a, b in zip(got, exp):
+        assert_close(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(SHAPES, SEEDS, st.booleans())
+def test_adahessian_update_matches_ref(shape, seed, clip):
+    p, m, vh, g = split(seed, 4, shape)
+    vh = jnp.abs(vh)
+    kw = dict(beta1=0.92, beta2=0.99, eps=1e-8, wd=0.1, clip=clip)
+    got = kernels.adahessian_update(p, m, vh, g, 1e-3, 5.0, **kw)
+    exp = ref.adahessian_update_ref(p, m, vh, g, 1e-3, 5.0, **kw)
+    for a, b in zip(got, exp):
+        assert_close(a, b, 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(SHAPES, SEEDS)
+def test_hessian_ema_kernels_match_ref(shape, seed):
+    h, a, b = split(seed, 3, shape)
+    assert_close(
+        kernels.gnb_ema(h, a, 240.0, beta2=0.99),
+        ref.gnb_ema_ref(h, a, 240.0, beta2=0.99),
+    )
+    assert_close(
+        kernels.hutchinson_ema(h, a, b, beta2=0.99),
+        ref.hutchinson_ema_ref(h, a, b, beta2=0.99),
+    )
+    assert_close(
+        kernels.ah_sq_ema(h, a, b, beta2=0.99),
+        ref.ah_sq_ema_ref(h, a, b, beta2=0.99),
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(SHAPES, SEEDS)
+def test_sophia_noclip_matches_ref(shape, seed):
+    p, m, h, g = split(seed, 4, shape)
+    kw = dict(beta1=0.96, gamma=0.05, eps=1e-12, wd=0.2, cap=1e6)
+    got = kernels.sophia_noclip_update(p, m, h, g, 1e-3, **kw)
+    exp = ref.sophia_noclip_update_ref(p, m, h, g, 1e-3, **kw)
+    for a, b in zip(got, exp):
+        assert_close(a, b, rtol := 1e-4)
+
+
+# ---- properties the paper relies on -----------------------------------
+
+def test_sophia_update_is_bounded_by_lr():
+    """Clipping controls the worst-case update: |Δθ + lr*wd*θ| <= lr."""
+    p, m, h, g = split(7, 4, (4096,), scale=10.0)
+    lr = 1e-2
+    pn, _, _ = kernels.sophia_update(p, m, h, g, lr, beta1=0.9, gamma=0.01,
+                                     eps=1e-12, wd=0.0)
+    # f32 rounding of p - lr*u can perturb the difference by ~ulp(|p|)
+    assert float(jnp.max(jnp.abs(pn - p))) <= lr + 1e-5
+
+
+def test_sophia_negative_curvature_falls_back_to_sign():
+    """h <= 0 coordinates take exactly the sign-momentum step (Sec 2.2)."""
+    p, m, g = split(3, 3, (1000,))
+    h = -jnp.abs(rand(jax.random.PRNGKey(9), (1000,)))
+    lr = 5e-3
+    pn, mn, clipped = kernels.sophia_update(p, m, h, g, lr, beta1=0.96,
+                                            gamma=0.05, eps=1e-12, wd=0.0)
+    assert_close(pn, p - lr * jnp.sign(mn))
+    assert float(jnp.mean(clipped)) == 1.0
+
+
+def test_clipfrac_range_and_gamma_monotonicity():
+    """Smaller gamma -> larger preconditioned ratios -> clip fraction is
+    monotone non-increasing in gamma (the Section 3.1 tuning knob)."""
+    p, m, h, g = split(11, 4, (8192,))
+    h = jnp.abs(h)
+    fracs = []
+    for gamma in (0.005, 0.05, 0.5, 5.0):
+        _, _, c = kernels.sophia_update(p, m, h, g, 1e-3, beta1=0.96,
+                                        gamma=gamma, eps=1e-12, wd=0.0)
+        fracs.append(float(jnp.mean(c)))
+    assert all(a >= b - 1e-9 for a, b in zip(fracs, fracs[1:]))
+    assert all(0.0 <= f <= 1.0 for f in fracs)
+
+
+# ---- model-path kernels -------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 130), st.sampled_from([8, 16, 48]), SEEDS)
+def test_layernorm_fwd_bwd_matches_ref(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (n, d), 2.0)
+    g = 1.0 + 0.1 * rand(jax.random.fold_in(key, 1), (d,))
+    assert_close(kernels.layernorm(x, g), kernels.layernorm_ref(x, g), 1e-4)
+    f1 = lambda x, g: jnp.sum(jnp.cos(kernels.layernorm(x, g)))
+    f2 = lambda x, g: jnp.sum(jnp.cos(kernels.layernorm_ref(x, g)))
+    g1, g2 = jax.grad(f1, (0, 1))(x, g), jax.grad(f2, (0, 1))(x, g)
+    for a, b in zip(g1, g2):
+        assert_close(a, b, 1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 200), st.sampled_from([16, 64, 256]), SEEDS)
+def test_cross_entropy_fwd_bwd_matches_ref(n, v, seed):
+    key = jax.random.PRNGKey(seed)
+    z = rand(key, (n, v), 3.0)
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, v)
+    assert_close(kernels.cross_entropy(z, y), kernels.cross_entropy_ref(z, y), 1e-4)
+    g1 = jax.grad(lambda z: jnp.mean(kernels.cross_entropy(z, y)))(z)
+    g2 = jax.grad(lambda z: jnp.mean(kernels.cross_entropy_ref(z, y)))(z)
+    assert_close(g1, g2, 1e-4)
+
+
+def test_cross_entropy_grad_is_softmax_minus_onehot():
+    z = rand(jax.random.PRNGKey(0), (32, 64), 2.0)
+    y = jax.random.randint(jax.random.PRNGKey(1), (32,), 0, 64)
+    g = jax.grad(lambda z: jnp.sum(kernels.cross_entropy(z, y)))(z)
+    p = jax.nn.softmax(z, axis=-1)
+    onehot = jax.nn.one_hot(y, 64)
+    assert_close(g, p - onehot, 1e-4)

@@ -1,0 +1,240 @@
+//! Hyper-dual forward-mode autodiff: exact gradients AND Hessians of
+//! closed-form R^D -> R functions, no finite differencing.
+//!
+//! Substrate for the paper's Figure 2 toy landscape (Newton and Sophia
+//! need the exact Hessian of the non-convex 2-D loss) and the Section 4
+//! theory experiments (full-Hessian clipped-Newton on convex functions).
+//!
+//! `HyperDual<D>` carries value, D first derivatives and the full DxD
+//! second-derivative matrix through arithmetic. Cost is O(D^2) per op:
+//! perfect for the paper's small-dimensional analyses.
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+#[derive(Clone, Copy, Debug)]
+pub struct HyperDual<const D: usize> {
+    pub v: f64,
+    pub g: [f64; D],
+    pub h: [[f64; D]; D],
+}
+
+impl<const D: usize> HyperDual<D> {
+    pub fn constant(v: f64) -> Self {
+        HyperDual { v, g: [0.0; D], h: [[0.0; D]; D] }
+    }
+
+    /// The i-th input variable with value v.
+    pub fn var(v: f64, i: usize) -> Self {
+        let mut g = [0.0; D];
+        g[i] = 1.0;
+        HyperDual { v, g, h: [[0.0; D]; D] }
+    }
+
+    /// Chain rule for a scalar function f with derivatives f', f''.
+    fn chain(self, f: f64, df: f64, d2f: f64) -> Self {
+        let mut out = HyperDual { v: f, g: [0.0; D], h: [[0.0; D]; D] };
+        for i in 0..D {
+            out.g[i] = df * self.g[i];
+            for j in 0..D {
+                out.h[i][j] = df * self.h[i][j] + d2f * self.g[i] * self.g[j];
+            }
+        }
+        out
+    }
+
+    pub fn powi(self, n: i32) -> Self {
+        let f = self.v.powi(n);
+        let df = n as f64 * self.v.powi(n - 1);
+        let d2f = (n * (n - 1)) as f64 * self.v.powi(n - 2);
+        self.chain(f, df, d2f)
+    }
+
+    pub fn exp(self) -> Self {
+        let e = self.v.exp();
+        self.chain(e, e, e)
+    }
+
+    pub fn ln(self) -> Self {
+        self.chain(self.v.ln(), 1.0 / self.v, -1.0 / (self.v * self.v))
+    }
+
+    pub fn sqrt(self) -> Self {
+        let s = self.v.sqrt();
+        self.chain(s, 0.5 / s, -0.25 / (s * s * s))
+    }
+
+    pub fn cosh(self) -> Self {
+        self.chain(self.v.cosh(), self.v.sinh(), self.v.cosh())
+    }
+
+    pub fn recip(self) -> Self {
+        let r = 1.0 / self.v;
+        self.chain(r, -r * r, 2.0 * r * r * r)
+    }
+}
+
+impl<const D: usize> Add for HyperDual<D> {
+    type Output = Self;
+    fn add(self, o: Self) -> Self {
+        let mut out = self;
+        out.v += o.v;
+        for i in 0..D {
+            out.g[i] += o.g[i];
+            for j in 0..D {
+                out.h[i][j] += o.h[i][j];
+            }
+        }
+        out
+    }
+}
+
+impl<const D: usize> Sub for HyperDual<D> {
+    type Output = Self;
+    fn sub(self, o: Self) -> Self {
+        self + (-o)
+    }
+}
+
+impl<const D: usize> Neg for HyperDual<D> {
+    type Output = Self;
+    fn neg(self) -> Self {
+        let mut out = self;
+        out.v = -out.v;
+        for i in 0..D {
+            out.g[i] = -out.g[i];
+            for j in 0..D {
+                out.h[i][j] = -out.h[i][j];
+            }
+        }
+        out
+    }
+}
+
+impl<const D: usize> Mul for HyperDual<D> {
+    type Output = Self;
+    fn mul(self, o: Self) -> Self {
+        let mut out = HyperDual::constant(self.v * o.v);
+        for i in 0..D {
+            out.g[i] = self.g[i] * o.v + self.v * o.g[i];
+            for j in 0..D {
+                out.h[i][j] = self.h[i][j] * o.v
+                    + self.g[i] * o.g[j]
+                    + self.g[j] * o.g[i]
+                    + self.v * o.h[i][j];
+            }
+        }
+        out
+    }
+}
+
+impl<const D: usize> Div for HyperDual<D> {
+    type Output = Self;
+    fn div(self, o: Self) -> Self {
+        self * o.recip()
+    }
+}
+
+impl<const D: usize> Add<f64> for HyperDual<D> {
+    type Output = Self;
+    fn add(self, c: f64) -> Self {
+        let mut out = self;
+        out.v += c;
+        out
+    }
+}
+
+impl<const D: usize> Sub<f64> for HyperDual<D> {
+    type Output = Self;
+    fn sub(self, c: f64) -> Self {
+        self + (-c)
+    }
+}
+
+impl<const D: usize> Mul<f64> for HyperDual<D> {
+    type Output = Self;
+    fn mul(self, c: f64) -> Self {
+        self * HyperDual::constant(c)
+    }
+}
+
+/// Evaluate f at x, returning (value, gradient, hessian).
+pub fn eval2<const D: usize>(
+    f: impl Fn(&[HyperDual<D>; D]) -> HyperDual<D>,
+    x: &[f64; D],
+) -> (f64, [f64; D], [[f64; D]; D]) {
+    let vars: [HyperDual<D>; D] =
+        std::array::from_fn(|i| HyperDual::var(x[i], i));
+    let out = f(&vars);
+    (out.v, out.g, out.h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_exact() {
+        // f = 3x^2 + xy + 2y^2
+        let f = |v: &[HyperDual<2>; 2]| {
+            v[0].powi(2) * 3.0 + v[0] * v[1] + v[1].powi(2) * 2.0
+        };
+        let (val, g, h) = eval2(f, &[1.0, 2.0]);
+        assert!((val - (3.0 + 2.0 + 8.0)).abs() < 1e-12);
+        assert!((g[0] - (6.0 + 2.0)).abs() < 1e-12);
+        assert!((g[1] - (1.0 + 8.0)).abs() < 1e-12);
+        assert!((h[0][0] - 6.0).abs() < 1e-12);
+        assert!((h[0][1] - 1.0).abs() < 1e-12);
+        assert!((h[1][1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_toy_function_derivatives() {
+        // L1(t) = 8 (t-1)^2 (1.3 t^2 + 2t + 1) -- the Fig. 2 sharp dim.
+        let l1 = |t: HyperDual<1>| {
+            (t - 1.0).powi(2) * ((t.powi(2) * 1.3) + t * 2.0 + 1.0) * 8.0
+        };
+        let (v, g, h) = eval2(|v: &[HyperDual<1>; 1]| l1(v[0]), &[0.5]);
+        // finite-difference check
+        let f = |t: f64| 8.0 * (t - 1.0_f64).powi(2) * (1.3 * t * t + 2.0 * t + 1.0);
+        let eps = 1e-6;
+        let gfd = (f(0.5 + eps) - f(0.5 - eps)) / (2.0 * eps);
+        let hfd = (f(0.5 + eps) - 2.0 * f(0.5) + f(0.5 - eps)) / (eps * eps);
+        assert!((v - f(0.5)).abs() < 1e-12);
+        assert!((g[0] - gfd).abs() < 1e-5, "{} vs {}", g[0], gfd);
+        // second-order central differences carry ~1e-16/eps^2 cancellation
+        // noise (~5e-3 here); the hyper-dual value is the exact one.
+        assert!((h[0][0] - hfd).abs() < 2e-2, "{} vs {}", h[0][0], hfd);
+    }
+
+    #[test]
+    fn transcendental_chain() {
+        // f = exp(x) * ln(y) + sqrt(x*y)
+        let f = |v: &[HyperDual<2>; 2]| {
+            v[0].exp() * v[1].ln() + (v[0] * v[1]).sqrt()
+        };
+        let (_, g, h) = eval2(f, &[0.7, 1.9]);
+        let ff = |x: f64, y: f64| x.exp() * y.ln() + (x * y).sqrt();
+        let e = 1e-6;
+        let gx = (ff(0.7 + e, 1.9) - ff(0.7 - e, 1.9)) / (2.0 * e);
+        let hxy = (ff(0.7 + e, 1.9 + e) - ff(0.7 + e, 1.9 - e)
+            - ff(0.7 - e, 1.9 + e)
+            + ff(0.7 - e, 1.9 - e))
+            / (4.0 * e * e);
+        assert!((g[0] - gx).abs() < 1e-5);
+        assert!((h[0][1] - hxy).abs() < 1e-3);
+        assert!((h[0][1] - h[1][0]).abs() < 1e-12, "hessian symmetric");
+    }
+
+    #[test]
+    fn division_rule() {
+        let f = |v: &[HyperDual<1>; 1]| v[0].powi(3) / (v[0] + 2.0);
+        let (_, g, h) = eval2(f, &[1.5]);
+        let ff = |x: f64| x.powi(3) / (x + 2.0);
+        let e = 1e-6;
+        assert!((g[0] - (ff(1.5 + e) - ff(1.5 - e)) / (2.0 * e)).abs() < 1e-5);
+        assert!(
+            (h[0][0] - (ff(1.5 + e) - 2.0 * ff(1.5) + ff(1.5 - e)) / (e * e)).abs()
+                < 1e-3
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Hand-rolled CLI (no clap in the offline vendor set).
+//!
+//! Subcommands:
+//!   train   -- run a training job (the launcher)
+//!   eval    -- few-shot evaluation of a checkpoint (Figure 6)
+//!   toy     -- the Figure 2 toy-landscape trajectories
+//!   hist    -- diagonal-Hessian histogram of a checkpoint (Figure 3)
+//!   sweep   -- LR escalation / grid sweeps (Figures 7b, 12)
+//!   info    -- print a preset's manifest summary
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value` / `--key=value` / bare positionals.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sub) = it.peek() {
+            if !sub.starts_with('-') {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags
+                        .insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+}
+
+pub const USAGE: &str = "\
+sophia — Rust+JAX+Pallas reproduction of the Sophia optimizer (ICLR 2024)
+
+USAGE: sophia <subcommand> [--flags]
+
+  train  --preset b1 --optimizer sophia_g --steps 1000 [--lr 1e-3]
+         [--k 10] [--warmup N] [--eval-every 50] [--seed 0]
+         [--log runs/x.jsonl] [--ckpt-dir runs/ckpt] [--ckpt-every N]
+         [--config file.toml] [--artifacts artifacts]
+  eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
+  toy    [--steps 50] [--out toy.csv]
+  hist   --preset b1 [--ckpt dir] [--bins 40]
+  sweep  --preset b0 --optimizer adamw --steps 120 --lrs 1e-4,2e-4,4e-4
+  info   --preset b1
+";
+
+pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
+    use crate::config::{toml::Toml, Optimizer, TrainConfig};
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        cfg.apply_toml(&doc)?;
+    }
+    if let Some(p) = args.flags.get("preset") {
+        cfg.preset = p.clone();
+    }
+    if let Some(o) = args.flags.get("optimizer") {
+        cfg.optimizer = Optimizer::parse(o)?;
+    }
+    cfg.artifacts_root = args.str_or("artifacts", "artifacts").into();
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.peak_lr = args.f64_or("lr", cfg.peak_lr)?;
+    cfg.warmup = args.usize_or("warmup", cfg.warmup)?;
+    cfg.hess_interval = args.usize_or("k", cfg.hess_interval)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.data_seed = args.u64_or("data-seed", cfg.data_seed)?;
+    if let Some(p) = args.flags.get("log") {
+        cfg.log_path = Some(p.into());
+    }
+    if let Some(p) = args.flags.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(p.into());
+    }
+    cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every)?;
+    if let Some(a) = args.flags.get("train-artifact") {
+        cfg.train_artifact_override = Some(a.clone());
+    }
+    if let Some(a) = args.flags.get("hess-artifact") {
+        cfg.hess_artifact_override = Some(a.clone());
+    }
+    if cfg.steps == 0 {
+        bail!("--steps must be > 0");
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv("train --preset b1 --steps 100 --verbose")).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.str_or("preset", ""), "b1");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_form_and_positionals() {
+        let a = Args::parse(&argv("sweep --lrs=1e-4,2e-4 file.toml")).unwrap();
+        assert_eq!(a.str_or("lrs", ""), "1e-4,2e-4");
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn train_config_from_flags() {
+        let a = Args::parse(&argv(
+            "train --preset b0 --optimizer adamw --steps 10 --lr 2e-4 --k 5",
+        ))
+        .unwrap();
+        let c = build_train_config(&a).unwrap();
+        assert_eq!(c.preset, "b0");
+        assert_eq!(c.steps, 10);
+        assert_eq!(c.hess_interval, 5);
+        assert!((c.effective_lr() - 2e-4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&argv("train --steps abc")).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Minimal TOML-subset parser for run configuration files (no `toml` crate
+//! in the offline vendor set).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments. That covers
+//! every launcher config in `configs/` and is validated by the typed layer
+//! in `config::mod`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live under "".
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml, String> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let src = r#"
+# run config
+preset = "b1"            # model preset
+steps = 2000
+[optimizer]
+name = "sophia_g"
+lr = 4e-4
+k = 10
+use_clip = true
+lrs = [1e-4, 2e-4]
+"#;
+        let t = Toml::parse(src).unwrap();
+        assert_eq!(t.str_or("", "preset", "?"), "b1");
+        assert_eq!(t.i64_or("", "steps", 0), 2000);
+        assert_eq!(t.f64_or("optimizer", "lr", 0.0), 4e-4);
+        assert!(t.bool_or("optimizer", "use_clip", false));
+        let arr = t.get("optimizer", "lrs").unwrap();
+        match arr {
+            Value::Arr(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let t = Toml::parse("s = \"a # b\"").unwrap();
+        assert_eq!(t.str_or("", "s", ""), "a # b");
+    }
+}

@@ -1,0 +1,54 @@
+//! Checkpointing: raw little-endian f32 blobs for (params, m, h) plus a
+//! JSON meta file with the step counter and config fingerprint. Restore is
+//! exact (bit-identical state), which the integration tests assert.
+
+use super::trainer::Trainer;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend(v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+}
+
+pub fn checkpoint_save(t: &Trainer, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    write_f32(&dir.join("params.bin"), &t.state.flat_state("params")?)?;
+    write_f32(&dir.join("m.bin"), &t.state.flat_state("m")?)?;
+    write_f32(&dir.join("h.bin"), &t.state.flat_state("h")?)?;
+    let mut meta = BTreeMap::new();
+    meta.insert("step".to_string(), Json::Num(t.step as f64));
+    meta.insert("preset".to_string(), Json::Str(t.model.name.clone()));
+    meta.insert(
+        "optimizer".to_string(),
+        Json::Str(t.cfg.optimizer.name().to_string()),
+    );
+    meta.insert("n_params".to_string(), Json::Num(t.model.n_params() as f64));
+    std::fs::write(dir.join("meta.json"), Json::Obj(meta).to_string())?;
+    Ok(())
+}
+
+pub fn checkpoint_load(t: &mut Trainer, dir: &Path) -> Result<()> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("reading {dir:?}/meta.json"))?;
+    let meta = Json::parse(&meta_text).map_err(|e| anyhow!("meta.json: {e}"))?;
+    let preset = meta.get("preset").and_then(Json::as_str).unwrap_or("");
+    if preset != t.model.name {
+        bail!("checkpoint is for preset {preset:?}, trainer uses {:?}", t.model.name);
+    }
+    let n = meta.get("n_params").and_then(Json::as_usize).unwrap_or(0);
+    if n != t.model.n_params() {
+        bail!("checkpoint has {n} params, model needs {}", t.model.n_params());
+    }
+    let params = crate::runtime::read_f32_file(&dir.join("params.bin"))?;
+    let m = crate::runtime::read_f32_file(&dir.join("m.bin"))?;
+    let h = crate::runtime::read_f32_file(&dir.join("h.bin"))?;
+    t.state.restore(&params, &m, &h)?;
+    t.step = meta.get("step").and_then(Json::as_usize).unwrap_or(0);
+    Ok(())
+}

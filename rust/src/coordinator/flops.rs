@@ -1,0 +1,102 @@
+//! Analytic compute accounting (Table 1's "Compute" column), following
+//! the Chowdhery et al. (2022) convention the paper cites: a train step
+//! costs ~6 N FLOPs per token (fwd 2N + bwd 4N), attention terms included
+//! via the exact per-layer expansion.
+
+use crate::config::ModelConfig;
+
+/// FLOPs for one forward+backward pass over `tokens` tokens.
+pub fn train_step_flops(m: &ModelConfig, tokens: usize) -> f64 {
+    // matmul-dominant accounting
+    let d = m.d_model as f64;
+    let l = m.depth as f64;
+    let t = m.ctx as f64;
+    let v = m.vocab as f64;
+    // per token per layer: qkv (2*d*3d) + attn scores/values (2*2*t*d) +
+    // proj (2*d*d) + mlp (2*2*d*4d)
+    let per_tok_layer = 2.0 * d * 3.0 * d + 4.0 * t * d + 2.0 * d * d + 16.0 * d * d;
+    let fwd = tokens as f64 * (l * per_tok_layer + 2.0 * d * v);
+    3.0 * fwd // fwd + 2x for bwd
+}
+
+/// FLOPs for one Hessian-estimator refresh.
+/// GNB: one extra fwd+bwd on the reduced batch (+ the elementwise EMA).
+/// Hutchinson: an HVP costs ~2x a gradient => ~2 train steps on the
+/// reduced batch.
+pub fn hess_step_flops(m: &ModelConfig, estimator: &str) -> f64 {
+    match estimator {
+        "hess_gnb" | "hess_ef" => {
+            train_step_flops(m, m.hess_batch_g * m.ctx)
+        }
+        "hess_hutchinson" | "hess_ah" => {
+            2.0 * train_step_flops(m, m.hess_batch_h * m.ctx)
+        }
+        _ => 0.0,
+    }
+}
+
+/// Average per-step compute for an optimizer refreshing every k steps.
+pub fn avg_step_flops(m: &ModelConfig, estimator: Option<&str>, k: usize) -> f64 {
+    let base = train_step_flops(m, m.batch * m.ctx);
+    match estimator {
+        Some(e) => base + hess_step_flops(m, e) / k.max(1) as f64,
+        None => base,
+    }
+}
+
+/// The paper's headline overhead ratio: (avg step compute with Hessian) /
+/// (plain AdamW step compute) - 1.
+pub fn hessian_overhead_frac(m: &ModelConfig, estimator: &str, k: usize) -> f64 {
+    avg_step_flops(m, Some(estimator), k) / train_step_flops(m, m.batch * m.ctx) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ParamSpec};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            ctx: 64,
+            d_model: 64,
+            n_head: 4,
+            depth: 4,
+            batch: 4,
+            hess_batch_h: 1,
+            hess_batch_g: 2,
+            params: vec![ParamSpec { name: "w".into(), shape: vec![2, 2], init_std: 0.02 }],
+            artifacts: vec![],
+            dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn overhead_small_at_k10() {
+        // Paper Table 1: Hessian overhead ~6% of compute at k=10 with the
+        // reduced estimator batches.
+        let m = cfg();
+        let o = hessian_overhead_frac(&m, "hess_gnb", 10);
+        assert!(o > 0.0 && o < 0.10, "gnb overhead {o}");
+        let o = hessian_overhead_frac(&m, "hess_hutchinson", 10);
+        assert!(o > 0.0 && o < 0.10, "hutchinson overhead {o}");
+    }
+
+    #[test]
+    fn overhead_scales_inversely_with_k() {
+        let m = cfg();
+        let o1 = hessian_overhead_frac(&m, "hess_gnb", 1);
+        let o10 = hessian_overhead_frac(&m, "hess_gnb", 10);
+        let o100 = hessian_overhead_frac(&m, "hess_gnb", 100);
+        assert!(o1 > 9.0 * o10 * 0.99);
+        assert!(o10 > 9.0 * o100 * 0.99);
+    }
+
+    #[test]
+    fn flops_positive_and_monotone_in_tokens() {
+        let m = cfg();
+        assert!(train_step_flops(&m, 256) > 0.0);
+        assert!(train_step_flops(&m, 512) > train_step_flops(&m, 256));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training loop that drives the AOT artifacts.
+//!
+//! The paper's coordination contribution, operationalized: interleave the
+//! `train_step` executable with the optimizer's `hess_step` executable on
+//! the every-k cadence of Algorithm 3 (line 7), thread (params, m, h)
+//! state across steps, schedule the LR, account wall-clock + FLOPs
+//! (Table 1), log the stability statistics (Figures 7/9), evaluate, and
+//! checkpoint.
+
+pub mod checkpoint;
+pub mod flops;
+pub mod sweep;
+pub mod trainer;
+
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,63 @@
+//! Sweep driver: run a grid of short training jobs (optimizer x LR x
+//! steps x preset) and collect outcomes. Powers the Figure 7(b,c), 8, 10
+//! and 12 experiments and the peak-LR search protocol of Appendix B.1
+//! ("largest LR such that training does not blow up; 1.25x must blow up").
+
+use super::trainer::{TrainOutcome, Trainer};
+use crate::config::{Optimizer, TrainConfig};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub optimizer: Optimizer,
+    pub lr: f64,
+    pub steps: usize,
+    pub hess_interval: usize,
+    pub preset: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub point: SweepPoint,
+    pub outcome: TrainOutcome,
+}
+
+/// Run one configuration to completion (or divergence).
+pub fn run_point(base: &TrainConfig, p: &SweepPoint, verbose: bool) -> Result<SweepResult> {
+    let mut cfg = base.clone();
+    cfg.preset = p.preset.clone();
+    cfg.optimizer = p.optimizer;
+    cfg.peak_lr = p.lr;
+    cfg.steps = p.steps;
+    cfg.hess_interval = p.hess_interval;
+    let mut t = Trainer::new(cfg)?;
+    let outcome = t.train_steps(p.steps, verbose)?;
+    Ok(SweepResult { point: p.clone(), outcome })
+}
+
+/// Appendix B.1 LR escalation: walk `grid` ascending, return
+/// (largest stable LR, first blowing-up LR) for the optimizer.
+pub fn max_stable_lr(
+    base: &TrainConfig,
+    opt: Optimizer,
+    preset: &str,
+    steps: usize,
+    grid: &[f64],
+) -> Result<(Option<f64>, Option<f64>)> {
+    let mut stable = None;
+    for &lr in grid {
+        let p = SweepPoint {
+            optimizer: opt,
+            lr,
+            steps,
+            hess_interval: base.hess_interval,
+            preset: preset.to_string(),
+        };
+        let r = run_point(base, &p, false)?;
+        if r.outcome.diverged {
+            return Ok((stable, Some(lr)));
+        }
+        stable = Some(lr);
+    }
+    Ok((stable, None))
+}

@@ -1,0 +1,269 @@
+//! The training loop.
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::{self, Loader, Prefetcher, Split};
+use crate::metrics::{RunLog, StepRecord};
+use crate::rng::Rng;
+use crate::runtime::{self, lit_i32, run, scalar_f32, scalar_i32, ModelState, Runtime};
+use crate::schedule::Schedule;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub model: ModelConfig,
+    pub rt: Runtime,
+    pub state: ModelState,
+    pub schedule: Schedule,
+    pub log: RunLog,
+    pub step: usize,
+    train_data: Prefetcher,
+    val_data: Loader,
+    seed_rng: Rng,
+    /// accumulated wall-clock of hessian refreshes / train execs (Table 1)
+    pub total_hess_ms: f64,
+    pub total_step_ms: f64,
+    pub n_hess: usize,
+    pub diverged: bool,
+}
+
+/// Summary returned by `train()` for the bench harness.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub final_train_loss: f64,
+    pub final_val_loss: f64,
+    pub diverged: bool,
+    pub steps: usize,
+    pub avg_step_ms: f64,
+    pub avg_hess_ms: f64,
+    pub clip_trigger_frac: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let model = ModelConfig::load(&cfg.artifacts_root, &cfg.preset)?;
+        let mut rt = Runtime::cpu()?;
+        // compile everything up front so the hot loop never compiles
+        rt.load_artifact(&model, &cfg.train_artifact())
+            .with_context(|| format!("train artifact for {}", cfg.optimizer.name()))?;
+        if let Some(h) = cfg.hess_artifact() {
+            rt.load_artifact(&model, &h)?;
+        }
+        rt.load_artifact(&model, "eval_step")?;
+
+        let tok = data::tokenizer_for_vocab(model.vocab, cfg.data_seed)?;
+        let train_loader = Loader::new(
+            tok.clone(), cfg.data_seed, Split::Train, model.batch, model.ctx);
+        let val_data = Loader::new(
+            tok, cfg.data_seed, Split::Val, model.batch, model.ctx);
+
+        let state = ModelState::init(&model, cfg.seed)?;
+        let schedule = Schedule::cosine(
+            cfg.effective_lr(), cfg.effective_warmup(), cfg.steps, cfg.final_lr_frac);
+        let log = RunLog::new(cfg.log_path.as_deref())?;
+
+        Ok(Trainer {
+            seed_rng: Rng::new(cfg.seed ^ 0x4E55__5348),
+            cfg,
+            model,
+            rt,
+            state,
+            schedule,
+            log,
+            step: 0,
+            train_data: Prefetcher::spawn(train_loader, 4),
+            val_data,
+            total_hess_ms: 0.0,
+            total_step_ms: 0.0,
+            n_hess: 0,
+            diverged: false,
+        })
+    }
+
+    /// Replace initial params from a flat blob (golden tests).
+    pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        self.state = ModelState::from_flat_params(&self.model, flat)?;
+        Ok(())
+    }
+
+    fn hess_refresh(&mut self) -> Result<f64> {
+        let Some(art) = self.cfg.hess_artifact() else {
+            return Ok(0.0);
+        };
+        let batch = self.train_data.next_batch();
+        let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
+        let seed = scalar_i32(self.seed_rng.next_u64() as i32);
+        let n = self.state.n_leaves();
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
+        inputs.extend(self.state.params.iter());
+        inputs.extend(self.state.h.iter());
+        inputs.push(&tokens);
+        inputs.push(&seed);
+
+        let exe = self.rt.load_artifact(&self.model, &art)?;
+        let mut out = run(exe, &inputs)?;
+        let hnorm = runtime::scalar_of(&out[n])? as f64;
+        out.truncate(n);
+        self.state.h = out;
+        self.n_hess += 1;
+        Ok(hnorm)
+    }
+
+    /// Run one training step (1-based `self.step` advances). Returns the
+    /// step record.
+    pub fn train_step(&mut self) -> Result<StepRecord> {
+        self.step += 1;
+        let t = self.step;
+        let lr = self.schedule.lr(t);
+
+        // Algorithm 3 line 7: refresh the Hessian EMA every k steps
+        // (t mod k == 1 in the paper's 1-based indexing).
+        let mut hess_ms = 0.0;
+        let mut hnorm = 0.0;
+        if self.cfg.hess_artifact().is_some()
+            && (t - 1) % self.cfg.hess_interval.max(1) == 0
+        {
+            let t0 = Instant::now();
+            hnorm = self.hess_refresh()?;
+            hess_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+
+        let batch = self.train_data.next_batch();
+        let t0 = Instant::now();
+        let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
+        let lr_lit = scalar_f32(lr as f32);
+        let t_lit = scalar_f32(t as f32);
+        let n = self.state.n_leaves();
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
+        inputs.extend(self.state.params.iter());
+        inputs.extend(self.state.m.iter());
+        inputs.extend(self.state.h.iter());
+        inputs.push(&tokens);
+        inputs.push(&lr_lit);
+        inputs.push(&t_lit);
+
+        let train_art = self.cfg.train_artifact();
+        let exe = self.rt.load_artifact(&self.model, &train_art)?;
+        let mut out = run(exe, &inputs)?;
+        if out.len() != 3 * n + 3 {
+            bail!("train artifact returned {} outputs, expected {}", out.len(), 3 * n + 3);
+        }
+        let clipfrac = runtime::scalar_of(&out[3 * n + 2])? as f64;
+        let gnorm = runtime::scalar_of(&out[3 * n + 1])? as f64;
+        let loss = runtime::scalar_of(&out[3 * n])? as f64;
+        out.truncate(3 * n);
+        let h_new: Vec<_> = out.drain(2 * n..).collect();
+        let m_new: Vec<_> = out.drain(n..).collect();
+        self.state.params = out;
+        self.state.m = m_new;
+        self.state.h = h_new;
+
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3 + hess_ms;
+        self.total_step_ms += step_ms;
+        self.total_hess_ms += hess_ms;
+
+        if !loss.is_finite() || loss > 50.0 {
+            self.diverged = true;
+        }
+
+        Ok(StepRecord {
+            step: t,
+            loss,
+            val_loss: None,
+            lr,
+            gnorm,
+            clipfrac,
+            hnorm,
+            step_ms,
+            hess_ms,
+        })
+    }
+
+    /// Mean val loss over `n_batches` held-out batches.
+    pub fn eval(&mut self, n_batches: usize) -> Result<f64> {
+        let n = self.state.n_leaves();
+        let mut total = 0.0;
+        for _ in 0..n_batches.max(1) {
+            let batch = self.val_data.next_batch();
+            let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(n + 1);
+            inputs.extend(self.state.params.iter());
+            inputs.push(&tokens);
+            let exe = self.rt.load_artifact(&self.model, "eval_step")?;
+            let out = run(exe, &inputs)?;
+            total += runtime::scalar_of(&out[0])? as f64;
+        }
+        Ok(total / n_batches.max(1) as f64)
+    }
+
+    /// Train for the configured number of steps with periodic eval +
+    /// checkpointing; stops early on divergence.
+    pub fn train(&mut self) -> Result<TrainOutcome> {
+        self.train_steps(self.cfg.steps, true)
+    }
+
+    pub fn train_steps(&mut self, steps: usize, verbose: bool) -> Result<TrainOutcome> {
+        let mut last_loss = f64::NAN;
+        for _ in 0..steps {
+            let mut rec = self.train_step()?;
+            last_loss = rec.loss;
+            let do_eval = self.cfg.eval_every > 0
+                && (self.step % self.cfg.eval_every == 0 || self.step == steps);
+            if do_eval {
+                rec.val_loss = Some(self.eval(self.cfg.eval_batches)?);
+            }
+            if verbose && (do_eval || self.step % 20 == 0 || self.step <= 2) {
+                eprintln!(
+                    "step {:>6}  loss {:.4}  val {}  lr {:.2e}  gnorm {:.2} clip {:.2} [{:.0}ms]",
+                    rec.step,
+                    rec.loss,
+                    rec.val_loss.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+                    rec.lr,
+                    rec.gnorm,
+                    rec.clipfrac,
+                    rec.step_ms,
+                );
+            }
+            self.log.push(rec)?;
+            if self.cfg.ckpt_every > 0 && self.step % self.cfg.ckpt_every == 0 {
+                if let Some(dir) = self.cfg.ckpt_dir.clone() {
+                    self.save_checkpoint(&dir)?;
+                }
+            }
+            if self.diverged {
+                if verbose {
+                    eprintln!("step {}: DIVERGED (loss {last_loss})", self.step);
+                }
+                break;
+            }
+        }
+        self.log.flush()?;
+        let final_val = match self.log.final_val_loss() {
+            Some(v) => v,
+            None => self.eval(self.cfg.eval_batches)?,
+        };
+        let steps_done = self.step;
+        Ok(TrainOutcome {
+            final_train_loss: last_loss,
+            final_val_loss: final_val,
+            diverged: self.diverged,
+            steps: steps_done,
+            avg_step_ms: self.total_step_ms / steps_done.max(1) as f64,
+            avg_hess_ms: self.total_hess_ms / self.n_hess.max(1) as f64,
+            clip_trigger_frac: self.log.grad_clip_trigger_frac(1.0),
+        })
+    }
+
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        checkpoint_save(self, dir)
+    }
+
+    pub fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        checkpoint_load(self, dir)
+    }
+}
+
+use super::checkpoint::{checkpoint_load, checkpoint_save};

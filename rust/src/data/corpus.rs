@@ -1,0 +1,207 @@
+//! Synthetic pre-training corpus substrate (the OpenWebText/Pile stand-in;
+//! DESIGN.md §4).
+//!
+//! Requirements the substitution must preserve for the paper's experiments
+//! to be meaningful:
+//!   * natural-language-like statistics: Zipfian unigrams, local syntax,
+//!     long-range (document-level) dependencies -- so the loss decays
+//!     smoothly and optimizers are separated by how fast they descend;
+//!   * deterministic random access BY DOCUMENT INDEX, so an "infinite"
+//!     corpus needs no storage and train/val splits are exact;
+//!   * embedded relational facts that downstream few-shot tasks
+//!     (eval/fewshot.rs) can query, so the Figure 6 experiment measures
+//!     genuine loss->accuracy transfer.
+//!
+//! Each document: a topic (latent state) selects an entity/lexicon slice;
+//! sentences are sampled from templates mixing topic words, relation facts
+//! ("the color of NOUN is COLOR"), arithmetic ("3 plus 4 is 7") and copy
+//! patterns -- all learnable structure at tiny-model scale.
+
+use crate::rng::Rng;
+
+pub const EOT: u8 = 0; // document separator token (byte tokenizer id 0)
+
+/// Closed word lists; kept lowercase ASCII so the byte tokenizer sees a
+/// small effective alphabet.
+const NOUNS: [&str; 24] = [
+    "stone", "river", "lamp", "crow", "wheel", "glass", "tower", "fish",
+    "cloud", "sand", "horn", "leaf", "nail", "rope", "ship", "door",
+    "flame", "moss", "gate", "drum", "pearl", "root", "mask", "bell",
+];
+const COLORS: [&str; 8] =
+    ["red", "blue", "green", "black", "white", "gold", "grey", "brown"];
+const PLACES: [&str; 8] =
+    ["harbor", "valley", "market", "forest", "castle", "island", "cellar", "bridge"];
+const VERBS: [&str; 12] = [
+    "holds", "finds", "breaks", "guards", "moves", "hides", "lifts",
+    "turns", "drops", "marks", "keeps", "sells",
+];
+const ADJS: [&str; 10] = [
+    "old", "small", "bright", "heavy", "quiet", "sharp", "warm", "pale",
+    "round", "thin",
+];
+const DIGITS: [&str; 10] =
+    ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"];
+
+/// A deterministic fact base: the color/place of each noun per topic.
+/// Few-shot tasks query these with the same formulas.
+pub fn color_of(topic: u64, noun_idx: usize) -> &'static str {
+    COLORS[((topic.wrapping_mul(2654435761).wrapping_add(noun_idx as u64 * 97)) % 8) as usize]
+}
+
+pub fn place_of(topic: u64, noun_idx: usize) -> &'static str {
+    PLACES[((topic.wrapping_mul(40503).wrapping_add(noun_idx as u64 * 131)) % 8) as usize]
+}
+
+/// Zipfian word pick: rank r with probability ∝ 1/(r+2).
+fn zipf_pick<'a>(rng: &mut Rng, words: &[&'a str]) -> &'a str {
+    let n = words.len();
+    // inverse-CDF over harmonic weights, precomputed small n
+    let mut weights = Vec::with_capacity(n);
+    for r in 0..n {
+        weights.push(1.0 / (r as f64 + 2.0));
+    }
+    words[rng.categorical(&weights)]
+}
+
+pub struct Document {
+    pub text: String,
+    pub topic: u64,
+}
+
+/// Generate document `index` of the corpus for `seed`. Pure function.
+pub fn document(seed: u64, index: u64) -> Document {
+    let mut rng = Rng::new(seed ^ 0x5EED_C0DE).fold(index);
+    let topic = rng.below(64);
+    let n_sentences = 12 + rng.below(20) as usize;
+    let mut text = String::with_capacity(n_sentences * 40);
+    for _ in 0..n_sentences {
+        let kind = rng.below(10);
+        let s = match kind {
+            // relation facts (queried by few-shot tasks)
+            0 | 1 => {
+                let ni = rng.below(NOUNS.len() as u64) as usize;
+                format!("the color of the {} is {} .", NOUNS[ni], color_of(topic, ni))
+            }
+            2 => {
+                let ni = rng.below(NOUNS.len() as u64) as usize;
+                format!("the {} stays in the {} .", NOUNS[ni], place_of(topic, ni))
+            }
+            // arithmetic (structured, exactly learnable)
+            3 => {
+                let a = rng.below(5) as usize;
+                let b = rng.below(5) as usize;
+                format!("{} plus {} is {} .", DIGITS[a], DIGITS[b], DIGITS[a + b])
+            }
+            // copy / induction pattern
+            4 => {
+                let w1 = zipf_pick(&mut rng, &NOUNS);
+                let w2 = zipf_pick(&mut rng, &NOUNS);
+                format!("{w1} {w2} {w1} {w2} .")
+            }
+            // generic SVO with topic-dependent adjective bias
+            _ => {
+                let subj = zipf_pick(&mut rng, &NOUNS);
+                let verb = VERBS[((topic as usize) + rng.below(4) as usize) % VERBS.len()];
+                let adj = ADJS[((topic as usize) * 3 + rng.below(3) as usize) % ADJS.len()];
+                let obj = zipf_pick(&mut rng, &NOUNS);
+                format!("the {adj} {subj} {verb} the {obj} .")
+            }
+        };
+        text.push_str(&s);
+        text.push(' ');
+    }
+    Document { text, topic }
+}
+
+/// Train/val split by document index: even -> train, odd -> val.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+pub fn doc_index(split: Split, i: u64) -> u64 {
+    match split {
+        Split::Train => 2 * i,
+        Split::Val => 2 * i + 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_documents() {
+        let a = document(7, 42).text;
+        let b = document(7, 42).text;
+        assert_eq!(a, b);
+        let c = document(7, 43).text;
+        assert_ne!(a, c);
+        let d = document(8, 42).text;
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn documents_are_ascii_lowercase() {
+        for i in 0..20 {
+            let doc = document(1, i);
+            assert!(doc.text.is_ascii());
+            assert!(!doc.text.is_empty());
+            assert!(doc
+                .text
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_whitespace() || c == '.'));
+        }
+    }
+
+    #[test]
+    fn facts_are_consistent_within_topic() {
+        assert_eq!(color_of(3, 5), color_of(3, 5));
+        // different topics disagree on at least one noun
+        let diff = (0..NOUNS.len()).any(|n| color_of(1, n) != color_of(2, n));
+        assert!(diff);
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let mut rng = Rng::new(0);
+        let mut head = 0;
+        let n = 5000;
+        for _ in 0..n {
+            if zipf_pick(&mut rng, &NOUNS) == NOUNS[0] {
+                head += 1;
+            }
+        }
+        // p(rank0) = (1/2) / H ~ 0.135 for 24 words
+        assert!(head > n / 12, "head count {head}");
+    }
+
+    #[test]
+    fn split_indices_disjoint() {
+        let train: Vec<u64> = (0..100).map(|i| doc_index(Split::Train, i)).collect();
+        let val: Vec<u64> = (0..100).map(|i| doc_index(Split::Val, i)).collect();
+        for t in &train {
+            assert!(!val.contains(t));
+        }
+    }
+
+    #[test]
+    fn arithmetic_facts_are_correct() {
+        // scan many documents for "plus" sentences and check them
+        let mut checked = 0;
+        for i in 0..200 {
+            let doc = document(3, i);
+            for sent in doc.text.split(" . ") {
+                let words: Vec<&str> = sent.split_whitespace().collect();
+                if words.len() == 5 && words[1] == "plus" && words[3] == "is" {
+                    let idx = |w: &str| DIGITS.iter().position(|d| *d == w).unwrap();
+                    assert_eq!(idx(words[0]) + idx(words[2]), idx(words[4]));
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 50, "only {checked} arithmetic sentences found");
+    }
+}

@@ -1,0 +1,24 @@
+//! Data substrate: synthetic corpus generator, tokenizers (byte / BPE),
+//! and the packing/batching/prefetch pipeline. See DESIGN.md §4 for why
+//! this substitution preserves the paper's experimental behaviour.
+
+pub mod corpus;
+pub mod pipeline;
+pub mod tokenizer;
+
+pub use corpus::Split;
+pub use pipeline::{Batch, Loader, Prefetcher};
+pub use tokenizer::{Bpe, ByteTokenizer, Tokenizer};
+
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Build the tokenizer a preset expects from its vocabulary size: 256 =
+/// raw bytes; larger = BPE trained (deterministically) on the corpus.
+pub fn tokenizer_for_vocab(vocab: usize, seed: u64) -> Result<Arc<dyn Tokenizer>> {
+    if vocab == 256 {
+        Ok(Arc::new(ByteTokenizer))
+    } else {
+        Ok(Arc::new(tokenizer::train_bpe_on_corpus(seed, vocab, 24)?))
+    }
+}

@@ -1,0 +1,161 @@
+//! Data pipeline: document generation -> tokenization -> packing into
+//! fixed-length training windows -> shuffled batching, with a background
+//! prefetch thread so tokenization never sits on the training hot path.
+//!
+//! Windows are (ctx + 1) tokens: the train step slices x = w[:-1],
+//! y = w[1:] inside the artifact. Documents are packed contiguously and
+//! separated by EOT, exactly like GPT-2 pre-training.
+
+use super::corpus::{self, Split};
+use super::tokenizer::Tokenizer;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+
+/// A batch of token windows, row-major (batch, ctx + 1) i32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub width: usize,
+}
+
+/// Streaming loader over the infinite synthetic corpus.
+pub struct Loader {
+    tok: Arc<dyn Tokenizer>,
+    seed: u64,
+    split: Split,
+    batch: usize,
+    width: usize, // ctx + 1
+    next_doc: u64,
+    buf: Vec<i32>, // leftover packed tokens
+}
+
+impl Loader {
+    pub fn new(
+        tok: Arc<dyn Tokenizer>,
+        seed: u64,
+        split: Split,
+        batch: usize,
+        ctx: usize,
+    ) -> Self {
+        Loader { tok, seed, split, batch, width: ctx + 1, next_doc: 0, buf: Vec::new() }
+    }
+
+    /// Start from a given document offset (used to resume and for val
+    /// streams decorrelated from training order).
+    pub fn with_doc_offset(mut self, off: u64) -> Self {
+        self.next_doc = off;
+        self
+    }
+
+    fn refill(&mut self, need: usize) {
+        while self.buf.len() < need {
+            let idx = corpus::doc_index(self.split, self.next_doc);
+            self.next_doc += 1;
+            let doc = corpus::document(self.seed, idx);
+            let mut ids = self.tok.encode(&doc.text);
+            self.buf.push(self.tok.eot());
+            self.buf.append(&mut ids);
+        }
+    }
+
+    /// Produce the next batch (deterministic sequence of sequential
+    /// windows over the packed stream).
+    pub fn next_batch(&mut self) -> Batch {
+        let need = self.batch * self.width;
+        self.refill(need);
+        let tokens: Vec<i32> = self.buf.drain(..need).collect();
+        Batch { tokens, batch: self.batch, width: self.width }
+    }
+}
+
+/// Background prefetcher: runs a Loader on a worker thread, keeps up to
+/// `depth` batches queued. Keeps tokenization off the training loop
+/// (measured in the L3 perf pass, EXPERIMENTS.md §Perf).
+pub struct Prefetcher {
+    rx: Receiver<Batch>,
+    _handle: std::thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    pub fn spawn(mut loader: Loader, depth: usize) -> Self {
+        let (tx, rx) = sync_channel(depth);
+        let handle = std::thread::spawn(move || loop {
+            let b = loader.next_batch();
+            if tx.send(b).is_err() {
+                return; // consumer dropped
+            }
+        });
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next_batch(&self) -> Batch {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::ByteTokenizer;
+
+    fn mk(split: Split) -> Loader {
+        Loader::new(Arc::new(ByteTokenizer), 7, split, 4, 64)
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let mut l = mk(Split::Train);
+        let b = l.next_batch();
+        assert_eq!(b.tokens.len(), 4 * 65);
+        assert_eq!((b.batch, b.width), (4, 65));
+        assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = mk(Split::Train);
+        let mut b = mk(Split::Train);
+        for _ in 0..3 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn train_and_val_differ() {
+        let mut a = mk(Split::Train);
+        let mut b = mk(Split::Val);
+        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn stream_is_contiguous_packing() {
+        // Two consecutive batches must continue the packed stream: decode
+        // and check no tokens were dropped (first batch tokens + second
+        // batch tokens == refilled stream prefix).
+        let mut l = mk(Split::Train);
+        let b1 = l.next_batch();
+        let b2 = l.next_batch();
+        let mut l2 = mk(Split::Train);
+        l2.refill(2 * 4 * 65);
+        let expect: Vec<i32> = l2.buf[..2 * 4 * 65].to_vec();
+        let got: Vec<i32> = b1.tokens.iter().chain(b2.tokens.iter()).copied().collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn prefetcher_matches_direct_loader() {
+        let p = Prefetcher::spawn(mk(Split::Train), 2);
+        let mut l = mk(Split::Train);
+        for _ in 0..4 {
+            assert_eq!(p.next_batch().tokens, l.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn doc_offset_changes_stream() {
+        let mut a = mk(Split::Train);
+        let mut b = mk(Split::Train).with_doc_offset(100);
+        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+}

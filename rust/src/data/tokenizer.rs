@@ -1,0 +1,225 @@
+//! Tokenizers: byte-level (vocab 256, the bench family's tokenizer) and a
+//! trainable BPE (byte pairs merged greedily by frequency; vocab 256 + M
+//! merges, used by the `e2e` preset with vocab 512).
+
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+pub trait Tokenizer: Send + Sync {
+    fn vocab(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, ids: &[i32]) -> String;
+    /// Document separator id.
+    fn eot(&self) -> i32 {
+        0
+    }
+}
+
+/// Identity byte tokenizer.
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab(&self) -> usize {
+        256
+    }
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+    fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Byte-pair encoder. Token ids: 0..256 = raw bytes, 256+i = merge i.
+pub struct Bpe {
+    /// merges[i] = (left, right) token ids merged into id 256+i
+    pub merges: Vec<(i32, i32)>,
+    /// rank of each merge (lower = applied first)
+    ranks: HashMap<(i32, i32), usize>,
+}
+
+impl Bpe {
+    /// Train on sample text until the vocabulary reaches `vocab` ( >= 256).
+    pub fn train(sample: &str, vocab: usize) -> Result<Bpe> {
+        if vocab < 256 {
+            bail!("BPE vocab must be >= 256");
+        }
+        let mut ids: Vec<i32> = sample.as_bytes().iter().map(|&b| b as i32).collect();
+        let mut merges = Vec::new();
+        while 256 + merges.len() < vocab {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &n)) = counts.iter().max_by_key(|(p, n)| (**n, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break; // nothing left worth merging
+            }
+            let new_id = 256 + merges.len() as i32;
+            merges.push(pair);
+            ids = merge_once(&ids, pair, new_id);
+        }
+        Ok(Bpe::from_merges(merges))
+    }
+
+    pub fn from_merges(merges: Vec<(i32, i32)>) -> Bpe {
+        let mut ranks = HashMap::new();
+        for (i, &p) in merges.iter().enumerate() {
+            ranks.insert(p, i);
+        }
+        Bpe { merges, ranks }
+    }
+
+    /// Serialize as lines "left right" in merge order.
+    pub fn save(&self) -> String {
+        let mut s = String::new();
+        for (l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        s
+    }
+
+    pub fn load(text: &str) -> Result<Bpe> {
+        let mut merges = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (Some(l), Some(r)) = (it.next(), it.next()) else {
+                bail!("bad merge line {line:?}");
+            };
+            merges.push((l.parse()?, r.parse()?));
+        }
+        Ok(Bpe::from_merges(merges))
+    }
+}
+
+fn merge_once(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Tokenizer for Bpe {
+    fn vocab(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.as_bytes().iter().map(|&b| b as i32).collect();
+        // apply merges in rank order until no applicable pair remains
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for (pos, w) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.ranks.get(&(w[0], w[1])) {
+                    if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                        best = Some((rank, pos));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            ids = merge_once(&ids, pair, 256 + rank as i32);
+        }
+        ids
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.expand(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+impl Bpe {
+    fn expand(&self, id: i32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id.clamp(0, 255) as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.expand(l, out);
+            self.expand(r, out);
+        }
+    }
+}
+
+/// Train a BPE on a corpus sample drawn from the synthetic generator.
+pub fn train_bpe_on_corpus(seed: u64, vocab: usize, n_docs: u64) -> Result<Bpe> {
+    use super::corpus;
+    let mut sample = String::new();
+    let mut rng = Rng::new(seed);
+    for _ in 0..n_docs {
+        let idx = rng.below(1 << 20);
+        sample.push_str(&corpus::document(seed, idx).text);
+    }
+    Bpe::train(&sample, vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_round_trip() {
+        let t = ByteTokenizer;
+        let s = "the color of the stone is red .";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.vocab(), 256);
+    }
+
+    #[test]
+    fn bpe_round_trip_and_compresses() {
+        let sample = "the stone holds the river . the stone holds the lamp . "
+            .repeat(50);
+        let bpe = Bpe::train(&sample, 300).unwrap();
+        assert!(bpe.vocab() > 256);
+        let s = "the stone holds the river .";
+        let ids = bpe.encode(s);
+        assert_eq!(bpe.decode(&ids), s);
+        assert!(ids.len() < s.len(), "BPE should compress: {} vs {}", ids.len(), s.len());
+        assert!(ids.iter().all(|&i| (i as usize) < bpe.vocab()));
+    }
+
+    #[test]
+    fn bpe_save_load_identical() {
+        let sample = "abcabcabcabc ababab".repeat(20);
+        let bpe = Bpe::train(&sample, 280).unwrap();
+        let bpe2 = Bpe::load(&bpe.save()).unwrap();
+        let s = "abcab abc";
+        assert_eq!(bpe.encode(s), bpe2.encode(s));
+    }
+
+    #[test]
+    fn bpe_on_corpus_round_trips_documents() {
+        let bpe = train_bpe_on_corpus(3, 512, 5).unwrap();
+        for i in 0..5 {
+            let doc = super::super::corpus::document(3, i).text;
+            assert_eq!(bpe.decode(&bpe.encode(&doc)), doc);
+        }
+    }
+
+    #[test]
+    fn bpe_handles_unseen_bytes() {
+        let bpe = Bpe::train(&"aaaa bbbb".repeat(10), 260).unwrap();
+        let s = "zzz qqq \u{00e9}";
+        assert_eq!(bpe.decode(&bpe.encode(s)), s);
+    }
+}

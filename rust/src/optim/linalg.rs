@@ -1,0 +1,157 @@
+//! Small dense symmetric linear algebra: cyclic-Jacobi eigendecomposition
+//! and helpers. Substrate for the Section 4 theory experiments, where the
+//! simplified Sophia (Eq. 16) clips the Newton step *in the Hessian's
+//! eigenbasis*.
+
+/// Symmetric eigendecomposition A = V^T diag(w) V by cyclic Jacobi.
+/// Rows of the returned `v` are eigenvectors (matching the paper's V_t
+/// convention in Eq. 16). Suitable for d up to a few hundred.
+pub fn eigh(a: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = a.len();
+    let mut m: Vec<Vec<f64>> = a.to_vec();
+    // v starts as identity; we accumulate rotations so that v * a * v^T
+    // becomes diagonal => rows of v are eigenvectors.
+    let mut v = vec![vec![0.0; n]; n];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p][q] * m[p][q];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if m[p][q].abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (m[q][q] - m[p][p]) / (2.0 * m[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let (mkp, mkq) = (m[k][p], m[k][q]);
+                    m[k][p] = c * mkp - s * mkq;
+                    m[k][q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let (mpk, mqk) = (m[p][k], m[q][k]);
+                    m[p][k] = c * mpk - s * mqk;
+                    m[q][k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let (vpk, vqk) = (v[p][k], v[q][k]);
+                    v[p][k] = c * vpk - s * vqk;
+                    v[q][k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|i| m[i][i]).collect();
+    (w, v)
+}
+
+pub fn matvec(a: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    a.iter()
+        .map(|row| row.iter().zip(x).map(|(r, x)| r * x).sum())
+        .collect()
+}
+
+/// y = V x (rows of V are eigenvectors: projects into eigenbasis).
+pub fn project(v: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    matvec(v, x)
+}
+
+/// y = V^T x (back to the original basis).
+pub fn unproject(v: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let mut out = vec![0.0; n];
+    for (i, row) in v.iter().enumerate() {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += row[j] * x[i];
+        }
+    }
+    out
+}
+
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        let b: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        // A = B^T B + I
+        let mut a = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                for row_k in b.iter() {
+                    a[i][j] += row_k[i] * row_k[j];
+                }
+            }
+            a[i][i] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn eigh_reconstructs_matrix() {
+        let a = random_spd(6, 3);
+        let (w, v) = eigh(&a);
+        // A ?= V^T diag(w) V  -> check A x == V^T (w .* (V x)) on probes
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let ax = matvec(&a, &x);
+            let px = project(&v, &x);
+            let wpx: Vec<f64> = px.iter().zip(&w).map(|(p, w)| p * w).collect();
+            let rec = unproject(&v, &wpx);
+            for (e, g) in ax.iter().zip(&rec) {
+                assert!((e - g).abs() < 1e-8, "{e} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let a = vec![
+            vec![3.0, 0.0],
+            vec![0.0, 1.0],
+        ];
+        let (mut w, _) = eigh(&a);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigenvalues_positive_for_spd() {
+        let a = random_spd(8, 5);
+        let (w, _) = eigh(&a);
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_spd(5, 7);
+        let (_, v) = eigh(&a);
+        for i in 0..5 {
+            for j in 0..5 {
+                let dot: f64 = (0..5).map(|k| v[i][k] * v[j][k]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-9);
+            }
+        }
+    }
+}

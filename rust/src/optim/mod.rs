@@ -1,0 +1,14 @@
+//! Pure-Rust optimizer substrate.
+//!
+//! * `kernels` — element-wise mirrors of the L1 update kernels (property
+//!   tests + coordinator benches).
+//! * `toy`     — the paper's Figure 2 landscape and the five optimizers
+//!   compared there.
+//! * `theory`  — Section 4 / Appendix D: full-Hessian clipped Newton
+//!   (Eq. 16) and the SignGD condition-number lower bound.
+//! * `linalg`  — small symmetric eigendecomposition (Jacobi).
+
+pub mod kernels;
+pub mod linalg;
+pub mod theory;
+pub mod toy;

@@ -1,0 +1,304 @@
+//! Section 4 / Appendix D experiments: the deterministic full-Hessian
+//! Sophia (Eq. 16) whose runtime bound (Thm 4.3) is condition-number-free,
+//! and the SignGD lower bound on 2-D quadratics (Thm D.12).
+
+use super::linalg::{eigh, matvec, norm2, project, unproject};
+
+/// A twice-differentiable convex objective with an exact Hessian oracle.
+pub trait Convex {
+    fn dim(&self) -> usize;
+    fn loss(&self, x: &[f64]) -> f64;
+    fn grad(&self, x: &[f64]) -> Vec<f64>;
+    fn hess(&self, x: &[f64]) -> Vec<Vec<f64>>;
+    fn min_loss(&self) -> f64;
+}
+
+/// Quadratic 0.5 x^T A x (A SPD). `kappa` builds an ill-conditioned
+/// diagonal instance; `rotated` conjugates by a random rotation so the
+/// curvature is NOT axis-aligned (stress for the eigenbasis clipping).
+pub struct Quadratic {
+    pub a: Vec<Vec<f64>>,
+}
+
+impl Quadratic {
+    pub fn diagonal(diag: &[f64]) -> Self {
+        let n = diag.len();
+        let mut a = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            a[i][i] = diag[i];
+        }
+        Quadratic { a }
+    }
+
+    /// Condition number kappa over d dims, eigenvalues geometric from
+    /// mu to mu*kappa.
+    pub fn ill_conditioned(d: usize, mu: f64, kappa: f64) -> Self {
+        let diag: Vec<f64> = (0..d)
+            .map(|i| mu * kappa.powf(i as f64 / (d - 1).max(1) as f64))
+            .collect();
+        Quadratic::diagonal(&diag)
+    }
+
+    pub fn rotated(self, seed: u64) -> Self {
+        // random rotation via Gram-Schmidt on Gaussian matrix
+        let n = self.a.len();
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut q: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        for i in 0..n {
+            for j in 0..i {
+                let dot: f64 = (0..n).map(|k| q[i][k] * q[j][k]).sum();
+                for k in 0..n {
+                    q[i][k] -= dot * q[j][k];
+                }
+            }
+            let nrm = norm2(&q[i]);
+            for k in 0..n {
+                q[i][k] /= nrm;
+            }
+        }
+        // A' = Q^T A Q
+        let mut aq = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    aq[i][j] += self.a[i][k] * q[k][j];
+                }
+            }
+        }
+        let mut out = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    out[i][j] += q[k][i] * aq[k][j];
+                }
+            }
+        }
+        Quadratic { a: out }
+    }
+}
+
+impl Convex for Quadratic {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+    fn loss(&self, x: &[f64]) -> f64 {
+        0.5 * x.iter().zip(matvec(&self.a, x)).map(|(x, ax)| x * ax).sum::<f64>()
+    }
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        matvec(&self.a, x)
+    }
+    fn hess(&self, _x: &[f64]) -> Vec<Vec<f64>> {
+        self.a.clone()
+    }
+    fn min_loss(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Smooth non-quadratic convex function with heterogeneous curvature:
+/// sum_i w_i * cosh(x_i - c_i). Hessian = diag(w_i cosh(x_i - c_i)).
+pub struct CoshSum {
+    pub w: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+impl Convex for CoshSum {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+    fn loss(&self, x: &[f64]) -> f64 {
+        let raw: f64 = x
+            .iter()
+            .zip(&self.w)
+            .zip(&self.c)
+            .map(|((x, w), c)| w * (x - c).cosh())
+            .sum();
+        raw
+    }
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.w)
+            .zip(&self.c)
+            .map(|((x, w), c)| w * (x - c).sinh())
+            .collect()
+    }
+    fn hess(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        let n = self.w.len();
+        let mut h = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            h[i][i] = self.w[i] * (x[i] - self.c[i]).cosh();
+        }
+        h
+    }
+    fn min_loss(&self) -> f64 {
+        self.w.iter().sum()
+    }
+}
+
+/// One step of the deterministic Sophia (Eq. 16):
+/// x' = x - eta * V^T clip(V H^-1 g, rho), elementwise in the eigenbasis.
+pub fn sophia_full_step(f: &dyn Convex, x: &[f64], eta: f64, rho: f64) -> Vec<f64> {
+    let g = f.grad(x);
+    let h = f.hess(x);
+    let (w, v) = eigh(&h);
+    let gp = project(&v, &g); // gradient in eigenbasis
+    let step: Vec<f64> = gp
+        .iter()
+        .zip(&w)
+        .map(|(g, w)| (g / w.max(1e-300)).clamp(-rho, rho))
+        .collect();
+    let back = unproject(&v, &step);
+    x.iter().zip(&back).map(|(x, s)| x - eta * s).collect()
+}
+
+/// Run Eq. 16 until loss - min <= eps; returns steps taken (or None).
+pub fn sophia_full_runtime(
+    f: &dyn Convex,
+    x0: &[f64],
+    eta: f64,
+    rho: f64,
+    eps: f64,
+    max_steps: usize,
+) -> Option<usize> {
+    let mut x = x0.to_vec();
+    for t in 0..max_steps {
+        if f.loss(&x) - f.min_loss() <= eps {
+            return Some(t);
+        }
+        x = sophia_full_step(f, &x, eta, rho);
+    }
+    None
+}
+
+/// SignGD runtime on a quadratic (Thm D.12's subject).
+pub fn signgd_runtime(
+    f: &dyn Convex,
+    x0: &[f64],
+    eta: f64,
+    eps: f64,
+    max_steps: usize,
+) -> Option<usize> {
+    let mut x = x0.to_vec();
+    let mut prev_ok = false;
+    for t in 0..max_steps {
+        let ok = f.loss(&x) - f.min_loss() <= eps;
+        // Thm D.12 requires two consecutive sub-eps steps (SignGD bounces)
+        if ok && prev_ok {
+            return Some(t);
+        }
+        prev_ok = ok;
+        let g = f.grad(&x);
+        for (xi, gi) in x.iter_mut().zip(&g) {
+            *xi -= eta * gi.signum();
+        }
+    }
+    None
+}
+
+/// GD runtime with the largest stable step 1/L.
+pub fn gd_runtime(
+    f: &dyn Convex,
+    x0: &[f64],
+    eta: f64,
+    eps: f64,
+    max_steps: usize,
+) -> Option<usize> {
+    let mut x = x0.to_vec();
+    for t in 0..max_steps {
+        if f.loss(&x) - f.min_loss() <= eps {
+            return Some(t);
+        }
+        let g = f.grad(&x);
+        for (xi, gi) in x.iter_mut().zip(&g) {
+            *xi -= eta * gi;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sophia_full_runtime_condition_number_free() {
+        // Thm 4.3: runtime does not grow with kappa. Sweep kappa over 3
+        // orders of magnitude; steps-to-eps must stay within a small
+        // constant factor.
+        let d = 8;
+        let x0 = vec![1.0; d];
+        let mut runtimes = vec![];
+        for kappa in [1e1, 1e2, 1e3, 1e4] {
+            let q = Quadratic::ill_conditioned(d, 1.0, kappa);
+            let t = sophia_full_runtime(&q, &x0, 0.5, 0.25, 1e-8, 20_000)
+                .expect("must converge");
+            runtimes.push(t);
+        }
+        let mx = *runtimes.iter().max().unwrap() as f64;
+        let mn = *runtimes.iter().min().unwrap() as f64;
+        assert!(mx / mn < 3.0, "runtimes {runtimes:?} depend on kappa");
+    }
+
+    #[test]
+    fn gd_runtime_grows_with_condition_number() {
+        let d = 8;
+        let x0 = vec![1.0; d];
+        let mut runtimes = vec![];
+        for kappa in [1e1, 1e2, 1e3] {
+            let q = Quadratic::ill_conditioned(d, 1.0, kappa);
+            // largest stable GD step on a quadratic: 1/lambda_max
+            let eta = 1.0 / kappa;
+            let t = gd_runtime(&q, &x0, eta, 1e-8, 2_000_000).expect("converges");
+            runtimes.push(t);
+        }
+        assert!(runtimes[2] > 20 * runtimes[0], "{runtimes:?}");
+    }
+
+    #[test]
+    fn signgd_runtime_scales_with_sqrt_kappa() {
+        // Thm D.12: T >= 0.5 (sqrt(Delta/eps) - sqrt(2)) sqrt(beta/mu).
+        let eps = 1e-4;
+        let mut prev = 0usize;
+        for kappa in [1e2, 1e4] {
+            let q = Quadratic::diagonal(&[1.0, kappa]);
+            // start on the flat axis with loss Delta = 0.5
+            let x0 = vec![1.0, 0.0];
+            // eta must satisfy beta*eta^2/2 <= eps/2 or the sharp dim's
+            // bounce alone keeps the loss above eps (the theorem's
+            // eta <= sqrt(8 eps / beta) necessary condition, with margin)
+            let eta = (eps / kappa).sqrt();
+            let t = signgd_runtime(&q, &x0, eta, eps, 10_000_000).unwrap();
+            assert!(t > prev, "kappa {kappa}: {t} steps");
+            prev = t;
+        }
+        assert!(prev > 1000, "high-kappa SignGD should be slow, got {prev}");
+    }
+
+    #[test]
+    fn sophia_full_on_rotated_and_nonquadratic() {
+        let q = Quadratic::ill_conditioned(6, 1.0, 1e3).rotated(11);
+        let t = sophia_full_runtime(&q, &vec![0.7; 6], 0.5, 0.3, 1e-8, 20_000);
+        assert!(t.is_some());
+
+        let f = CoshSum { w: vec![100.0, 1.0, 0.01], c: vec![0.3, -0.2, 0.9] };
+        let t = sophia_full_runtime(&f, &[2.0, -2.0, 3.0], 0.5, 0.4, 1e-8, 50_000);
+        assert!(t.is_some(), "cosh-sum did not converge");
+    }
+
+    #[test]
+    fn exponential_decay_in_local_phase() {
+        // Lemma D.11: once clipping stops, the error contracts by
+        // (1 - eta(1 - eta)) per step.
+        let q = Quadratic::ill_conditioned(4, 1.0, 100.0);
+        let eta = 0.5;
+        let mut x = vec![1e-3; 4];
+        let mut prev = q.loss(&x);
+        for _ in 0..20 {
+            x = sophia_full_step(&q, &x, eta, 1.0);
+            let cur = q.loss(&x);
+            assert!(cur <= prev * (1.0 - eta * (1.0 - eta)) + 1e-300);
+            prev = cur;
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! The paper's Figure 2 toy landscape and the deterministic 2-D optimizers
+//! compared there: GD, SignGD, Adam, vanilla Newton, and Sophia
+//! (clipped preconditioned update, Eq. 4).
+//!
+//! L(t1, t2) = L1(t1) + L2(t2) with
+//!   L1(t) = 8 (t-1)^2 (1.3 t^2 + 2 t + 1)   (sharp, non-convex)
+//!   L2(t) = 0.5 (t - 4)^2                    (flat)
+//! exactly as in the paper's footnote 1. Exact gradients/Hessians come
+//! from the hyper-dual autodiff substrate.
+
+use crate::autodiff::{eval2, HyperDual};
+
+pub type P2 = [f64; 2];
+
+pub fn toy_loss(x: &P2) -> f64 {
+    eval_toy(x).0
+}
+
+/// (value, grad, hessian-diagonal, full hessian) of the Fig. 2 loss.
+pub fn eval_toy(x: &P2) -> (f64, P2, P2, [[f64; 2]; 2]) {
+    let f = |v: &[HyperDual<2>; 2]| {
+        let t1 = v[0];
+        let t2 = v[1];
+        let l1 = (t1 - 1.0).powi(2) * ((t1.powi(2) * 1.3) + t1 * 2.0 + 1.0) * 8.0;
+        let l2 = (t2 - 4.0).powi(2) * 0.5;
+        l1 + l2
+    };
+    let (v, g, h) = eval2(f, x);
+    (v, g, [h[0][0], h[1][1]], h)
+}
+
+/// The global minimum of the toy loss (analytic: t1 = 1, t2 = 4).
+pub const TOY_MIN: P2 = [1.0, 4.0];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ToyOpt {
+    Gd,
+    SignGd,
+    Adam,
+    Newton,
+    Sophia,
+}
+
+impl ToyOpt {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ToyOpt::Gd => "gd",
+            ToyOpt::SignGd => "signgd",
+            ToyOpt::Adam => "adam",
+            ToyOpt::Newton => "newton",
+            ToyOpt::Sophia => "sophia",
+        }
+    }
+
+    /// Paper-style learning rates: GD is limited by the sharp dimension's
+    /// curvature; SignGD/Adam/Sophia use a moderate step; Newton uses 1.
+    pub fn default_lr(&self) -> f64 {
+        match self {
+            ToyOpt::Gd => 0.01,
+            ToyOpt::SignGd => 0.2,
+            ToyOpt::Adam => 0.2,
+            ToyOpt::Newton => 1.0,
+            ToyOpt::Sophia => 1.5,
+        }
+    }
+}
+
+pub struct ToyState {
+    pub x: P2,
+    m: P2,       // momentum (Adam)
+    v: P2,       // second moment (Adam)
+    t: usize,
+}
+
+pub const SOPHIA_RHO: f64 = 0.3; // clip threshold in Eq. 4
+pub const SOPHIA_EPS: f64 = 1e-12;
+
+/// One optimizer step; returns the new point.
+pub fn step(opt: ToyOpt, st: &mut ToyState, lr: f64) {
+    let (_, g, hd, hfull) = eval_toy(&st.x);
+    st.t += 1;
+    match opt {
+        ToyOpt::Gd => {
+            for i in 0..2 {
+                st.x[i] -= lr * g[i];
+            }
+        }
+        ToyOpt::SignGd => {
+            for i in 0..2 {
+                st.x[i] -= lr * g[i].signum();
+            }
+        }
+        ToyOpt::Adam => {
+            let (b1, b2, eps) = (0.9, 0.95, 1e-8);
+            for i in 0..2 {
+                st.m[i] = b1 * st.m[i] + (1.0 - b1) * g[i];
+                st.v[i] = b2 * st.v[i] + (1.0 - b2) * g[i] * g[i];
+                let mh = st.m[i] / (1.0 - b1f64(b1, st.t));
+                let vh = st.v[i] / (1.0 - b1f64(b2, st.t));
+                st.x[i] -= lr * mh / (vh.sqrt() + eps);
+            }
+        }
+        ToyOpt::Newton => {
+            // full 2x2 Newton solve (can chase saddles / maxima)
+            let det = hfull[0][0] * hfull[1][1] - hfull[0][1] * hfull[1][0];
+            if det.abs() > 1e-18 {
+                let inv = [
+                    [hfull[1][1] / det, -hfull[0][1] / det],
+                    [-hfull[1][0] / det, hfull[0][0] / det],
+                ];
+                for i in 0..2 {
+                    st.x[i] -= lr * (inv[i][0] * g[0] + inv[i][1] * g[1]);
+                }
+            }
+        }
+        ToyOpt::Sophia => {
+            // Eq. 4: clip(g / max(h, eps), rho), positive-curvature only
+            for i in 0..2 {
+                let denom = hd[i].max(SOPHIA_EPS);
+                let r = (g[i] / denom).clamp(-SOPHIA_RHO, SOPHIA_RHO);
+                st.x[i] -= lr * r;
+            }
+        }
+    }
+}
+
+fn b1f64(b: f64, t: usize) -> f64 {
+    b.powi(t as i32)
+}
+
+/// Run `steps` iterations from `x0`; returns the trajectory (incl. x0).
+pub fn run(opt: ToyOpt, x0: P2, lr: f64, steps: usize) -> Vec<P2> {
+    let mut st = ToyState { x: x0, m: [0.0; 2], v: [0.0; 2], t: 0 };
+    let mut traj = vec![x0];
+    for _ in 0..steps {
+        step(opt, &mut st, lr);
+        traj.push(st.x);
+    }
+    traj
+}
+
+pub fn dist_to_min(x: &P2) -> f64 {
+    ((x[0] - TOY_MIN[0]).powi(2) + (x[1] - TOY_MIN[1]).powi(2)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const X0: P2 = [0.2, 0.0]; // non-convex region (L1''(0.2) < 0), far in the flat dim
+
+    #[test]
+    fn toy_min_is_critical_point() {
+        let (_, g, hd, _) = eval_toy(&TOY_MIN);
+        assert!(g[0].abs() < 1e-9 && g[1].abs() < 1e-9);
+        assert!(hd[0] > 0.0 && hd[1] > 0.0);
+        // sharp dim curvature >> flat dim curvature (heterogeneous)
+        assert!(hd[0] / hd[1] > 10.0, "h1={} h2={}", hd[0], hd[1]);
+    }
+
+    #[test]
+    fn sophia_converges_fast() {
+        let traj = run(ToyOpt::Sophia, X0, ToyOpt::Sophia.default_lr(), 50);
+        assert!(dist_to_min(traj.last().unwrap()) < 0.05, "{:?}", traj.last());
+    }
+
+    #[test]
+    fn gd_slow_in_flat_dimension() {
+        // GD at the largest stable lr for the sharp dim barely moves θ2.
+        let traj = run(ToyOpt::Gd, X0, ToyOpt::Gd.default_lr(), 50);
+        let last = traj.last().unwrap();
+        assert!(
+            (last[1] - 4.0).abs() > 0.5,
+            "GD should NOT reach flat-dim optimum in 50 steps: {last:?}"
+        );
+    }
+
+    #[test]
+    fn signgd_bounces_in_sharp_dimension() {
+        let traj = run(ToyOpt::SignGd, X0, ToyOpt::SignGd.default_lr(), 60);
+        // after convergence-ish, θ1 oscillates with amplitude ~lr
+        let tail: Vec<f64> = traj[40..].iter().map(|p| p[0]).collect();
+        let mn = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(mx - mn > 0.05, "expected bouncing, got range {}", mx - mn);
+    }
+
+    #[test]
+    fn newton_attracted_to_saddle_or_max() {
+        // From the non-convex region Newton heads to a critical point of
+        // L1 that is NOT the minimum (paper: converges to local max /
+        // saddle of the 2-D landscape).
+        let traj = run(ToyOpt::Newton, X0, 1.0, 50);
+        let last = traj.last().unwrap();
+        let (_, g, hd, _) = eval_toy(last);
+        assert!(g[0].abs() < 1e-6, "newton should find a critical point");
+        assert!(
+            (last[0] - 1.0).abs() > 0.2 || hd[0] < 0.0,
+            "newton found the global min from a non-convex start: {last:?}"
+        );
+    }
+
+    #[test]
+    fn sophia_beats_signgd_and_gd() {
+        // compare mid-trajectory (step 12): SignGD's constant-step walk in
+        // the flat dimension is still far out, Sophia is nearly done
+        let s = run(ToyOpt::Sophia, X0, ToyOpt::Sophia.default_lr(), 12);
+        let a = run(ToyOpt::SignGd, X0, ToyOpt::SignGd.default_lr(), 12);
+        let g = run(ToyOpt::Gd, X0, ToyOpt::Gd.default_lr(), 12);
+        let ds = dist_to_min(s.last().unwrap());
+        let da = dist_to_min(a.last().unwrap());
+        let dg = dist_to_min(g.last().unwrap());
+        assert!(ds < da && ds < dg, "sophia {ds} signgd {da} gd {dg}");
+    }
+
+    #[test]
+    fn adam_similar_to_signgd() {
+        let a = run(ToyOpt::Adam, X0, 0.2, 60);
+        // Adam makes slow flat-dim progress like SignGD (paper Fig. 2)
+        let last = a.last().unwrap();
+        assert!((last[1] - 4.0).abs() < 4.0); // moves toward it...
+        let d30 = dist_to_min(&a[30]);
+        let s30 = dist_to_min(&run(ToyOpt::Sophia, X0, 1.5, 60)[30]);
+        assert!(s30 < d30, "sophia {s30} vs adam {d30} at step 30");
+    }
+}

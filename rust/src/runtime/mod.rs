@@ -1,0 +1,271 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the training hot path.  Python never runs here.
+//!
+//! Calling conventions are defined in python/compile/optim.py and carried
+//! by artifacts/<preset>/manifest.json (see config::ModelConfig).
+
+use crate::config::{ModelConfig, ParamSpec};
+use crate::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = path.to_string_lossy().into_owned();
+        if !self.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&key)
+                .map_err(|e| anyhow!("parse {key}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    pub fn load_artifact(
+        &mut self,
+        model: &ModelConfig,
+        name: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        if !model.has_artifact(name) {
+            bail!("preset {} has no artifact {name} (see manifest.json)", model.name);
+        }
+        self.load(&model.artifact_path(name))
+    }
+}
+
+/// Execute and untuple: artifacts are lowered with return_tuple=True, so
+/// the single output buffer is a tuple literal we decompose.
+pub fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let out = exe
+        .execute::<&xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Model state: the (params, m, h) triple at the artifact boundary
+// ---------------------------------------------------------------------
+
+/// Host-resident model/optimizer state threaded through the artifacts.
+pub struct ModelState {
+    pub specs: Vec<ParamSpec>,
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub h: Vec<xla::Literal>,
+}
+
+impl ModelState {
+    /// GPT-2 init from the manifest's per-leaf init table (Rust owns init:
+    /// there is no init artifact).
+    pub fn init(model: &ModelConfig, seed: u64) -> Result<Self> {
+        let rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(model.params.len());
+        for (i, spec) in model.params.iter().enumerate() {
+            let mut leaf = rng.fold(i as u64 + 1);
+            let n = spec.numel();
+            let data: Vec<f32> = if spec.init_std < 0.0 {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| leaf.normal_f32(spec.init_std)).collect()
+            };
+            params.push(lit_f32(&data, &spec.shape)?);
+        }
+        let zeros = |specs: &[ParamSpec]| -> Result<Vec<xla::Literal>> {
+            specs
+                .iter()
+                .map(|s| lit_f32(&vec![0.0; s.numel()], &s.shape))
+                .collect()
+        };
+        Ok(ModelState {
+            specs: model.params.clone(),
+            params,
+            m: zeros(&model.params)?,
+            h: zeros(&model.params)?,
+        })
+    }
+
+    /// Load initial parameters from a flat f32 dump (aot.py golden_init.bin
+    /// ordering = manifest ordering); optimizer state zeroed.
+    pub fn from_flat_params(model: &ModelConfig, flat: &[f32]) -> Result<Self> {
+        if flat.len() != model.n_params() {
+            bail!("flat param blob has {} floats, expected {}", flat.len(), model.n_params());
+        }
+        let mut params = Vec::new();
+        let mut off = 0;
+        for spec in &model.params {
+            let n = spec.numel();
+            params.push(lit_f32(&flat[off..off + n], &spec.shape)?);
+            off += n;
+        }
+        let zeros: Vec<xla::Literal> = model
+            .params
+            .iter()
+            .map(|s| lit_f32(&vec![0.0; s.numel()], &s.shape))
+            .collect::<Result<_>>()?;
+        Ok(ModelState {
+            specs: model.params.clone(),
+            params,
+            m: zeros.iter().map(clone_lit).collect::<Result<_>>()?,
+            h: zeros,
+        })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Flatten all parameter leaves to one host vector (checkpointing,
+    /// statistics).
+    pub fn flat_params(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend(to_f32(p)?);
+        }
+        Ok(out)
+    }
+
+    pub fn flat_state(&self, which: &str) -> Result<Vec<f32>> {
+        let src = match which {
+            "params" => &self.params,
+            "m" => &self.m,
+            "h" => &self.h,
+            _ => bail!("unknown state {which}"),
+        };
+        let mut out = Vec::new();
+        for p in src {
+            out.extend(to_f32(p)?);
+        }
+        Ok(out)
+    }
+
+    pub fn param_abs_sum(&self) -> Result<f64> {
+        Ok(self
+            .flat_params()?
+            .iter()
+            .map(|&x| x.abs() as f64)
+            .sum())
+    }
+
+    /// Replace state from raw flat blobs (checkpoint restore).
+    pub fn restore(&mut self, params: &[f32], m: &[f32], h: &[f32]) -> Result<()> {
+        let fill = |flat: &[f32], specs: &[ParamSpec]| -> Result<Vec<xla::Literal>> {
+            let mut out = Vec::new();
+            let mut off = 0;
+            for s in specs {
+                let n = s.numel();
+                out.push(lit_f32(&flat[off..off + n], &s.shape)?);
+                off += n;
+            }
+            Ok(out)
+        };
+        self.params = fill(params, &self.specs)?;
+        self.m = fill(m, &self.specs)?;
+        self.h = fill(h, &self.specs)?;
+        Ok(())
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
+    // Literal has no Clone; round-trip through host data.
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    lit_f32(&to_f32(l)?, &dims)
+}
+
+/// Read a flat little-endian f32 binary file (golden_init.bin).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?} length not a multiple of 4");
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        let s = scalar_f32(7.5);
+        assert_eq!(scalar_of(&s).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn read_f32_file_round_trip() {
+        let dir = std::env::temp_dir().join("sophia_f32_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [0.5f32, -1.25, 3.0];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend(v.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

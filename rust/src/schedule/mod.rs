@@ -1,0 +1,105 @@
+//! Learning-rate schedules. The paper uses linear warmup (fixed 2k steps)
+//! followed by cosine decay to 0.05x the peak LR (Rae et al. 2021), and
+//! stresses (Section 3.2 / Figure 4a) that schedules must be re-tuned for
+//! the *total budget T*: a T/2 run is NOT a truncated T run. `Schedule`
+//! therefore always carries its own total.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decay {
+    Cosine,
+    Linear,
+    Constant,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub peak: f64,
+    pub warmup: usize,
+    pub total: usize,
+    pub final_frac: f64,
+    pub decay: Decay,
+}
+
+impl Schedule {
+    /// The paper's default: warmup then cosine to `final_frac * peak`.
+    pub fn cosine(peak: f64, warmup: usize, total: usize, final_frac: f64) -> Self {
+        Schedule { peak, warmup, total, final_frac, decay: Decay::Cosine }
+    }
+
+    pub fn constant(peak: f64) -> Self {
+        Schedule { peak, warmup: 0, total: 1, final_frac: 1.0, decay: Decay::Constant }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn lr(&self, t: usize) -> f64 {
+        let t = t.max(1);
+        if self.decay == Decay::Constant {
+            return self.peak;
+        }
+        if t <= self.warmup {
+            return self.peak * t as f64 / self.warmup.max(1) as f64;
+        }
+        let total = self.total.max(self.warmup + 1);
+        let progress =
+            ((t - self.warmup) as f64 / (total - self.warmup) as f64).min(1.0);
+        let floor = self.peak * self.final_frac;
+        match self.decay {
+            Decay::Cosine => {
+                floor
+                    + 0.5 * (self.peak - floor)
+                        * (1.0 + (std::f64::consts::PI * progress).cos())
+            }
+            Decay::Linear => self.peak + (floor - self.peak) * progress,
+            Decay::Constant => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear_and_hits_peak() {
+        let s = Schedule::cosine(1e-3, 100, 1000, 0.05);
+        assert!((s.lr(50) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(100) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_ends_at_final_frac() {
+        let s = Schedule::cosine(2e-3, 10, 500, 0.05);
+        assert!((s.lr(500) - 2e-3 * 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decreasing_after_warmup() {
+        let s = Schedule::cosine(1e-3, 20, 400, 0.05);
+        let mut prev = f64::INFINITY;
+        for t in 20..=400 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-15, "t={t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn half_budget_run_decays_faster() {
+        // Figure 4(a): with the same peak, the T/2 schedule's LR at step t
+        // is below the T schedule's LR for all t in warmup..T/2.
+        let full = Schedule::cosine(1e-3, 20, 800, 0.05);
+        let half = Schedule::cosine(1e-3, 20, 400, 0.05);
+        for t in 21..400 {
+            assert!(half.lr(t) <= full.lr(t) + 1e-15, "t={t}");
+        }
+    }
+
+    #[test]
+    fn linear_and_constant_behave() {
+        let lin = Schedule { peak: 1.0, warmup: 0, total: 10, final_frac: 0.0, decay: Decay::Linear };
+        assert!((lin.lr(10) - 0.0).abs() < 1e-12);
+        let c = Schedule::constant(0.5);
+        assert_eq!(c.lr(1), 0.5);
+        assert_eq!(c.lr(999), 0.5);
+    }
+}

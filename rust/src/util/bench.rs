@@ -1,0 +1,116 @@
+//! Hand-rolled micro-benchmark harness (criterion is not in the offline
+//! vendor set). Used by every `benches/*.rs` target (`harness = false`).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub median_ms: f64,
+    pub mad_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub n: usize,
+}
+
+/// Time `f` for `n` samples after `warmup` runs; robust stats.
+pub fn bench<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        median_ms: median,
+        mad_ms: devs[devs.len() / 2],
+        min_ms: samples[0],
+        max_ms: *samples.last().unwrap(),
+        n,
+    }
+}
+
+/// Render a fixed-width table (the bench harness output format).
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Env knob: `SOPHIA_BENCH_SCALE=0.25 cargo bench` shrinks workloads for
+/// smoke runs; 1.0 is the paper-shaped default.
+pub fn scale() -> f64 {
+    std::env::var("SOPHIA_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()).round() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.min_ms <= s.median_ms && s.median_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(&["x".into(), "1.5".into()]);
+        t.row(&["longer".into(), "10.25".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,5 @@
+//! Small utilities: JSON parser/writer and the bench-harness timing
+//! helpers shared by `benches/`.
+
+pub mod bench;
+pub mod json;

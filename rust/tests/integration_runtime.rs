@@ -1,0 +1,205 @@
+//! Runtime integration: the Rust PJRT path must reproduce the golden
+//! trace recorded by aot.py (same artifacts, same inputs => same numbers).
+//! Skips gracefully (with a loud message) if `make artifacts` hasn't run.
+
+use anyhow::Result;
+use sophia::config::ModelConfig;
+use sophia::runtime::{self, lit_i32, run, scalar_f32, scalar_i32, ModelState, Runtime};
+use sophia::util::json::Json;
+use std::path::PathBuf;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_nano() -> bool {
+    artifacts_root().join("nano/manifest.json").exists()
+}
+
+fn golden() -> Result<Json> {
+    let text = std::fs::read_to_string(artifacts_root().join("nano/golden.json"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// The deterministic token batch aot.py's golden trace used.
+fn golden_tokens(model: &ModelConfig) -> Vec<i32> {
+    let n = model.batch * (model.ctx + 1);
+    (0..n as i64)
+        .map(|i| ((i * 7919) % model.vocab as i64) as i32)
+        .collect()
+}
+
+#[test]
+fn golden_sophia_trace_reproduced() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = ModelConfig::load(&artifacts_root(), "nano")?;
+    let g = golden()?;
+    let mut rt = Runtime::cpu()?;
+
+    let init = runtime::read_f32_file(&artifacts_root().join("nano/golden_init.bin"))?;
+    let mut state = ModelState::from_flat_params(&model, &init)?;
+
+    // init checksum must match what python recorded
+    let want_init = g.get("init_params_abs_sum").unwrap().as_f64().unwrap();
+    let got_init = state.param_abs_sum()?;
+    assert!(
+        (got_init - want_init).abs() / want_init < 1e-5,
+        "init checksum {got_init} vs {want_init}"
+    );
+
+    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
+    let n = state.n_leaves();
+    let k = g.get("k").unwrap().as_usize().unwrap();
+    let lr = g.get("lr").unwrap().as_f64().unwrap() as f32;
+    let want_losses: Vec<f64> = g
+        .get("losses").unwrap().as_arr().unwrap()
+        .iter().map(|x| x.as_f64().unwrap()).collect();
+    let want_clip: Vec<f64> = g
+        .get("clipfracs").unwrap().as_arr().unwrap()
+        .iter().map(|x| x.as_f64().unwrap()).collect();
+
+    let mut hnorm_last = 0.0f32;
+    for t in 1..=want_losses.len() {
+        if (t - 1) % k == 0 {
+            let seed = scalar_i32(t as i32);
+            let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+            inputs.extend(state.h.iter());
+            inputs.push(&tokens);
+            inputs.push(&seed);
+            let exe = rt.load_artifact(&model, "hess_gnb")?;
+            let mut out = run(exe, &inputs)?;
+            hnorm_last = runtime::scalar_of(&out[n])?;
+            out.truncate(n);
+            state.h = out;
+        }
+        let lr_lit = scalar_f32(lr);
+        let t_lit = scalar_f32(t as f32);
+        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+        inputs.extend(state.m.iter());
+        inputs.extend(state.h.iter());
+        inputs.push(&tokens);
+        inputs.push(&lr_lit);
+        inputs.push(&t_lit);
+        let exe = rt.load_artifact(&model, "train_sophia")?;
+        let mut out = run(exe, &inputs)?;
+        let loss = runtime::scalar_of(&out[3 * n])? as f64;
+        let clip = runtime::scalar_of(&out[3 * n + 2])? as f64;
+        assert!(
+            (loss - want_losses[t - 1]).abs() < 2e-4,
+            "step {t}: loss {loss} vs golden {}",
+            want_losses[t - 1]
+        );
+        assert!(
+            (clip - want_clip[t - 1]).abs() < 1e-3,
+            "step {t}: clipfrac {clip} vs {}",
+            want_clip[t - 1]
+        );
+        out.truncate(3 * n);
+        state.h = out.split_off(2 * n);
+        state.m = out.split_off(n);
+        state.params = out;
+    }
+
+    // final hnorm, eval loss and parameter checksum
+    let want_hnorm = g.get("hnorm_last").unwrap().as_f64().unwrap();
+    assert!(
+        (hnorm_last as f64 - want_hnorm).abs() / want_hnorm.max(1e-9) < 1e-3,
+        "hnorm {hnorm_last} vs {want_hnorm}"
+    );
+    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+    inputs.push(&tokens);
+    let exe = rt.load_artifact(&model, "eval_step")?;
+    let out = run(exe, &inputs)?;
+    let eval_loss = runtime::scalar_of(&out[0])? as f64;
+    let want_eval = g.get("eval_loss").unwrap().as_f64().unwrap();
+    assert!(
+        (eval_loss - want_eval).abs() < 2e-4,
+        "eval {eval_loss} vs {want_eval}"
+    );
+    let want_sum = g.get("param_abs_sum").unwrap().as_f64().unwrap();
+    let got_sum = state.param_abs_sum()?;
+    assert!(
+        (got_sum - want_sum).abs() / want_sum < 1e-5,
+        "param checksum {got_sum} vs {want_sum}"
+    );
+    Ok(())
+}
+
+#[test]
+fn pallas_model_artifact_matches_jnp_model_artifact() -> Result<()> {
+    // The full-Pallas-kernel model path (LN + CE kernels with custom VJPs)
+    // must produce the same loss as the jnp path at the artifact level.
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = ModelConfig::load(&artifacts_root(), "nano")?;
+    let mut rt = Runtime::cpu()?;
+    let init = runtime::read_f32_file(&artifacts_root().join("nano/golden_init.bin"))?;
+    let state = ModelState::from_flat_params(&model, &init)?;
+    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
+
+    let mut losses = Vec::new();
+    for art in ["eval_step", "eval_step_pk"] {
+        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+        inputs.push(&tokens);
+        let exe = rt.load_artifact(&model, art)?;
+        let out = run(exe, &inputs)?;
+        losses.push(runtime::scalar_of(&out[0])? as f64);
+    }
+    assert!(
+        (losses[0] - losses[1]).abs() < 1e-4,
+        "jnp {} vs pallas {}",
+        losses[0],
+        losses[1]
+    );
+    Ok(())
+}
+
+#[test]
+fn all_manifest_artifacts_compile() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = ModelConfig::load(&artifacts_root(), "nano")?;
+    let mut rt = Runtime::cpu()?;
+    for name in model.artifacts.clone() {
+        rt.load_artifact(&model, &name)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn hess_diag_returns_per_leaf_estimates() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = ModelConfig::load(&artifacts_root(), "nano")?;
+    let mut rt = Runtime::cpu()?;
+    let state = ModelState::init(&model, 3)?;
+    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
+    let seed = scalar_i32(9);
+    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+    inputs.push(&tokens);
+    inputs.push(&seed);
+    let exe = rt.load_artifact(&model, "hess_diag")?;
+    let out = run(exe, &inputs)?;
+    assert_eq!(out.len(), state.n_leaves());
+    // Hutchinson on a transformer: finite, non-degenerate, mixed signs
+    let mut any_neg = false;
+    let mut any_pos = false;
+    for leaf in &out {
+        for v in runtime::to_f32(leaf)? {
+            assert!(v.is_finite());
+            any_neg |= v < 0.0;
+            any_pos |= v > 0.0;
+        }
+    }
+    assert!(any_pos && any_neg);
+    Ok(())
+}

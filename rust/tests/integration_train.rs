@@ -1,0 +1,183 @@
+//! Trainer-level integration: full coordinator loops over real artifacts.
+
+use anyhow::Result;
+use sophia::runtime::Runtime;
+use sophia::{data, eval, Optimizer, TrainConfig, Trainer};
+use std::path::PathBuf;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(preset: &str) -> bool {
+    artifacts_root().join(preset).join("manifest.json").exists()
+}
+
+fn base(preset: &str, opt: Optimizer, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: preset.into(),
+        artifacts_root: artifacts_root(),
+        optimizer: opt,
+        steps,
+        eval_every: steps,
+        eval_batches: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_optimizer_trains_and_descends_on_nano() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    for opt in [
+        Optimizer::AdamW,
+        Optimizer::Lion,
+        Optimizer::Signum,
+        Optimizer::Normalize,
+        Optimizer::SophiaG,
+        Optimizer::SophiaH,
+        Optimizer::SophiaEF,
+        Optimizer::AdaHessianClip,
+    ] {
+        let mut cfg = base("nano", opt, 25);
+        cfg.hess_interval = 5;
+        let mut t = Trainer::new(cfg)?;
+        let first = t.train_step()?.loss;
+        let out = t.train_steps(24, false)?;
+        assert!(!out.diverged, "{} diverged", opt.name());
+        assert!(
+            out.final_train_loss < first - 0.05,
+            "{}: {first} -> {}",
+            opt.name(),
+            out.final_train_loss
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn checkpoint_save_restore_is_exact() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let dir = std::env::temp_dir().join("sophia_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut cfg = base("nano", Optimizer::SophiaG, 30);
+    cfg.hess_interval = 4;
+    let mut t1 = Trainer::new(cfg.clone())?;
+    t1.train_steps(10, false)?;
+    t1.save_checkpoint(&dir)?;
+    let sum_before = t1.state.param_abs_sum()?;
+    let step_before = t1.step;
+
+    let mut t2 = Trainer::new(cfg)?;
+    t2.load_checkpoint(&dir)?;
+    assert_eq!(t2.step, step_before);
+    let sum_after = t2.state.param_abs_sum()?;
+    assert_eq!(sum_before.to_bits(), sum_after.to_bits(), "restore not exact");
+
+    // restored trainer must continue training sanely
+    let rec = t2.train_step()?;
+    assert!(rec.loss.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+#[test]
+fn divergence_detection_stops_training() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let mut cfg = base("nano", Optimizer::AdamW, 60);
+    cfg.peak_lr = 30.0; // absurd LR => blow-up
+    cfg.warmup = 1;
+    let mut t = Trainer::new(cfg)?;
+    let out = t.train_steps(60, false)?;
+    assert!(out.diverged);
+    assert!(out.steps < 60, "should stop early, ran {}", out.steps);
+    Ok(())
+}
+
+#[test]
+fn artifact_override_selects_gamma_variant() -> Result<()> {
+    if !have("b0") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    // Figure 7(c) plumbing: the gamma-variant artifact trains and differs
+    // from the default-gamma run.
+    let mut c1 = base("b0", Optimizer::SophiaG, 12);
+    c1.hess_interval = 4;
+    let mut c2 = c1.clone();
+    c2.train_artifact_override = Some("train_sophia_gamma0p005".into());
+    let o1 = Trainer::new(c1)?.train_steps(12, false)?;
+    let o2 = Trainer::new(c2)?.train_steps(12, false)?;
+    assert!(!o1.diverged && !o2.diverged);
+    assert!(
+        (o1.final_train_loss - o2.final_train_loss).abs() > 1e-6,
+        "gamma override had no effect"
+    );
+    Ok(())
+}
+
+#[test]
+fn fewshot_decoder_runs_on_fresh_model() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = sophia::ModelConfig::load(&artifacts_root(), "nano")?;
+    let mut rt = Runtime::cpu()?;
+    let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
+    let state = sophia::runtime::ModelState::init(&model, 0)?;
+    let items = eval::build("copy", 4, 3);
+    let mut dec = eval::Decoder { rt: &mut rt, model: &model, tok, params: &state.params };
+    let acc = eval::score(&mut dec, &items)?;
+    assert!((0.0..=1.0).contains(&acc));
+    Ok(())
+}
+
+#[test]
+fn trainer_reports_paper_statistics() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let mut cfg = base("nano", Optimizer::SophiaG, 12);
+    cfg.hess_interval = 3;
+    let mut t = Trainer::new(cfg)?;
+    let out = t.train_steps(12, false)?;
+    // clipfrac logged and within [0,1]; hnorm captured at refresh steps
+    for rec in &t.log.records {
+        assert!((0.0..=1.0).contains(&rec.clipfrac), "clipfrac {}", rec.clipfrac);
+    }
+    let refreshes: Vec<_> = t.log.records.iter().filter(|r| r.hess_ms > 0.0).collect();
+    assert_eq!(refreshes.len(), 4, "k=3 over 12 steps => 4 refreshes");
+    assert!(refreshes.iter().all(|r| r.hnorm > 0.0));
+    assert!(out.avg_hess_ms > 0.0);
+    Ok(())
+}
+
+#[test]
+fn seed_determinism_across_trainers() -> Result<()> {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let run = || -> Result<f64> {
+        let mut cfg = base("nano", Optimizer::SophiaG, 8);
+        cfg.hess_interval = 2;
+        cfg.seed = 7;
+        let mut t = Trainer::new(cfg)?;
+        Ok(t.train_steps(8, false)?.final_train_loss)
+    };
+    let a = run()?;
+    let b = run()?;
+    assert_eq!(a.to_bits(), b.to_bits(), "same seed must reproduce exactly");
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! Hand-rolled property tests (no proptest crate offline): randomized
+//! inputs over many seeds, asserting the invariants the paper relies on.
+
+use sophia::data::{corpus, Bpe, ByteTokenizer, Loader, Split, Tokenizer};
+use sophia::optim::kernels;
+use sophia::rng::Rng;
+use sophia::schedule::Schedule;
+use sophia::util::json::Json;
+use std::sync::Arc;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(scale)).collect()
+}
+
+#[test]
+fn prop_sophia_update_bounded_for_all_inputs() {
+    // |Δθ| <= lr (+ wd term) for ANY g, m, h — including zeros, huge
+    // values, negative curvature (the clipping safety property).
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(300) as usize;
+        let scale = 10f32.powi(rng.below(7) as i32 - 3);
+        let mut p = rand_vec(&mut rng, n, scale);
+        let mut m = rand_vec(&mut rng, n, scale);
+        let mut h = rand_vec(&mut rng, n, scale);
+        let g = rand_vec(&mut rng, n, scale);
+        if seed % 5 == 0 {
+            h.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let p0 = p.clone();
+        let lr = 10f32.powi(-(rng.below(4) as i32) - 1);
+        kernels::sophia_update(&mut p, &mut m, &h, &g, lr, 0.96, 0.05, 1e-12, 0.0);
+        for i in 0..n {
+            let step = (p[i] - p0[i]).abs();
+            assert!(
+                step <= lr * (1.0 + 1e-5) + 1e-6 * p0[i].abs(),
+                "seed {seed} i {i}: step {step} > lr {lr}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sophia_clip_fraction_monotone_in_gamma() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let n = 512;
+        let p = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 1.0);
+        let h: Vec<f32> = rand_vec(&mut rng, n, 1.0).iter().map(|x| x.abs()).collect();
+        let g = rand_vec(&mut rng, n, 1.0);
+        let mut prev = usize::MAX;
+        for gamma in [0.001f32, 0.01, 0.1, 1.0, 10.0] {
+            let mut pp = p.clone();
+            let mut mm = m0.clone();
+            let c = kernels::sophia_update(&mut pp, &mut mm, &h, &g, 1e-3, 0.96, gamma, 1e-12, 0.0);
+            assert!(c <= prev, "seed {seed}: clip count rose with gamma");
+            prev = c;
+        }
+    }
+}
+
+#[test]
+fn prop_ema_is_convex_combination() {
+    // gnb/hutchinson EMA outputs stay within [min, max] envelope bounds
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let n = 64;
+        let mut h = rand_vec(&mut rng, n, 1.0);
+        let u = rand_vec(&mut rng, n, 1.0);
+        let hvp = rand_vec(&mut rng, n, 1.0);
+        let h0 = h.clone();
+        kernels::hutchinson_ema(&mut h, &u, &hvp, 0.99);
+        for i in 0..n {
+            let point = u[i] * hvp[i];
+            let lo = h0[i].min(point) - 1e-5;
+            let hi = h0[i].max(point) + 1e-5;
+            assert!(h[i] >= lo && h[i] <= hi, "seed {seed} i {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_byte_tokenizer_round_trips_ascii() {
+    let t = ByteTokenizer;
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.below(200) as usize;
+        let s: String = (0..n)
+            .map(|_| (32 + rng.below(95) as u8) as char)
+            .collect();
+        assert_eq!(t.decode(&t.encode(&s)), s);
+    }
+}
+
+#[test]
+fn prop_bpe_round_trips_corpus_text() {
+    let bpe = Bpe::train(&corpus::document(1, 0).text.repeat(3), 320).unwrap();
+    for seed in 0..30u64 {
+        let doc = corpus::document(2, seed).text;
+        assert_eq!(bpe.decode(&bpe.encode(&doc)), doc);
+        for id in bpe.encode(&doc) {
+            assert!((id as usize) < bpe.vocab());
+        }
+    }
+}
+
+#[test]
+fn prop_loader_emits_exact_stream_coverage() {
+    // every token in consecutive batches continues the packed document
+    // stream: no drops, no duplication — for several (batch, ctx) combos.
+    for (b, ctx) in [(1usize, 16usize), (3, 33), (4, 64)] {
+        let tok: Arc<dyn Tokenizer> = Arc::new(ByteTokenizer);
+        let mut l = Loader::new(tok.clone(), 9, Split::Train, b, ctx);
+        let mut collected = Vec::new();
+        for _ in 0..5 {
+            collected.extend(l.next_batch().tokens);
+        }
+        // rebuild the reference stream directly from documents
+        let mut reference = Vec::new();
+        let mut doc = 0u64;
+        while reference.len() < collected.len() {
+            reference.push(0); // EOT
+            reference.extend(tok.encode(&corpus::document(9, corpus::doc_index(Split::Train, doc)).text));
+            doc += 1;
+        }
+        assert_eq!(&reference[..collected.len()], &collected[..]);
+    }
+}
+
+#[test]
+fn prop_schedule_bounded_by_peak_and_floor() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let peak = 10f64.powi(-(rng.below(4) as i32) - 2);
+        let total = 50 + rng.below(2000) as usize;
+        let warmup = 1 + rng.below(total as u64 / 2) as usize;
+        let s = Schedule::cosine(peak, warmup, total, 0.05);
+        for t in 1..=total {
+            let lr = s.lr(t);
+            assert!(lr <= peak * (1.0 + 1e-12), "lr above peak");
+            assert!(lr >= 0.0);
+            if t > warmup {
+                assert!(lr >= peak * 0.05 - 1e-15, "lr below floor at {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip_random_structures() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed);
+        let v = random_json(&mut rng, 0);
+        let s = v.to_string();
+        let v2 = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{s}"));
+        assert_eq!(v, v2, "seed {seed}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.below(12) as usize;
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_corpus_topics_uniformish() {
+    let mut counts = [0usize; 64];
+    for i in 0..2000 {
+        counts[corpus::document(4, i).topic as usize] += 1;
+    }
+    let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    assert!(*mn > 5, "topic coverage too skewed: min {mn}");
+    assert!(*mx < 120, "topic coverage too skewed: max {mx}");
+}
+
+#[test]
+fn prop_adamw_step_norm_bounded_by_lr_over_eps_regime() {
+    // AdamW's per-coordinate update magnitude is ~lr after bias
+    // correction; verify it never exceeds lr * 10 for sane inputs.
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let n = 128;
+        let mut p = rand_vec(&mut rng, n, 1.0);
+        let mut m = vec![0.0; n];
+        let mut v = vec![0.0; n];
+        let g = rand_vec(&mut rng, n, 1.0);
+        let p0 = p.clone();
+        for t in 1..=5 {
+            kernels::adamw_update(&mut p, &mut m, &mut v, &g, 1e-3, t as f32, 0.9, 0.95, 1e-8, 0.0);
+        }
+        for i in 0..n {
+            assert!((p[i] - p0[i]).abs() <= 5.0 * 1e-3 * 10.0);
+        }
+    }
+}
