@@ -1,0 +1,160 @@
+//! Perf: the flat-state kernel engine vs the scalar oracle (EXPERIMENTS.md
+//! §Perf). Sweeps 1M–64M params × {scalar, blocked, blocked+threads} on
+//! the fused Sophia update, plus the fused-GNB-refresh pass, and emits
+//! `BENCH_kernels.json` so the perf trajectory is recorded per PR.
+//!
+//! Needs no artifacts — this is the pure-Rust path. Scale with
+//! `SOPHIA_BENCH_SCALE` (e.g. 0.05 for smoke runs; see
+//! `scripts/bench_smoke.sh`). Acceptance target: ≥ 3× median speedup for
+//! the 4-thread engine over the scalar oracle on the 16M-param update.
+
+use sophia::optim::engine::{AlignedBuf, Backend, FlatState, StateKind};
+use sophia::rng::Rng;
+use sophia::util::bench::{bench, scale, scaled, Table};
+use sophia::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Sophia streams p,m (read+write) and h,g (read): 6 × 4 bytes/element.
+const SOPHIA_BYTES_PER_ELEM: usize = 24;
+/// The fused GNB pass adds h read+write and a ghat read: 8 × 4 B/elem.
+const FUSED_BYTES_PER_ELEM: usize = 32;
+/// The two-pass composition walks h twice: gnb_ema (h rw + ghat r = 12 B)
+/// then sophia_update (24 B) = 9 × 4 B/elem.
+const TWO_PASS_BYTES_PER_ELEM: usize = 36;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn fill_state(fs: &mut FlatState, g: &mut [f32], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for x in fs.buf_mut(StateKind::P).iter_mut() {
+        *x = rng.normal_f32(0.02);
+    }
+    for x in fs.buf_mut(StateKind::M).iter_mut() {
+        *x = rng.normal_f32(0.01);
+    }
+    for x in fs.buf_mut(StateKind::H).iter_mut() {
+        *x = rng.normal_f32(0.05).abs();
+    }
+    for x in g.iter_mut() {
+        *x = rng.normal_f32(0.02);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Perf: optimizer kernel engine (flat-state / blocked / threaded) ==\n");
+    let sizes: [(usize, &str); 4] = [
+        (scaled(1 << 20), "1M"),
+        (scaled(1 << 22), "4M"),
+        (scaled(1 << 24), "16M"),
+        (scaled(1 << 26), "64M"),
+    ];
+    let backends = [Backend::Scalar, Backend::Blocked, Backend::Threaded(2), Backend::Threaded(4)];
+    let mut table = Table::new(&["kernel", "n", "backend", "median ms", "GB/s", "speedup"]);
+    let mut records: Vec<Json> = Vec::new();
+    let mut speedup_16m_t4 = f64::NAN;
+
+    for &(n, tag) in &sizes {
+        let mut fs = FlatState::new(&[n]);
+        let mut g = AlignedBuf::zeroed(n);
+        fill_state(&mut fs, &mut g, n as u64);
+        let (warmup, reps) = if n >= 1 << 24 { (1, 5) } else { (2, 9) };
+        let mut scalar_ms = f64::NAN;
+        for b in &backends {
+            let k = b.build();
+            let st = bench(warmup, reps, || {
+                let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+                std::hint::black_box(c);
+            });
+            let speedup =
+                if matches!(b, Backend::Scalar) { 1.0 } else { scalar_ms / st.median_ms };
+            if matches!(b, Backend::Scalar) {
+                scalar_ms = st.median_ms;
+            }
+            if tag == "16M" && *b == Backend::Threaded(4) {
+                speedup_16m_t4 = speedup;
+            }
+            let gbs = st.throughput_gbs(n * SOPHIA_BYTES_PER_ELEM);
+            table.row(&[
+                "sophia".into(),
+                tag.into(),
+                b.label(),
+                format!("{:.3}", st.median_ms),
+                format!("{:.2}", gbs),
+                format!("{:.2}x", speedup),
+            ]);
+            records.push(obj(vec![
+                ("kernel", Json::Str("sophia".into())),
+                ("n", Json::Num(n as f64)),
+                ("backend", Json::Str(b.label())),
+                ("median_ms", Json::Num(st.median_ms)),
+                ("mad_ms", Json::Num(st.mad_ms)),
+                ("gbs", Json::Num(gbs)),
+                ("speedup_vs_scalar", Json::Num(speedup)),
+            ]));
+        }
+    }
+
+    // The every-k-step case: GNB refresh fused into the update pass vs the
+    // two-pass composition, on the threaded engine at 4M params.
+    let n = scaled(1 << 22);
+    let mut fs = FlatState::new(&[n]);
+    let mut g = AlignedBuf::zeroed(n);
+    fill_state(&mut fs, &mut g, 4242);
+    let mut ghat = AlignedBuf::zeroed(n);
+    let mut rng = Rng::new(99);
+    for x in ghat.iter_mut() {
+        *x = rng.normal_f32(0.02);
+    }
+    let k = Backend::Threaded(4).build();
+    let two_pass = bench(2, 9, || {
+        fs.gnb_refresh(&*k, &ghat, 240.0, 0.99);
+        let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    let fused = bench(2, 9, || {
+        let c = fs.sophia_step_with_gnb_refresh(&*k, &g, &ghat, 240.0, 0.99, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    for (name, st, bytes_per_elem) in [
+        ("gnb;sophia (2-pass)", &two_pass, TWO_PASS_BYTES_PER_ELEM),
+        ("sophia+gnb (fused)", &fused, FUSED_BYTES_PER_ELEM),
+    ] {
+        table.row(&[
+            name.into(),
+            "4M".into(),
+            "threads:4".into(),
+            format!("{:.3}", st.median_ms),
+            format!("{:.2}", st.throughput_gbs(n * bytes_per_elem)),
+            format!("{:.2}x", two_pass.median_ms / st.median_ms),
+        ]);
+        records.push(obj(vec![
+            ("kernel", Json::Str(name.into())),
+            ("n", Json::Num(n as f64)),
+            ("backend", Json::Str("threads:4".into())),
+            ("median_ms", Json::Num(st.median_ms)),
+            ("bytes_per_elem", Json::Num(bytes_per_elem as f64)),
+            ("gbs", Json::Num(st.throughput_gbs(n * bytes_per_elem))),
+            ("speedup_vs_two_pass", Json::Num(two_pass.median_ms / st.median_ms)),
+        ]));
+    }
+
+    println!("{}", table.render());
+    println!(
+        "16M sophia, threads:4 vs scalar: {speedup_16m_t4:.2}x (acceptance target >= 3x)"
+    );
+
+    let out = obj(vec![
+        ("bench", Json::Str("perf_kernels".into())),
+        ("scale", Json::Num(scale())),
+        ("sophia_bytes_per_elem", Json::Num(SOPHIA_BYTES_PER_ELEM as f64)),
+        ("sophia_16m_speedup_threads4", Json::Num(speedup_16m_t4)),
+        ("records", Json::Arr(records)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+    std::fs::write(&path, out.to_string())?;
+    println!("(json: {path:?})");
+    Ok(())
+}

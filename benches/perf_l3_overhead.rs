@@ -1,6 +1,10 @@
 //! L3 perf probe (EXPERIMENTS.md §Perf): how much of a training step is
 //! coordinator overhead (literal construction, state threading, batching,
 //! logging) versus PJRT execute time? Target: < 5% outside execute.
+//!
+//! The trainer hot loop now reuses its lr/t scalar-literal slots and one
+//! input-pointer table across steps (see `runtime::{ScalarSlot, InputBuf}`),
+//! so the overhead this bench reports is the post-literal-reuse number.
 
 mod common;
 
@@ -34,9 +38,7 @@ fn main() -> anyhow::Result<()> {
     inputs.push(&tokens);
     inputs.push(&lr);
     inputs.push(&t);
-    rt.load_artifact(&model, "train_adamw")?;
-    let exe_path = model.artifact_path("train_adamw");
-    let exe = rt.load(&exe_path)?;
+    let exe = rt.load_artifact(&model, "train_adamw")?;
     let raw = bench(3, 15, || {
         let _ = run_exe(exe, &inputs).unwrap();
     });
@@ -67,10 +69,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", table.render());
     let overhead = (full.median_ms - raw.median_ms).max(0.0);
+    let overhead_pct = 100.0 * overhead / full.median_ms;
     println!(
-        "coordinator overhead: {:.2} ms = {:.1}% of the step (target < 5%)",
-        overhead,
-        100.0 * overhead / full.median_ms
+        "coordinator overhead (with literal/input-table reuse): {overhead:.2} ms = {overhead_pct:.1}% of the step (target < 5%)"
     );
     common::save_csv(
         "perf_l3_overhead.csv",
@@ -79,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             vec!["execute".into(), raw.median_ms.to_string()],
             vec!["train_step".into(), full.median_ms.to_string()],
             vec!["next_batch".into(), data_t.median_ms.to_string()],
+            vec!["overhead_pct".into(), overhead_pct.to_string()],
         ],
     );
     Ok(())

@@ -4,10 +4,10 @@ use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{self, Loader, Prefetcher, Split};
 use crate::metrics::{RunLog, StepRecord};
 use crate::rng::Rng;
-use crate::runtime::{self, lit_i32, run, scalar_f32, scalar_i32, ModelState, Runtime};
+use crate::runtime::{self, lit_i32, run, scalar_i32, InputBuf, ModelState, Runtime, ScalarSlot};
 use crate::schedule::Schedule;
 use anyhow::{bail, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 pub struct Trainer {
@@ -21,6 +21,15 @@ pub struct Trainer {
     train_data: Prefetcher,
     val_data: Loader,
     seed_rng: Rng,
+    // Hot-loop caches: artifact paths resolved once, scalar-literal slots
+    // overwritten in place, and the input-pointer table reused across
+    // steps (no per-step Vec/lookup-string allocation).
+    train_path: PathBuf,
+    hess_path: Option<PathBuf>,
+    eval_path: PathBuf,
+    lr_slot: ScalarSlot,
+    t_slot: ScalarSlot,
+    inputs: InputBuf,
     /// accumulated wall-clock of hessian refreshes / train execs (Table 1)
     pub total_hess_ms: f64,
     pub total_step_ms: f64,
@@ -63,6 +72,13 @@ impl Trainer {
             cfg.effective_lr(), cfg.effective_warmup(), cfg.steps, cfg.final_lr_frac);
         let log = RunLog::new(cfg.log_path.as_deref())?;
 
+        // resolve artifact paths once; the hot loop only does borrowed
+        // cache lookups from here on (the load_artifact calls above already
+        // validated them against the manifest and compiled them)
+        let train_path = model.artifact_path(&cfg.train_artifact());
+        let hess_path = cfg.hess_artifact().map(|h| model.artifact_path(&h));
+        let eval_path = model.artifact_path("eval_step");
+
         Ok(Trainer {
             seed_rng: Rng::new(cfg.seed ^ 0x4E55__5348),
             cfg,
@@ -74,6 +90,12 @@ impl Trainer {
             step: 0,
             train_data: Prefetcher::spawn(train_loader, 4),
             val_data,
+            train_path,
+            hess_path,
+            eval_path,
+            lr_slot: ScalarSlot::new(0.0),
+            t_slot: ScalarSlot::new(0.0),
+            inputs: InputBuf::new(),
             total_hess_ms: 0.0,
             total_step_ms: 0.0,
             n_hess: 0,
@@ -88,7 +110,7 @@ impl Trainer {
     }
 
     fn hess_refresh(&mut self) -> Result<f64> {
-        let Some(art) = self.cfg.hess_artifact() else {
+        let Some(hess_path) = self.hess_path.as_deref() else {
             return Ok(0.0);
         };
         let batch = self.train_data.next_batch();
@@ -96,14 +118,11 @@ impl Trainer {
         let seed = scalar_i32(self.seed_rng.next_u64() as i32);
         let n = self.state.n_leaves();
 
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
-        inputs.extend(self.state.params.iter());
-        inputs.extend(self.state.h.iter());
-        inputs.push(&tokens);
-        inputs.push(&seed);
-
-        let exe = self.rt.load_artifact(&self.model, &art)?;
-        let mut out = run(exe, &inputs)?;
+        let exe = self.rt.load(hess_path)?;
+        let inputs = self
+            .inputs
+            .assemble(self.state.params.iter().chain(self.state.h.iter()).chain([&tokens, &seed]));
+        let mut out = run(exe, inputs)?;
         let hnorm = runtime::scalar_of(&out[n])? as f64;
         out.truncate(n);
         self.state.h = out;
@@ -133,21 +152,22 @@ impl Trainer {
         let batch = self.train_data.next_batch();
         let t0 = Instant::now();
         let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
-        let lr_lit = scalar_f32(lr as f32);
-        let t_lit = scalar_f32(t as f32);
+        // hot loop: overwrite the cached lr/t slots and reuse the input
+        // table instead of rebuilding literals + a 3n+3 Vec every step
+        self.lr_slot.set(lr as f32);
+        self.t_slot.set(t as f32);
         let n = self.state.n_leaves();
 
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
-        inputs.extend(self.state.params.iter());
-        inputs.extend(self.state.m.iter());
-        inputs.extend(self.state.h.iter());
-        inputs.push(&tokens);
-        inputs.push(&lr_lit);
-        inputs.push(&t_lit);
-
-        let train_art = self.cfg.train_artifact();
-        let exe = self.rt.load_artifact(&self.model, &train_art)?;
-        let mut out = run(exe, &inputs)?;
+        let exe = self.rt.load(&self.train_path)?;
+        let inputs = self.inputs.assemble(
+            self.state
+                .params
+                .iter()
+                .chain(self.state.m.iter())
+                .chain(self.state.h.iter())
+                .chain([&tokens, self.lr_slot.lit(), self.t_slot.lit()]),
+        );
+        let mut out = run(exe, inputs)?;
         if out.len() != 3 * n + 3 {
             bail!("train artifact returned {} outputs, expected {}", out.len(), 3 * n + 3);
         }
@@ -184,16 +204,13 @@ impl Trainer {
 
     /// Mean val loss over `n_batches` held-out batches.
     pub fn eval(&mut self, n_batches: usize) -> Result<f64> {
-        let n = self.state.n_leaves();
         let mut total = 0.0;
         for _ in 0..n_batches.max(1) {
             let batch = self.val_data.next_batch();
             let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(n + 1);
-            inputs.extend(self.state.params.iter());
-            inputs.push(&tokens);
-            let exe = self.rt.load_artifact(&self.model, "eval_step")?;
-            let out = run(exe, &inputs)?;
+            let exe = self.rt.load(&self.eval_path)?;
+            let inputs = self.inputs.assemble(self.state.params.iter().chain([&tokens]));
+            let out = run(exe, inputs)?;
             total += runtime::scalar_of(&out[0])? as f64;
         }
         Ok(total / n_batches.max(1) as f64)

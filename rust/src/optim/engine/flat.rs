@@ -1,0 +1,312 @@
+//! Flat-state arena: one contiguous, 64-byte-aligned f32 buffer per
+//! optimizer state kind (p/m/h/v) with per-tensor shard views.
+//!
+//! The pure-Rust path previously kept scattered per-leaf `Vec`s; the arena
+//! gives the kernels one long stream per state kind (cache-friendly, no
+//! per-leaf dispatch) while the leaf ranges preserve the tensor structure
+//! for interop with the literal-based `ModelState` and checkpoints.
+
+use super::parallel::{partition_leaves, DEFAULT_SHARD_LEN};
+use super::UpdateKernel;
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut, Range};
+use std::ptr::NonNull;
+
+/// Buffer alignment: one full cache line, which is also enough for any
+/// 512-bit vector ISA.
+pub const ALIGN: usize = 64;
+
+/// A heap f32 buffer aligned to [`ALIGN`] bytes (a `Vec<f32>` only
+/// guarantees 4). Derefs to `[f32]`.
+pub struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0).
+        let raw = unsafe { alloc_zeroed(layout) };
+        match NonNull::new(raw.cast::<f32>()) {
+            Some(ptr) => AlignedBuf { ptr, len },
+            None => handle_alloc_error(layout),
+        }
+    }
+
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f32>(), ALIGN)
+            .expect("AlignedBuf layout")
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr/len describe a live allocation (or a dangling,
+        // well-aligned pointer with len 0, which from_raw_parts allows).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeroed` with this exact layout.
+            unsafe { dealloc(self.ptr.as_ptr().cast(), Self::layout(self.len)) }
+        }
+    }
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively; f32 is Send + Sync.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+/// Which optimizer state buffer a flat view refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateKind {
+    /// parameters
+    P,
+    /// first moment (momentum EMA)
+    M,
+    /// diagonal-Hessian EMA (Sophia) — unused by first-order methods
+    H,
+    /// second moment (AdamW) — unused by Sophia/Lion
+    V,
+}
+
+/// The flat arena: four state buffers sharing one leaf layout, plus
+/// precomputed tensor-bounded shard views (exposed via [`Self::shards`]
+/// for per-leaf dispatch and interop). Note the fused update kernels are
+/// layout-oblivious, so [`super::ThreadedEngine`] partitions the flat
+/// index space uniformly rather than consuming these views.
+pub struct FlatState {
+    leaves: Vec<Range<usize>>,
+    shards: Vec<Range<usize>>,
+    pub p: AlignedBuf,
+    pub m: AlignedBuf,
+    pub h: AlignedBuf,
+    pub v: AlignedBuf,
+}
+
+impl FlatState {
+    /// Build a zero-initialized arena for tensors of the given lengths.
+    pub fn new(leaf_lens: &[usize]) -> Self {
+        let mut leaves = Vec::with_capacity(leaf_lens.len());
+        let mut off = 0usize;
+        for &len in leaf_lens {
+            leaves.push(off..off + len);
+            off += len;
+        }
+        FlatState {
+            leaves,
+            shards: partition_leaves(leaf_lens, DEFAULT_SHARD_LEN),
+            p: AlignedBuf::zeroed(off),
+            m: AlignedBuf::zeroed(off),
+            h: AlignedBuf::zeroed(off),
+            v: AlignedBuf::zeroed(off),
+        }
+    }
+
+    /// Total element count across all leaves.
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn leaf_range(&self, i: usize) -> Range<usize> {
+        self.leaves[i].clone()
+    }
+
+    /// Tensor-bounded cache shards over the flat index space (each at most
+    /// `DEFAULT_SHARD_LEN` elements, never straddling a leaf edge).
+    pub fn shards(&self) -> &[Range<usize>] {
+        &self.shards
+    }
+
+    pub fn buf(&self, kind: StateKind) -> &[f32] {
+        match kind {
+            StateKind::P => &self.p,
+            StateKind::M => &self.m,
+            StateKind::H => &self.h,
+            StateKind::V => &self.v,
+        }
+    }
+
+    pub fn buf_mut(&mut self, kind: StateKind) -> &mut [f32] {
+        match kind {
+            StateKind::P => &mut self.p,
+            StateKind::M => &mut self.m,
+            StateKind::H => &mut self.h,
+            StateKind::V => &mut self.v,
+        }
+    }
+
+    /// Per-tensor view into one state buffer.
+    pub fn leaf(&self, kind: StateKind, i: usize) -> &[f32] {
+        &self.buf(kind)[self.leaves[i].clone()]
+    }
+
+    pub fn leaf_mut(&mut self, kind: StateKind, i: usize) -> &mut [f32] {
+        let r = self.leaves[i].clone();
+        &mut self.buf_mut(kind)[r]
+    }
+
+    /// Copy one tensor into its arena slot. Panics if `src` does not match
+    /// the leaf length (layout is fixed at construction).
+    pub fn load_leaf(&mut self, kind: StateKind, i: usize, src: &[f32]) {
+        self.leaf_mut(kind, i).copy_from_slice(src);
+    }
+
+    // -- engine entry points: one kernel call over the whole arena --------
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn sophia_step(
+        &mut self,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        k.sophia_update(&mut self.p, &mut self.m, &self.h, g, lr, beta1, gamma, eps, wd)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn sophia_step_with_gnb_refresh(
+        &mut self,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        k.sophia_update_with_gnb_refresh(
+            &mut self.p, &mut self.m, &mut self.h, g, ghat, scale, hbeta2, lr, beta1, gamma,
+            eps, wd,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_step(
+        &mut self,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    ) {
+        k.adamw_update(&mut self.p, &mut self.m, &mut self.v, g, lr, t, beta1, beta2, eps, wd)
+    }
+
+    pub fn lion_step(
+        &mut self,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    ) {
+        k.lion_update(&mut self.p, &mut self.m, g, lr, beta1, beta2, wd)
+    }
+
+    pub fn gnb_refresh(&mut self, k: &dyn UpdateKernel, ghat: &[f32], scale: f32, beta2: f32) {
+        k.gnb_ema(&mut self.h, ghat, scale, beta2)
+    }
+
+    pub fn hutchinson_refresh(
+        &mut self,
+        k: &dyn UpdateKernel,
+        u: &[f32],
+        hvp: &[f32],
+        beta2: f32,
+    ) {
+        k.hutchinson_ema(&mut self.h, u, hvp, beta2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_cache_line_aligned() {
+        for len in [1usize, 7, 64, 1 << 16] {
+            let b = AlignedBuf::zeroed(len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "len {len}");
+            assert_eq!(b.len(), len);
+            assert!(b.iter().all(|&x| x == 0.0));
+        }
+        let empty = AlignedBuf::zeroed(0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn leaf_views_tile_the_arena() {
+        let lens = [3usize, 0, 5, 70_000, 1];
+        let mut fs = FlatState::new(&lens);
+        assert_eq!(fs.len(), lens.iter().sum::<usize>());
+        assert_eq!(fs.n_leaves(), lens.len());
+        let mut next = 0;
+        for i in 0..fs.n_leaves() {
+            let r = fs.leaf_range(i);
+            assert_eq!(r.start, next);
+            assert_eq!(r.len(), lens[i]);
+            next = r.end;
+        }
+        // load/read round trip through a leaf view
+        let data: Vec<f32> = (0..5).map(|x| x as f32).collect();
+        fs.load_leaf(StateKind::M, 2, &data);
+        assert_eq!(fs.leaf(StateKind::M, 2), &data[..]);
+        // neighbors untouched
+        assert!(fs.leaf(StateKind::M, 0).iter().all(|&x| x == 0.0));
+        assert!(fs.leaf(StateKind::M, 3).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shards_respect_leaf_edges() {
+        let lens = [10usize, 70_000, 3];
+        let fs = FlatState::new(&lens);
+        let mut next = 0;
+        for r in fs.shards() {
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, fs.len());
+        for i in 0..fs.n_leaves() {
+            let lr = fs.leaf_range(i);
+            for s in fs.shards() {
+                let straddles = s.start < lr.start && lr.start < s.end;
+                assert!(!straddles, "shard {s:?} straddles leaf edge {}", lr.start);
+            }
+        }
+    }
+}

@@ -1,0 +1,552 @@
+//! Flat-state SIMD/parallel optimizer kernel engine.
+//!
+//! Layers:
+//!
+//! * [`flat`]     — `FlatState` arena: one contiguous, 64-byte-aligned f32
+//!   buffer per state kind (p/m/h/v) with per-tensor shard views.
+//! * [`blocked`]  — cache-blocked, 8-lane-unrolled fused update kernels
+//!   (auto-vectorized; bit-for-bit against the scalar oracle for
+//!   sophia/lion/EMAs, ulp-checked for adamw).
+//! * [`parallel`] — deterministic `std::thread::scope` shard driver with
+//!   fixed-order clipped-count reduction.
+//! * this module  — the [`UpdateKernel`] trait and [`Backend`] dispatch so
+//!   benches, proptests, and the coordinator select the scalar oracle or
+//!   the engine uniformly (env knob: `SOPHIA_ENGINE`).
+//!
+//! The scalar kernels in `optim::kernels` remain the oracle; the engine is
+//! the fast path. Sophia's whole pitch is that second-order preconditioning
+//! only wins if per-step overhead is negligible (PAPER.md §1), so these
+//! kernels aim at the memory-bandwidth bound.
+
+#![allow(clippy::too_many_arguments)]
+
+pub mod blocked;
+pub mod flat;
+pub mod parallel;
+
+pub use self::flat::{AlignedBuf, FlatState, StateKind, ALIGN};
+pub use self::parallel::{partition, partition_leaves, run_sharded, SendPtr, DEFAULT_SHARD_LEN};
+
+use self::parallel::shard_mut;
+use crate::optim::kernels;
+use std::ops::Range;
+
+/// Uniform interface over the optimizer update kernels, implemented by the
+/// scalar oracle and both engine tiers. All slices must have equal length;
+/// update kernels mutate `p`/`m` (and `h`/`v` where noted) in place.
+/// Sophia-family methods return the clipped-coordinate count.
+pub trait UpdateKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn sophia_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &[f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize;
+
+    /// The every-k-step case: GNB Hessian-EMA refresh fused into the same
+    /// memory pass as the Sophia step. Semantics = `gnb_ema` then
+    /// `sophia_update`.
+    fn sophia_update_with_gnb_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize;
+
+    fn adamw_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    );
+
+    fn lion_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    );
+
+    fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32);
+
+    fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32);
+}
+
+// ---------------------------------------------------------------------
+// Scalar oracle: delegates to optim::kernels
+// ---------------------------------------------------------------------
+
+/// The reference implementation (single-threaded, element-at-a-time) —
+/// the ground truth the engine is property-tested against.
+pub struct ScalarOracle;
+
+impl UpdateKernel for ScalarOracle {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn sophia_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &[f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        kernels::sophia_update(p, m, h, g, lr, beta1, gamma, eps, wd)
+    }
+
+    fn sophia_update_with_gnb_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        kernels::sophia_update_with_gnb_refresh(
+            p, m, h, g, ghat, scale, hbeta2, lr, beta1, gamma, eps, wd,
+        )
+    }
+
+    fn adamw_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    ) {
+        kernels::adamw_update(p, m, v, g, lr, t, beta1, beta2, eps, wd)
+    }
+
+    fn lion_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    ) {
+        kernels::lion_update(p, m, g, lr, beta1, beta2, wd)
+    }
+
+    fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
+        kernels::gnb_ema(h, ghat, scale, beta2)
+    }
+
+    fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
+        kernels::hutchinson_ema(h, u, hvp, beta2)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked engine: single-threaded cache-blocked unrolled kernels
+// ---------------------------------------------------------------------
+
+/// Single-threaded engine tier: the blocked/unrolled kernels without the
+/// thread driver.
+pub struct BlockedEngine;
+
+impl UpdateKernel for BlockedEngine {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn sophia_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &[f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        blocked::sophia_update(p, m, h, g, lr, beta1, gamma, eps, wd)
+    }
+
+    fn sophia_update_with_gnb_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        blocked::sophia_update_with_gnb_refresh(
+            p, m, h, g, ghat, scale, hbeta2, lr, beta1, gamma, eps, wd,
+        )
+    }
+
+    fn adamw_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    ) {
+        blocked::adamw_update(p, m, v, g, lr, t, beta1, beta2, eps, wd)
+    }
+
+    fn lion_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    ) {
+        blocked::lion_update(p, m, g, lr, beta1, beta2, wd)
+    }
+
+    fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
+        blocked::gnb_ema(h, ghat, scale, beta2)
+    }
+
+    fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
+        blocked::hutchinson_ema(h, u, hvp, beta2)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threaded engine: blocked kernels over the deterministic shard driver
+// ---------------------------------------------------------------------
+
+/// Multi-threaded engine tier. Each call partitions the buffers into
+/// shards of `shard_len` elements and runs the blocked kernels across
+/// `threads` scoped workers; per-element results and the clipped count are
+/// bit-identical to [`BlockedEngine`] for any thread count.
+pub struct ThreadedEngine {
+    pub threads: usize,
+    pub shard_len: usize,
+}
+
+impl ThreadedEngine {
+    pub fn new(threads: usize) -> Self {
+        ThreadedEngine { threads: threads.max(1), shard_len: DEFAULT_SHARD_LEN }
+    }
+
+    fn shards(&self, n: usize) -> Vec<Range<usize>> {
+        partition(n, self.shard_len)
+    }
+}
+
+impl UpdateKernel for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn sophia_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &[f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let shards = self.shards(p.len());
+        let (pp, mp) = (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()));
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            let ms = unsafe { shard_mut(mp, &r) };
+            blocked::sophia_update(ps, ms, &h[r.clone()], &g[r], lr, beta1, gamma, eps, wd)
+        })
+    }
+
+    fn sophia_update_with_gnb_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let shards = self.shards(p.len());
+        let (pp, mp, hp) =
+            (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()), SendPtr(h.as_mut_ptr()));
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            let ms = unsafe { shard_mut(mp, &r) };
+            let hs = unsafe { shard_mut(hp, &r) };
+            blocked::sophia_update_with_gnb_refresh(
+                ps,
+                ms,
+                hs,
+                &g[r.clone()],
+                &ghat[r],
+                scale,
+                hbeta2,
+                lr,
+                beta1,
+                gamma,
+                eps,
+                wd,
+            )
+        })
+    }
+
+    fn adamw_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    ) {
+        let shards = self.shards(p.len());
+        let (pp, mp, vp) =
+            (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()), SendPtr(v.as_mut_ptr()));
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            let ms = unsafe { shard_mut(mp, &r) };
+            let vs = unsafe { shard_mut(vp, &r) };
+            blocked::adamw_update(ps, ms, vs, &g[r], lr, t, beta1, beta2, eps, wd);
+            0
+        });
+    }
+
+    fn lion_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    ) {
+        let shards = self.shards(p.len());
+        let (pp, mp) = (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()));
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            let ms = unsafe { shard_mut(mp, &r) };
+            blocked::lion_update(ps, ms, &g[r], lr, beta1, beta2, wd);
+            0
+        });
+    }
+
+    fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
+        let shards = self.shards(h.len());
+        let hp = SendPtr(h.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let hs = unsafe { shard_mut(hp, &r) };
+            blocked::gnb_ema(hs, &ghat[r], scale, beta2);
+            0
+        });
+    }
+
+    fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
+        let shards = self.shards(h.len());
+        let hp = SendPtr(h.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let hs = unsafe { shard_mut(hp, &r) };
+            blocked::hutchinson_ema(hs, &u[r.clone()], &hvp[r], beta2);
+            0
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------
+
+/// Which kernel implementation to run. Benches, proptests and the
+/// coordinator all go through this one selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Blocked,
+    Threaded(usize),
+}
+
+/// Worker count the `auto` backend uses: every available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Backend {
+    pub fn build(&self) -> Box<dyn UpdateKernel> {
+        match *self {
+            Backend::Scalar => Box::new(ScalarOracle),
+            Backend::Blocked => Box::new(BlockedEngine),
+            Backend::Threaded(t) => Box::new(ThreadedEngine::new(t)),
+        }
+    }
+
+    /// Human-readable label for bench tables and JSON records.
+    pub fn label(&self) -> String {
+        match self {
+            Backend::Scalar => "scalar".into(),
+            Backend::Blocked => "blocked".into(),
+            Backend::Threaded(t) => format!("threads:{t}"),
+        }
+    }
+
+    /// Select from `SOPHIA_ENGINE`: `scalar`, `blocked`, `threads:<n>`, or
+    /// anything else / unset for the default (threaded on all cores).
+    pub fn from_env() -> Backend {
+        match std::env::var("SOPHIA_ENGINE").ok().as_deref() {
+            Some("scalar") => Backend::Scalar,
+            Some("blocked") => Backend::Blocked,
+            Some(s) if s.starts_with("threads:") => {
+                // a malformed count falls back to all cores (the default),
+                // not to a silent single-threaded run
+                match s["threads:".len()..].parse::<usize>() {
+                    Ok(t) => Backend::Threaded(t.max(1)),
+                    Err(_) => Backend::Threaded(default_threads()),
+                }
+            }
+            _ => Backend::Threaded(default_threads()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(scale)).collect()
+    }
+
+    #[test]
+    fn threaded_is_bitwise_invariant_to_threads_and_shard_len() {
+        let n = 50_000;
+        let mut rng = Rng::new(77);
+        let p0 = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 1.0);
+        let h = rand_vec(&mut rng, n, 1.0);
+        let g = rand_vec(&mut rng, n, 1.0);
+        let (mut pr, mut mr) = (p0.clone(), m0.clone());
+        let cr = ScalarOracle.sophia_update(&mut pr, &mut mr, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
+        for threads in [1usize, 2, 4] {
+            for shard_len in [37usize, 4096, DEFAULT_SHARD_LEN] {
+                let k = ThreadedEngine { threads, shard_len };
+                let (mut pe, mut me) = (p0.clone(), m0.clone());
+                let ce = k.sophia_update(&mut pe, &mut me, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
+                assert_eq!(cr, ce, "clip count threads={threads} shard_len={shard_len}");
+                for i in 0..n {
+                    assert_eq!(pr[i].to_bits(), pe[i].to_bits(), "p[{i}] threads={threads}");
+                    assert_eq!(mr[i].to_bits(), me[i].to_bits(), "m[{i}] threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_state_sophia_step_runs_on_every_backend() {
+        let mut rng = Rng::new(5);
+        let lens = [100usize, 9000, 17];
+        let total: usize = lens.iter().sum();
+        let g = rand_vec(&mut rng, total, 1.0);
+        let init = rand_vec(&mut rng, total, 1.0);
+        let mut outs: Vec<(usize, Vec<f32>)> = Vec::new();
+        for b in [Backend::Scalar, Backend::Blocked, Backend::Threaded(2)] {
+            let mut fs = FlatState::new(&lens);
+            fs.buf_mut(StateKind::P).copy_from_slice(&init);
+            fs.buf_mut(StateKind::H).copy_from_slice(&g); // arbitrary curvature
+            let k = b.build();
+            let c = fs.sophia_step(&*k, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
+            outs.push((c, fs.buf(StateKind::P).to_vec()));
+        }
+        for (c, p) in &outs[1..] {
+            assert_eq!(*c, outs[0].0);
+            assert_eq!(p, &outs[0].1);
+        }
+    }
+
+    #[test]
+    fn backend_labels_are_stable() {
+        assert_eq!(Backend::Scalar.label(), "scalar");
+        assert_eq!(Backend::Blocked.label(), "blocked");
+        assert_eq!(Backend::Threaded(4).label(), "threads:4");
+        assert_eq!(Backend::Threaded(4).build().name(), "threaded");
+    }
+}

@@ -1,0 +1,155 @@
+//! Deterministic multi-threaded shard driver for the kernel engine.
+//!
+//! Shards are contiguous, disjoint index ranges over the flat state space.
+//! Workers pull shard indices from an atomic queue, but every shard's
+//! arithmetic depends only on its own range, and the per-shard results are
+//! reduced in fixed shard order — so the output (updated buffers AND the
+//! clipped-coordinate count) is bit-identical for any thread count or
+//! scheduling interleave. No dependencies beyond `std::thread::scope`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default shard granularity: 64 Ki elements = 256 KB per f32 stream,
+/// small enough that 4–6 streams of one shard sit in L2, large enough to
+/// amortize dispatch. Must stay well above `blocked::LANES`.
+pub const DEFAULT_SHARD_LEN: usize = 1 << 16;
+
+/// Split the flat index space into shards of at most `shard_len` elements,
+/// starting a fresh shard at every leaf boundary so one shard never
+/// straddles two tensors (the per-tensor view invariant of `FlatState`).
+pub fn partition_leaves(leaf_lens: &[usize], shard_len: usize) -> Vec<Range<usize>> {
+    let shard = shard_len.max(1);
+    let mut out = Vec::new();
+    let mut base = 0usize;
+    for &len in leaf_lens {
+        let mut off = 0;
+        while off < len {
+            let take = shard.min(len - off);
+            out.push(base + off..base + off + take);
+            off += take;
+        }
+        base += len;
+    }
+    out
+}
+
+/// Single-tensor convenience wrapper around [`partition_leaves`].
+pub fn partition(total: usize, shard_len: usize) -> Vec<Range<usize>> {
+    partition_leaves(&[total], shard_len)
+}
+
+/// A raw base pointer that may cross thread boundaries. The engine hands
+/// each worker disjoint shard ranges over the same allocation; `SendPtr`
+/// carries the base address into the worker closures.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: the pointer itself is just an address; all dereferences go
+// through `shard_mut`, whose contract confines every access to a disjoint
+// in-bounds range.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Reborrow one shard of the buffer behind `p` as a mutable slice.
+///
+/// # Safety
+/// `r` must lie within the allocation `p` was taken from, the allocation
+/// must outlive the returned slice, and no two concurrently-live calls may
+/// receive overlapping ranges.
+pub unsafe fn shard_mut<'a, T>(p: SendPtr<T>, r: &Range<usize>) -> &'a mut [T] {
+    std::slice::from_raw_parts_mut(p.0.add(r.start), r.len())
+}
+
+/// Run `f(shard_index, range)` for every shard on up to `threads` workers
+/// and return the sum of the per-shard `usize` results, reduced in fixed
+/// shard order. With `threads <= 1` (or a single shard) everything runs on
+/// the calling thread.
+pub fn run_sharded<F>(threads: usize, shards: &[Range<usize>], f: F) -> usize
+where
+    F: Fn(usize, Range<usize>) -> usize + Sync,
+{
+    let n = shards.len();
+    if n == 0 {
+        return 0;
+    }
+    let workers = threads.max(1).min(n);
+    if workers == 1 {
+        return shards.iter().cloned().enumerate().map(|(i, r)| f(i, r)).sum();
+    }
+    let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                counts[i].store(f(i, shards[i].clone()), Ordering::Relaxed);
+            });
+        }
+    });
+    // scope join synchronizes; fixed-order reduce keeps the count
+    // deterministic no matter which worker ran which shard.
+    counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_disjointly_with_tensor_boundaries() {
+        let lens = [10usize, 0, 65_536, 7, 100_001];
+        let shards = partition_leaves(&lens, 4096);
+        let total: usize = lens.iter().sum();
+        let mut next = 0;
+        for r in &shards {
+            assert_eq!(r.start, next, "gap or overlap at {next}");
+            assert!(r.len() <= 4096 && !r.is_empty());
+            next = r.end;
+        }
+        assert_eq!(next, total);
+        // no shard straddles a leaf boundary
+        let mut edges = vec![0usize];
+        for &l in &lens {
+            edges.push(edges.last().unwrap() + l);
+        }
+        for r in &shards {
+            assert!(
+                !edges.iter().any(|&e| r.start < e && e < r.end),
+                "shard {r:?} straddles a leaf edge"
+            );
+        }
+    }
+
+    #[test]
+    fn run_sharded_matches_serial_for_any_thread_count() {
+        let shards = partition(100_003, 997);
+        let serial: usize = shards.iter().map(|r| r.len() / 3).sum();
+        for threads in [1, 2, 4, 8] {
+            let got = run_sharded(threads, &shards, |_, r| r.len() / 3);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_sharded_disjoint_writes_land() {
+        let n = 10_000;
+        let mut buf = vec![0f32; n];
+        let shards = partition(n, 127);
+        let base = SendPtr(buf.as_mut_ptr());
+        run_sharded(4, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let s = unsafe { shard_mut(base, &r) };
+            for (k, x) in s.iter_mut().enumerate() {
+                *x = (r.start + k) as f32;
+            }
+            0
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+}

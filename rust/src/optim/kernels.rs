@@ -78,6 +78,28 @@ pub fn gnb_ema(h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
     }
 }
 
+/// Scalar reference for the fused every-k-step path: GNB Hessian-EMA
+/// refresh immediately followed by the Sophia step (two passes here; the
+/// engine fuses them into one). Returns the clipped-coordinate count.
+#[allow(clippy::too_many_arguments)]
+pub fn sophia_update_with_gnb_refresh(
+    p: &mut [f32],
+    m: &mut [f32],
+    h: &mut [f32],
+    g: &[f32],
+    ghat: &[f32],
+    scale: f32,
+    hbeta2: f32,
+    lr: f32,
+    beta1: f32,
+    gamma: f32,
+    eps: f32,
+    wd: f32,
+) -> usize {
+    gnb_ema(h, ghat, scale, hbeta2);
+    sophia_update(p, m, h, g, lr, beta1, gamma, eps, wd)
+}
+
 /// Hessian-EMA refresh with the Hutchinson point estimate (Alg. 1).
 pub fn hutchinson_ema(h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
     for i in 0..h.len() {

@@ -1,13 +1,17 @@
 //! Pure-Rust optimizer substrate.
 //!
-//! * `kernels` — element-wise mirrors of the L1 update kernels (property
-//!   tests + coordinator benches).
+//! * `kernels` — element-wise mirrors of the L1 update kernels: the scalar
+//!   oracle for property tests and the engine equivalence checks.
+//! * `engine`  — the flat-state SIMD/parallel kernel engine: `FlatState`
+//!   arenas, cache-blocked 8-lane kernels, a deterministic threaded shard
+//!   driver, and the `UpdateKernel` backend dispatch.
 //! * `toy`     — the paper's Figure 2 landscape and the five optimizers
 //!   compared there.
 //! * `theory`  — Section 4 / Appendix D: full-Hessian clipped Newton
 //!   (Eq. 16) and the SignGD condition-number lower bound.
 //! * `linalg`  — small symmetric eigendecomposition (Jacobi).
 
+pub mod engine;
 pub mod kernels;
 pub mod linalg;
 pub mod theory;

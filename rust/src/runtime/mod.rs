@@ -6,14 +6,15 @@
 //! by artifacts/<preset>/manifest.json (see config::ModelConfig).
 
 use crate::config::{ModelConfig, ParamSpec};
+use crate::optim::engine::{FlatState, StateKind};
 use crate::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 pub struct Runtime {
     pub client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -22,20 +23,22 @@ impl Runtime {
         Ok(Runtime { client, cache: HashMap::new() })
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
+    /// Load + compile an HLO-text artifact (cached by path). Cache hits —
+    /// the training hot loop — are a borrowed `&Path` map lookup with no
+    /// allocation.
     pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = path.to_string_lossy().into_owned();
-        if !self.cache.contains_key(&key) {
-            let proto = xla::HloModuleProto::from_text_file(&key)
+        if !self.cache.contains_key(path) {
+            let key = path.to_string_lossy();
+            let proto = xla::HloModuleProto::from_text_file(key.as_ref())
                 .map_err(|e| anyhow!("parse {key}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
-            self.cache.insert(key.clone(), exe);
+            self.cache.insert(path.to_path_buf(), exe);
         }
-        Ok(self.cache.get(&key).unwrap())
+        Ok(self.cache.get(path).unwrap())
     }
 
     pub fn load_artifact(
@@ -60,6 +63,75 @@ pub fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[&xla::Literal]) -> Result<
         .to_literal_sync()
         .map_err(|e| anyhow!("to_literal: {e:?}"))?;
     lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Hot-loop reuse: scalar-literal slots and the input-pointer table
+// ---------------------------------------------------------------------
+
+/// A pinned slot for a hot-loop scalar literal (`lr`, `t`). The xla
+/// binding exposes no mutable host view of a `Literal`, so `set` swaps a
+/// fresh 4-byte scalar into the same slot — but skips the rebuild entirely
+/// when the value is bit-unchanged, and keeps the slot's address stable so
+/// `InputBuf::assemble` can reference it without any per-step Vec churn.
+pub struct ScalarSlot {
+    bits: u32,
+    lit: xla::Literal,
+}
+
+impl ScalarSlot {
+    pub fn new(x: f32) -> Self {
+        ScalarSlot { bits: x.to_bits(), lit: scalar_f32(x) }
+    }
+
+    pub fn set(&mut self, x: f32) {
+        if x.to_bits() != self.bits {
+            self.bits = x.to_bits();
+            self.lit = scalar_f32(x);
+        }
+    }
+
+    pub fn lit(&self) -> &xla::Literal {
+        &self.lit
+    }
+}
+
+/// Reusable argument table for [`run`]. Assembling a train step's
+/// `&[&Literal]` used to allocate a fresh `Vec` of `3n + 3` references on
+/// every step; this keeps one capacity-retaining pointer buffer alive for
+/// the lifetime of the trainer.
+#[derive(Default)]
+pub struct InputBuf {
+    ptrs: Vec<*const xla::Literal>,
+}
+
+// SAFETY: the stored pointers are only dereferenced through the slice
+// returned by `assemble`, whose lifetime is bounded by the borrows the
+// pointers were derived from; between calls the buffer is inert data.
+unsafe impl Send for InputBuf {}
+unsafe impl Sync for InputBuf {}
+
+impl InputBuf {
+    pub fn new() -> Self {
+        InputBuf { ptrs: Vec::new() }
+    }
+
+    /// Collect `parts` into the reused buffer and view it as a literal
+    /// slice. The `'a` bound ties the returned slice to both this buffer
+    /// and every literal passed in, so no reference can dangle.
+    pub fn assemble<'a, I>(&'a mut self, parts: I) -> &'a [&'a xla::Literal]
+    where
+        I: IntoIterator<Item = &'a xla::Literal>,
+    {
+        self.ptrs.clear();
+        self.ptrs.extend(parts.into_iter().map(|l| l as *const xla::Literal));
+        // SAFETY: `&'a Literal` and `*const Literal` have identical layout,
+        // every pointer above was just derived from a live `&'a` borrow,
+        // and the returned slice cannot outlive `'a`.
+        unsafe {
+            std::slice::from_raw_parts(self.ptrs.as_ptr().cast::<&'a xla::Literal>(), self.ptrs.len())
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -201,6 +273,36 @@ impl ModelState {
             .sum())
     }
 
+    /// Gather (params, m, h) into one `FlatState` arena — the engine-side
+    /// view of the same state the artifacts thread through literals
+    /// (pure-Rust kernel path, checkpoint statistics, bench workloads).
+    pub fn to_flat(&self) -> Result<FlatState> {
+        let lens: Vec<usize> = self.specs.iter().map(|s| s.numel()).collect();
+        let mut fs = FlatState::new(&lens);
+        for (kind, leaves) in
+            [(StateKind::P, &self.params), (StateKind::M, &self.m), (StateKind::H, &self.h)]
+        {
+            for (i, lit) in leaves.iter().enumerate() {
+                let data = to_f32(lit)?;
+                if data.len() != fs.leaf_range(i).len() {
+                    bail!("leaf {i} has {} elements, spec says {}", data.len(), fs.leaf_range(i).len());
+                }
+                fs.load_leaf(kind, i, &data);
+            }
+        }
+        Ok(fs)
+    }
+
+    /// Scatter a `FlatState` back into per-leaf literals (engine → artifact
+    /// boundary). `v` is not part of the artifact state and is ignored.
+    pub fn from_flat(&mut self, fs: &FlatState) -> Result<()> {
+        let total: usize = self.specs.iter().map(|s| s.numel()).sum();
+        if fs.len() != total {
+            bail!("FlatState has {} elements, model needs {total}", fs.len());
+        }
+        self.restore(fs.buf(StateKind::P), fs.buf(StateKind::M), fs.buf(StateKind::H))
+    }
+
     /// Replace state from raw flat blobs (checkpoint restore).
     pub fn restore(&mut self, params: &[f32], m: &[f32], h: &[f32]) -> Result<()> {
         let fill = |flat: &[f32], specs: &[ParamSpec]| -> Result<Vec<xla::Literal>> {
@@ -252,6 +354,21 @@ mod tests {
         assert_eq!(to_f32(&lit).unwrap(), data);
         let s = scalar_f32(7.5);
         assert_eq!(scalar_of(&s).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn input_buf_and_scalar_slot_reuse() {
+        let a = scalar_f32(1.0);
+        let b = scalar_f32(2.0);
+        let mut buf = InputBuf::new();
+        let s = buf.assemble([&a, &b]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(scalar_of(s[0]).unwrap(), 1.0);
+        assert_eq!(scalar_of(s[1]).unwrap(), 2.0);
+        let mut slot = ScalarSlot::new(3.0);
+        slot.set(3.0); // bit-unchanged: no rebuild
+        slot.set(4.5);
+        assert_eq!(scalar_of(slot.lit()).unwrap(), 4.5);
     }
 
     #[test]

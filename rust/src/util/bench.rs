@@ -12,11 +12,34 @@ pub struct Stats {
     pub n: usize,
 }
 
+impl Stats {
+    /// Effective streaming throughput in GB/s for a kernel that moves
+    /// `bytes` per invocation, based on the median sample.
+    pub fn throughput_gbs(&self, bytes: usize) -> f64 {
+        if self.median_ms <= 0.0 {
+            return 0.0;
+        }
+        bytes as f64 / (self.median_ms * 1e-3) / 1e9
+    }
+}
+
+/// Median of a pre-sorted sample set; even counts average the two middle
+/// samples (the textbook definition — indexing `n/2` alone biases high).
+fn median_sorted(s: &[f64]) -> f64 {
+    let n = s.len();
+    if n % 2 == 0 {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    } else {
+        s[n / 2]
+    }
+}
+
 /// Time `f` for `n` samples after `warmup` runs; robust stats.
 pub fn bench<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
         f();
     }
+    let n = n.max(1);
     let mut samples: Vec<f64> = Vec::with_capacity(n);
     for _ in 0..n {
         let t0 = Instant::now();
@@ -24,12 +47,12 @@ pub fn bench<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Stats {
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
+    let median = median_sorted(&samples);
     let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
     devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Stats {
         median_ms: median,
-        mad_ms: devs[devs.len() / 2],
+        mad_ms: median_sorted(&devs),
         min_ms: samples[0],
         max_ms: *samples.last().unwrap(),
         n,
@@ -102,6 +125,23 @@ mod tests {
         });
         assert_eq!(s.n, 5);
         assert!(s.min_ms <= s.median_ms && s.median_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn median_averages_middles_for_even_counts() {
+        assert_eq!(median_sorted(&[1.0, 3.0]), 2.0);
+        assert_eq!(median_sorted(&[1.0, 2.0, 10.0, 20.0]), 6.0);
+        assert_eq!(median_sorted(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median_sorted(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn throughput_is_bytes_over_median_time() {
+        let s = Stats { median_ms: 1.0, mad_ms: 0.0, min_ms: 1.0, max_ms: 1.0, n: 1 };
+        // 1 MB in 1 ms = 1 GB/s
+        assert!((s.throughput_gbs(1_000_000) - 1.0).abs() < 1e-12);
+        let z = Stats { median_ms: 0.0, mad_ms: 0.0, min_ms: 0.0, max_ms: 0.0, n: 1 };
+        assert_eq!(z.throughput_gbs(123), 0.0);
     }
 
     #[test]

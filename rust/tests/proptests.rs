@@ -2,6 +2,7 @@
 //! inputs over many seeds, asserting the invariants the paper relies on.
 
 use sophia::data::{corpus, Bpe, ByteTokenizer, Loader, Split, Tokenizer};
+use sophia::optim::engine::{Backend, FlatState, StateKind, ThreadedEngine, UpdateKernel};
 use sophia::optim::kernels;
 use sophia::rng::Rng;
 use sophia::schedule::Schedule;
@@ -194,6 +195,169 @@ fn prop_corpus_topics_uniformish() {
     let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
     assert!(*mn > 5, "topic coverage too skewed: min {mn}");
     assert!(*mx < 120, "topic coverage too skewed: max {mx}");
+}
+
+// ---------------------------------------------------------------------
+// Kernel engine ≡ scalar oracle (rust/src/optim/engine/)
+// ---------------------------------------------------------------------
+
+/// Engine backends under test: the blocked single-thread tier plus the
+/// threaded tier at 1/2/4 workers with a deliberately tiny/odd shard
+/// length so even small inputs split into many ragged shards.
+fn engine_backends() -> Vec<Box<dyn UpdateKernel>> {
+    let mut v: Vec<Box<dyn UpdateKernel>> = vec![Backend::Blocked.build()];
+    for threads in [1usize, 2, 4] {
+        for shard_len in [37usize, 1 << 10, 1 << 16] {
+            v.push(Box::new(ThreadedEngine { threads, shard_len }));
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_engine_sophia_bitwise_equals_oracle_with_identical_clip_counts() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xE11_61E);
+        // lengths hit 8-lane tails, single elements, and multi-shard sizes
+        let n = 1 + rng.below(3000) as usize;
+        let p0 = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 1.0);
+        let h = rand_vec(&mut rng, n, 1.0);
+        let g = rand_vec(&mut rng, n, 1.0);
+        let lr = 10f32.powi(-(rng.below(4) as i32) - 1);
+        let (mut ps, mut ms) = (p0.clone(), m0.clone());
+        let cs = kernels::sophia_update(&mut ps, &mut ms, &h, &g, lr, 0.96, 0.05, 1e-12, 0.1);
+        for k in engine_backends() {
+            let (mut pe, mut me) = (p0.clone(), m0.clone());
+            let ce = k.sophia_update(&mut pe, &mut me, &h, &g, lr, 0.96, 0.05, 1e-12, 0.1);
+            assert_eq!(cs, ce, "clip count: backend {} seed {seed} n {n}", k.name());
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "{} p[{i}] seed {seed}", k.name());
+                assert_eq!(ms[i].to_bits(), me[i].to_bits(), "{} m[{i}] seed {seed}", k.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_fused_gnb_refresh_bitwise_equals_two_pass_oracle() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0xF0_5ED);
+        let n = 1 + rng.below(2000) as usize;
+        let p0 = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 1.0);
+        let h0 = rand_vec(&mut rng, n, 1.0);
+        let g = rand_vec(&mut rng, n, 1.0);
+        let ghat = rand_vec(&mut rng, n, 1.0);
+        let (mut ps, mut ms, mut hs) = (p0.clone(), m0.clone(), h0.clone());
+        let cs = kernels::sophia_update_with_gnb_refresh(
+            &mut ps, &mut ms, &mut hs, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12, 0.1,
+        );
+        for k in engine_backends() {
+            let (mut pe, mut me, mut he) = (p0.clone(), m0.clone(), h0.clone());
+            let ce = k.sophia_update_with_gnb_refresh(
+                &mut pe, &mut me, &mut he, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12, 0.1,
+            );
+            assert_eq!(cs, ce, "clip count: backend {} seed {seed}", k.name());
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "{} p[{i}] seed {seed}", k.name());
+                assert_eq!(ms[i].to_bits(), me[i].to_bits(), "{} m[{i}] seed {seed}", k.name());
+                assert_eq!(hs[i].to_bits(), he[i].to_bits(), "{} h[{i}] seed {seed}", k.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_adamw_matches_oracle_within_one_ulp() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0xADA);
+        let n = 1 + rng.below(2000) as usize;
+        let p0 = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 0.1);
+        let v0: Vec<f32> = rand_vec(&mut rng, n, 0.1).iter().map(|x| x.abs()).collect();
+        let g = rand_vec(&mut rng, n, 1.0);
+        let t = 1.0 + rng.below(50) as f32;
+        let (mut ps, mut ms, mut vs) = (p0.clone(), m0.clone(), v0.clone());
+        kernels::adamw_update(&mut ps, &mut ms, &mut vs, &g, 1e-3, t, 0.9, 0.95, 1e-8, 0.1);
+        for k in engine_backends() {
+            let (mut pe, mut me, mut ve) = (p0.clone(), m0.clone(), v0.clone());
+            k.adamw_update(&mut pe, &mut me, &mut ve, &g, 1e-3, t, 0.9, 0.95, 1e-8, 0.1);
+            for i in 0..n {
+                let ulp = (ps[i].to_bits() as i64 - pe[i].to_bits() as i64).abs();
+                assert!(ulp <= 1, "{} p[{i}] seed {seed}: {} vs {}", k.name(), ps[i], pe[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_lion_and_emas_bitwise_equal_oracle() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x110_17);
+        let n = 1 + rng.below(2000) as usize;
+        let a0 = rand_vec(&mut rng, n, 1.0);
+        let b0 = rand_vec(&mut rng, n, 1.0);
+        let c = rand_vec(&mut rng, n, 1.0);
+        let d = rand_vec(&mut rng, n, 1.0);
+        let (mut ps, mut ms) = (a0.clone(), b0.clone());
+        kernels::lion_update(&mut ps, &mut ms, &c, 2e-3, 0.95, 0.98, 0.1);
+        let mut hs_gnb = a0.clone();
+        kernels::gnb_ema(&mut hs_gnb, &c, 240.0, 0.99);
+        let mut hs_hut = b0.clone();
+        kernels::hutchinson_ema(&mut hs_hut, &c, &d, 0.99);
+        for k in engine_backends() {
+            let (mut pe, mut me) = (a0.clone(), b0.clone());
+            k.lion_update(&mut pe, &mut me, &c, 2e-3, 0.95, 0.98, 0.1);
+            let mut he_gnb = a0.clone();
+            k.gnb_ema(&mut he_gnb, &c, 240.0, 0.99);
+            let mut he_hut = b0.clone();
+            k.hutchinson_ema(&mut he_hut, &c, &d, 0.99);
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "{} lion p[{i}]", k.name());
+                assert_eq!(ms[i].to_bits(), me[i].to_bits(), "{} lion m[{i}]", k.name());
+                assert_eq!(hs_gnb[i].to_bits(), he_gnb[i].to_bits(), "{} gnb h[{i}]", k.name());
+                assert_eq!(hs_hut[i].to_bits(), he_hut[i].to_bits(), "{} hutch h[{i}]", k.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flat_state_step_is_invariant_to_backend_and_leaf_layout() {
+    // the same flat parameter vector, split into random leaf layouts and
+    // stepped by every backend, must give one identical result
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed ^ 0xF1A7);
+        let total = 500 + rng.below(4000) as usize;
+        // random leaf partition of `total`
+        let mut lens = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let take = (1 + rng.below(900) as usize).min(left);
+            lens.push(take);
+            left -= take;
+        }
+        let g = rand_vec(&mut rng, total, 1.0);
+        let init_p = rand_vec(&mut rng, total, 1.0);
+        let init_h = rand_vec(&mut rng, total, 1.0);
+        let run = |backend: Backend| -> (usize, Vec<f32>) {
+            let mut fs = FlatState::new(&lens);
+            fs.buf_mut(StateKind::P).copy_from_slice(&init_p);
+            fs.buf_mut(StateKind::H).copy_from_slice(&init_h);
+            let k = backend.build();
+            let clipped = fs.sophia_step(&*k, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
+            (clipped, fs.buf(StateKind::P).to_vec())
+        };
+        let (c0, p0) = run(Backend::Scalar);
+        for backend in [Backend::Blocked, Backend::Threaded(2), Backend::Threaded(4)] {
+            let (c, p) = run(backend);
+            assert_eq!(c, c0, "clip count: {} seed {seed}", backend.label());
+            for i in 0..total {
+                assert_eq!(p0[i].to_bits(), p[i].to_bits(), "{} p[{i}]", backend.label());
+            }
+        }
+    }
 }
 
 #[test]

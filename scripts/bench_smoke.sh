@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Smoke-run the perf benches at reduced scale. Used by scripts/verify.sh
+# and suitable for CI: exercises the kernel engine sweep (writes
+# BENCH_kernels.json) and the coordinator-overhead probe (skips cleanly
+# when artifacts/ is absent).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export SOPHIA_BENCH_SCALE="${SOPHIA_BENCH_SCALE:-0.05}"
+echo "== bench smoke (SOPHIA_BENCH_SCALE=$SOPHIA_BENCH_SCALE) =="
+cargo bench --bench perf_kernels
+cargo bench --bench perf_l3_overhead

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# The verify flow: tier-1 (build + tests) plus the clippy gate and the
+# perf-bench smoke run. Run before every merge.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo clippy --all-targets -- -D warnings
+SOPHIA_BENCH_SCALE="${SOPHIA_BENCH_SCALE:-0.05}" scripts/bench_smoke.sh
+echo "verify: OK"
