@@ -1,7 +1,9 @@
 //! Perf: the flat-state kernel engine vs the scalar oracle (EXPERIMENTS.md
-//! §Perf). Sweeps 1M–64M params × {scalar, blocked, blocked+threads} on
-//! the fused Sophia update, plus the fused-GNB-refresh pass, and emits
-//! `BENCH_kernels.json` so the perf trajectory is recorded per PR.
+//! §Perf). Sweeps 1M–64M params × {scalar, blocked, blocked+threads,
+//! persistent pool} on the fused Sophia update, plus the fused-GNB-refresh
+//! pass and a scope-spawn-vs-parked-pool dispatch-overhead probe at the 1M
+//! small end, and emits `BENCH_kernels.json` so the perf trajectory is
+//! recorded per PR.
 //!
 //! Needs no artifacts — this is the pure-Rust path. Scale with
 //! `SOPHIA_BENCH_SCALE` (e.g. 0.05 for smoke runs; see
@@ -51,7 +53,14 @@ fn main() -> anyhow::Result<()> {
         (scaled(1 << 24), "16M"),
         (scaled(1 << 26), "64M"),
     ];
-    let backends = [Backend::Scalar, Backend::Blocked, Backend::Threaded(2), Backend::Threaded(4)];
+    let backends = [
+        Backend::Scalar,
+        Backend::Blocked,
+        Backend::Threaded(2),
+        Backend::Threaded(4),
+        Backend::Pool(2),
+        Backend::Pool(4),
+    ];
     let mut table = Table::new(&["kernel", "n", "backend", "median ms", "GB/s", "speedup"]);
     let mut records: Vec<Json> = Vec::new();
     let mut speedup_16m_t4 = f64::NAN;
@@ -141,9 +150,50 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Dispatch overhead at the small end: the per-step `thread::scope`
+    // spawn (threads:4) vs the parked persistent pool (pool:4) on the
+    // same 1M-param sophia step. The arithmetic is identical, so the
+    // median delta IS the dispatch cost difference.
+    let n = scaled(1 << 20);
+    let mut fs = FlatState::new(&[n]);
+    let mut g = AlignedBuf::zeroed(n);
+    fill_state(&mut fs, &mut g, 1_000_001);
+    let kt = Backend::Threaded(4).build();
+    let kp = Backend::Pool(4).build();
+    let st_scope = bench(3, 15, || {
+        let c = fs.sophia_step(&*kt, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    let st_pool = bench(3, 15, || {
+        let c = fs.sophia_step(&*kp, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    let dispatch_delta_ms = st_scope.median_ms - st_pool.median_ms;
+    for (name, st) in [("dispatch scope-spawn", &st_scope), ("dispatch parked-pool", &st_pool)] {
+        table.row(&[
+            name.into(),
+            "1M".into(),
+            if name.contains("pool") { "pool:4".into() } else { "threads:4".into() },
+            format!("{:.3}", st.median_ms),
+            format!("{:.2}", st.throughput_gbs(n * SOPHIA_BYTES_PER_ELEM)),
+            format!("{:.2}x", st_scope.median_ms / st.median_ms),
+        ]);
+    }
+    records.push(obj(vec![
+        ("kernel", Json::Str("dispatch_overhead_1m".into())),
+        ("n", Json::Num(n as f64)),
+        ("scope_spawn_ms", Json::Num(st_scope.median_ms)),
+        ("parked_pool_ms", Json::Num(st_pool.median_ms)),
+        ("delta_ms", Json::Num(dispatch_delta_ms)),
+    ]));
+
     println!("{}", table.render());
     println!(
         "16M sophia, threads:4 vs scalar: {speedup_16m_t4:.2}x (acceptance target >= 3x)"
+    );
+    println!(
+        "1M dispatch: scope-spawn {:.3} ms vs parked pool {:.3} ms (pool saves {dispatch_delta_ms:.3} ms/step)",
+        st_scope.median_ms, st_pool.median_ms
     );
 
     let out = obj(vec![
@@ -151,6 +201,7 @@ fn main() -> anyhow::Result<()> {
         ("scale", Json::Num(scale())),
         ("sophia_bytes_per_elem", Json::Num(SOPHIA_BYTES_PER_ELEM as f64)),
         ("sophia_16m_speedup_threads4", Json::Num(speedup_16m_t4)),
+        ("pool_dispatch_delta_ms_1m", Json::Num(dispatch_delta_ms)),
         ("records", Json::Arr(records)),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");

@@ -67,6 +67,11 @@ def artifact_plan(cfg):
         plan[f"train_{v}"] = (optim.make_train_step(cfg, v), (p, p, p, tok, f, f))
     for v in hesses:
         plan[f"hess_{v}"] = (optim.make_hess_step(cfg, v), (p, p, tok, i))
+    # engine-resident path: gradient-only step + raw GNB estimator (the
+    # optimizer update and Hessian EMA run in the Rust kernel engine)
+    plan["grad_step"] = (optim.make_grad_step(cfg), (p, tok))
+    if "gnb" in hesses:
+        plan["ghat_gnb"] = (optim.make_ghat_gnb(cfg), (p, tok, i))
     plan["eval_step"] = (optim.make_eval_step(cfg), (p, tok))
     plan["logits_last"] = (optim.make_logits_last(cfg), (p, toks_ctx))
     plan["hess_diag"] = (optim.make_hess_diag(cfg), (p, tok, i))
@@ -114,6 +119,8 @@ def write_manifest(cfg, outdir, names):
             "train_outputs": "params*, m*, h*, loss, gnorm, clipfrac",
             "hess_inputs": "params*, h*, tokens[B,T+1]:i32, seed:i32",
             "hess_outputs": "h*, hnorm",
+            "grad": "(params*, tokens[B,T+1]:i32) -> (clipped grads*, loss, gnorm)",
+            "ghat_gnb": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
             "eval": "(params*, tokens) -> (loss,)",
             "logits_last": "(params*, tokens[B,T]) -> (logits[B,V],)",
             "hess_diag": "(params*, tokens, seed) -> (hhat*,)",

@@ -7,9 +7,17 @@ Artifact calling conventions (mirrored by rust/src/runtime/manifest.rs):
       -> (params'.., m'.., h'.., loss, gnorm, clipfrac)
   hess_step(params.., h.., tokens[B,T+1] i32, seed i32)
       -> (h'.., hnorm)
+  grad_step(params.., tokens[B,T+1] i32) -> (clipped grads.., loss, gnorm)
+  ghat_gnb(params.., tokens[B,T+1] i32, seed i32) -> (ghat..,)
   eval_step(params.., tokens) -> (loss,)
   logits_last(params.., tokens[B,T]) -> (logits[B,V],)
   hess_diag(params.., tokens, seed) -> (hhat..,)
+
+`grad_step` and `ghat_gnb` serve the engine-resident Rust training path:
+XLA computes only loss + gradients (and the raw, un-EMA'd GNB estimator
+gradient every k steps); the optimizer update and the Hessian EMA run in
+the Rust kernel engine, so the (params, m, h) triple never round-trips
+through literals on a step.
 
 The `h` slot is the optimizer's second state buffer whatever the variant:
 Sophia's Hessian EMA, AdamW's v, AdaHessian's EMA of squared estimates;
@@ -133,6 +141,47 @@ def make_train_step(cfg: ModelConfig, variant: str, use_pallas_model=False,
             loss, gnorm, jnp.float32(clipfrac))
 
     return train_step
+
+
+def make_grad_step(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
+    """Gradient-only step for the engine-resident coordinator: loss plus
+    globally-clipped gradients (same clipping as every train_step, so the
+    Rust-side update consumes exactly what the fused artifacts would)."""
+
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+    def grad_step(params, tokens):
+        x, y = _split_tokens(tokens)
+        loss, grads = jax.value_and_grad(loss_of)(params, x, y)
+        gnorm = _global_norm(grads)
+        grads = _clip_by_global_norm(grads, gnorm)
+        return tuple(grads) + (loss, gnorm)
+
+    return grad_step
+
+
+def make_ghat_gnb(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
+    """Raw GNB estimator gradient (Alg. 2 lines 2-4) WITHOUT the EMA: the
+    engine-resident path fuses `gnb_ema` into the Sophia update's memory
+    pass (kernel engine `sophia_update_with_gnb_refresh`), so the artifact
+    only supplies ghat. Scale n_terms = hess_batch_g * ctx is applied on
+    the Rust side."""
+
+    def ghat_gnb(params, tokens, seed):
+        key = jax.random.PRNGKey(seed)
+        bh = cfg.hess_batch_g
+        x, _ = _split_tokens(tokens[:bh])
+
+        def sampled(leaves):
+            return model.loss_resampled(
+                model.param_dict(leaves), cfg, x, key,
+                use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+        return tuple(jax.grad(sampled)(params))
+
+    return ghat_gnb
 
 
 def make_hess_step(cfg: ModelConfig, variant: str, use_pallas_model=False,

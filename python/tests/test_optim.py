@@ -135,6 +135,42 @@ def test_hess_step_seed_determinism():
     )
 
 
+def test_grad_step_returns_clipped_grads_and_raw_gnorm():
+    """The engine-resident gradient artifact: grads come back globally
+    clipped to the paper threshold, gnorm is the raw (pre-clip) norm, and
+    loss matches eval_step on the same batch."""
+    params, _, _, tokens = _setup()
+    big = [p * 50.0 for p in params]  # blow up params => gnorm >> 1
+    out = optim.make_grad_step(CFG)(big, tokens)
+    np_ = len(params)
+    grads, loss, gnorm = out[:np_], float(out[np_]), float(out[np_ + 1])
+    assert len(out) == np_ + 2
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+    ev = float(optim.make_eval_step(CFG)(big, tokens)[0])
+    np.testing.assert_allclose(loss, ev, rtol=1e-6)
+    assert gnorm > 1.0
+    clipped_norm = float(jnp.sqrt(sum(jnp.sum(g * g) for g in grads)))
+    assert clipped_norm <= 1.0 + 1e-5
+
+
+def test_ghat_gnb_matches_hess_gnb_after_host_ema():
+    """hess_gnb == host-side gnb_ema over ghat_gnb's raw estimator (same
+    seed), i.e. the engine-resident fused-EMA split is exact."""
+    params, _, h, tokens = _setup()
+    h = [hh + 0.5 for hh in h]
+    np_ = len(params)
+    seed = 17
+    ghat = optim.make_ghat_gnb(CFG)(params, tokens, seed)
+    assert len(ghat) == np_
+    ref = optim.make_hess_step(CFG, "gnb")(params, h, tokens, seed)
+    beta2 = optim.HYPERS["sophia"]["beta2"]
+    n_terms = CFG.hess_batch_g * CFG.ctx
+    for hi, gi, ri in zip(h, ghat, ref[:np_]):
+        ema = beta2 * hi + (1.0 - beta2) * n_terms * gi * gi
+        np.testing.assert_allclose(np.asarray(ema), np.asarray(ri), rtol=1e-5)
+
+
 def test_eval_step_matches_loss_fn():
     params, _, _, tokens = _setup()
     ev = optim.make_eval_step(CFG)(params, tokens)[0]

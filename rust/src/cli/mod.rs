@@ -90,7 +90,10 @@ USAGE: sophia <subcommand> [--flags]
   train  --preset b1 --optimizer sophia_g --steps 1000 [--lr 1e-3]
          [--k 10] [--warmup N] [--eval-every 50] [--seed 0]
          [--log runs/x.jsonl] [--ckpt-dir runs/ckpt] [--ckpt-every N]
-         [--config file.toml] [--artifacts artifacts]
+         [--config file.toml] [--artifacts artifacts] [--engine]
+         (--engine = engine-resident training: state stays in the Rust
+          kernel-engine arena; XLA computes only loss+gradients. Backend
+          via SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]
@@ -134,6 +137,9 @@ pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if let Some(a) = args.flags.get("hess-artifact") {
         cfg.hess_artifact_override = Some(a.clone());
     }
+    if args.bool("engine") {
+        cfg.engine_resident = true;
+    }
     if cfg.steps == 0 {
         bail!("--steps must be > 0");
     }
@@ -175,6 +181,14 @@ mod tests {
         assert_eq!(c.steps, 10);
         assert_eq!(c.hess_interval, 5);
         assert!((c.effective_lr() - 2e-4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn engine_flag_selects_engine_resident_mode() {
+        let a = Args::parse(&argv("train --preset nano --engine")).unwrap();
+        assert!(build_train_config(&a).unwrap().engine_resident);
+        let b = Args::parse(&argv("train --preset nano")).unwrap();
+        assert!(!build_train_config(&b).unwrap().engine_resident);
     }
 
     #[test]

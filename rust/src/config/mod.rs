@@ -38,6 +38,10 @@ pub struct ModelConfig {
     pub params: Vec<ParamSpec>,
     pub artifacts: Vec<String>,
     pub dir: PathBuf,
+    /// The manifest's `hypers` table (configs.py HYPERS): the engine-
+    /// resident trainer reads the optimizer constants that the artifact
+    /// path bakes into its HLO at lowering time.
+    pub hypers: Json,
 }
 
 impl ModelConfig {
@@ -100,7 +104,20 @@ impl ModelConfig {
             params,
             artifacts,
             dir,
+            hypers: man.get("hypers").cloned().unwrap_or(Json::Null),
         })
+    }
+
+    /// Look up one optimizer hyperparameter from the manifest (paper
+    /// Section 3.1 constants), falling back to the configs.py value so old
+    /// manifests keep working.
+    pub fn hyper_f32(&self, group: &str, key: &str, default: f32) -> f32 {
+        self.hypers
+            .get(group)
+            .and_then(|g| g.get(key))
+            .and_then(Json::as_f64)
+            .map(|x| x as f32)
+            .unwrap_or(default)
     }
 
     pub fn n_params(&self) -> usize {
@@ -189,6 +206,22 @@ impl Optimizer {
         }
     }
 
+    /// Whether the engine-resident training path has a pure-Rust update
+    /// kernel for this optimizer (see `optim::engine::UpdateKernel`).
+    pub fn engine_resident_supported(&self) -> bool {
+        matches!(self, Self::SophiaG | Self::AdamW | Self::Lion)
+    }
+
+    /// Raw Hessian-estimator artifact for the engine-resident path (the
+    /// EMA is fused into the engine update, so the artifact returns the
+    /// un-EMA'd estimator gradient). None = no curvature refresh.
+    pub fn ghat_artifact(&self) -> Option<&'static str> {
+        match self {
+            Self::SophiaG => Some("ghat_gnb"),
+            _ => None,
+        }
+    }
+
     /// Default peak LR per the paper's tuning strategy (Sophia ≈ 0.8x the
     /// AdamW LR is paper guidance at GPT-2 scale; on this testbed family a
     /// slightly higher Sophia LR is the grid winner, matching Table 2's
@@ -236,6 +269,12 @@ pub struct TrainConfig {
     pub train_artifact_override: Option<String>,
     /// Override the hessian-step artifact name (Figure 7c beta2 variant).
     pub hess_artifact_override: Option<String>,
+    /// Engine-resident training: keep (p, m, h) in a `FlatState` arena for
+    /// the whole run, execute only loss+gradients through XLA, and run the
+    /// optimizer update on the kernel engine (`SOPHIA_ENGINE` selects the
+    /// backend, default `pool:<ncpu>`). Env `SOPHIA_TRAIN_MODE=engine|
+    /// artifact` overrides this flag at `Trainer::new` time.
+    pub engine_resident: bool,
 }
 
 impl Default for TrainConfig {
@@ -258,6 +297,7 @@ impl Default for TrainConfig {
             data_seed: 1,
             train_artifact_override: None,
             hess_artifact_override: None,
+            engine_resident: false,
         }
     }
 }
@@ -326,6 +366,7 @@ impl TrainConfig {
         if let Some(v) = doc.get("eval", "batches").and_then(|v| v.as_i64()) {
             self.eval_batches = v as usize;
         }
+        self.engine_resident = doc.bool_or("engine", "resident", self.engine_resident);
         Ok(())
     }
 }

@@ -3,6 +3,7 @@
 //! exact (bit-identical state), which the integration tests assert.
 
 use super::trainer::Trainer;
+use crate::optim::engine::StateKind;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -18,9 +19,18 @@ fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
 
 pub fn checkpoint_save(t: &Trainer, dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    write_f32(&dir.join("params.bin"), &t.state.flat_state("params")?)?;
-    write_f32(&dir.join("m.bin"), &t.state.flat_state("m")?)?;
-    write_f32(&dir.join("h.bin"), &t.state.flat_state("h")?)?;
+    if let Some(fs) = t.flat_view() {
+        // engine-resident run: the arena IS the state — write it directly,
+        // no literal gather at all (both checkpoint layouts are identical,
+        // so artifact-path runs restore engine checkpoints and vice versa)
+        write_f32(&dir.join("params.bin"), fs.buf(StateKind::P))?;
+        write_f32(&dir.join("m.bin"), fs.buf(StateKind::M))?;
+        write_f32(&dir.join("h.bin"), fs.buf(StateKind::H))?;
+    } else {
+        write_f32(&dir.join("params.bin"), &t.state.flat_state("params")?)?;
+        write_f32(&dir.join("m.bin"), &t.state.flat_state("m")?)?;
+        write_f32(&dir.join("h.bin"), &t.state.flat_state("h")?)?;
+    }
     let mut meta = BTreeMap::new();
     meta.insert("step".to_string(), Json::Num(t.step as f64));
     meta.insert("preset".to_string(), Json::Str(t.model.name.clone()));
@@ -49,6 +59,7 @@ pub fn checkpoint_load(t: &mut Trainer, dir: &Path) -> Result<()> {
     let m = crate::runtime::read_f32_file(&dir.join("m.bin"))?;
     let h = crate::runtime::read_f32_file(&dir.join("h.bin"))?;
     t.state.restore(&params, &m, &h)?;
+    t.restore_engine_from_state()?;
     t.step = meta.get("step").and_then(Json::as_usize).unwrap_or(0);
     Ok(())
 }

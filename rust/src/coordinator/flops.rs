@@ -69,6 +69,7 @@ mod tests {
             params: vec![ParamSpec { name: "w".into(), shape: vec![2, 2], init_std: 0.02 }],
             artifacts: vec![],
             dir: std::path::PathBuf::new(),
+            hypers: crate::util::json::Json::Null,
         }
     }
 

@@ -1,14 +1,135 @@
 //! The training loop.
+//!
+//! Two step paths share the coordinator:
+//!
+//! * **Artifact path** (default): the train-step artifact computes the
+//!   optimizer update inside XLA; all 3n state tensors are threaded
+//!   through literals every step.
+//! * **Engine-resident path** (`TrainConfig::engine_resident` /
+//!   `SOPHIA_TRAIN_MODE=engine`): `(p, m, h)` live in a `FlatState` arena
+//!   for the whole run; XLA computes only loss + clipped gradients
+//!   (`grad_step`, plus the raw GNB estimator `ghat_gnb` every k steps),
+//!   and the Sophia/AdamW/Lion update — including the fused every-k GNB
+//!   EMA — runs on the kernel engine (default backend: the persistent
+//!   worker pool). Optimizer state crosses the literal boundary only at
+//!   eval/checkpoint/run-end; the per-step 3n literal→`Vec<f32>`→literal
+//!   round trips of the artifact path disappear.
 
-use crate::config::{ModelConfig, TrainConfig};
+use crate::config::{ModelConfig, Optimizer, TrainConfig};
 use crate::data::{self, Loader, Prefetcher, Split};
 use crate::metrics::{RunLog, StepRecord};
+use crate::optim::engine::{default_threads, AlignedBuf, Backend, FlatState, UpdateKernel};
 use crate::rng::Rng;
-use crate::runtime::{self, lit_i32, run, scalar_i32, InputBuf, ModelState, Runtime, ScalarSlot};
+use crate::runtime::{self, run, scalar_i32, InputBuf, ModelState, Runtime, ScalarSlot, TokenSlot};
 use crate::schedule::Schedule;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+/// The gradient-only artifact every engine-resident optimizer executes:
+/// `(params*, tokens) -> (clipped grads*, loss, gnorm)`.
+pub const GRAD_ARTIFACT: &str = "grad_step";
+
+/// Optimizer constants the artifact path bakes into HLO at lowering time,
+/// mirrored host-side for the engine kernels (from the manifest's `hypers`
+/// table; fallbacks = configs.py values).
+#[derive(Clone, Copy)]
+struct EngineHypers {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    /// Sophia clip scale (gamma_g).
+    gamma: f32,
+    /// Sophia Hessian-EMA decay (beta2 of the estimator, not the update).
+    hbeta2: f32,
+}
+
+impl EngineHypers {
+    fn for_optimizer(opt: Optimizer, model: &ModelConfig) -> EngineHypers {
+        match opt {
+            Optimizer::SophiaG => EngineHypers {
+                beta1: model.hyper_f32("sophia", "beta1", 0.96),
+                beta2: 0.0,
+                eps: model.hyper_f32("sophia", "eps", 1e-12),
+                wd: model.hyper_f32("sophia", "wd", 0.2),
+                gamma: model.hyper_f32("sophia", "gamma_g", 0.05),
+                hbeta2: model.hyper_f32("sophia", "beta2", 0.99),
+            },
+            Optimizer::AdamW => EngineHypers {
+                beta1: model.hyper_f32("adamw", "beta1", 0.9),
+                beta2: model.hyper_f32("adamw", "beta2", 0.95),
+                eps: model.hyper_f32("adamw", "eps", 1e-8),
+                wd: model.hyper_f32("adamw", "wd", 0.1),
+                gamma: 0.0,
+                hbeta2: 0.0,
+            },
+            Optimizer::Lion => EngineHypers {
+                beta1: model.hyper_f32("lion", "beta1", 0.95),
+                beta2: model.hyper_f32("lion", "beta2", 0.98),
+                eps: 0.0,
+                wd: model.hyper_f32("lion", "wd", 0.2),
+                gamma: 0.0,
+                hbeta2: 0.0,
+            },
+            // Trainer::new gates on engine_resident_supported(); a new
+            // optimizer added there must get its own hypers arm, loudly.
+            _ => unreachable!("no engine hypers for {}", opt.name()),
+        }
+    }
+}
+
+/// Everything the engine-resident path keeps out of literal-land: the
+/// state arena, the update kernel (persistent pool by default), gradient
+/// scratch arenas, and the gradient-only artifact paths.
+struct EngineState {
+    fs: FlatState,
+    kernel: Box<dyn UpdateKernel>,
+    grad_path: PathBuf,
+    ghat_path: Option<PathBuf>,
+    /// clipped-gradient gather target (grad_step outputs)
+    g: AlignedBuf,
+    /// raw GNB estimator gather target (ghat_gnb outputs); empty for
+    /// first-order optimizers
+    ghat: AlignedBuf,
+    /// GNB n_terms = hess_batch_g * ctx (Alg. 2 scale)
+    gnb_scale: f32,
+    hyp: EngineHypers,
+}
+
+impl EngineState {
+    fn build(cfg: &TrainConfig, model: &ModelConfig, state: &ModelState) -> Result<EngineState> {
+        let fs = state.to_flat()?;
+        let n = fs.len();
+        let ghat_name = cfg.optimizer.ghat_artifact();
+        Ok(EngineState {
+            kernel: Backend::from_env_or(Backend::Pool(default_threads())).build(),
+            grad_path: model.artifact_path(GRAD_ARTIFACT),
+            ghat_path: ghat_name.map(|g| model.artifact_path(g)),
+            g: AlignedBuf::zeroed(n),
+            ghat: AlignedBuf::zeroed(if ghat_name.is_some() { n } else { 0 }),
+            gnb_scale: (model.hess_batch_g * model.ctx) as f32,
+            hyp: EngineHypers::for_optimizer(cfg.optimizer, model),
+            fs,
+        })
+    }
+}
+
+/// What one step produced, whichever path ran it.
+struct StepStats {
+    loss: f64,
+    gnorm: f64,
+    clipfrac: f64,
+    hnorm: f64,
+    step_ms: f64,
+    hess_ms: f64,
+}
+
+/// L2 norm with f64 accumulation (the logged hnorm statistic; matches the
+/// artifact's global norm up to summation order).
+fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
 
 pub struct Trainer {
     pub cfg: TrainConfig,
@@ -21,15 +142,20 @@ pub struct Trainer {
     train_data: Prefetcher,
     val_data: Loader,
     seed_rng: Rng,
-    // Hot-loop caches: artifact paths resolved once, scalar-literal slots
-    // overwritten in place, and the input-pointer table reused across
-    // steps (no per-step Vec/lookup-string allocation).
+    // Hot-loop caches: artifact paths resolved once, scalar/token literal
+    // slots overwritten in place, and the input-pointer table reused
+    // across steps (no per-step Vec/lookup-string allocation).
     train_path: PathBuf,
     hess_path: Option<PathBuf>,
     eval_path: PathBuf,
     lr_slot: ScalarSlot,
     t_slot: ScalarSlot,
+    tok_train: TokenSlot,
+    tok_hess: TokenSlot,
+    tok_eval: TokenSlot,
     inputs: InputBuf,
+    /// Some = engine-resident training (state lives in the arena).
+    engine: Option<EngineState>,
     /// accumulated wall-clock of hessian refreshes / train execs (Table 1)
     pub total_hess_ms: f64,
     pub total_step_ms: f64,
@@ -53,11 +179,36 @@ impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
         let model = ModelConfig::load(&cfg.artifacts_root, &cfg.preset)?;
         let mut rt = Runtime::cpu()?;
+        let engine_resident = match std::env::var("SOPHIA_TRAIN_MODE").ok().as_deref() {
+            Some("engine") => true,
+            Some("artifact") => false,
+            _ => cfg.engine_resident,
+        };
         // compile everything up front so the hot loop never compiles
-        rt.load_artifact(&model, &cfg.train_artifact())
-            .with_context(|| format!("train artifact for {}", cfg.optimizer.name()))?;
-        if let Some(h) = cfg.hess_artifact() {
-            rt.load_artifact(&model, &h)?;
+        if engine_resident {
+            if !cfg.optimizer.engine_resident_supported() {
+                bail!(
+                    "engine-resident training supports sophia_g/adamw/lion, not {}",
+                    cfg.optimizer.name()
+                );
+            }
+            if cfg.train_artifact_override.is_some() || cfg.hess_artifact_override.is_some() {
+                bail!("engine-resident training does not support artifact overrides");
+            }
+            rt.load_artifact(&model, GRAD_ARTIFACT).with_context(|| {
+                format!("engine-resident mode needs the {GRAD_ARTIFACT} artifact; re-run `make artifacts`")
+            })?;
+            if let Some(g) = cfg.optimizer.ghat_artifact() {
+                rt.load_artifact(&model, g).with_context(|| {
+                    format!("engine-resident mode needs the {g} artifact; re-run `make artifacts`")
+                })?;
+            }
+        } else {
+            rt.load_artifact(&model, &cfg.train_artifact())
+                .with_context(|| format!("train artifact for {}", cfg.optimizer.name()))?;
+            if let Some(h) = cfg.hess_artifact() {
+                rt.load_artifact(&model, &h)?;
+            }
         }
         rt.load_artifact(&model, "eval_step")?;
 
@@ -79,6 +230,12 @@ impl Trainer {
         let hess_path = cfg.hess_artifact().map(|h| model.artifact_path(&h));
         let eval_path = model.artifact_path("eval_step");
 
+        let engine = if engine_resident {
+            Some(EngineState::build(&cfg, &model, &state)?)
+        } else {
+            None
+        };
+
         Ok(Trainer {
             seed_rng: Rng::new(cfg.seed ^ 0x4E55__5348),
             cfg,
@@ -95,7 +252,11 @@ impl Trainer {
             eval_path,
             lr_slot: ScalarSlot::new(0.0),
             t_slot: ScalarSlot::new(0.0),
+            tok_train: TokenSlot::new(),
+            tok_hess: TokenSlot::new(),
+            tok_eval: TokenSlot::new(),
             inputs: InputBuf::new(),
+            engine,
             total_hess_ms: 0.0,
             total_step_ms: 0.0,
             n_hess: 0,
@@ -103,10 +264,40 @@ impl Trainer {
         })
     }
 
+    /// Whether steps run on the engine-resident path.
+    pub fn engine_resident(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// Engine-resident view of (p, m, h), when active.
+    pub fn flat_view(&self) -> Option<&FlatState> {
+        self.engine.as_ref().map(|e| &e.fs)
+    }
+
+    /// Scatter the engine-resident arena back into the literal-based state
+    /// (eval/checkpoint/run-end boundary). No-op on the artifact path.
+    pub fn sync_state(&mut self) -> Result<()> {
+        let Trainer { state, engine, .. } = self;
+        if let Some(eng) = engine.as_ref() {
+            state.from_flat(&eng.fs)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the engine arena from the literal-based state (checkpoint
+    /// restore). No-op on the artifact path.
+    pub(crate) fn restore_engine_from_state(&mut self) -> Result<()> {
+        let Trainer { state, engine, .. } = self;
+        if let Some(eng) = engine.as_mut() {
+            eng.fs = state.to_flat()?;
+        }
+        Ok(())
+    }
+
     /// Replace initial params from a flat blob (golden tests).
     pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
         self.state = ModelState::from_flat_params(&self.model, flat)?;
-        Ok(())
+        self.restore_engine_from_state()
     }
 
     fn hess_refresh(&mut self) -> Result<f64> {
@@ -114,14 +305,14 @@ impl Trainer {
             return Ok(0.0);
         };
         let batch = self.train_data.next_batch();
-        let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
         let seed = scalar_i32(self.seed_rng.next_u64() as i32);
         let n = self.state.n_leaves();
 
+        let tokens = self.tok_hess.set(&batch.tokens, &[batch.batch, batch.width])?;
         let exe = self.rt.load(hess_path)?;
         let inputs = self
             .inputs
-            .assemble(self.state.params.iter().chain(self.state.h.iter()).chain([&tokens, &seed]));
+            .assemble(self.state.params.iter().chain(self.state.h.iter()).chain([tokens, &seed]));
         let mut out = run(exe, inputs)?;
         let hnorm = runtime::scalar_of(&out[n])? as f64;
         out.truncate(n);
@@ -136,7 +327,32 @@ impl Trainer {
         self.step += 1;
         let t = self.step;
         let lr = self.schedule.lr(t);
+        let s = if self.engine.is_some() {
+            self.engine_step(t, lr)?
+        } else {
+            self.artifact_step(t, lr)?
+        };
+        self.total_step_ms += s.step_ms;
+        self.total_hess_ms += s.hess_ms;
+        if !s.loss.is_finite() || s.loss > 50.0 {
+            self.diverged = true;
+        }
+        Ok(StepRecord {
+            step: t,
+            loss: s.loss,
+            val_loss: None,
+            lr,
+            gnorm: s.gnorm,
+            clipfrac: s.clipfrac,
+            hnorm: s.hnorm,
+            step_ms: s.step_ms,
+            hess_ms: s.hess_ms,
+        })
+    }
 
+    /// The default path: the train artifact computes the optimizer update
+    /// in XLA, state threads through literals.
+    fn artifact_step(&mut self, t: usize, lr: f64) -> Result<StepStats> {
         // Algorithm 3 line 7: refresh the Hessian EMA every k steps
         // (t mod k == 1 in the paper's 1-based indexing).
         let mut hess_ms = 0.0;
@@ -151,12 +367,12 @@ impl Trainer {
 
         let batch = self.train_data.next_batch();
         let t0 = Instant::now();
-        let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
-        // hot loop: overwrite the cached lr/t slots and reuse the input
-        // table instead of rebuilding literals + a 3n+3 Vec every step
+        // hot loop: overwrite the cached lr/t/token slots and reuse the
+        // input table instead of rebuilding literals + a 3n+3 Vec per step
         self.lr_slot.set(lr as f32);
         self.t_slot.set(t as f32);
         let n = self.state.n_leaves();
+        let tokens = self.tok_train.set(&batch.tokens, &[batch.batch, batch.width])?;
 
         let exe = self.rt.load(&self.train_path)?;
         let inputs = self.inputs.assemble(
@@ -165,7 +381,7 @@ impl Trainer {
                 .iter()
                 .chain(self.state.m.iter())
                 .chain(self.state.h.iter())
-                .chain([&tokens, self.lr_slot.lit(), self.t_slot.lit()]),
+                .chain([tokens, self.lr_slot.lit(), self.t_slot.lit()]),
         );
         let mut out = run(exe, inputs)?;
         if out.len() != 3 * n + 3 {
@@ -182,34 +398,150 @@ impl Trainer {
         self.state.h = h_new;
 
         let step_ms = t0.elapsed().as_secs_f64() * 1e3 + hess_ms;
-        self.total_step_ms += step_ms;
-        self.total_hess_ms += hess_ms;
+        Ok(StepStats { loss, gnorm, clipfrac, hnorm, step_ms, hess_ms })
+    }
 
-        if !loss.is_finite() || loss > 50.0 {
-            self.diverged = true;
+    /// The engine-resident path: XLA computes loss + clipped gradients
+    /// only; the optimizer update (with the every-k GNB EMA fused into the
+    /// same memory pass) runs on the kernel engine. `m`/`h` never cross
+    /// the literal boundary; params cross once per step (upload only — the
+    /// gradient artifact needs them) and gradients come back once.
+    fn engine_step(&mut self, t: usize, lr: f64) -> Result<StepStats> {
+        let Trainer {
+            cfg,
+            rt,
+            state,
+            engine,
+            train_data,
+            seed_rng,
+            tok_train,
+            tok_hess,
+            inputs,
+            n_hess,
+            ..
+        } = self;
+        let eng = engine.as_mut().expect("engine_step without engine state");
+        let hyp = eng.hyp;
+        let lr32 = lr as f32;
+        let n = state.n_leaves();
+
+        // Algorithm 3 line 7: raw estimator gradient every k steps; its
+        // EMA is fused into the engine update pass below.
+        let refresh =
+            eng.ghat_path.is_some() && (t - 1) % cfg.hess_interval.max(1) == 0;
+        let mut hess_ms = 0.0;
+        let mut hnorm = 0.0;
+        if refresh {
+            let t0 = Instant::now();
+            let batch = train_data.next_batch();
+            state.upload_params(&eng.fs)?;
+            let tokens = tok_hess.set(&batch.tokens, &[batch.batch, batch.width])?;
+            let seed = scalar_i32(seed_rng.next_u64() as i32);
+            let exe = rt.load(eng.ghat_path.as_deref().unwrap())?;
+            let ins = inputs.assemble(state.params.iter().chain([tokens, &seed]));
+            let out = run(exe, ins)?;
+            if out.len() != n {
+                bail!("ghat artifact returned {} outputs, expected {n}", out.len());
+            }
+            runtime::gather_into(&out, eng.fs.leaf_ranges(), &mut eng.ghat)?;
+            *n_hess += 1;
+            hess_ms = t0.elapsed().as_secs_f64() * 1e3;
         }
 
-        Ok(StepRecord {
-            step: t,
-            loss,
-            val_loss: None,
-            lr,
-            gnorm,
-            clipfrac,
-            hnorm,
-            step_ms,
-            hess_ms,
-        })
+        // gradient-only artifact: loss + globally-clipped grads
+        let batch = train_data.next_batch();
+        let t0 = Instant::now();
+        if !refresh {
+            state.upload_params(&eng.fs)?;
+        }
+        let tokens = tok_train.set(&batch.tokens, &[batch.batch, batch.width])?;
+        let exe = rt.load(&eng.grad_path)?;
+        let ins = inputs.assemble(state.params.iter().chain([tokens]));
+        let out = run(exe, ins)?;
+        if out.len() != n + 2 {
+            bail!("grad artifact returned {} outputs, expected {}", out.len(), n + 2);
+        }
+        let gnorm = runtime::scalar_of(&out[n + 1])? as f64;
+        let loss = runtime::scalar_of(&out[n])? as f64;
+        runtime::gather_into(&out[..n], eng.fs.leaf_ranges(), &mut eng.g)?;
+
+        // optimizer update on the engine: state never leaves the arena
+        let clipped = match cfg.optimizer {
+            Optimizer::SophiaG => {
+                if refresh {
+                    let c = eng.fs.sophia_step_with_gnb_refresh(
+                        &*eng.kernel,
+                        &eng.g,
+                        &eng.ghat,
+                        eng.gnb_scale,
+                        hyp.hbeta2,
+                        lr32,
+                        hyp.beta1,
+                        hyp.gamma,
+                        hyp.eps,
+                        hyp.wd,
+                    );
+                    hnorm = l2_norm(&eng.fs.h);
+                    c
+                } else {
+                    eng.fs.sophia_step(
+                        &*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.gamma, hyp.eps, hyp.wd,
+                    )
+                }
+            }
+            // AdamW threads its second moment through the uniform `h` slot
+            // — the same convention the artifacts use (python/compile/
+            // optim.py), so checkpoints stay interchangeable. Deliberately
+            // NOT `FlatState::adamw_step`, which uses the separate `v`
+            // buffer that checkpoints and `from_flat` never carry.
+            Optimizer::AdamW => {
+                eng.kernel.adamw_update(
+                    &mut eng.fs.p,
+                    &mut eng.fs.m,
+                    &mut eng.fs.h,
+                    &eng.g,
+                    lr32,
+                    t as f32,
+                    hyp.beta1,
+                    hyp.beta2,
+                    hyp.eps,
+                    hyp.wd,
+                );
+                0
+            }
+            Optimizer::Lion => {
+                eng.fs
+                    .lion_step(&*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.beta2, hyp.wd);
+                0
+            }
+            _ => bail!("engine-resident mode does not support {}", cfg.optimizer.name()),
+        };
+        let clipfrac = if matches!(cfg.optimizer, Optimizer::SophiaG) {
+            clipped as f64 / eng.fs.len().max(1) as f64
+        } else {
+            0.0
+        };
+
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3 + hess_ms;
+        Ok(StepStats { loss, gnorm, clipfrac, hnorm, step_ms, hess_ms })
     }
 
     /// Mean val loss over `n_batches` held-out batches.
     pub fn eval(&mut self, n_batches: usize) -> Result<f64> {
+        // engine-resident: the eval artifact consumes literals, so params
+        // cross the boundary here (m/h stay on the engine)
+        {
+            let Trainer { state, engine, .. } = &mut *self;
+            if let Some(eng) = engine.as_ref() {
+                state.upload_params(&eng.fs)?;
+            }
+        }
         let mut total = 0.0;
         for _ in 0..n_batches.max(1) {
             let batch = self.val_data.next_batch();
-            let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
+            let tokens = self.tok_eval.set(&batch.tokens, &[batch.batch, batch.width])?;
             let exe = self.rt.load(&self.eval_path)?;
-            let inputs = self.inputs.assemble(self.state.params.iter().chain([&tokens]));
+            let inputs = self.inputs.assemble(self.state.params.iter().chain([tokens]));
             let out = run(exe, inputs)?;
             total += runtime::scalar_of(&out[0])? as f64;
         }
@@ -258,6 +590,9 @@ impl Trainer {
             }
         }
         self.log.flush()?;
+        // run-end boundary: scatter engine-resident state back to literals
+        // so downstream consumers (few-shot eval, examples) see final state
+        self.sync_state()?;
         let final_val = match self.log.final_val_loss() {
             Some(v) => v,
             None => self.eval(self.cfg.eval_batches)?,

@@ -135,6 +135,12 @@ impl FlatState {
         self.leaves[i].clone()
     }
 
+    /// All per-tensor ranges over the flat index space, in leaf order
+    /// (the layout contract for gather/scatter at the literal boundary).
+    pub fn leaf_ranges(&self) -> &[Range<usize>] {
+        &self.leaves
+    }
+
     /// Tensor-bounded cache shards over the flat index space (each at most
     /// `DEFAULT_SHARD_LEN` elements, never straddling a leaf edge).
     pub fn shards(&self) -> &[Range<usize>] {

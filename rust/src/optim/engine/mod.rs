@@ -9,6 +9,9 @@
 //!   sophia/lion/EMAs, ulp-checked for adamw).
 //! * [`parallel`] — deterministic `std::thread::scope` shard driver with
 //!   fixed-order clipped-count reduction.
+//! * [`pool`]     — persistent parked worker pool (spawn-once, epoch
+//!   hand-off, pinned contiguous shard blocks) with the same determinism
+//!   contract but no per-step thread-spawn cost.
 //! * this module  — the [`UpdateKernel`] trait and [`Backend`] dispatch so
 //!   benches, proptests, and the coordinator select the scalar oracle or
 //!   the engine uniformly (env knob: `SOPHIA_ENGINE`).
@@ -23,9 +26,11 @@
 pub mod blocked;
 pub mod flat;
 pub mod parallel;
+pub mod pool;
 
 pub use self::flat::{AlignedBuf, FlatState, StateKind, ALIGN};
 pub use self::parallel::{partition, partition_leaves, run_sharded, SendPtr, DEFAULT_SHARD_LEN};
+pub use self::pool::{PoolEngine, WorkerPool};
 
 use self::parallel::shard_mut;
 use crate::optim::kernels;
@@ -442,7 +447,10 @@ impl UpdateKernel for ThreadedEngine {
 pub enum Backend {
     Scalar,
     Blocked,
+    /// Per-call `std::thread::scope` shard crew.
     Threaded(usize),
+    /// Persistent parked worker pool (spawned once at `build()`).
+    Pool(usize),
 }
 
 /// Worker count the `auto` backend uses: every available core.
@@ -456,6 +464,7 @@ impl Backend {
             Backend::Scalar => Box::new(ScalarOracle),
             Backend::Blocked => Box::new(BlockedEngine),
             Backend::Threaded(t) => Box::new(ThreadedEngine::new(t)),
+            Backend::Pool(t) => Box::new(PoolEngine::new(t)),
         }
     }
 
@@ -465,24 +474,36 @@ impl Backend {
             Backend::Scalar => "scalar".into(),
             Backend::Blocked => "blocked".into(),
             Backend::Threaded(t) => format!("threads:{t}"),
+            Backend::Pool(t) => format!("pool:{t}"),
         }
     }
 
     /// Select from `SOPHIA_ENGINE`: `scalar`, `blocked`, `threads:<n>`, or
     /// anything else / unset for the default (threaded on all cores).
     pub fn from_env() -> Backend {
+        Self::from_env_or(Backend::Threaded(default_threads()))
+    }
+
+    /// Select from `SOPHIA_ENGINE` (`scalar`, `blocked`, `threads:<n>`,
+    /// `pool:<n>`, bare `pool` = all cores), falling back to `default`
+    /// when the variable is unset or unrecognized. A malformed worker
+    /// count falls back to all cores, not to a silent single-thread run.
+    pub fn from_env_or(default: Backend) -> Backend {
         match std::env::var("SOPHIA_ENGINE").ok().as_deref() {
             Some("scalar") => Backend::Scalar,
             Some("blocked") => Backend::Blocked,
+            Some("pool") => Backend::Pool(default_threads()),
             Some(s) if s.starts_with("threads:") => {
-                // a malformed count falls back to all cores (the default),
-                // not to a silent single-threaded run
                 match s["threads:".len()..].parse::<usize>() {
                     Ok(t) => Backend::Threaded(t.max(1)),
                     Err(_) => Backend::Threaded(default_threads()),
                 }
             }
-            _ => Backend::Threaded(default_threads()),
+            Some(s) if s.starts_with("pool:") => match s["pool:".len()..].parse::<usize>() {
+                Ok(t) => Backend::Pool(t.max(1)),
+                Err(_) => Backend::Pool(default_threads()),
+            },
+            _ => default,
         }
     }
 }
@@ -528,7 +549,7 @@ mod tests {
         let g = rand_vec(&mut rng, total, 1.0);
         let init = rand_vec(&mut rng, total, 1.0);
         let mut outs: Vec<(usize, Vec<f32>)> = Vec::new();
-        for b in [Backend::Scalar, Backend::Blocked, Backend::Threaded(2)] {
+        for b in [Backend::Scalar, Backend::Blocked, Backend::Threaded(2), Backend::Pool(2)] {
             let mut fs = FlatState::new(&lens);
             fs.buf_mut(StateKind::P).copy_from_slice(&init);
             fs.buf_mut(StateKind::H).copy_from_slice(&g); // arbitrary curvature
@@ -548,5 +569,7 @@ mod tests {
         assert_eq!(Backend::Blocked.label(), "blocked");
         assert_eq!(Backend::Threaded(4).label(), "threads:4");
         assert_eq!(Backend::Threaded(4).build().name(), "threaded");
+        assert_eq!(Backend::Pool(4).label(), "pool:4");
+        assert_eq!(Backend::Pool(2).build().name(), "pool");
     }
 }

@@ -1,0 +1,601 @@
+//! Persistent pinned worker pool: the parked-thread shard driver.
+//!
+//! [`super::parallel::run_sharded`] spawns a fresh `std::thread::scope`
+//! crew on every call, which costs tens of microseconds per step — visible
+//! at the small end of the `perf_kernels` sweep and exactly the kind of
+//! fixed per-step overhead Sophia's "negligible overhead" claim cannot
+//! afford (PAPER.md §1, ROADMAP "Next"). The pool here spawns its workers
+//! ONCE and parks them on a condvar between steps; a step is dispatched by
+//! bumping an epoch counter under the state mutex (no per-step thread
+//! spawn, no channel, no boxed closure).
+//!
+//! Shard pinning: worker `w` of `n` always runs the same contiguous block
+//! of the shard table (`my_block`), so across steps each worker touches
+//! the same `FlatState` arena byte range — first-touch page locality and
+//! NUMA friendliness for free. On Linux/x86_64 each worker additionally
+//! pins itself to core `w % ncpu` via a raw `sched_setaffinity` syscall
+//! (best-effort, no libc in the vendor set; disable with
+//! `SOPHIA_POOL_PIN=0`).
+//!
+//! Determinism: per-shard results land in a fixed per-shard slot and are
+//! reduced in shard order after the epoch completes, so params and the
+//! clipped-coordinate count are bit-identical to the scalar oracle for any
+//! worker count — the same contract `run_sharded` keeps, property-tested
+//! in `rust/tests/proptests.rs`.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::parallel::{partition, shard_mut, SendPtr, DEFAULT_SHARD_LEN};
+use super::{blocked, UpdateKernel};
+use std::cell::UnsafeCell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One dispatched step: a type-erased `Fn(shard_idx, range) -> count` plus
+/// the shard table it runs over. Raw pointers carry no lifetimes; the
+/// epoch protocol guarantees the pointees outlive every dereference (the
+/// submitter blocks inside [`WorkerPool::run`] until all workers report
+/// the epoch complete).
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize, Range<usize>) -> usize,
+    shards: *const Range<usize>,
+    n_shards: usize,
+}
+
+// SAFETY: Job is a pointer bundle; see the struct docs for the liveness
+// argument. The mutex hand-off provides the happens-before edges.
+unsafe impl Send for Job {}
+
+/// Monomorphized trampoline: recovers the concrete closure type from the
+/// erased data pointer.
+///
+/// # Safety
+/// `data` must point to a live `F` for the duration of the call.
+unsafe fn call_thunk<F: Fn(usize, Range<usize>) -> usize + Sync>(
+    data: *const (),
+    i: usize,
+    r: Range<usize>,
+) -> usize {
+    (*data.cast::<F>())(i, r)
+}
+
+struct PoolState {
+    /// Bumped once per submitted step; workers run when it moves.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers that have not yet finished the current epoch.
+    remaining: usize,
+    /// A worker's job panicked this epoch; the submitter re-raises.
+    poisoned: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between epochs.
+    wake: Condvar,
+    /// The submitter parks here until `remaining == 0`.
+    done: Condvar,
+    /// Per-shard clipped-count slots. Grown only by the submitting thread
+    /// while every worker is parked (it holds the submit lock and no epoch
+    /// is in flight); during an epoch workers store to disjoint indices;
+    /// read back by the submitter after the epoch completes. The state
+    /// mutex orders every transition.
+    counts: UnsafeCell<Vec<AtomicUsize>>,
+}
+
+// SAFETY: `counts` follows the access protocol documented on the field;
+// everything else is Mutex/Condvar/atomics.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+/// The contiguous block of shard indices owned by worker `w` of `n`
+/// (stable for a fixed shard count — the pinning invariant).
+fn my_block(w: usize, n: usize, n_shards: usize) -> Range<usize> {
+    let per = n_shards / n;
+    let rem = n_shards % n;
+    let lo = w * per + w.min(rem);
+    let hi = lo + per + usize::from(w < rem);
+    lo..hi
+}
+
+/// Best-effort thread→core affinity via raw `sched_setaffinity(2)` (no
+/// libc in the offline vendor set). Errors are ignored: affinity is a
+/// performance hint, never a correctness requirement.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_to_core(core: usize) {
+    // cpu_set_t-compatible mask covering the first 1024 CPUs; beyond that
+    // skip pinning rather than wrap onto the wrong core.
+    if core >= 1024 {
+        return;
+    }
+    let mut mask = [0u64; 16];
+    mask[core / 64] = 1u64 << (core % 64);
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203u64 => _, // SYS_sched_setaffinity
+            in("rdi") 0u64,               // 0 = calling thread
+            in("rsi") std::mem::size_of::<[u64; 16]>() as u64,
+            in("rdx") mask.as_ptr() as u64,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_to_core(_core: usize) {}
+
+fn pin_enabled() -> bool {
+    std::env::var("SOPHIA_POOL_PIN").map(|v| v != "0").unwrap_or(true)
+}
+
+fn worker_loop(shared: Arc<Shared>, w: usize, n_workers: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.wake.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            st.job.expect("epoch bumped without a job")
+        };
+        // Catch panics so a failing job poisons the epoch (the submitter
+        // re-raises) instead of leaving `remaining` stuck and the
+        // submitter deadlocked — the propagation `thread::scope` gave the
+        // per-step driver for free.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the submitter blocks until `remaining` reaches 0, so
+            // the closure, shard table and counts outlive this epoch;
+            // `my_block` ranges are disjoint across workers, so the count
+            // slots are too.
+            let shards = unsafe { std::slice::from_raw_parts(job.shards, job.n_shards) };
+            let counts = unsafe { &*shared.counts.get() };
+            for i in my_block(w, n_workers, job.n_shards) {
+                let c = unsafe { (job.call)(job.data, i, shards[i].clone()) };
+                counts[i].store(c, Ordering::Relaxed);
+            }
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if res.is_err() {
+            st.poisoned = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A long-lived crew of parked worker threads. Spawn once, submit many
+/// steps; `Drop` shuts the workers down and joins them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes submitters: the epoch protocol supports one in-flight
+    /// step (UpdateKernel takes `&self`, so two threads could race here).
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(n_workers: usize, pin: bool) -> Self {
+        let n = n_workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                poisoned: false,
+                shutdown: false,
+            }),
+            wake: Condvar::new(),
+            done: Condvar::new(),
+            counts: UnsafeCell::new(Vec::new()),
+        });
+        let handles = (0..n)
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sophia-pool-{w}"))
+                    .spawn(move || {
+                        if pin {
+                            pin_to_core(w % super::default_threads());
+                        }
+                        worker_loop(sh, w, n);
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            submit: Mutex::new(()),
+            handles,
+            n_workers: n,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Run `f(shard_index, range)` for every shard on the parked workers
+    /// and return the sum of per-shard results, reduced in fixed shard
+    /// order — the same contract as [`super::parallel::run_sharded`], with
+    /// no thread spawn and no allocation in the steady state.
+    pub fn run<F>(&self, shards: &[Range<usize>], f: &F) -> usize
+    where
+        F: Fn(usize, Range<usize>) -> usize + Sync,
+    {
+        let n = shards.len();
+        if n == 0 {
+            return 0;
+        }
+        let _guard = self.submit.lock().unwrap();
+        // SAFETY: submit lock held and no epoch in flight — every worker
+        // is parked, so this thread has exclusive access to `counts`.
+        // Growth only; steady-state steps never reallocate.
+        unsafe {
+            let counts = &mut *self.shared.counts.get();
+            if counts.len() < n {
+                counts.resize_with(n, || AtomicUsize::new(0));
+            }
+        }
+        let job = Job {
+            data: (f as *const F).cast::<()>(),
+            call: call_thunk::<F>,
+            shards: shards.as_ptr(),
+            n_shards: n,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.remaining = self.n_workers;
+            st.poisoned = false;
+            st.epoch = st.epoch.wrapping_add(1);
+        }
+        self.shared.wake.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let poisoned = st.poisoned;
+        drop(st);
+        if poisoned {
+            panic!("WorkerPool: a worker panicked while running a shard job");
+        }
+        // SAFETY: epoch complete (observed under the mutex) — workers are
+        // parked again; fixed-order read keeps the reduction deterministic
+        // no matter which worker ran which shard.
+        let counts = unsafe { &*self.shared.counts.get() };
+        counts[..n].iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PoolEngine: blocked kernels over the persistent pool
+// ---------------------------------------------------------------------
+
+/// The pool-backed engine tier (`SOPHIA_ENGINE=pool:<n>`): identical
+/// arithmetic and shard partitioning to [`super::ThreadedEngine`], but the
+/// shard crew is spawned once and parked between steps instead of being
+/// re-spawned through `std::thread::scope` on every call, and the shard
+/// partition is cached per buffer length (the training hot path hits one
+/// length every step — zero steady-state allocation).
+pub struct PoolEngine {
+    pool: WorkerPool,
+    pub shard_len: usize,
+    shards_cache: Mutex<ShardCache>,
+}
+
+struct ShardCache {
+    n: usize,
+    shard_len: usize,
+    shards: Vec<Range<usize>>,
+}
+
+impl PoolEngine {
+    pub fn new(workers: usize) -> Self {
+        Self::with_shard_len(workers, DEFAULT_SHARD_LEN)
+    }
+
+    pub fn with_shard_len(workers: usize, shard_len: usize) -> Self {
+        PoolEngine {
+            pool: WorkerPool::new(workers, pin_enabled()),
+            shard_len: shard_len.max(1),
+            shards_cache: Mutex::new(ShardCache {
+                n: usize::MAX,
+                shard_len: 0,
+                shards: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Run `f` with the (cached) shard partition for an `n`-element
+    /// buffer. The cache key includes `shard_len` since it is public.
+    fn with_shards<R>(&self, n: usize, f: impl FnOnce(&[Range<usize>]) -> R) -> R {
+        let mut c = self.shards_cache.lock().unwrap();
+        if c.n != n || c.shard_len != self.shard_len {
+            c.shards = partition(n, self.shard_len);
+            c.n = n;
+            c.shard_len = self.shard_len;
+        }
+        f(&c.shards)
+    }
+}
+
+impl UpdateKernel for PoolEngine {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn sophia_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &[f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let (pp, mp) = (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()));
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                let ms = unsafe { shard_mut(mp, &r) };
+                blocked::sophia_update(ps, ms, &h[r.clone()], &g[r], lr, beta1, gamma, eps, wd)
+            })
+        })
+    }
+
+    fn sophia_update_with_gnb_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        ghat: &[f32],
+        scale: f32,
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let (pp, mp, hp) = (
+            SendPtr(p.as_mut_ptr()),
+            SendPtr(m.as_mut_ptr()),
+            SendPtr(h.as_mut_ptr()),
+        );
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                let ms = unsafe { shard_mut(mp, &r) };
+                let hs = unsafe { shard_mut(hp, &r) };
+                blocked::sophia_update_with_gnb_refresh(
+                    ps,
+                    ms,
+                    hs,
+                    &g[r.clone()],
+                    &ghat[r],
+                    scale,
+                    hbeta2,
+                    lr,
+                    beta1,
+                    gamma,
+                    eps,
+                    wd,
+                )
+            })
+        })
+    }
+
+    fn adamw_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        t: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+    ) {
+        let (pp, mp, vp) = (
+            SendPtr(p.as_mut_ptr()),
+            SendPtr(m.as_mut_ptr()),
+            SendPtr(v.as_mut_ptr()),
+        );
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                let ms = unsafe { shard_mut(mp, &r) };
+                let vs = unsafe { shard_mut(vp, &r) };
+                blocked::adamw_update(ps, ms, vs, &g[r], lr, t, beta1, beta2, eps, wd);
+                0
+            })
+        });
+    }
+
+    fn lion_update(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        wd: f32,
+    ) {
+        let (pp, mp) = (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()));
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                let ms = unsafe { shard_mut(mp, &r) };
+                blocked::lion_update(ps, ms, &g[r], lr, beta1, beta2, wd);
+                0
+            })
+        });
+    }
+
+    fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
+        let hp = SendPtr(h.as_mut_ptr());
+        self.with_shards(h.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let hs = unsafe { shard_mut(hp, &r) };
+                blocked::gnb_ema(hs, &ghat[r], scale, beta2);
+                0
+            })
+        });
+    }
+
+    fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
+        let hp = SendPtr(h.as_mut_ptr());
+        self.with_shards(h.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let hs = unsafe { shard_mut(hp, &r) };
+                blocked::hutchinson_ema(hs, &u[r.clone()], &hvp[r], beta2);
+                0
+            })
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn my_block_tiles_the_shard_table() {
+        for (n, n_shards) in [(1usize, 5usize), (4, 10), (4, 3), (3, 0), (8, 8), (5, 64)] {
+            let mut next = 0;
+            for w in 0..n {
+                let b = my_block(w, n, n_shards);
+                assert_eq!(b.start, next, "workers {n} shards {n_shards} w {w}");
+                assert!(b.end >= b.start);
+                next = b.end;
+            }
+            assert_eq!(next, n_shards, "workers {n} shards {n_shards}");
+            // pinned: the same (w, n, n_shards) always maps to one block
+            assert_eq!(my_block(0, n, n_shards), my_block(0, n, n_shards));
+        }
+    }
+
+    #[test]
+    fn pool_run_matches_serial_over_many_submits() {
+        let shards = partition(100_003, 997);
+        let serial: usize = shards.iter().map(|r| r.len() / 3).sum();
+        for workers in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(workers, false);
+            // repeated submits through one pool: the epoch protocol must
+            // hand off cleanly every time
+            for _ in 0..20 {
+                let got = pool.run(&shards, &|_, r: Range<usize>| r.len() / 3);
+                assert_eq!(got, serial, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_run_disjoint_writes_land() {
+        let n = 10_000;
+        let mut buf = vec![0f32; n];
+        let shards = partition(n, 127);
+        let base = SendPtr(buf.as_mut_ptr());
+        let pool = WorkerPool::new(4, false);
+        pool.run(&shards, &|_, r: Range<usize>| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let s = unsafe { shard_mut(base, &r) };
+            for (k, x) in s.iter_mut().enumerate() {
+                *x = (r.start + k) as f32;
+            }
+            0
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn pool_propagates_job_panics_instead_of_deadlocking() {
+        let pool = WorkerPool::new(2, false);
+        let shards = partition(100, 10);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&shards, &|i, _r: Range<usize>| {
+                if i == 3 {
+                    panic!("job panic");
+                }
+                0
+            });
+        }));
+        assert!(result.is_err(), "submitter must re-raise a worker panic");
+        // the crew survives a poisoned epoch and serves the next one
+        let got = pool.run(&shards, &|_, r: Range<usize>| r.len());
+        assert_eq!(got, 100);
+    }
+
+    #[test]
+    fn pool_handles_more_workers_than_shards_and_empty_input() {
+        let pool = WorkerPool::new(8, false);
+        assert_eq!(pool.run(&[], &|_, _| 7), 0);
+        let shards = partition(10, 4); // 3 shards < 8 workers
+        assert_eq!(pool.run(&shards, &|_, r: Range<usize>| r.len()), 10);
+    }
+
+    #[test]
+    fn pool_engine_counts_match_shard_sum_and_drop_joins() {
+        let n = 50_000;
+        let mut p = vec![0.1f32; n];
+        let mut m = vec![0.0f32; n];
+        let h = vec![1.0f32; n];
+        let g = vec![1.0f32; n];
+        let k = PoolEngine::with_shard_len(3, 1 << 10);
+        let c1 = k.sophia_update(&mut p, &mut m, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
+        let c2 = k.sophia_update(&mut p, &mut m, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
+        assert!(c1 <= n && c2 <= n);
+        drop(k); // must join without deadlock
+    }
+}

@@ -2,7 +2,7 @@
 //! inputs over many seeds, asserting the invariants the paper relies on.
 
 use sophia::data::{corpus, Bpe, ByteTokenizer, Loader, Split, Tokenizer};
-use sophia::optim::engine::{Backend, FlatState, StateKind, ThreadedEngine, UpdateKernel};
+use sophia::optim::engine::{Backend, FlatState, PoolEngine, StateKind, ThreadedEngine, UpdateKernel};
 use sophia::optim::kernels;
 use sophia::rng::Rng;
 use sophia::schedule::Schedule;
@@ -202,13 +202,15 @@ fn prop_corpus_topics_uniformish() {
 // ---------------------------------------------------------------------
 
 /// Engine backends under test: the blocked single-thread tier plus the
-/// threaded tier at 1/2/4 workers with a deliberately tiny/odd shard
-/// length so even small inputs split into many ragged shards.
+/// threaded and persistent-pool tiers at 1/2/4 workers with deliberately
+/// tiny/odd shard lengths so even small inputs split into many ragged
+/// shards.
 fn engine_backends() -> Vec<Box<dyn UpdateKernel>> {
     let mut v: Vec<Box<dyn UpdateKernel>> = vec![Backend::Blocked.build()];
-    for threads in [1usize, 2, 4] {
+    for workers in [1usize, 2, 4] {
         for shard_len in [37usize, 1 << 10, 1 << 16] {
-            v.push(Box::new(ThreadedEngine { threads, shard_len }));
+            v.push(Box::new(ThreadedEngine { threads: workers, shard_len }));
+            v.push(Box::new(PoolEngine::with_shard_len(workers, shard_len)));
         }
     }
     v
@@ -350,11 +352,128 @@ fn prop_flat_state_step_is_invariant_to_backend_and_leaf_layout() {
             (clipped, fs.buf(StateKind::P).to_vec())
         };
         let (c0, p0) = run(Backend::Scalar);
-        for backend in [Backend::Blocked, Backend::Threaded(2), Backend::Threaded(4)] {
+        for backend in [
+            Backend::Blocked,
+            Backend::Threaded(2),
+            Backend::Threaded(4),
+            Backend::Pool(2),
+            Backend::Pool(4),
+        ] {
             let (c, p) = run(backend);
             assert_eq!(c, c0, "clip count: {} seed {seed}", backend.label());
             for i in 0..total {
                 assert_eq!(p0[i].to_bits(), p[i].to_bits(), "{} p[{i}]", backend.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pool_repeated_submits_deterministic_across_worker_counts() {
+    // ONE pool per worker count, many submits through the same parked
+    // crew: every step's params, momentum and clipped count must match
+    // the scalar oracle bitwise (exercises the epoch hand-off protocol,
+    // not just a single dispatch).
+    let n = 30_000;
+    let mut rng = Rng::new(0x9001);
+    let p0 = rand_vec(&mut rng, n, 1.0);
+    let m0 = rand_vec(&mut rng, n, 1.0);
+    let h = rand_vec(&mut rng, n, 1.0);
+    let g = rand_vec(&mut rng, n, 1.0);
+    let steps = 6;
+    let (mut ps, mut ms) = (p0.clone(), m0.clone());
+    let oracle_counts: Vec<usize> = (0..steps)
+        .map(|_| kernels::sophia_update(&mut ps, &mut ms, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1))
+        .collect();
+    for workers in [1usize, 2, 4] {
+        let k = PoolEngine::with_shard_len(workers, 1 << 10);
+        let (mut pe, mut me) = (p0.clone(), m0.clone());
+        for (step, &c0) in oracle_counts.iter().enumerate() {
+            let c = k.sophia_update(&mut pe, &mut me, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
+            assert_eq!(c, c0, "clip count: workers {workers} step {step}");
+        }
+        for i in 0..n {
+            assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "workers {workers} p[{i}]");
+            assert_eq!(ms[i].to_bits(), me[i].to_bits(), "workers {workers} m[{i}]");
+        }
+    }
+}
+
+#[test]
+fn prop_model_state_to_flat_engine_from_flat_round_trips_bitwise() {
+    // The engine-resident checkpoint boundary: gather literal state into
+    // the arena, mutate it on the pool engine (fused GNB refresh + Sophia
+    // step), scatter back to literals — every buffer must match the
+    // scalar oracle applied to plain flat vectors, bitwise.
+    use sophia::config::ParamSpec;
+    use sophia::runtime::{lit_f32, ModelState};
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0xC4F7);
+        // a few random tensor shapes, including rank-1 and rank-3 leaves
+        let mut specs = Vec::new();
+        let mut leaves: Vec<Vec<f32>> = Vec::new();
+        for i in 0..(2 + rng.below(4)) {
+            let shape: Vec<usize> = match rng.below(3) {
+                0 => vec![1 + rng.below(40) as usize],
+                1 => vec![1 + rng.below(12) as usize, 1 + rng.below(12) as usize],
+                _ => vec![
+                    1 + rng.below(4) as usize,
+                    1 + rng.below(6) as usize,
+                    1 + rng.below(6) as usize,
+                ],
+            };
+            let n: usize = shape.iter().product();
+            specs.push(ParamSpec { name: format!("leaf{i}"), shape, init_std: 0.02 });
+            leaves.push(rand_vec(&mut rng, n, 1.0));
+        }
+        let total: usize = specs.iter().map(|s| s.numel()).sum();
+        let lits = |data: &[Vec<f32>], specs: &[ParamSpec]| -> Vec<xla::Literal> {
+            data.iter()
+                .zip(specs)
+                .map(|(d, s)| lit_f32(d, &s.shape).unwrap())
+                .collect()
+        };
+        let m_data: Vec<Vec<f32>> =
+            specs.iter().map(|s| rand_vec(&mut rng, s.numel(), 0.5)).collect();
+        let h_data: Vec<Vec<f32>> =
+            specs.iter().map(|s| rand_vec(&mut rng, s.numel(), 0.5)).collect();
+        let mut st = ModelState {
+            params: lits(&leaves, &specs),
+            m: lits(&m_data, &specs),
+            h: lits(&h_data, &specs),
+            specs,
+        };
+
+        // oracle on plain flat vectors
+        let flat = |d: &[Vec<f32>]| d.concat();
+        let (mut p, mut m, mut h) = (flat(&leaves), flat(&m_data), flat(&h_data));
+        let g = rand_vec(&mut rng, total, 1.0);
+        let ghat = rand_vec(&mut rng, total, 1.0);
+        let c0 = kernels::sophia_update_with_gnb_refresh(
+            &mut p, &mut m, &mut h, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12, 0.1,
+        );
+
+        // engine path: to_flat → pool kernel → from_flat
+        let mut fs = st.to_flat().unwrap();
+        let k = Backend::Pool(2).build();
+        let ce = fs.sophia_step_with_gnb_refresh(
+            &*k, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12, 0.1,
+        );
+        assert_eq!(c0, ce, "clip count seed {seed}");
+        st.from_flat(&fs).unwrap();
+
+        for (name, want, got) in [
+            ("params", &p, st.flat_params().unwrap()),
+            ("m", &m, st.flat_state("m").unwrap()),
+            ("h", &h, st.flat_state("h").unwrap()),
+        ] {
+            assert_eq!(want.len(), got.len(), "{name} len seed {seed}");
+            for i in 0..want.len() {
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "{name}[{i}] seed {seed}"
+                );
             }
         }
     }

@@ -1,8 +1,20 @@
 #!/usr/bin/env bash
 # Smoke-run the perf benches at reduced scale. Used by scripts/verify.sh
 # and suitable for CI: exercises the kernel engine sweep (writes
-# BENCH_kernels.json) and the coordinator-overhead probe (skips cleanly
-# when artifacts/ is absent).
+# BENCH_kernels.json, including the scalar/blocked/threads:<n>/pool:<n>
+# columns and the scope-spawn-vs-parked-pool dispatch row at 1M params)
+# and the coordinator-overhead probe (skips cleanly when artifacts/ is
+# absent).
+#
+# Knobs:
+#   SOPHIA_BENCH_SCALE=0.05   shrink every workload (default here; 1.0 =
+#                             paper-shaped sweep)
+#   SOPHIA_ENGINE=pool:<n>    pick the kernel backend used by the trainer
+#                             and anything that calls Backend::from_env
+#                             (scalar | blocked | threads:<n> | pool:<n>);
+#                             the perf_kernels sweep always measures all of
+#                             them side by side
+#   SOPHIA_POOL_PIN=0         disable the pool's best-effort core pinning
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
-# The verify flow: tier-1 (build + tests) plus the clippy gate and the
-# perf-bench smoke run. Run before every merge.
+# The verify flow: format gate, tier-1 (build + tests), the clippy gate and
+# the perf-bench smoke run. Run before every merge.
+#
+# Note: this repo has been grown without a local cargo toolchain; if the
+# first `cargo fmt --check` on a real toolchain reports pre-existing
+# drift, run `cargo fmt` once, commit the result, and the gate holds from
+# then on.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+cargo fmt --check
 cargo build --release
 cargo test -q
 cargo clippy --all-targets -- -D warnings
