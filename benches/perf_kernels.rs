@@ -10,7 +10,9 @@
 //! `scripts/bench_smoke.sh`). Acceptance target: ≥ 3× median speedup for
 //! the 4-thread engine over the scalar oracle on the 16M-param update.
 
-use sophia::optim::engine::{AlignedBuf, Backend, FlatState, StateKind};
+use sophia::optim::engine::{
+    AlignedBuf, Backend, FlatState, PoolEngine, StateKind, DEFAULT_SHARD_LEN,
+};
 use sophia::rng::Rng;
 use sophia::util::bench::{bench, scale, scaled, Table};
 use sophia::util::json::Json;
@@ -152,20 +154,21 @@ fn main() -> anyhow::Result<()> {
 
     // Dispatch overhead at the small end: the per-step `thread::scope`
     // spawn (threads:4) vs the parked persistent pool (pool:4) on the
-    // same 1M-param sophia step. The arithmetic is identical, so the
-    // median delta IS the dispatch cost difference.
+    // same 1M-param sophia step. The pool is built with core pinning OFF
+    // so both crews are scheduled the same way — arithmetic and placement
+    // identical, the median delta IS the dispatch cost difference.
     let n = scaled(1 << 20);
     let mut fs = FlatState::new(&[n]);
     let mut g = AlignedBuf::zeroed(n);
     fill_state(&mut fs, &mut g, 1_000_001);
     let kt = Backend::Threaded(4).build();
-    let kp = Backend::Pool(4).build();
+    let kp = PoolEngine::with_shard_len_pin(4, DEFAULT_SHARD_LEN, false);
     let st_scope = bench(3, 15, || {
         let c = fs.sophia_step(&*kt, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let st_pool = bench(3, 15, || {
-        let c = fs.sophia_step(&*kp, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        let c = fs.sophia_step(&kp, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let dispatch_delta_ms = st_scope.median_ms - st_pool.median_ms;

@@ -13,9 +13,10 @@
 //! of the shard table (`my_block`), so across steps each worker touches
 //! the same `FlatState` arena byte range — first-touch page locality and
 //! NUMA friendliness for free. On Linux/x86_64 each worker additionally
-//! pins itself to core `w % ncpu` via a raw `sched_setaffinity` syscall
-//! (best-effort, no libc in the vendor set; disable with
-//! `SOPHIA_POOL_PIN=0`).
+//! pins itself to the `w`-th CPU of the process's allowed set (from
+//! `sched_getaffinity`, so a taskset/cpuset restriction is honored) via a
+//! raw `sched_setaffinity` syscall (best-effort, no libc in the vendor
+//! set; disable with `SOPHIA_POOL_PIN=0`).
 //!
 //! Determinism: per-shard results land in a fixed per-shard slot and are
 //! reduced in shard order after the epoch completes, so params and the
@@ -30,7 +31,7 @@ use super::{blocked, UpdateKernel};
 use std::cell::UnsafeCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 /// One dispatched step: a type-erased `Fn(shard_idx, range) -> count` plus
@@ -132,6 +133,55 @@ fn pin_to_core(core: usize) {
 #[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
 fn pin_to_core(_core: usize) {}
 
+/// CPU ids this process is allowed to run on, via raw
+/// `sched_getaffinity(2)`. Pin targets MUST come from this set, not from
+/// `0..ncpu`: under `taskset -c 8-15` or a cgroup cpuset, core 0 may be
+/// exactly what the operator excluded, and `sched_setaffinity` happily
+/// escapes an inherited mask. Empty on failure (callers skip pinning).
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn allowed_cpus() -> Vec<usize> {
+    let mut mask = [0u64; 16];
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 204i64 => ret, // SYS_sched_getaffinity
+            in("rdi") 0u64,                 // 0 = calling thread
+            in("rsi") std::mem::size_of::<[u64; 16]>() as u64,
+            in("rdx") mask.as_mut_ptr() as u64,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+    }
+    if ret <= 0 {
+        return Vec::new();
+    }
+    let mut cpus = Vec::new();
+    for (word, &bits) in mask.iter().enumerate() {
+        for bit in 0..64 {
+            if bits & (1u64 << bit) != 0 {
+                cpus.push(word * 64 + bit);
+            }
+        }
+    }
+    cpus
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn allowed_cpus() -> Vec<usize> {
+    Vec::new()
+}
+
+/// Lock a mutex, recovering from poisoning. Both pool mutexes guard data
+/// that stays consistent across an unwind (`submit` holds `()`; the shard
+/// cache is only mutated before the job is dispatched), so a panic
+/// re-raised out of [`WorkerPool::run`] must not brick every later step
+/// with a `PoisonError` — the crew survives a poisoned epoch.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 fn pin_enabled() -> bool {
     std::env::var("SOPHIA_POOL_PIN").map(|v| v != "0").unwrap_or(true)
 }
@@ -206,14 +256,19 @@ impl WorkerPool {
             done: Condvar::new(),
             counts: UnsafeCell::new(Vec::new()),
         });
+        // Pin targets come from the process's allowed CPU set so pinning
+        // never escapes a taskset/cpuset restriction; empty (disabled or
+        // query failed) means no worker pins.
+        let pin_targets = if pin { allowed_cpus() } else { Vec::new() };
         let handles = (0..n)
             .map(|w| {
                 let sh = Arc::clone(&shared);
+                let core = pin_targets.get(w % pin_targets.len().max(1)).copied();
                 std::thread::Builder::new()
                     .name(format!("sophia-pool-{w}"))
                     .spawn(move || {
-                        if pin {
-                            pin_to_core(w % super::default_threads());
+                        if let Some(core) = core {
+                            pin_to_core(core);
                         }
                         worker_loop(sh, w, n);
                     })
@@ -244,7 +299,7 @@ impl WorkerPool {
         if n == 0 {
             return 0;
         }
-        let _guard = self.submit.lock().unwrap();
+        let guard = lock_ignore_poison(&self.submit);
         // SAFETY: submit lock held and no epoch in flight — every worker
         // is parked, so this thread has exclusive access to `counts`.
         // Growth only; steady-state steps never reallocate.
@@ -276,13 +331,19 @@ impl WorkerPool {
         let poisoned = st.poisoned;
         drop(st);
         if poisoned {
+            // Release the submit lock before unwinding so the mutex is not
+            // poisoned — the pool must keep serving steps after a caught
+            // job panic (see pool_propagates_job_panics_instead_of_deadlocking).
+            drop(guard);
             panic!("WorkerPool: a worker panicked while running a shard job");
         }
         // SAFETY: epoch complete (observed under the mutex) — workers are
         // parked again; fixed-order read keeps the reduction deterministic
         // no matter which worker ran which shard.
         let counts = unsafe { &*self.shared.counts.get() };
-        counts[..n].iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        let sum = counts[..n].iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        drop(guard);
+        sum
     }
 }
 
@@ -327,8 +388,16 @@ impl PoolEngine {
     }
 
     pub fn with_shard_len(workers: usize, shard_len: usize) -> Self {
+        Self::with_shard_len_pin(workers, shard_len, pin_enabled())
+    }
+
+    /// Like [`Self::with_shard_len`] but with an explicit core-pinning
+    /// choice. Benches and tests that compare against unpinned crews (or
+    /// keep many pools alive at once) pass `pin = false` so affinity
+    /// cannot confound timings or oversubscribe low cores.
+    pub fn with_shard_len_pin(workers: usize, shard_len: usize, pin: bool) -> Self {
         PoolEngine {
-            pool: WorkerPool::new(workers, pin_enabled()),
+            pool: WorkerPool::new(workers, pin),
             shard_len: shard_len.max(1),
             shards_cache: Mutex::new(ShardCache {
                 n: usize::MAX,
@@ -344,8 +413,11 @@ impl PoolEngine {
 
     /// Run `f` with the (cached) shard partition for an `n`-element
     /// buffer. The cache key includes `shard_len` since it is public.
+    /// Poison-tolerant: the cache is fully updated before `f` runs, so a
+    /// panic unwinding out of `f` (a re-raised worker panic) leaves it
+    /// consistent and later calls may keep using it.
     fn with_shards<R>(&self, n: usize, f: impl FnOnce(&[Range<usize>]) -> R) -> R {
-        let mut c = self.shards_cache.lock().unwrap();
+        let mut c = lock_ignore_poison(&self.shards_cache);
         if c.n != n || c.shard_len != self.shard_len {
             c.shards = partition(n, self.shard_len);
             c.n = n;
@@ -578,6 +650,28 @@ mod tests {
     }
 
     #[test]
+    fn pool_engine_shard_cache_survives_job_panic() {
+        // A re-raised worker panic unwinds through with_shards while the
+        // shard-cache guard is live; the engine must keep serving steps
+        // instead of hitting PoisonError on the next lock.
+        let k = PoolEngine::with_shard_len_pin(2, 10, false);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            k.with_shards(100, |shards| {
+                k.pool.run(shards, &|i, _r: Range<usize>| {
+                    if i == 0 {
+                        panic!("job panic");
+                    }
+                    0
+                })
+            });
+        }));
+        assert!(result.is_err(), "with_shards must re-raise the worker panic");
+        let got =
+            k.with_shards(100, |shards| k.pool.run(shards, &|_, r: Range<usize>| r.len()));
+        assert_eq!(got, 100);
+    }
+
+    #[test]
     fn pool_handles_more_workers_than_shards_and_empty_input() {
         let pool = WorkerPool::new(8, false);
         assert_eq!(pool.run(&[], &|_, _| 7), 0);
@@ -592,7 +686,7 @@ mod tests {
         let mut m = vec![0.0f32; n];
         let h = vec![1.0f32; n];
         let g = vec![1.0f32; n];
-        let k = PoolEngine::with_shard_len(3, 1 << 10);
+        let k = PoolEngine::with_shard_len_pin(3, 1 << 10, false);
         let c1 = k.sophia_update(&mut p, &mut m, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
         let c2 = k.sophia_update(&mut p, &mut m, &h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
         assert!(c1 <= n && c2 <= n);
