@@ -152,6 +152,44 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Same fused-vs-two-pass comparison for the Sophia-H estimator: the
+    // Hutchinson EMA over the raw u⊙(Hu) product folded into the update
+    // pass (identical stream counts to the GNB case — the product arrives
+    // precomputed from the `uhvp` artifact).
+    let hutch_two_pass = bench(2, 9, || {
+        fs.hutchinson_refresh_uhvp(&*k, &ghat, 0.99);
+        let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    let hutch_fused = bench(2, 9, || {
+        let c = fs.sophia_step_with_hutchinson_refresh(
+            &*k, &g, &ghat, 0.99, 6e-4, 0.96, 0.01, 1e-12, 0.1,
+        );
+        std::hint::black_box(c);
+    });
+    for (name, st, bytes_per_elem) in [
+        ("uhvp;sophia (2-pass)", &hutch_two_pass, TWO_PASS_BYTES_PER_ELEM),
+        ("sophia+hutch (fused)", &hutch_fused, FUSED_BYTES_PER_ELEM),
+    ] {
+        table.row(&[
+            name.into(),
+            "4M".into(),
+            "threads:4".into(),
+            format!("{:.3}", st.median_ms),
+            format!("{:.2}", st.throughput_gbs(n * bytes_per_elem)),
+            format!("{:.2}x", hutch_two_pass.median_ms / st.median_ms),
+        ]);
+        records.push(obj(vec![
+            ("kernel", Json::Str(name.into())),
+            ("n", Json::Num(n as f64)),
+            ("backend", Json::Str("threads:4".into())),
+            ("median_ms", Json::Num(st.median_ms)),
+            ("bytes_per_elem", Json::Num(bytes_per_elem as f64)),
+            ("gbs", Json::Num(st.throughput_gbs(n * bytes_per_elem))),
+            ("speedup_vs_two_pass", Json::Num(hutch_two_pass.median_ms / st.median_ms)),
+        ]));
+    }
+
     // Dispatch overhead at the small end: the per-step `thread::scope`
     // spawn (threads:4) vs the parked persistent pool (pool:4) on the
     // same 1M-param sophia step. The pool is built with core pinning OFF

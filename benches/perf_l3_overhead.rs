@@ -5,6 +5,11 @@
 //! The trainer hot loop now reuses its lr/t scalar-literal slots and one
 //! input-pointer table across steps (see `runtime::{ScalarSlot, InputBuf}`),
 //! so the overhead this bench reports is the post-literal-reuse number.
+//!
+//! Also compares artifact-path vs engine-resident step time for both
+//! Sophia estimators (sophia_g/GNB and sophia_h/Hutchinson, every step a
+//! refresh step): the engine path drops the per-step 3n literal round
+//! trips, and this is where that win is recorded.
 
 mod common;
 
@@ -67,21 +72,71 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", s.max_ms),
         ]);
     }
+
+    // (4) artifact-path vs engine-resident step time, both Sophia
+    // estimators (the ROADMAP `perf_l3_overhead` engine-vs-artifact row).
+    // hess_interval = 1 so every measured step includes the estimator
+    // refresh — the comparison covers the full fused path, not just the
+    // cheap non-refresh steps.
+    let mut csv_rows = vec![
+        vec!["execute".into(), raw.median_ms.to_string()],
+        vec!["train_step".into(), full.median_ms.to_string()],
+        vec!["next_batch".into(), data_t.median_ms.to_string()],
+    ];
+    for (opt, ghat) in [(Optimizer::SophiaG, "ghat_gnb"), (Optimizer::SophiaH, "uhvp")] {
+        if !model.has_artifact("grad_step") || !model.has_artifact(ghat) {
+            println!(
+                "SKIP {} engine-vs-artifact row: artifacts predate grad_step/{ghat} (re-run `make artifacts`)",
+                opt.name()
+            );
+            continue;
+        }
+        let bench_mode = |engine: bool| -> anyhow::Result<sophia::util::bench::Stats> {
+            let mut cfg = common::base_cfg();
+            cfg.preset = preset.into();
+            cfg.optimizer = opt;
+            cfg.steps = 10_000;
+            cfg.hess_interval = 1;
+            cfg.engine_resident = engine;
+            let mut t = sophia::Trainer::new(cfg)?;
+            Ok(bench(3, 15, || {
+                let _ = t.train_step().unwrap();
+            }))
+        };
+        let art = bench_mode(false)?;
+        let eng = bench_mode(true)?;
+        let saved_pct = 100.0 * (art.median_ms - eng.median_ms) / art.median_ms;
+        for (mode, s) in [("artifact", &art), ("engine", &eng)] {
+            table.row(&[
+                format!("{} step ({mode})", opt.name()),
+                format!("{:.2}", s.median_ms),
+                format!("{:.2}", s.min_ms),
+                format!("{:.2}", s.max_ms),
+            ]);
+            csv_rows.push(vec![
+                format!("{}_{mode}_step", opt.name()),
+                s.median_ms.to_string(),
+            ]);
+        }
+        println!(
+            "{}: engine-resident step {:.2} ms vs artifact-path {:.2} ms ({saved_pct:.1}% saved)",
+            opt.name(),
+            eng.median_ms,
+            art.median_ms
+        );
+        csv_rows.push(vec![
+            format!("{}_engine_saved_pct", opt.name()),
+            saved_pct.to_string(),
+        ]);
+    }
+
     println!("{}", table.render());
     let overhead = (full.median_ms - raw.median_ms).max(0.0);
     let overhead_pct = 100.0 * overhead / full.median_ms;
     println!(
         "coordinator overhead (with literal/input-table reuse): {overhead:.2} ms = {overhead_pct:.1}% of the step (target < 5%)"
     );
-    common::save_csv(
-        "perf_l3_overhead.csv",
-        &["component", "median_ms"],
-        &[
-            vec!["execute".into(), raw.median_ms.to_string()],
-            vec!["train_step".into(), full.median_ms.to_string()],
-            vec!["next_batch".into(), data_t.median_ms.to_string()],
-            vec!["overhead_pct".into(), overhead_pct.to_string()],
-        ],
-    );
+    csv_rows.push(vec!["overhead_pct".into(), overhead_pct.to_string()]);
+    common::save_csv("perf_l3_overhead.csv", &["component", "median_ms"], &csv_rows);
     Ok(())
 }

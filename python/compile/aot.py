@@ -67,11 +67,13 @@ def artifact_plan(cfg):
         plan[f"train_{v}"] = (optim.make_train_step(cfg, v), (p, p, p, tok, f, f))
     for v in hesses:
         plan[f"hess_{v}"] = (optim.make_hess_step(cfg, v), (p, p, tok, i))
-    # engine-resident path: gradient-only step + raw GNB estimator (the
-    # optimizer update and Hessian EMA run in the Rust kernel engine)
+    # engine-resident path: gradient-only step + raw estimators (the
+    # optimizer update and Hessian EMA run in the Rust kernel engine).
+    # Both estimators lower for every preset — sophia_g and sophia_h run
+    # engine-resident everywhere, independent of the trimmed hess_* set.
     plan["grad_step"] = (optim.make_grad_step(cfg), (p, tok))
-    if "gnb" in hesses:
-        plan["ghat_gnb"] = (optim.make_ghat_gnb(cfg), (p, tok, i))
+    plan["ghat_gnb"] = (optim.make_ghat_gnb(cfg), (p, tok, i))
+    plan["uhvp"] = (optim.make_uhvp(cfg), (p, tok, i))
     plan["eval_step"] = (optim.make_eval_step(cfg), (p, tok))
     plan["logits_last"] = (optim.make_logits_last(cfg), (p, toks_ctx))
     plan["hess_diag"] = (optim.make_hess_diag(cfg), (p, tok, i))
@@ -121,6 +123,7 @@ def write_manifest(cfg, outdir, names):
             "hess_outputs": "h*, hnorm",
             "grad": "(params*, tokens[B,T+1]:i32) -> (clipped grads*, loss, gnorm)",
             "ghat_gnb": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
+            "uhvp": "(params*, tokens[B,T+1]:i32, seed:i32) -> (u*Hu*,)",
             "eval": "(params*, tokens) -> (loss,)",
             "logits_last": "(params*, tokens[B,T]) -> (logits[B,V],)",
             "hess_diag": "(params*, tokens, seed) -> (hhat*,)",

@@ -9,15 +9,17 @@ Artifact calling conventions (mirrored by rust/src/runtime/manifest.rs):
       -> (h'.., hnorm)
   grad_step(params.., tokens[B,T+1] i32) -> (clipped grads.., loss, gnorm)
   ghat_gnb(params.., tokens[B,T+1] i32, seed i32) -> (ghat..,)
+  uhvp(params.., tokens[B,T+1] i32, seed i32) -> (u*Hu..,)
   eval_step(params.., tokens) -> (loss,)
   logits_last(params.., tokens[B,T]) -> (logits[B,V],)
   hess_diag(params.., tokens, seed) -> (hhat..,)
 
-`grad_step` and `ghat_gnb` serve the engine-resident Rust training path:
-XLA computes only loss + gradients (and the raw, un-EMA'd GNB estimator
-gradient every k steps); the optimizer update and the Hessian EMA run in
-the Rust kernel engine, so the (params, m, h) triple never round-trips
-through literals on a step.
+`grad_step`, `ghat_gnb` and `uhvp` serve the engine-resident Rust training
+path: XLA computes only loss + gradients (and, every k steps, the raw,
+un-EMA'd estimator — the GNB gradient for Sophia-G, the Hutchinson u*(Hu)
+product for Sophia-H); the optimizer update and the Hessian EMA run in the
+Rust kernel engine, so the (params, m, h) triple never round-trips through
+literals on a step.
 
 The `h` slot is the optimizer's second state buffer whatever the variant:
 Sophia's Hessian EMA, AdamW's v, AdaHessian's EMA of squared estimates;
@@ -182,6 +184,34 @@ def make_ghat_gnb(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
         return tuple(jax.grad(sampled)(params))
 
     return ghat_gnb
+
+
+def make_uhvp(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
+    """Raw Hutchinson estimator (Alg. 1 lines 2-3) WITHOUT the EMA: the
+    per-coordinate product u * (Hu) from one HVP on hess_batch_h examples.
+    Mirrors `make_ghat_gnb` for Sophia-H: the engine-resident path fuses
+    `hutchinson` EMA into the Sophia update's memory pass (kernel engine
+    `sophia_update_with_hutchinson_refresh`), so the artifact only supplies
+    the point estimate. Same key/batch discipline as make_hess_step's
+    "hutchinson" variant, so host EMA over this output reproduces
+    `hess_hutchinson` exactly."""
+
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+    def uhvp(params, tokens, seed):
+        key = jax.random.PRNGKey(seed)
+        bh = cfg.hess_batch_h
+        x, y = _split_tokens(tokens[:bh])
+        keys = jax.random.split(key, len(params))
+        u = [jax.random.normal(k, p.shape, jnp.float32)
+             for k, p in zip(keys, params)]
+        grad_fn = jax.grad(lambda lv: loss_of(lv, x, y))
+        _, hvp = jax.jvp(grad_fn, (params,), (u,))
+        return tuple(ui * hv for ui, hv in zip(u, hvp))
+
+    return uhvp
 
 
 def make_hess_step(cfg: ModelConfig, variant: str, use_pallas_model=False,

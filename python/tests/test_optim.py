@@ -171,6 +171,39 @@ def test_ghat_gnb_matches_hess_gnb_after_host_ema():
         np.testing.assert_allclose(np.asarray(ema), np.asarray(ri), rtol=1e-5)
 
 
+def test_uhvp_matches_hess_hutchinson_after_host_ema():
+    """hess_hutchinson == host-side EMA over the raw uhvp u*(Hu) product
+    (same seed), i.e. the engine-resident fused-EMA split for Sophia-H is
+    exact — mirroring the ghat_gnb/hess_gnb parity above."""
+    params, _, h, tokens = _setup()
+    h = [hh + 0.5 for hh in h]
+    np_ = len(params)
+    seed = 23
+    uhvp = optim.make_uhvp(CFG)(params, tokens, seed)
+    assert len(uhvp) == np_
+    for u, p in zip(uhvp, params):
+        assert u.shape == p.shape
+    ref = optim.make_hess_step(CFG, "hutchinson")(params, h, tokens, seed)
+    beta2 = optim.HYPERS["sophia"]["beta2"]
+    for hi, ui, ri in zip(h, uhvp, ref[:np_]):
+        ema = beta2 * hi + (1.0 - beta2) * ui
+        np.testing.assert_allclose(
+            np.asarray(ema), np.asarray(ri), rtol=1e-5, atol=1e-7)
+
+
+def test_uhvp_seed_determinism():
+    """Same seed => identical raw estimate; different seed => a different
+    probe vector u (the Rust coordinator draws seeds per refresh)."""
+    params, _, _, tokens = _setup()
+    fn = jax.jit(optim.make_uhvp(CFG))
+    a = fn(params, tokens, 5)
+    b = fn(params, tokens, 5)
+    c = fn(params, tokens, 6)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(float(jnp.max(jnp.abs(x - y))) > 0 for x, y in zip(a, c))
+
+
 def test_eval_step_matches_loss_fn():
     params, _, _, tokens = _setup()
     ev = optim.make_eval_step(CFG)(params, tokens)[0]

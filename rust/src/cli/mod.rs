@@ -92,8 +92,10 @@ USAGE: sophia <subcommand> [--flags]
          [--log runs/x.jsonl] [--ckpt-dir runs/ckpt] [--ckpt-every N]
          [--config file.toml] [--artifacts artifacts] [--engine]
          (--engine = engine-resident training: state stays in the Rust
-          kernel-engine arena; XLA computes only loss+gradients. Backend
-          via SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>.)
+          kernel-engine arena; XLA computes only loss+gradients. Supports
+          sophia_g, sophia_h, adamw, lion. Backend via
+          SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>, default
+          pool:<ncpu>.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]

@@ -209,15 +209,17 @@ impl Optimizer {
     /// Whether the engine-resident training path has a pure-Rust update
     /// kernel for this optimizer (see `optim::engine::UpdateKernel`).
     pub fn engine_resident_supported(&self) -> bool {
-        matches!(self, Self::SophiaG | Self::AdamW | Self::Lion)
+        matches!(self, Self::SophiaG | Self::SophiaH | Self::AdamW | Self::Lion)
     }
 
     /// Raw Hessian-estimator artifact for the engine-resident path (the
     /// EMA is fused into the engine update, so the artifact returns the
-    /// un-EMA'd estimator gradient). None = no curvature refresh.
+    /// un-EMA'd estimator: the GNB gradient for Sophia-G, the Hutchinson
+    /// u ⊙ (Hu) product for Sophia-H). None = no curvature refresh.
     pub fn ghat_artifact(&self) -> Option<&'static str> {
         match self {
             Self::SophiaG => Some("ghat_gnb"),
+            Self::SophiaH => Some("uhvp"),
             _ => None,
         }
     }
@@ -392,6 +394,18 @@ mod tests {
         assert_eq!(Optimizer::SophiaG.hess_artifact(), Some("hess_gnb"));
         assert_eq!(Optimizer::SophiaH.hess_artifact(), Some("hess_hutchinson"));
         assert_eq!(Optimizer::AdamW.hess_artifact(), None);
+    }
+
+    #[test]
+    fn engine_resident_estimator_artifacts() {
+        // both Sophia estimators run engine-resident, each with its own
+        // raw (un-EMA'd) estimator artifact
+        assert_eq!(Optimizer::SophiaG.ghat_artifact(), Some("ghat_gnb"));
+        assert_eq!(Optimizer::SophiaH.ghat_artifact(), Some("uhvp"));
+        assert!(Optimizer::SophiaH.engine_resident_supported());
+        assert_eq!(Optimizer::AdamW.ghat_artifact(), None);
+        assert_eq!(Optimizer::Lion.ghat_artifact(), None);
+        assert!(!Optimizer::SophiaEF.engine_resident_supported());
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! * **Engine-resident path** (`TrainConfig::engine_resident` /
 //!   `SOPHIA_TRAIN_MODE=engine`): `(p, m, h)` live in a `FlatState` arena
 //!   for the whole run; XLA computes only loss + clipped gradients
-//!   (`grad_step`, plus the raw GNB estimator `ghat_gnb` every k steps),
-//!   and the Sophia/AdamW/Lion update — including the fused every-k GNB
+//!   (`grad_step`, plus — every k steps — the raw estimator: `ghat_gnb`
+//!   for Sophia-G, the Hutchinson `uhvp` product for Sophia-H), and the
+//!   Sophia/AdamW/Lion update — including the fused every-k estimator
 //!   EMA — runs on the kernel engine (default backend: the persistent
 //!   worker pool). Optimizer state crosses the literal boundary only at
 //!   eval/checkpoint/run-end; the per-step 3n literal→`Vec<f32>`→literal
@@ -56,6 +57,16 @@ impl EngineHypers {
                 gamma: model.hyper_f32("sophia", "gamma_g", 0.05),
                 hbeta2: model.hyper_f32("sophia", "beta2", 0.99),
             },
+            // Sophia-H shares the Sophia hyper table but clips with the
+            // Hutchinson-tuned gamma (paper Table: gamma_h < gamma_g).
+            Optimizer::SophiaH => EngineHypers {
+                beta1: model.hyper_f32("sophia", "beta1", 0.96),
+                beta2: 0.0,
+                eps: model.hyper_f32("sophia", "eps", 1e-12),
+                wd: model.hyper_f32("sophia", "wd", 0.2),
+                gamma: model.hyper_f32("sophia", "gamma_h", 0.01),
+                hbeta2: model.hyper_f32("sophia", "beta2", 0.99),
+            },
             Optimizer::AdamW => EngineHypers {
                 beta1: model.hyper_f32("adamw", "beta1", 0.9),
                 beta2: model.hyper_f32("adamw", "beta2", 0.95),
@@ -89,7 +100,7 @@ struct EngineState {
     ghat_path: Option<PathBuf>,
     /// clipped-gradient gather target (grad_step outputs)
     g: AlignedBuf,
-    /// raw GNB estimator gather target (ghat_gnb outputs); empty for
+    /// raw estimator gather target (ghat_gnb / uhvp outputs); empty for
     /// first-order optimizers
     ghat: AlignedBuf,
     /// GNB n_terms = hess_batch_g * ctx (Alg. 2 scale)
@@ -188,7 +199,7 @@ impl Trainer {
         if engine_resident {
             if !cfg.optimizer.engine_resident_supported() {
                 bail!(
-                    "engine-resident training supports sophia_g/adamw/lion, not {}",
+                    "engine-resident training supports sophia_g/sophia_h/adamw/lion, not {}",
                     cfg.optimizer.name()
                 );
             }
@@ -402,8 +413,9 @@ impl Trainer {
     }
 
     /// The engine-resident path: XLA computes loss + clipped gradients
-    /// only; the optimizer update (with the every-k GNB EMA fused into the
-    /// same memory pass) runs on the kernel engine. `m`/`h` never cross
+    /// only; the optimizer update (with the every-k estimator EMA — GNB or
+    /// Hutchinson — fused into the same memory pass) runs on the kernel
+    /// engine. `m`/`h` never cross
     /// the literal boundary; params cross once per step (upload only — the
     /// gradient artifact needs them) and gradients come back once.
     fn engine_step(&mut self, t: usize, lr: f64) -> Result<StepStats> {
@@ -489,6 +501,30 @@ impl Trainer {
                     )
                 }
             }
+            // Sophia-H: identical update, but the every-k refresh fuses the
+            // Hutchinson EMA over the raw u⊙(Hu) product (`uhvp` artifact)
+            // instead of the scaled squared GNB gradient — no n_terms scale.
+            Optimizer::SophiaH => {
+                if refresh {
+                    let c = eng.fs.sophia_step_with_hutchinson_refresh(
+                        &*eng.kernel,
+                        &eng.g,
+                        &eng.ghat,
+                        hyp.hbeta2,
+                        lr32,
+                        hyp.beta1,
+                        hyp.gamma,
+                        hyp.eps,
+                        hyp.wd,
+                    );
+                    hnorm = l2_norm(&eng.fs.h);
+                    c
+                } else {
+                    eng.fs.sophia_step(
+                        &*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.gamma, hyp.eps, hyp.wd,
+                    )
+                }
+            }
             // AdamW threads its second moment through the uniform `h` slot
             // — the same convention the artifacts use (python/compile/
             // optim.py), so checkpoints stay interchangeable. Deliberately
@@ -516,7 +552,7 @@ impl Trainer {
             }
             _ => bail!("engine-resident mode does not support {}", cfg.optimizer.name()),
         };
-        let clipfrac = if matches!(cfg.optimizer, Optimizer::SophiaG) {
+        let clipfrac = if matches!(cfg.optimizer, Optimizer::SophiaG | Optimizer::SophiaH) {
             clipped as f64 / eng.fs.len().max(1) as f64
         } else {
             0.0

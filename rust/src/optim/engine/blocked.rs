@@ -153,6 +153,73 @@ pub fn sophia_update_with_gnb_refresh(
     clipped
 }
 
+/// Fused Sophia step with the Hutchinson Hessian-EMA refresh folded into
+/// the same memory pass (the Sophia-H every-k-step case: one walk over
+/// p/m/h/g/uhvp instead of an EMA pass followed by an update pass, where
+/// `uhvp` is the precomputed u ⊙ (Hu) product from the raw artifact).
+/// Bit-for-bit equal to `uhvp_ema` followed by `sophia_update`.
+pub fn sophia_update_with_hutchinson_refresh(
+    p: &mut [f32],
+    m: &mut [f32],
+    h: &mut [f32],
+    g: &[f32],
+    uhvp: &[f32],
+    hbeta2: f32,
+    lr: f32,
+    beta1: f32,
+    gamma: f32,
+    eps: f32,
+    wd: f32,
+) -> usize {
+    let n = p.len();
+    debug_assert!(m.len() == n && h.len() == n && g.len() == n && uhvp.len() == n);
+    let c1 = 1.0 - beta1;
+    let c2 = 1.0 - hbeta2;
+    let decay = 1.0 - lr * wd;
+    let mut clipped = 0usize;
+    for (s, e) in blocks(n) {
+        let (pb, mb, hb) = (&mut p[s..e], &mut m[s..e], &mut h[s..e]);
+        let (gb, ub) = (&g[s..e], &uhvp[s..e]);
+        let mut lane_clips = [0usize; LANES];
+        let mut pc = pb.chunks_exact_mut(LANES);
+        let mut mc = mb.chunks_exact_mut(LANES);
+        let mut hc = hb.chunks_exact_mut(LANES);
+        let mut gc = gb.chunks_exact(LANES);
+        let mut uc = ub.chunks_exact(LANES);
+        for ((((pk, mk), hk), gk), uk) in
+            (&mut pc).zip(&mut mc).zip(&mut hc).zip(&mut gc).zip(&mut uc)
+        {
+            let pk = lanes_mut::<LANES>(pk);
+            let mk = lanes_mut::<LANES>(mk);
+            let hk = lanes_mut::<LANES>(hk);
+            let gk = lanes::<LANES>(gk);
+            let uk = lanes::<LANES>(uk);
+            for l in 0..LANES {
+                let hi = hbeta2 * hk[l] + c2 * uk[l];
+                hk[l] = hi;
+                let mi = beta1 * mk[l] + c1 * gk[l];
+                mk[l] = mi;
+                let r = mi / (gamma * hi).max(eps);
+                lane_clips[l] += (r.abs() >= 1.0) as usize;
+                pk[l] = pk[l] * decay - lr * r.clamp(-1.0, 1.0);
+            }
+        }
+        clipped += lane_clips.iter().sum::<usize>();
+        let (pt, mt, ht) = (pc.into_remainder(), mc.into_remainder(), hc.into_remainder());
+        let (gt, ut) = (gc.remainder(), uc.remainder());
+        for l in 0..pt.len() {
+            let hi = hbeta2 * ht[l] + c2 * ut[l];
+            ht[l] = hi;
+            let mi = beta1 * mt[l] + c1 * gt[l];
+            mt[l] = mi;
+            let r = mi / (gamma * hi).max(eps);
+            clipped += (r.abs() >= 1.0) as usize;
+            pt[l] = pt[l] * decay - lr * r.clamp(-1.0, 1.0);
+        }
+    }
+    clipped
+}
+
 /// AdamW step; agrees with `kernels::adamw_update` to within 1 ulp (the
 /// bias-correction `powf` is hoisted identically, so in practice results
 /// are bit-identical on the same libm).
@@ -277,6 +344,32 @@ pub fn gnb_ema(h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
     }
 }
 
+/// Hutchinson Hessian-EMA refresh over the precomputed u ⊙ (Hu) product;
+/// bit-for-bit equal to `kernels::uhvp_ema`.
+pub fn uhvp_ema(h: &mut [f32], uhvp: &[f32], beta2: f32) {
+    let n = h.len();
+    debug_assert!(uhvp.len() == n);
+    let c2 = 1.0 - beta2;
+    for (s, e) in blocks(n) {
+        let hb = &mut h[s..e];
+        let ub = &uhvp[s..e];
+        let mut hc = hb.chunks_exact_mut(LANES);
+        let mut uc = ub.chunks_exact(LANES);
+        for (hk, uk) in (&mut hc).zip(&mut uc) {
+            let hk = lanes_mut::<LANES>(hk);
+            let uk = lanes::<LANES>(uk);
+            for l in 0..LANES {
+                hk[l] = beta2 * hk[l] + c2 * uk[l];
+            }
+        }
+        let ht = hc.into_remainder();
+        let ut = uc.remainder();
+        for l in 0..ht.len() {
+            ht[l] = beta2 * ht[l] + c2 * ut[l];
+        }
+    }
+}
+
 /// Hutchinson Hessian-EMA refresh; bit-for-bit equal to
 /// `kernels::hutchinson_ema`.
 pub fn hutchinson_ema(h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
@@ -365,6 +458,31 @@ mod tests {
     }
 
     #[test]
+    fn fused_hutchinson_refresh_equals_two_pass() {
+        for (seed, &n) in SIZES.iter().enumerate() {
+            let mut rng = Rng::new(400 + seed as u64);
+            let p0 = rand_vec(&mut rng, n, 1.0);
+            let m0 = rand_vec(&mut rng, n, 1.0);
+            let h0 = rand_vec(&mut rng, n, 1.0);
+            let g = rand_vec(&mut rng, n, 1.0);
+            let uhvp = rand_vec(&mut rng, n, 1.0);
+            let (mut ps, mut ms, mut hs) = (p0.clone(), m0.clone(), h0.clone());
+            kernels::uhvp_ema(&mut hs, &uhvp, 0.99);
+            let cs = kernels::sophia_update(&mut ps, &mut ms, &hs, &g, 1e-3, 0.96, 0.01, 1e-12, 0.1);
+            let (mut pf, mut mf, mut hf) = (p0, m0, h0);
+            let cf = sophia_update_with_hutchinson_refresh(
+                &mut pf, &mut mf, &mut hf, &g, &uhvp, 0.99, 1e-3, 0.96, 0.01, 1e-12, 0.1,
+            );
+            assert_eq!(cs, cf, "clip count n={n}");
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pf[i].to_bits(), "p[{i}] n={n}");
+                assert_eq!(ms[i].to_bits(), mf[i].to_bits(), "m[{i}] n={n}");
+                assert_eq!(hs[i].to_bits(), hf[i].to_bits(), "h[{i}] n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn adamw_matches_scalar_oracle_to_ulp() {
         for (seed, &n) in SIZES.iter().enumerate() {
             let mut rng = Rng::new(200 + seed as u64);
@@ -415,6 +533,14 @@ mod tests {
             hutchinson_ema(&mut hb, &c, &d, 0.99);
             for i in 0..n {
                 assert_eq!(hs[i].to_bits(), hb[i].to_bits(), "hutch h[{i}] n={n}");
+            }
+
+            let mut hs = b0.clone();
+            kernels::uhvp_ema(&mut hs, &d, 0.99);
+            let mut hb = b0.clone();
+            uhvp_ema(&mut hb, &d, 0.99);
+            for i in 0..n {
+                assert_eq!(hs[i].to_bits(), hb[i].to_bits(), "uhvp h[{i}] n={n}");
             }
         }
     }

@@ -218,6 +218,24 @@ impl FlatState {
     }
 
     #[allow(clippy::too_many_arguments)]
+    pub fn sophia_step_with_hutchinson_refresh(
+        &mut self,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        k.sophia_update_with_hutchinson_refresh(
+            &mut self.p, &mut self.m, &mut self.h, g, uhvp, hbeta2, lr, beta1, gamma, eps, wd,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
     pub fn adamw_step(
         &mut self,
         k: &dyn UpdateKernel,
@@ -256,6 +274,13 @@ impl FlatState {
         beta2: f32,
     ) {
         k.hutchinson_ema(&mut self.h, u, hvp, beta2)
+    }
+
+    /// Hutchinson refresh from the precomputed u ⊙ (Hu) product (the raw
+    /// `uhvp` artifact's output) — the standalone half of what
+    /// [`Self::sophia_step_with_hutchinson_refresh`] fuses.
+    pub fn hutchinson_refresh_uhvp(&mut self, k: &dyn UpdateKernel, uhvp: &[f32], beta2: f32) {
+        k.uhvp_ema(&mut self.h, uhvp, beta2)
     }
 }
 

@@ -75,6 +75,25 @@ pub trait UpdateKernel: Send + Sync {
         wd: f32,
     ) -> usize;
 
+    /// The Sophia-H every-k-step case: Hutchinson Hessian-EMA refresh
+    /// (over the precomputed `uhvp = u ⊙ Hu` product) fused into the same
+    /// memory pass as the Sophia step. Semantics = `uhvp_ema` then
+    /// `sophia_update`.
+    fn sophia_update_with_hutchinson_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize;
+
     fn adamw_update(
         &self,
         p: &mut [f32],
@@ -103,6 +122,10 @@ pub trait UpdateKernel: Send + Sync {
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32);
 
     fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32);
+
+    /// Hutchinson EMA over the precomputed `uhvp = u ⊙ Hu` product (the
+    /// single buffer the raw `uhvp` artifact returns).
+    fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32);
 }
 
 // ---------------------------------------------------------------------
@@ -153,6 +176,25 @@ impl UpdateKernel for ScalarOracle {
         )
     }
 
+    fn sophia_update_with_hutchinson_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        kernels::sophia_update_with_hutchinson_refresh(
+            p, m, h, g, uhvp, hbeta2, lr, beta1, gamma, eps, wd,
+        )
+    }
+
     fn adamw_update(
         &self,
         p: &mut [f32],
@@ -188,6 +230,10 @@ impl UpdateKernel for ScalarOracle {
 
     fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
         kernels::hutchinson_ema(h, u, hvp, beta2)
+    }
+
+    fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
+        kernels::uhvp_ema(h, uhvp, beta2)
     }
 }
 
@@ -239,6 +285,25 @@ impl UpdateKernel for BlockedEngine {
         )
     }
 
+    fn sophia_update_with_hutchinson_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        blocked::sophia_update_with_hutchinson_refresh(
+            p, m, h, g, uhvp, hbeta2, lr, beta1, gamma, eps, wd,
+        )
+    }
+
     fn adamw_update(
         &self,
         p: &mut [f32],
@@ -274,6 +339,10 @@ impl UpdateKernel for BlockedEngine {
 
     fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
         blocked::hutchinson_ema(h, u, hvp, beta2)
+    }
+
+    fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
+        blocked::uhvp_ema(h, uhvp, beta2)
     }
 }
 
@@ -367,6 +436,44 @@ impl UpdateKernel for ThreadedEngine {
         })
     }
 
+    fn sophia_update_with_hutchinson_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let shards = self.shards(p.len());
+        let (pp, mp, hp) =
+            (SendPtr(p.as_mut_ptr()), SendPtr(m.as_mut_ptr()), SendPtr(h.as_mut_ptr()));
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            let ms = unsafe { shard_mut(mp, &r) };
+            let hs = unsafe { shard_mut(hp, &r) };
+            blocked::sophia_update_with_hutchinson_refresh(
+                ps,
+                ms,
+                hs,
+                &g[r.clone()],
+                &uhvp[r],
+                hbeta2,
+                lr,
+                beta1,
+                gamma,
+                eps,
+                wd,
+            )
+        })
+    }
+
     fn adamw_update(
         &self,
         p: &mut [f32],
@@ -435,6 +542,17 @@ impl UpdateKernel for ThreadedEngine {
             0
         });
     }
+
+    fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
+        let shards = self.shards(h.len());
+        let hp = SendPtr(h.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let hs = unsafe { shard_mut(hp, &r) };
+            blocked::uhvp_ema(hs, &uhvp[r], beta2);
+            0
+        });
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -480,9 +598,14 @@ impl Backend {
 
     /// Select from `SOPHIA_ENGINE` (`scalar`, `blocked`, `threads:<n>`,
     /// `pool:<n>`, bare `pool` = all cores); anything else / unset gives
-    /// the default (threaded on all cores).
+    /// the global default: the persistent parked worker pool on all cores
+    /// (`pool:<ncpu>`). By design the pool should never lose to the
+    /// per-step `thread::scope` crew (identical arithmetic and sharding,
+    /// no spawn cost, pinned shard blocks) — the `perf_kernels` dispatch
+    /// probe records the measured delta; `SOPHIA_ENGINE=threads:<n>` et
+    /// al. still override.
     pub fn from_env() -> Backend {
-        Self::from_env_or(Backend::Threaded(default_threads()))
+        Self::from_env_or(Backend::Pool(default_threads()))
     }
 
     /// Select from `SOPHIA_ENGINE` (`scalar`, `blocked`, `threads:<n>`,

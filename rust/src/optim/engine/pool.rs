@@ -499,6 +499,48 @@ impl UpdateKernel for PoolEngine {
         })
     }
 
+    fn sophia_update_with_hutchinson_refresh(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        h: &mut [f32],
+        g: &[f32],
+        uhvp: &[f32],
+        hbeta2: f32,
+        lr: f32,
+        beta1: f32,
+        gamma: f32,
+        eps: f32,
+        wd: f32,
+    ) -> usize {
+        let (pp, mp, hp) = (
+            SendPtr(p.as_mut_ptr()),
+            SendPtr(m.as_mut_ptr()),
+            SendPtr(h.as_mut_ptr()),
+        );
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                let ms = unsafe { shard_mut(mp, &r) };
+                let hs = unsafe { shard_mut(hp, &r) };
+                blocked::sophia_update_with_hutchinson_refresh(
+                    ps,
+                    ms,
+                    hs,
+                    &g[r.clone()],
+                    &uhvp[r],
+                    hbeta2,
+                    lr,
+                    beta1,
+                    gamma,
+                    eps,
+                    wd,
+                )
+            })
+        })
+    }
+
     fn adamw_update(
         &self,
         p: &mut [f32],
@@ -570,6 +612,18 @@ impl UpdateKernel for PoolEngine {
                 // SAFETY: shards from `partition` are disjoint and in-bounds.
                 let hs = unsafe { shard_mut(hp, &r) };
                 blocked::hutchinson_ema(hs, &u[r.clone()], &hvp[r], beta2);
+                0
+            })
+        });
+    }
+
+    fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
+        let hp = SendPtr(h.as_mut_ptr());
+        self.with_shards(h.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let hs = unsafe { shard_mut(hp, &r) };
+                blocked::uhvp_ema(hs, &uhvp[r], beta2);
                 0
             })
         });

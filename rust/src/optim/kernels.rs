@@ -107,6 +107,38 @@ pub fn hutchinson_ema(h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32) {
     }
 }
 
+/// Hutchinson Hessian-EMA refresh over the precomputed per-coordinate
+/// product `uhvp = u ⊙ (Hu)` — what the raw `uhvp` artifact returns for
+/// the engine-resident Sophia-H path (the artifact forms the product, so
+/// only one buffer crosses the literal boundary).
+pub fn uhvp_ema(h: &mut [f32], uhvp: &[f32], beta2: f32) {
+    for i in 0..h.len() {
+        h[i] = beta2 * h[i] + (1.0 - beta2) * uhvp[i];
+    }
+}
+
+/// Scalar reference for the fused every-k-step Sophia-H path: Hutchinson
+/// Hessian-EMA refresh (over the precomputed `uhvp` product) immediately
+/// followed by the Sophia step (two passes here; the engine fuses them
+/// into one). Returns the clipped-coordinate count.
+#[allow(clippy::too_many_arguments)]
+pub fn sophia_update_with_hutchinson_refresh(
+    p: &mut [f32],
+    m: &mut [f32],
+    h: &mut [f32],
+    g: &[f32],
+    uhvp: &[f32],
+    hbeta2: f32,
+    lr: f32,
+    beta1: f32,
+    gamma: f32,
+    eps: f32,
+    wd: f32,
+) -> usize {
+    uhvp_ema(h, uhvp, hbeta2);
+    sophia_update(p, m, h, g, lr, beta1, gamma, eps, wd)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +207,25 @@ mod tests {
         let (_, _, _, g) = vecs(256, 5);
         gnb_ema(&mut h, &g, 240.0, 0.99);
         assert!(h.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fused_hutchinson_refresh_equals_ema_then_update() {
+        let (mut p, mut m, mut h, g) = vecs(4096, 6);
+        let (uhvp, _, _, _) = vecs(4096, 7);
+        let (p0, m0, h0) = (p.clone(), m.clone(), h.clone());
+        let c = sophia_update_with_hutchinson_refresh(
+            &mut p, &mut m, &mut h, &g, &uhvp, 0.99, 1e-3, 0.96, 0.01, 1e-12, 0.1,
+        );
+        let (mut pr, mut mr, mut hr) = (p0, m0, h0);
+        uhvp_ema(&mut hr, &uhvp, 0.99);
+        let cr = sophia_update(&mut pr, &mut mr, &hr, &g, 1e-3, 0.96, 0.01, 1e-12, 0.1);
+        assert_eq!(c, cr);
+        for i in 0..p.len() {
+            assert_eq!(p[i].to_bits(), pr[i].to_bits());
+            assert_eq!(m[i].to_bits(), mr[i].to_bits());
+            assert_eq!(h[i].to_bits(), hr[i].to_bits());
+        }
     }
 
     #[test]

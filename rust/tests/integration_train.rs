@@ -150,6 +150,73 @@ fn engine_resident_training_end_to_end() -> Result<()> {
 }
 
 #[test]
+fn engine_resident_sophia_h_end_to_end() -> Result<()> {
+    // Sophia-H parity with Sophia-G on the engine-resident path: the raw
+    // Hutchinson u⊙(Hu) artifact (`uhvp`) feeds the fused
+    // sophia_update_with_hutchinson_refresh kernel, (p, m, h) stay
+    // arena-resident, and checkpoints remain byte-compatible with the
+    // artifact path.
+    use sophia::optim::engine::StateKind;
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = sophia::ModelConfig::load(&artifacts_root(), "nano")?;
+    if !model.has_artifact("grad_step") || !model.has_artifact("uhvp") {
+        eprintln!("SKIP: artifacts predate grad_step/uhvp (re-run `make artifacts`)");
+        return Ok(());
+    }
+    let dir = std::env::temp_dir().join("sophia_h_engine_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut cfg = base("nano", Optimizer::SophiaH, 20);
+    cfg.hess_interval = 4;
+    cfg.engine_resident = true;
+    let mut t1 = Trainer::new(cfg.clone())?;
+    assert!(t1.engine_resident());
+    let first = t1.train_step()?.loss;
+    let out = t1.train_steps(9, false)?;
+    assert!(!out.diverged, "sophia_h engine path diverged");
+    assert!(
+        out.final_train_loss < first,
+        "sophia_h engine path did not descend: {first} -> {}",
+        out.final_train_loss
+    );
+    // the Hutchinson refresh ran and produced a live curvature EMA
+    let refreshes: Vec<_> = t1.log.records.iter().filter(|r| r.hess_ms > 0.0).collect();
+    assert!(!refreshes.is_empty(), "no Hutchinson refresh recorded");
+    assert!(refreshes.iter().all(|r| r.hnorm > 0.0), "hnorm not captured at refresh");
+    let val = t1.eval(2)?;
+    assert!(val.is_finite());
+    t1.save_checkpoint(&dir)?;
+
+    // restore into a fresh engine-resident trainer: arena state is exact
+    let mut t2 = Trainer::new(cfg.clone())?;
+    t2.load_checkpoint(&dir)?;
+    assert_eq!(t2.step, t1.step);
+    let (a, b) = (t1.flat_view().unwrap(), t2.flat_view().unwrap());
+    for kind in [StateKind::P, StateKind::M, StateKind::H] {
+        let (x, y) = (a.buf(kind), b.buf(kind));
+        assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            assert_eq!(x[i].to_bits(), y[i].to_bits(), "{kind:?}[{i}] restore not exact");
+        }
+    }
+    assert!(t2.train_step()?.loss.is_finite());
+
+    // byte-compatible with the artifact path: the same checkpoint restores
+    // onto a literal-threaded sophia_h trainer and keeps training
+    let mut cfg_art = cfg.clone();
+    cfg_art.engine_resident = false;
+    let mut t3 = Trainer::new(cfg_art)?;
+    t3.load_checkpoint(&dir)?;
+    assert!(t3.train_step()?.loss.is_finite());
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+#[test]
 fn divergence_detection_stops_training() -> Result<()> {
     if !have("nano") {
         eprintln!("SKIP: run `make artifacts` first");

@@ -281,6 +281,39 @@ fn prop_engine_fused_gnb_refresh_bitwise_equals_two_pass_oracle() {
 }
 
 #[test]
+fn prop_engine_fused_hutchinson_refresh_bitwise_equals_two_pass_oracle() {
+    // Sophia-H's every-k case: the Hutchinson EMA over the raw u⊙(Hu)
+    // product fused into the update pass, vs uhvp_ema + sophia_update on
+    // the scalar oracle — bitwise, clip counts included, over ragged
+    // shard lengths and 1/2/4 workers on both thread drivers.
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x407C);
+        let n = 1 + rng.below(2000) as usize;
+        let p0 = rand_vec(&mut rng, n, 1.0);
+        let m0 = rand_vec(&mut rng, n, 1.0);
+        let h0 = rand_vec(&mut rng, n, 1.0);
+        let g = rand_vec(&mut rng, n, 1.0);
+        let uhvp = rand_vec(&mut rng, n, 1.0);
+        let (mut ps, mut ms, mut hs) = (p0.clone(), m0.clone(), h0.clone());
+        let cs = kernels::sophia_update_with_hutchinson_refresh(
+            &mut ps, &mut ms, &mut hs, &g, &uhvp, 0.99, 1e-3, 0.96, 0.01, 1e-12, 0.1,
+        );
+        for k in engine_backends() {
+            let (mut pe, mut me, mut he) = (p0.clone(), m0.clone(), h0.clone());
+            let ce = k.sophia_update_with_hutchinson_refresh(
+                &mut pe, &mut me, &mut he, &g, &uhvp, 0.99, 1e-3, 0.96, 0.01, 1e-12, 0.1,
+            );
+            assert_eq!(cs, ce, "clip count: backend {} seed {seed}", k.name());
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "{} p[{i}] seed {seed}", k.name());
+                assert_eq!(ms[i].to_bits(), me[i].to_bits(), "{} m[{i}] seed {seed}", k.name());
+                assert_eq!(hs[i].to_bits(), he[i].to_bits(), "{} h[{i}] seed {seed}", k.name());
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_engine_adamw_matches_oracle_within_one_ulp() {
     for seed in 0..25u64 {
         let mut rng = Rng::new(seed ^ 0xADA);
@@ -318,6 +351,8 @@ fn prop_engine_lion_and_emas_bitwise_equal_oracle() {
         kernels::gnb_ema(&mut hs_gnb, &c, 240.0, 0.99);
         let mut hs_hut = b0.clone();
         kernels::hutchinson_ema(&mut hs_hut, &c, &d, 0.99);
+        let mut hs_uhvp = b0.clone();
+        kernels::uhvp_ema(&mut hs_uhvp, &d, 0.99);
         for k in engine_backends() {
             let (mut pe, mut me) = (a0.clone(), b0.clone());
             k.lion_update(&mut pe, &mut me, &c, 2e-3, 0.95, 0.98, 0.1);
@@ -325,11 +360,14 @@ fn prop_engine_lion_and_emas_bitwise_equal_oracle() {
             k.gnb_ema(&mut he_gnb, &c, 240.0, 0.99);
             let mut he_hut = b0.clone();
             k.hutchinson_ema(&mut he_hut, &c, &d, 0.99);
+            let mut he_uhvp = b0.clone();
+            k.uhvp_ema(&mut he_uhvp, &d, 0.99);
             for i in 0..n {
                 assert_eq!(ps[i].to_bits(), pe[i].to_bits(), "{} lion p[{i}]", k.name());
                 assert_eq!(ms[i].to_bits(), me[i].to_bits(), "{} lion m[{i}]", k.name());
                 assert_eq!(hs_gnb[i].to_bits(), he_gnb[i].to_bits(), "{} gnb h[{i}]", k.name());
                 assert_eq!(hs_hut[i].to_bits(), he_hut[i].to_bits(), "{} hutch h[{i}]", k.name());
+                assert_eq!(hs_uhvp[i].to_bits(), he_uhvp[i].to_bits(), "{} uhvp h[{i}]", k.name());
             }
         }
     }

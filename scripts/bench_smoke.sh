@@ -18,6 +18,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_smoke.sh: no cargo toolchain on PATH — install rust (rustup.rs)" >&2
+    echo "or run the CI bench-smoke job (.github/workflows/ci.yml, 'bench' label)." >&2
+    exit 1
+fi
+
 export SOPHIA_BENCH_SCALE="${SOPHIA_BENCH_SCALE:-0.05}"
 echo "== bench smoke (SOPHIA_BENCH_SCALE=$SOPHIA_BENCH_SCALE) =="
 cargo bench --bench perf_kernels

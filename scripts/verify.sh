@@ -9,6 +9,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify.sh: no cargo toolchain on PATH — install rust (rustup.rs) or" >&2
+    echo "run inside the rust_pallas image / CI (.github/workflows/ci.yml)." >&2
+    echo "Without cargo only the python layer is verifiable:" >&2
+    echo "  cd python && python3 -m pytest tests/ -q" >&2
+    exit 1
+fi
+
 cargo fmt --check
 cargo build --release
 cargo test -q
