@@ -1,18 +1,20 @@
 //! Perf: the flat-state kernel engine vs the scalar oracle (EXPERIMENTS.md
 //! §Perf). Sweeps 1M–64M params × {scalar, blocked, blocked+threads,
 //! persistent pool} on the fused Sophia update, plus the fused-GNB-refresh
-//! pass and a scope-spawn-vs-parked-pool dispatch-overhead probe at the 1M
-//! small end, and emits `BENCH_kernels.json` so the perf trajectory is
-//! recorded per PR.
+//! pass, a scope-spawn-vs-parked-pool dispatch-overhead probe, and a
+//! boxed-`UpdateRule`-vs-direct-kernel-call probe at the 1M small end, and
+//! emits `BENCH_kernels.json` so the perf trajectory is recorded per PR.
 //!
 //! Needs no artifacts — this is the pure-Rust path. Scale with
 //! `SOPHIA_BENCH_SCALE` (e.g. 0.05 for smoke runs; see
 //! `scripts/bench_smoke.sh`). Acceptance target: ≥ 3× median speedup for
 //! the 4-thread engine over the scalar oracle on the 16M-param update.
 
+use sophia::config::Optimizer;
 use sophia::optim::engine::{
-    AlignedBuf, Backend, FlatState, PoolEngine, StateKind, DEFAULT_SHARD_LEN,
+    AlignedBuf, Backend, FlatState, PoolEngine, StateKind, UpdateKernel, DEFAULT_SHARD_LEN,
 };
+use sophia::optim::rules::{default_hypers, rule_for, StepCtx};
 use sophia::rng::Rng;
 use sophia::util::bench::{bench, scale, scaled, Table};
 use sophia::util::json::Json;
@@ -76,7 +78,9 @@ fn main() -> anyhow::Result<()> {
         for b in &backends {
             let k = b.build();
             let st = bench(warmup, reps, || {
-                let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+                let c = k.sophia_update(
+                    &mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1,
+                );
                 std::hint::black_box(c);
             });
             let speedup =
@@ -121,12 +125,15 @@ fn main() -> anyhow::Result<()> {
     }
     let k = Backend::Threaded(4).build();
     let two_pass = bench(2, 9, || {
-        fs.gnb_refresh(&*k, &ghat, 240.0, 0.99);
-        let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        k.gnb_ema(&mut fs.h, &ghat, 240.0, 0.99);
+        let c = k.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let fused = bench(2, 9, || {
-        let c = fs.sophia_step_with_gnb_refresh(&*k, &g, &ghat, 240.0, 0.99, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        let c = k.sophia_update_with_gnb_refresh(
+            &mut fs.p, &mut fs.m, &mut fs.h, &g, &ghat, 240.0, 0.99, 6e-4, 0.96, 0.01, 1e-12,
+            0.1,
+        );
         std::hint::black_box(c);
     });
     for (name, st, bytes_per_elem) in [
@@ -157,13 +164,13 @@ fn main() -> anyhow::Result<()> {
     // pass (identical stream counts to the GNB case — the product arrives
     // precomputed from the `uhvp` artifact).
     let hutch_two_pass = bench(2, 9, || {
-        fs.hutchinson_refresh_uhvp(&*k, &ghat, 0.99);
-        let c = fs.sophia_step(&*k, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        k.uhvp_ema(&mut fs.h, &ghat, 0.99);
+        let c = k.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let hutch_fused = bench(2, 9, || {
-        let c = fs.sophia_step_with_hutchinson_refresh(
-            &*k, &g, &ghat, 0.99, 6e-4, 0.96, 0.01, 1e-12, 0.1,
+        let c = k.sophia_update_with_hutchinson_refresh(
+            &mut fs.p, &mut fs.m, &mut fs.h, &g, &ghat, 0.99, 6e-4, 0.96, 0.01, 1e-12, 0.1,
         );
         std::hint::black_box(c);
     });
@@ -202,11 +209,11 @@ fn main() -> anyhow::Result<()> {
     let kt = Backend::Threaded(4).build();
     let kp = PoolEngine::with_shard_len_pin(4, DEFAULT_SHARD_LEN, false);
     let st_scope = bench(3, 15, || {
-        let c = fs.sophia_step(&*kt, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        let c = kt.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let st_pool = bench(3, 15, || {
-        let c = fs.sophia_step(&kp, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        let c = kp.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
         std::hint::black_box(c);
     });
     let dispatch_delta_ms = st_scope.median_ms - st_pool.median_ms;
@@ -228,6 +235,51 @@ fn main() -> anyhow::Result<()> {
         ("delta_ms", Json::Num(dispatch_delta_ms)),
     ]));
 
+    // Trait-object dispatch overhead of the UpdateRule redesign: the
+    // trainer now reaches the kernel through `dyn UpdateRule::apply`
+    // (exactly the trait object EngineState holds) instead of calling the
+    // kernel method directly. Same 1M-param Sophia step on the same
+    // unpinned pool, so the median delta IS the rule indirection cost (two
+    // virtual calls + StepCtx build per step) — measured, not assumed.
+    let rule = rule_for(Optimizer::SophiaG);
+    // same constants as the direct call (schema order: beta1, hbeta2,
+    // eps, wd, gamma) so both paths run identical arithmetic
+    let mut hypers = default_hypers(rule);
+    hypers.copy_from_slice(&[0.96, 0.99, 1e-12, 0.1, 0.01]);
+    let st_direct = bench(3, 15, || {
+        let c = kp.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 6e-4, 0.96, 0.01, 1e-12, 0.1);
+        std::hint::black_box(c);
+    });
+    let st_rule = bench(3, 15, || {
+        let ctx = StepCtx {
+            lr: 6e-4,
+            t: 1.0,
+            estimator: None,
+            est_scale: 240.0,
+            hypers: &hypers,
+        };
+        let out = rule.apply(&mut fs, &kp, &g, &ctx).unwrap();
+        std::hint::black_box(out.clipped);
+    });
+    let rule_delta_ms = st_rule.median_ms - st_direct.median_ms;
+    for (name, st) in [("dispatch direct-call", &st_direct), ("dispatch boxed-rule", &st_rule)] {
+        table.row(&[
+            name.into(),
+            "1M".into(),
+            "pool:4".into(),
+            format!("{:.3}", st.median_ms),
+            format!("{:.2}", st.throughput_gbs(n * SOPHIA_BYTES_PER_ELEM)),
+            format!("{:.2}x", st_direct.median_ms / st.median_ms),
+        ]);
+    }
+    records.push(obj(vec![
+        ("kernel", Json::Str("rule_dispatch_overhead_1m".into())),
+        ("n", Json::Num(n as f64)),
+        ("direct_call_ms", Json::Num(st_direct.median_ms)),
+        ("boxed_rule_ms", Json::Num(st_rule.median_ms)),
+        ("delta_ms", Json::Num(rule_delta_ms)),
+    ]));
+
     println!("{}", table.render());
     println!(
         "16M sophia, threads:4 vs scalar: {speedup_16m_t4:.2}x (acceptance target >= 3x)"
@@ -236,6 +288,10 @@ fn main() -> anyhow::Result<()> {
         "1M dispatch: scope-spawn {:.3} ms vs parked pool {:.3} ms (pool saves {dispatch_delta_ms:.3} ms/step)",
         st_scope.median_ms, st_pool.median_ms
     );
+    println!(
+        "1M rule dispatch: direct kernel call {:.3} ms vs dyn UpdateRule {:.3} ms (rule costs {rule_delta_ms:.3} ms/step)",
+        st_direct.median_ms, st_rule.median_ms
+    );
 
     let out = obj(vec![
         ("bench", Json::Str("perf_kernels".into())),
@@ -243,6 +299,7 @@ fn main() -> anyhow::Result<()> {
         ("sophia_bytes_per_elem", Json::Num(SOPHIA_BYTES_PER_ELEM as f64)),
         ("sophia_16m_speedup_threads4", Json::Num(speedup_16m_t4)),
         ("pool_dispatch_delta_ms_1m", Json::Num(dispatch_delta_ms)),
+        ("rule_dispatch_delta_ms_1m", Json::Num(rule_delta_ms)),
         ("records", Json::Arr(records)),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");

@@ -69,10 +69,13 @@ def artifact_plan(cfg):
         plan[f"hess_{v}"] = (optim.make_hess_step(cfg, v), (p, p, tok, i))
     # engine-resident path: gradient-only step + raw estimators (the
     # optimizer update and Hessian EMA run in the Rust kernel engine).
-    # Both estimators lower for every preset — sophia_g and sophia_h run
-    # engine-resident everywhere, independent of the trimmed hess_* set.
+    # Every estimator lowers for every preset — the engine-resident rules
+    # (registry.json `engine: true`) run everywhere, independent of the
+    # trimmed hess_* set. `python -m compile.registry` asserts this plan
+    # stays in lockstep with the Rust UpdateRule registry.
     plan["grad_step"] = (optim.make_grad_step(cfg), (p, tok))
     plan["ghat_gnb"] = (optim.make_ghat_gnb(cfg), (p, tok, i))
+    plan["ghat_ef"] = (optim.make_ghat_ef(cfg), (p, tok, i))
     plan["uhvp"] = (optim.make_uhvp(cfg), (p, tok, i))
     plan["eval_step"] = (optim.make_eval_step(cfg), (p, tok))
     plan["logits_last"] = (optim.make_logits_last(cfg), (p, toks_ctx))
@@ -123,6 +126,7 @@ def write_manifest(cfg, outdir, names):
             "hess_outputs": "h*, hnorm",
             "grad": "(params*, tokens[B,T+1]:i32) -> (clipped grads*, loss, gnorm)",
             "ghat_gnb": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
+            "ghat_ef": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
             "uhvp": "(params*, tokens[B,T+1]:i32, seed:i32) -> (u*Hu*,)",
             "eval": "(params*, tokens) -> (loss,)",
             "logits_last": "(params*, tokens[B,T]) -> (logits[B,V],)",

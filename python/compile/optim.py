@@ -9,17 +9,21 @@ Artifact calling conventions (mirrored by rust/src/runtime/manifest.rs):
       -> (h'.., hnorm)
   grad_step(params.., tokens[B,T+1] i32) -> (clipped grads.., loss, gnorm)
   ghat_gnb(params.., tokens[B,T+1] i32, seed i32) -> (ghat..,)
+  ghat_ef(params.., tokens[B,T+1] i32, seed i32) -> (ghat..,)
   uhvp(params.., tokens[B,T+1] i32, seed i32) -> (u*Hu..,)
   eval_step(params.., tokens) -> (loss,)
   logits_last(params.., tokens[B,T]) -> (logits[B,V],)
   hess_diag(params.., tokens, seed) -> (hhat..,)
 
-`grad_step`, `ghat_gnb` and `uhvp` serve the engine-resident Rust training
-path: XLA computes only loss + gradients (and, every k steps, the raw,
-un-EMA'd estimator — the GNB gradient for Sophia-G, the Hutchinson u*(Hu)
-product for Sophia-H); the optimizer update and the Hessian EMA run in the
-Rust kernel engine, so the (params, m, h) triple never round-trips through
-literals on a step.
+`grad_step` and the raw estimators (`ghat_gnb`, `ghat_ef`, `uhvp`) serve
+the engine-resident Rust training path: XLA computes only loss + gradients
+(and, every k steps, the raw, un-EMA'd estimator the optimizer's
+UpdateRule declares — the GNB gradient for Sophia-G, the true-label
+Empirical-Fisher gradient for Sophia-EF, the Hutchinson u*(Hu) product for
+Sophia-H); the optimizer update and the Hessian EMA run in the Rust kernel
+engine, so the (params, m, h) triple never round-trips through literals on
+a step. Which optimizer uses which artifact is pinned by registry.json
+(one registry for both languages; see compile/registry.py).
 
 The `h` slot is the optimizer's second state buffer whatever the variant:
 Sophia's Hessian EMA, AdamW's v, AdaHessian's EMA of squared estimates;
@@ -184,6 +188,27 @@ def make_ghat_gnb(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
         return tuple(jax.grad(sampled)(params))
 
     return ghat_gnb
+
+
+def make_ghat_ef(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):
+    """Raw Empirical-Fisher estimator gradient (the Fig 8b ablation)
+    WITHOUT the EMA: the TRUE-label gradient on hess_batch_g examples —
+    `hess_ef`'s point estimate, mirroring `make_ghat_gnb` for the
+    engine-resident Sophia-EF path (the engine reuses the fused GNB
+    refresh kernel; only the label sampling differs, and that lives here).
+    `seed` is unused but kept so every raw estimator presents the uniform
+    (params, tokens, seed) signature (aot.py lowers with keep_unused)."""
+
+    def loss_of(leaves, x, y):
+        return model.loss_fn(model.param_dict(leaves), cfg, x, y,
+                             use_pallas=use_pallas_model, attn_temp=attn_temp)
+
+    def ghat_ef(params, tokens, seed):
+        bh = cfg.hess_batch_g
+        x, y = _split_tokens(tokens[:bh])
+        return tuple(jax.grad(lambda lv: loss_of(lv, x, y))(params))
+
+    return ghat_ef
 
 
 def make_uhvp(cfg: ModelConfig, use_pallas_model=False, attn_temp=False):

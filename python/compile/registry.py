@@ -1,0 +1,125 @@
+"""Cross-language optimizer->artifact registry checks.
+
+`registry.json` is the single source of which artifacts each optimizer
+needs; the Rust side (`rust/src/optim/rules.rs`) include_str!s the same
+file and unit-tests its `UpdateRule` registry against it. This module
+asserts the *Python* side of the contract: for every preset, `aot.py`'s
+lowered artifact plan covers the registry —
+
+ 1. the engine-resident inputs (`grad_step` + every `engine: true` rule's
+    `ghat` artifact) are lowered for EVERY preset (engine-resident runs
+    are preset-independent);
+ 2. every `train_*`/`hess_*` artifact in a plan is claimed by some
+    registry entry (variant suffixes like `train_sophia_gamma0p005` or
+    `hess_gnb_b20p9` count as claimed by their base artifact), so no
+    optimizer artifact can be lowered that the registry doesn't know;
+ 3. for the full presets (those that trim nothing), every registry
+    `train`/`hess` artifact is actually in the plan.
+
+Run `python -m compile.registry` (the CI registry-parity step): exits
+non-zero listing every violation.
+"""
+
+import json
+import os
+import sys
+
+from . import aot
+from .configs import PRESETS
+
+REGISTRY_PATH = os.path.join(os.path.dirname(__file__), "registry.json")
+
+# presets whose artifact_plan trims the train/hess variant set (see
+# aot.artifact_plan); rule 3 applies to everything else
+TRIMMED_PRESETS = ("b2", "b3", "e2e")
+
+GRAD_ARTIFACT = "grad_step"
+
+# train_/hess_-prefixed artifacts that are not optimizer steps (hess_diag
+# is the Figure 3 histogram source) — exempt from rule 2
+NON_OPTIMIZER_ARTIFACTS = {"hess_diag"}
+
+# the ONLY suffixes a lowered hyper-variant may append to a registered
+# base artifact (aot.py's Fig 7b attention-trick, Fig 7c gamma/beta2
+# sensitivity, and nano Pallas-model studies); anything else extending a
+# base name is an unregistered optimizer artifact and fails rule 2
+VARIANT_SUFFIXES = ("_trick", "_pk")
+VARIANT_SUFFIX_PREFIXES = ("_gamma", "_b2")
+
+
+def _claimed(art, bases):
+    """An artifact is claimed iff it IS a registered base, or it is a base
+    plus a known hyper-variant suffix — bare prefix overlap (e.g. a rogue
+    train_sophia_fancy) does not count."""
+    if art in bases:
+        return True
+    for b in bases:
+        if art.startswith(b):
+            rest = art[len(b):]
+            if rest in VARIANT_SUFFIXES or rest.startswith(VARIANT_SUFFIX_PREFIXES):
+                return True
+    return False
+
+
+def load():
+    with open(REGISTRY_PATH) as fh:
+        return json.load(fh)["optimizers"]
+
+
+def check_preset(cfg, registry=None):
+    """Return a list of violation strings for one preset (empty = ok)."""
+    reg = registry if registry is not None else load()
+    plan = set(aot.artifact_plan(cfg))
+    errors = []
+
+    # 1. engine-resident inputs lower everywhere
+    if GRAD_ARTIFACT not in plan:
+        errors.append(f"{cfg.name}: missing {GRAD_ARTIFACT}")
+    for name, ent in reg.items():
+        if ent["engine"] and ent["ghat"] and ent["ghat"] not in plan:
+            errors.append(
+                f"{cfg.name}: {name} is engine-resident but its estimator "
+                f"artifact {ent['ghat']} is not lowered"
+            )
+
+    # 2. every lowered train_/hess_ artifact is claimed by the registry
+    bases = {e["train"] for e in reg.values()}
+    bases |= {e["hess"] for e in reg.values() if e["hess"]}
+    for art in sorted(plan):
+        if not (art.startswith("train_") or art.startswith("hess_")):
+            continue
+        if art in NON_OPTIMIZER_ARTIFACTS:
+            continue
+        if not _claimed(art, bases):
+            errors.append(f"{cfg.name}: lowered artifact {art} claimed by no registry entry")
+
+    # 3. full presets lower every registry train/hess artifact
+    if cfg.name not in TRIMMED_PRESETS:
+        for name, ent in reg.items():
+            for art in (ent["train"], ent["hess"]):
+                if art and art not in plan:
+                    errors.append(f"{cfg.name}: registry entry {name} needs {art}, not lowered")
+
+    return errors
+
+
+def check_all():
+    reg = load()
+    errors = []
+    for cfg in PRESETS.values():
+        errors.extend(check_preset(cfg, reg))
+    return errors
+
+
+def main():
+    errors = check_all()
+    if errors:
+        print("registry parity FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    print(f"registry parity OK: {len(load())} optimizers x {len(PRESETS)} presets")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,7 +69,7 @@ def test_artifact_plan_covers_figures():
         "train_signum", "train_normalize", "train_sophia_noclip",
         "train_adahessian", "train_adahessian_clip",
         "hess_gnb", "hess_hutchinson", "hess_ef", "hess_ah",
-        "grad_step", "ghat_gnb",
+        "grad_step", "ghat_gnb", "ghat_ef", "uhvp",
         "eval_step", "logits_last", "hess_diag",
     ]:
         assert needed in plan, needed

@@ -171,6 +171,37 @@ def test_ghat_gnb_matches_hess_gnb_after_host_ema():
         np.testing.assert_allclose(np.asarray(ema), np.asarray(ri), rtol=1e-5)
 
 
+def test_ghat_ef_matches_hess_ef_after_host_ema():
+    """hess_ef == host-side gnb_ema over ghat_ef's raw TRUE-label gradient,
+    i.e. the engine-resident Sophia-EF path (fused GNB-form refresh over
+    the Empirical-Fisher estimate) splits exactly like ghat_gnb/hess_gnb."""
+    params, _, h, tokens = _setup()
+    h = [hh + 0.5 for hh in h]
+    np_ = len(params)
+    seed = 29
+    ghat = optim.make_ghat_ef(CFG)(params, tokens, seed)
+    assert len(ghat) == np_
+    ref = optim.make_hess_step(CFG, "ef")(params, h, tokens, seed)
+    beta2 = optim.HYPERS["sophia"]["beta2"]
+    n_terms = CFG.hess_batch_g * CFG.ctx
+    for hi, gi, ri in zip(h, ghat, ref[:np_]):
+        ema = beta2 * hi + (1.0 - beta2) * n_terms * gi * gi
+        np.testing.assert_allclose(np.asarray(ema), np.asarray(ri), rtol=1e-5)
+
+
+def test_ghat_ef_is_seed_independent_true_label_gradient():
+    """EF uses the TRUE labels: no resampling, so the estimate ignores the
+    seed (unlike ghat_gnb) — and it differs from the GNB estimate."""
+    params, _, _, tokens = _setup()
+    fn = jax.jit(optim.make_ghat_ef(CFG))
+    a = fn(params, tokens, 5)
+    b = fn(params, tokens, 99)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    gnb = optim.make_ghat_gnb(CFG)(params, tokens, 5)
+    assert any(float(jnp.max(jnp.abs(x - y))) > 0 for x, y in zip(a, gnb))
+
+
 def test_uhvp_matches_hess_hutchinson_after_host_ema():
     """hess_hutchinson == host-side EMA over the raw uhvp u*(Hu) product
     (same seed), i.e. the engine-resident fused-EMA split for Sophia-H is

@@ -1,0 +1,53 @@
+"""Cross-language registry parity: registry.json vs aot.py's lowered plan.
+
+The Rust half of the contract (UpdateRule::artifact_ops() == registry.json)
+is a unit test inside rust/src/optim/rules.rs; this half pins the Python
+lowering, and `python -m compile.registry` runs the same checks as the CI
+registry-parity step.
+"""
+
+from compile import registry
+from compile.configs import PRESETS, HESS_VARIANTS, TRAIN_VARIANTS
+
+
+def test_registry_loads_and_covers_every_train_variant():
+    reg = registry.load()
+    trains = {e["train"] for e in reg.values()}
+    # every lowered train variant belongs to exactly one registry train
+    # artifact (sophia is shared by sophia_g and sophia_ef by design)
+    for v in TRAIN_VARIANTS:
+        assert f"train_{v}" in trains, f"train_{v} not claimed by registry.json"
+    hesses = {e["hess"] for e in reg.values() if e["hess"]}
+    for v in HESS_VARIANTS:
+        assert f"hess_{v}" in hesses, f"hess_{v} not claimed by registry.json"
+
+
+def test_every_engine_rule_has_grad_and_estimator_artifacts_everywhere():
+    reg = registry.load()
+    for cfg in PRESETS.values():
+        errors = registry.check_preset(cfg, reg)
+        assert not errors, "\n".join(errors)
+
+
+def test_unregistered_optimizer_artifact_is_flagged():
+    # rule 2 must reject a base-name extension that is not a known
+    # hyper-variant suffix — prefix overlap alone is not a claim
+    reg = registry.load()
+    bases = {e["train"] for e in reg.values()}
+    bases |= {e["hess"] for e in reg.values() if e["hess"]}
+    assert registry._claimed("train_sophia_gamma0p005", bases)
+    assert registry._claimed("train_adamw_trick", bases)
+    assert registry._claimed("hess_gnb_b20p9", bases)
+    assert registry._claimed("train_sophia_h", bases)  # exact base
+    assert not registry._claimed("train_sophia_fancy", bases)
+    assert not registry._claimed("train_sgd", bases)
+
+
+def test_engine_estimator_artifacts_are_the_raw_ghat_family():
+    # the ghat field only ever names a raw (un-EMA'd) estimator artifact
+    reg = registry.load()
+    raw = {"ghat_gnb", "ghat_ef", "uhvp"}
+    for name, ent in reg.items():
+        if ent["ghat"] is not None:
+            assert ent["ghat"] in raw, f"{name}: {ent['ghat']} is not a raw estimator"
+            assert ent["engine"], f"{name}: estimator artifact without engine support"

@@ -93,7 +93,8 @@ USAGE: sophia <subcommand> [--flags]
          [--config file.toml] [--artifacts artifacts] [--engine]
          (--engine = engine-resident training: state stays in the Rust
           kernel-engine arena; XLA computes only loss+gradients. Supports
-          sophia_g, sophia_h, adamw, lion. Backend via
+          every optimizer with an UpdateRule engine impl — all but the
+          adahessian pair. Backend via
           SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>, default
           pool:<ncpu>.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]

@@ -180,48 +180,38 @@ impl Optimizer {
         }
     }
 
-    /// Name of the train-step artifact this optimizer executes.
-    pub fn train_artifact(&self) -> &'static str {
-        match self {
-            Self::AdamW => "train_adamw",
-            Self::Lion => "train_lion",
-            Self::Signum => "train_signum",
-            Self::Normalize => "train_normalize",
-            Self::SophiaG | Self::SophiaEF => "train_sophia",
-            Self::SophiaH => "train_sophia_h",
-            Self::SophiaNoClip => "train_sophia_noclip",
-            Self::AdaHessian => "train_adahessian",
-            Self::AdaHessianClip => "train_adahessian_clip",
-        }
+    /// The [`crate::optim::rules::UpdateRule`] describing this optimizer —
+    /// the single registry every artifact-name / hypers / engine-support
+    /// question below derives from.
+    pub fn rule(&self) -> &'static dyn crate::optim::rules::UpdateRule {
+        crate::optim::rules::rule_for(*self)
     }
 
-    /// Name of the Hessian-refresh artifact (None = first-order method).
+    /// Name of the train-step artifact this optimizer executes (from the
+    /// rule registry).
+    pub fn train_artifact(&self) -> &'static str {
+        self.rule().artifact_ops().train
+    }
+
+    /// Name of the Hessian-refresh artifact (None = first-order method;
+    /// from the rule registry).
     pub fn hess_artifact(&self) -> Option<&'static str> {
-        match self {
-            Self::SophiaG | Self::SophiaNoClip => Some("hess_gnb"),
-            Self::SophiaH => Some("hess_hutchinson"),
-            Self::SophiaEF => Some("hess_ef"),
-            Self::AdaHessian | Self::AdaHessianClip => Some("hess_ah"),
-            _ => None,
-        }
+        self.rule().artifact_ops().hess
     }
 
     /// Whether the engine-resident training path has a pure-Rust update
-    /// kernel for this optimizer (see `optim::engine::UpdateKernel`).
+    /// rule for this optimizer — derived from the registry
+    /// (`UpdateRule::engine_resident`), not a hand-kept list.
     pub fn engine_resident_supported(&self) -> bool {
-        matches!(self, Self::SophiaG | Self::SophiaH | Self::AdamW | Self::Lion)
+        self.rule().engine_resident()
     }
 
     /// Raw Hessian-estimator artifact for the engine-resident path (the
     /// EMA is fused into the engine update, so the artifact returns the
-    /// un-EMA'd estimator: the GNB gradient for Sophia-G, the Hutchinson
-    /// u ⊙ (Hu) product for Sophia-H). None = no curvature refresh.
+    /// un-EMA'd estimator — see `optim::rules::Estimator`). None = no
+    /// curvature refresh.
     pub fn ghat_artifact(&self) -> Option<&'static str> {
-        match self {
-            Self::SophiaG => Some("ghat_gnb"),
-            Self::SophiaH => Some("uhvp"),
-            _ => None,
-        }
+        self.rule().estimator().artifact()
     }
 
     /// Default peak LR per the paper's tuning strategy (Sophia ≈ 0.8x the
@@ -398,14 +388,22 @@ mod tests {
 
     #[test]
     fn engine_resident_estimator_artifacts() {
-        // both Sophia estimators run engine-resident, each with its own
+        // every estimator-carrying rule runs engine-resident with its own
         // raw (un-EMA'd) estimator artifact
         assert_eq!(Optimizer::SophiaG.ghat_artifact(), Some("ghat_gnb"));
         assert_eq!(Optimizer::SophiaH.ghat_artifact(), Some("uhvp"));
+        assert_eq!(Optimizer::SophiaEF.ghat_artifact(), Some("ghat_ef"));
+        assert_eq!(Optimizer::SophiaNoClip.ghat_artifact(), Some("ghat_gnb"));
         assert!(Optimizer::SophiaH.engine_resident_supported());
+        assert!(Optimizer::SophiaEF.engine_resident_supported());
+        assert!(Optimizer::SophiaNoClip.engine_resident_supported());
+        assert!(Optimizer::Signum.engine_resident_supported());
+        assert!(Optimizer::Normalize.engine_resident_supported());
         assert_eq!(Optimizer::AdamW.ghat_artifact(), None);
         assert_eq!(Optimizer::Lion.ghat_artifact(), None);
-        assert!(!Optimizer::SophiaEF.engine_resident_supported());
+        // the AdaHessian pair is the remaining artifact-path-only family
+        assert!(!Optimizer::AdaHessian.engine_resident_supported());
+        assert!(!Optimizer::AdaHessianClip.engine_resident_supported());
     }
 
     #[test]

@@ -8,18 +8,22 @@
 //! * **Engine-resident path** (`TrainConfig::engine_resident` /
 //!   `SOPHIA_TRAIN_MODE=engine`): `(p, m, h)` live in a `FlatState` arena
 //!   for the whole run; XLA computes only loss + clipped gradients
-//!   (`grad_step`, plus — every k steps — the raw estimator: `ghat_gnb`
-//!   for Sophia-G, the Hutchinson `uhvp` product for Sophia-H), and the
-//!   Sophia/AdamW/Lion update — including the fused every-k estimator
-//!   EMA — runs on the kernel engine (default backend: the persistent
-//!   worker pool). Optimizer state crosses the literal boundary only at
-//!   eval/checkpoint/run-end; the per-step 3n literal→`Vec<f32>`→literal
-//!   round trips of the artifact path disappear.
+//!   (`grad_step`, plus — every k steps — the raw estimator artifact the
+//!   optimizer's `UpdateRule` declares: `ghat_gnb`, `ghat_ef`, or the
+//!   Hutchinson `uhvp` product), and the update runs on the kernel engine
+//!   (default backend: the persistent worker pool) through one
+//!   optimizer-agnostic `rule.apply` call — including the fused every-k
+//!   estimator EMA where a fused kernel exists. Optimizer state crosses
+//!   the literal boundary only at eval/checkpoint/run-end; the per-step 3n
+//!   literal→`Vec<f32>`→literal round trips of the artifact path
+//!   disappear. Which optimizers run here is decided by the rule registry
+//!   (`optim::rules`), not a hand-kept list.
 
-use crate::config::{ModelConfig, Optimizer, TrainConfig};
+use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{self, Loader, Prefetcher, Split};
 use crate::metrics::{RunLog, StepRecord};
 use crate::optim::engine::{default_threads, AlignedBuf, Backend, FlatState, UpdateKernel};
+use crate::optim::rules::{self, l2_norm, StepCtx, UpdateRule};
 use crate::rng::Rng;
 use crate::runtime::{self, run, scalar_i32, InputBuf, ModelState, Runtime, ScalarSlot, TokenSlot};
 use crate::schedule::Schedule;
@@ -27,100 +31,49 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-/// The gradient-only artifact every engine-resident optimizer executes:
-/// `(params*, tokens) -> (clipped grads*, loss, gnorm)`.
-pub const GRAD_ARTIFACT: &str = "grad_step";
-
-/// Optimizer constants the artifact path bakes into HLO at lowering time,
-/// mirrored host-side for the engine kernels (from the manifest's `hypers`
-/// table; fallbacks = configs.py values).
-#[derive(Clone, Copy)]
-struct EngineHypers {
-    beta1: f32,
-    beta2: f32,
-    eps: f32,
-    wd: f32,
-    /// Sophia clip scale (gamma_g).
-    gamma: f32,
-    /// Sophia Hessian-EMA decay (beta2 of the estimator, not the update).
-    hbeta2: f32,
-}
-
-impl EngineHypers {
-    fn for_optimizer(opt: Optimizer, model: &ModelConfig) -> EngineHypers {
-        match opt {
-            Optimizer::SophiaG => EngineHypers {
-                beta1: model.hyper_f32("sophia", "beta1", 0.96),
-                beta2: 0.0,
-                eps: model.hyper_f32("sophia", "eps", 1e-12),
-                wd: model.hyper_f32("sophia", "wd", 0.2),
-                gamma: model.hyper_f32("sophia", "gamma_g", 0.05),
-                hbeta2: model.hyper_f32("sophia", "beta2", 0.99),
-            },
-            // Sophia-H shares the Sophia hyper table but clips with the
-            // Hutchinson-tuned gamma (paper Table: gamma_h < gamma_g).
-            Optimizer::SophiaH => EngineHypers {
-                beta1: model.hyper_f32("sophia", "beta1", 0.96),
-                beta2: 0.0,
-                eps: model.hyper_f32("sophia", "eps", 1e-12),
-                wd: model.hyper_f32("sophia", "wd", 0.2),
-                gamma: model.hyper_f32("sophia", "gamma_h", 0.01),
-                hbeta2: model.hyper_f32("sophia", "beta2", 0.99),
-            },
-            Optimizer::AdamW => EngineHypers {
-                beta1: model.hyper_f32("adamw", "beta1", 0.9),
-                beta2: model.hyper_f32("adamw", "beta2", 0.95),
-                eps: model.hyper_f32("adamw", "eps", 1e-8),
-                wd: model.hyper_f32("adamw", "wd", 0.1),
-                gamma: 0.0,
-                hbeta2: 0.0,
-            },
-            Optimizer::Lion => EngineHypers {
-                beta1: model.hyper_f32("lion", "beta1", 0.95),
-                beta2: model.hyper_f32("lion", "beta2", 0.98),
-                eps: 0.0,
-                wd: model.hyper_f32("lion", "wd", 0.2),
-                gamma: 0.0,
-                hbeta2: 0.0,
-            },
-            // Trainer::new gates on engine_resident_supported(); a new
-            // optimizer added there must get its own hypers arm, loudly.
-            _ => unreachable!("no engine hypers for {}", opt.name()),
-        }
-    }
-}
+/// The gradient-only artifact every engine-resident optimizer executes
+/// (re-exported from the rule registry).
+pub use crate::optim::rules::GRAD_ARTIFACT;
 
 /// Everything the engine-resident path keeps out of literal-land: the
-/// state arena, the update kernel (persistent pool by default), gradient
-/// scratch arenas, and the gradient-only artifact paths.
+/// state arena, the update kernel (persistent pool by default), the
+/// optimizer's [`UpdateRule`] with its resolved hypers, gradient scratch
+/// arenas, and the gradient-only artifact paths. Fully optimizer-agnostic:
+/// every per-optimizer fact comes through the rule.
 struct EngineState {
     fs: FlatState,
     kernel: Box<dyn UpdateKernel>,
+    /// The optimizer's update rule, resolved once from the registry.
+    rule: &'static dyn UpdateRule,
+    /// `rule.hyper_schema()` resolved against the manifest's hypers table
+    /// (the constants the artifact path bakes into HLO at lowering time).
+    hypers: Vec<f32>,
+    /// `rule.estimator()` point-estimate scale (GNB/EF n_terms).
+    est_scale: f32,
     grad_path: PathBuf,
     ghat_path: Option<PathBuf>,
     /// clipped-gradient gather target (grad_step outputs)
     g: AlignedBuf,
-    /// raw estimator gather target (ghat_gnb / uhvp outputs); empty for
-    /// first-order optimizers
+    /// raw estimator gather target (ghat_gnb / ghat_ef / uhvp outputs);
+    /// empty for first-order optimizers
     ghat: AlignedBuf,
-    /// GNB n_terms = hess_batch_g * ctx (Alg. 2 scale)
-    gnb_scale: f32,
-    hyp: EngineHypers,
 }
 
 impl EngineState {
     fn build(cfg: &TrainConfig, model: &ModelConfig, state: &ModelState) -> Result<EngineState> {
         let fs = state.to_flat()?;
         let n = fs.len();
-        let ghat_name = cfg.optimizer.ghat_artifact();
+        let rule = rules::rule_for(cfg.optimizer);
+        let ghat_name = rule.estimator().artifact();
         Ok(EngineState {
             kernel: Backend::from_env_or(Backend::Pool(default_threads())).build(),
+            hypers: rules::resolve_hypers(rule, model),
+            est_scale: rule.estimator().scale(model),
             grad_path: model.artifact_path(GRAD_ARTIFACT),
             ghat_path: ghat_name.map(|g| model.artifact_path(g)),
             g: AlignedBuf::zeroed(n),
             ghat: AlignedBuf::zeroed(if ghat_name.is_some() { n } else { 0 }),
-            gnb_scale: (model.hess_batch_g * model.ctx) as f32,
-            hyp: EngineHypers::for_optimizer(cfg.optimizer, model),
+            rule,
             fs,
         })
     }
@@ -134,12 +87,6 @@ struct StepStats {
     hnorm: f64,
     step_ms: f64,
     hess_ms: f64,
-}
-
-/// L2 norm with f64 accumulation (the logged hnorm statistic; matches the
-/// artifact's global norm up to summation order).
-fn l2_norm(xs: &[f32]) -> f64 {
-    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
 }
 
 pub struct Trainer {
@@ -199,7 +146,7 @@ impl Trainer {
         if engine_resident {
             if !cfg.optimizer.engine_resident_supported() {
                 bail!(
-                    "engine-resident training supports sophia_g/sophia_h/adamw/lion, not {}",
+                    "{} has no engine-resident update rule (see optim::rules)",
                     cfg.optimizer.name()
                 );
             }
@@ -413,11 +360,11 @@ impl Trainer {
     }
 
     /// The engine-resident path: XLA computes loss + clipped gradients
-    /// only; the optimizer update (with the every-k estimator EMA — GNB or
-    /// Hutchinson — fused into the same memory pass) runs on the kernel
-    /// engine. `m`/`h` never cross
-    /// the literal boundary; params cross once per step (upload only — the
-    /// gradient artifact needs them) and gradients come back once.
+    /// only; the optimizer's [`UpdateRule`] runs the update on the kernel
+    /// engine (with the every-k estimator EMA fused into the same memory
+    /// pass where a fused kernel exists). `m`/`h` never cross the literal
+    /// boundary; params cross once per step (upload only — the gradient
+    /// artifact needs them) and gradients come back once.
     fn engine_step(&mut self, t: usize, lr: f64) -> Result<StepStats> {
         let Trainer {
             cfg,
@@ -433,7 +380,6 @@ impl Trainer {
             ..
         } = self;
         let eng = engine.as_mut().expect("engine_step without engine state");
-        let hyp = eng.hyp;
         let lr32 = lr as f32;
         let n = state.n_leaves();
 
@@ -477,83 +423,24 @@ impl Trainer {
         let loss = runtime::scalar_of(&out[n])? as f64;
         runtime::gather_into(&out[..n], eng.fs.leaf_ranges(), &mut eng.g)?;
 
-        // optimizer update on the engine: state never leaves the arena
-        let clipped = match cfg.optimizer {
-            Optimizer::SophiaG => {
-                if refresh {
-                    let c = eng.fs.sophia_step_with_gnb_refresh(
-                        &*eng.kernel,
-                        &eng.g,
-                        &eng.ghat,
-                        eng.gnb_scale,
-                        hyp.hbeta2,
-                        lr32,
-                        hyp.beta1,
-                        hyp.gamma,
-                        hyp.eps,
-                        hyp.wd,
-                    );
-                    hnorm = l2_norm(&eng.fs.h);
-                    c
-                } else {
-                    eng.fs.sophia_step(
-                        &*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.gamma, hyp.eps, hyp.wd,
-                    )
-                }
-            }
-            // Sophia-H: identical update, but the every-k refresh fuses the
-            // Hutchinson EMA over the raw u⊙(Hu) product (`uhvp` artifact)
-            // instead of the scaled squared GNB gradient — no n_terms scale.
-            Optimizer::SophiaH => {
-                if refresh {
-                    let c = eng.fs.sophia_step_with_hutchinson_refresh(
-                        &*eng.kernel,
-                        &eng.g,
-                        &eng.ghat,
-                        hyp.hbeta2,
-                        lr32,
-                        hyp.beta1,
-                        hyp.gamma,
-                        hyp.eps,
-                        hyp.wd,
-                    );
-                    hnorm = l2_norm(&eng.fs.h);
-                    c
-                } else {
-                    eng.fs.sophia_step(
-                        &*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.gamma, hyp.eps, hyp.wd,
-                    )
-                }
-            }
-            // AdamW threads its second moment through the uniform `h` slot
-            // — the same convention the artifacts use (python/compile/
-            // optim.py), so checkpoints stay interchangeable. Deliberately
-            // NOT `FlatState::adamw_step`, which uses the separate `v`
-            // buffer that checkpoints and `from_flat` never carry.
-            Optimizer::AdamW => {
-                eng.kernel.adamw_update(
-                    &mut eng.fs.p,
-                    &mut eng.fs.m,
-                    &mut eng.fs.h,
-                    &eng.g,
-                    lr32,
-                    t as f32,
-                    hyp.beta1,
-                    hyp.beta2,
-                    hyp.eps,
-                    hyp.wd,
-                );
-                0
-            }
-            Optimizer::Lion => {
-                eng.fs
-                    .lion_step(&*eng.kernel, &eng.g, lr32, hyp.beta1, hyp.beta2, hyp.wd);
-                0
-            }
-            _ => bail!("engine-resident mode does not support {}", cfg.optimizer.name()),
+        // optimizer update on the engine: one rule call, state never
+        // leaves the arena. On refresh steps the rule fuses the estimator
+        // EMA into the same memory pass where a fused kernel exists.
+        let ctx = StepCtx {
+            lr: lr32,
+            t: t as f32,
+            estimator: if refresh { Some(&eng.ghat[..]) } else { None },
+            est_scale: eng.est_scale,
+            hypers: &eng.hypers,
         };
-        let clipfrac = if matches!(cfg.optimizer, Optimizer::SophiaG | Optimizer::SophiaH) {
-            clipped as f64 / eng.fs.len().max(1) as f64
+        let outcome = eng.rule.apply(&mut eng.fs, &*eng.kernel, &eng.g, &ctx)?;
+        if refresh {
+            hnorm = l2_norm(&eng.fs.h);
+        }
+        // clipfrac comes from the rule's own declaration, not an
+        // optimizer-enum guess: unclipped rules report 0 by construction.
+        let clipfrac = if outcome.reports_clipfrac {
+            outcome.clipped as f64 / eng.fs.len().max(1) as f64
         } else {
             0.0
         };

@@ -319,6 +319,60 @@ pub fn lion_update(
     }
 }
 
+/// Momentum EMA (the Normalize ablation's first pass); bit-for-bit equal
+/// to `kernels::ema_update`.
+pub fn ema_update(m: &mut [f32], g: &[f32], beta1: f32) {
+    let n = m.len();
+    debug_assert!(g.len() == n);
+    let c1 = 1.0 - beta1;
+    for (s, e) in blocks(n) {
+        let mb = &mut m[s..e];
+        let gb = &g[s..e];
+        let mut mc = mb.chunks_exact_mut(LANES);
+        let mut gc = gb.chunks_exact(LANES);
+        for (mk, gk) in (&mut mc).zip(&mut gc) {
+            let mk = lanes_mut::<LANES>(mk);
+            let gk = lanes::<LANES>(gk);
+            for l in 0..LANES {
+                mk[l] = beta1 * mk[l] + c1 * gk[l];
+            }
+        }
+        let mt = mc.into_remainder();
+        let gt = gc.remainder();
+        for l in 0..mt.len() {
+            mt[l] = beta1 * mt[l] + c1 * gt[l];
+        }
+    }
+}
+
+/// Globally-scaled step (the Normalize ablation's second pass);
+/// bit-for-bit equal to `kernels::scaled_step` (`lr·scale` is hoisted,
+/// matching the scalar expression's association).
+pub fn scaled_step(p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+    let n = p.len();
+    debug_assert!(u.len() == n);
+    let decay = 1.0 - lr * wd;
+    let ls = lr * scale;
+    for (s, e) in blocks(n) {
+        let pb = &mut p[s..e];
+        let ub = &u[s..e];
+        let mut pc = pb.chunks_exact_mut(LANES);
+        let mut uc = ub.chunks_exact(LANES);
+        for (pk, uk) in (&mut pc).zip(&mut uc) {
+            let pk = lanes_mut::<LANES>(pk);
+            let uk = lanes::<LANES>(uk);
+            for l in 0..LANES {
+                pk[l] = pk[l] * decay - ls * uk[l];
+            }
+        }
+        let pt = pc.into_remainder();
+        let ut = uc.remainder();
+        for l in 0..pt.len() {
+            pt[l] = pt[l] * decay - ls * ut[l];
+        }
+    }
+}
+
 /// GNB Hessian-EMA refresh; bit-for-bit equal to `kernels::gnb_ema`.
 pub fn gnb_ema(h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
     let n = h.len();
@@ -541,6 +595,32 @@ mod tests {
             uhvp_ema(&mut hb, &d, 0.99);
             for i in 0..n {
                 assert_eq!(hs[i].to_bits(), hb[i].to_bits(), "uhvp h[{i}] n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_halves_bitwise_equal_scalar_oracle() {
+        for (seed, &n) in SIZES.iter().enumerate() {
+            let mut rng = Rng::new(500 + seed as u64);
+            let m0 = rand_vec(&mut rng, n, 1.0);
+            let p0 = rand_vec(&mut rng, n, 1.0);
+            let g = rand_vec(&mut rng, n, 1.0);
+
+            let mut ms = m0.clone();
+            kernels::ema_update(&mut ms, &g, 0.95);
+            let mut mb = m0.clone();
+            ema_update(&mut mb, &g, 0.95);
+            for i in 0..n {
+                assert_eq!(ms[i].to_bits(), mb[i].to_bits(), "ema m[{i}] n={n}");
+            }
+
+            let mut ps = p0.clone();
+            kernels::scaled_step(&mut ps, &ms, 3e-2, 0.73, 0.2);
+            let mut pb = p0.clone();
+            scaled_step(&mut pb, &mb, 3e-2, 0.73, 0.2);
+            for i in 0..n {
+                assert_eq!(ps[i].to_bits(), pb[i].to_bits(), "scaled p[{i}] n={n}");
             }
         }
     }

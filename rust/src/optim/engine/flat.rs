@@ -1,5 +1,5 @@
 //! Flat-state arena: one contiguous, 64-byte-aligned f32 buffer per
-//! optimizer state kind (p/m/h/v) with per-tensor shard views.
+//! optimizer state kind (p/m/h) with per-tensor shard views.
 //!
 //! The pure-Rust path previously kept scattered per-leaf `Vec`s; the arena
 //! gives the kernels one long stream per state kind (cache-friendly, no
@@ -7,7 +7,6 @@
 //! for interop with the literal-based `ModelState` and checkpoints.
 
 use super::parallel::{partition_leaves, DEFAULT_SHARD_LEN};
-use super::UpdateKernel;
 use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
 use std::ops::{Deref, DerefMut, Range};
 use std::ptr::NonNull;
@@ -72,31 +71,36 @@ impl Drop for AlignedBuf {
 unsafe impl Send for AlignedBuf {}
 unsafe impl Sync for AlignedBuf {}
 
-/// Which optimizer state buffer a flat view refers to.
+/// Which optimizer state buffer a flat view refers to. The `h` slot is
+/// the optimizer's second state buffer whatever the rule — Sophia's
+/// Hessian EMA, AdamW's second moment — matching the uniform (params, m,
+/// h) convention the artifacts and checkpoints use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StateKind {
     /// parameters
     P,
     /// first moment (momentum EMA)
     M,
-    /// diagonal-Hessian EMA (Sophia) — unused by first-order methods
+    /// diagonal-Hessian EMA (Sophia) / second moment (AdamW) — unused by
+    /// Lion/Signum/Normalize
     H,
-    /// second moment (AdamW) — unused by Sophia/Lion
-    V,
 }
 
-/// The flat arena: four state buffers sharing one leaf layout, plus
+/// The flat arena: three state buffers sharing one leaf layout, plus
 /// precomputed tensor-bounded shard views (exposed via [`Self::shards`]
 /// for per-leaf dispatch and interop). Note the fused update kernels are
 /// layout-oblivious, so [`super::ThreadedEngine`] partitions the flat
 /// index space uniformly rather than consuming these views.
+///
+/// The arena is deliberately optimizer-agnostic: the per-optimizer step
+/// compositions live in `crate::optim::rules` (`UpdateRule::apply`), which
+/// call [`super::UpdateKernel`] methods over these buffers directly.
 pub struct FlatState {
     leaves: Vec<Range<usize>>,
     shards: Vec<Range<usize>>,
     pub p: AlignedBuf,
     pub m: AlignedBuf,
     pub h: AlignedBuf,
-    pub v: AlignedBuf,
 }
 
 impl FlatState {
@@ -114,7 +118,6 @@ impl FlatState {
             p: AlignedBuf::zeroed(off),
             m: AlignedBuf::zeroed(off),
             h: AlignedBuf::zeroed(off),
-            v: AlignedBuf::zeroed(off),
         }
     }
 
@@ -152,7 +155,6 @@ impl FlatState {
             StateKind::P => &self.p,
             StateKind::M => &self.m,
             StateKind::H => &self.h,
-            StateKind::V => &self.v,
         }
     }
 
@@ -161,7 +163,6 @@ impl FlatState {
             StateKind::P => &mut self.p,
             StateKind::M => &mut self.m,
             StateKind::H => &mut self.h,
-            StateKind::V => &mut self.v,
         }
     }
 
@@ -179,108 +180,6 @@ impl FlatState {
     /// the leaf length (layout is fixed at construction).
     pub fn load_leaf(&mut self, kind: StateKind, i: usize, src: &[f32]) {
         self.leaf_mut(kind, i).copy_from_slice(src);
-    }
-
-    // -- engine entry points: one kernel call over the whole arena --------
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn sophia_step(
-        &mut self,
-        k: &dyn UpdateKernel,
-        g: &[f32],
-        lr: f32,
-        beta1: f32,
-        gamma: f32,
-        eps: f32,
-        wd: f32,
-    ) -> usize {
-        k.sophia_update(&mut self.p, &mut self.m, &self.h, g, lr, beta1, gamma, eps, wd)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn sophia_step_with_gnb_refresh(
-        &mut self,
-        k: &dyn UpdateKernel,
-        g: &[f32],
-        ghat: &[f32],
-        scale: f32,
-        hbeta2: f32,
-        lr: f32,
-        beta1: f32,
-        gamma: f32,
-        eps: f32,
-        wd: f32,
-    ) -> usize {
-        k.sophia_update_with_gnb_refresh(
-            &mut self.p, &mut self.m, &mut self.h, g, ghat, scale, hbeta2, lr, beta1, gamma,
-            eps, wd,
-        )
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn sophia_step_with_hutchinson_refresh(
-        &mut self,
-        k: &dyn UpdateKernel,
-        g: &[f32],
-        uhvp: &[f32],
-        hbeta2: f32,
-        lr: f32,
-        beta1: f32,
-        gamma: f32,
-        eps: f32,
-        wd: f32,
-    ) -> usize {
-        k.sophia_update_with_hutchinson_refresh(
-            &mut self.p, &mut self.m, &mut self.h, g, uhvp, hbeta2, lr, beta1, gamma, eps, wd,
-        )
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn adamw_step(
-        &mut self,
-        k: &dyn UpdateKernel,
-        g: &[f32],
-        lr: f32,
-        t: f32,
-        beta1: f32,
-        beta2: f32,
-        eps: f32,
-        wd: f32,
-    ) {
-        k.adamw_update(&mut self.p, &mut self.m, &mut self.v, g, lr, t, beta1, beta2, eps, wd)
-    }
-
-    pub fn lion_step(
-        &mut self,
-        k: &dyn UpdateKernel,
-        g: &[f32],
-        lr: f32,
-        beta1: f32,
-        beta2: f32,
-        wd: f32,
-    ) {
-        k.lion_update(&mut self.p, &mut self.m, g, lr, beta1, beta2, wd)
-    }
-
-    pub fn gnb_refresh(&mut self, k: &dyn UpdateKernel, ghat: &[f32], scale: f32, beta2: f32) {
-        k.gnb_ema(&mut self.h, ghat, scale, beta2)
-    }
-
-    pub fn hutchinson_refresh(
-        &mut self,
-        k: &dyn UpdateKernel,
-        u: &[f32],
-        hvp: &[f32],
-        beta2: f32,
-    ) {
-        k.hutchinson_ema(&mut self.h, u, hvp, beta2)
-    }
-
-    /// Hutchinson refresh from the precomputed u ⊙ (Hu) product (the raw
-    /// `uhvp` artifact's output) — the standalone half of what
-    /// [`Self::sophia_step_with_hutchinson_refresh`] fuses.
-    pub fn hutchinson_refresh_uhvp(&mut self, k: &dyn UpdateKernel, uhvp: &[f32], beta2: f32) {
-        k.uhvp_ema(&mut self.h, uhvp, beta2)
     }
 }
 

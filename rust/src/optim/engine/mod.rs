@@ -3,7 +3,7 @@
 //! Layers:
 //!
 //! * [`flat`]     — `FlatState` arena: one contiguous, 64-byte-aligned f32
-//!   buffer per state kind (p/m/h/v) with per-tensor shard views.
+//!   buffer per state kind (p/m/h) with per-tensor shard views.
 //! * [`blocked`]  — cache-blocked, 8-lane-unrolled fused update kernels
 //!   (auto-vectorized; bit-for-bit against the scalar oracle for
 //!   sophia/lion/EMAs, ulp-checked for adamw).
@@ -119,6 +119,14 @@ pub trait UpdateKernel: Send + Sync {
         wd: f32,
     );
 
+    /// Plain momentum EMA (the Normalize rule's first pass).
+    fn ema_update(&self, m: &mut [f32], g: &[f32], beta1: f32);
+
+    /// Globally-scaled step `p' = p·(1 − lr·wd) − lr·scale·u` (the
+    /// Normalize rule's second pass; `scale` is the host-reduced inverse
+    /// global momentum norm).
+    fn scaled_step(&self, p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32);
+
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32);
 
     fn hutchinson_ema(&self, h: &mut [f32], u: &[f32], hvp: &[f32], beta2: f32);
@@ -222,6 +230,14 @@ impl UpdateKernel for ScalarOracle {
         wd: f32,
     ) {
         kernels::lion_update(p, m, g, lr, beta1, beta2, wd)
+    }
+
+    fn ema_update(&self, m: &mut [f32], g: &[f32], beta1: f32) {
+        kernels::ema_update(m, g, beta1)
+    }
+
+    fn scaled_step(&self, p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+        kernels::scaled_step(p, u, lr, scale, wd)
     }
 
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
@@ -331,6 +347,14 @@ impl UpdateKernel for BlockedEngine {
         wd: f32,
     ) {
         blocked::lion_update(p, m, g, lr, beta1, beta2, wd)
+    }
+
+    fn ema_update(&self, m: &mut [f32], g: &[f32], beta1: f32) {
+        blocked::ema_update(m, g, beta1)
+    }
+
+    fn scaled_step(&self, p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+        blocked::scaled_step(p, u, lr, scale, wd)
     }
 
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
@@ -521,6 +545,28 @@ impl UpdateKernel for ThreadedEngine {
         });
     }
 
+    fn ema_update(&self, m: &mut [f32], g: &[f32], beta1: f32) {
+        let shards = self.shards(m.len());
+        let mp = SendPtr(m.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ms = unsafe { shard_mut(mp, &r) };
+            blocked::ema_update(ms, &g[r], beta1);
+            0
+        });
+    }
+
+    fn scaled_step(&self, p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+        let shards = self.shards(p.len());
+        let pp = SendPtr(p.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, r| {
+            // SAFETY: shards from `partition` are disjoint and in-bounds.
+            let ps = unsafe { shard_mut(pp, &r) };
+            blocked::scaled_step(ps, &u[r], lr, scale, wd);
+            0
+        });
+    }
+
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
         let shards = self.shards(h.len());
         let hp = SendPtr(h.as_mut_ptr());
@@ -682,7 +728,8 @@ mod tests {
             fs.buf_mut(StateKind::P).copy_from_slice(&init);
             fs.buf_mut(StateKind::H).copy_from_slice(&g); // arbitrary curvature
             let k = b.build();
-            let c = fs.sophia_step(&*k, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
+            let c =
+                k.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.0);
             outs.push((c, fs.buf(StateKind::P).to_vec()));
         }
         for (c, p) in &outs[1..] {

@@ -593,6 +593,30 @@ impl UpdateKernel for PoolEngine {
         });
     }
 
+    fn ema_update(&self, m: &mut [f32], g: &[f32], beta1: f32) {
+        let mp = SendPtr(m.as_mut_ptr());
+        self.with_shards(m.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ms = unsafe { shard_mut(mp, &r) };
+                blocked::ema_update(ms, &g[r], beta1);
+                0
+            })
+        });
+    }
+
+    fn scaled_step(&self, p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+        let pp = SendPtr(p.as_mut_ptr());
+        self.with_shards(p.len(), |shards| {
+            self.pool.run(shards, &|_, r: Range<usize>| {
+                // SAFETY: shards from `partition` are disjoint and in-bounds.
+                let ps = unsafe { shard_mut(pp, &r) };
+                blocked::scaled_step(ps, &u[r], lr, scale, wd);
+                0
+            })
+        });
+    }
+
     fn gnb_ema(&self, h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
         let hp = SendPtr(h.as_mut_ptr());
         self.with_shards(h.len(), |shards| {

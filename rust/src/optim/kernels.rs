@@ -71,6 +71,24 @@ pub fn lion_update(
     }
 }
 
+/// Plain momentum EMA — the first half of the "Normalize" ablation
+/// (kernels/lion_update.py `ema_update`); the global-norm reduction
+/// between the halves happens at the rule level.
+pub fn ema_update(m: &mut [f32], g: &[f32], beta1: f32) {
+    for i in 0..m.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+    }
+}
+
+/// Globally-scaled step `p' = p·(1 − lr·wd) − lr·scale·u` — the second
+/// half of the "Normalize" ablation (`scale` is the host-computed inverse
+/// global momentum norm; kernels/lion_update.py `scaled_step`).
+pub fn scaled_step(p: &mut [f32], u: &[f32], lr: f32, scale: f32, wd: f32) {
+    for i in 0..p.len() {
+        p[i] = p[i] * (1.0 - lr * wd) - lr * scale * u[i];
+    }
+}
+
 /// Hessian-EMA refresh with the GNB point estimate (Alg. 2 + Alg. 3 l.9).
 pub fn gnb_ema(h: &mut [f32], ghat: &[f32], scale: f32, beta2: f32) {
     for i in 0..h.len() {

@@ -5,6 +5,9 @@
 //! * `engine`  — the flat-state SIMD/parallel kernel engine: `FlatState`
 //!   arenas, cache-blocked 8-lane kernels, a deterministic threaded shard
 //!   driver, and the `UpdateKernel` backend dispatch.
+//! * `rules`   — the `UpdateRule` registry: one plugin-style object per
+//!   optimizer (hypers schema, estimator, artifact names, engine-resident
+//!   `apply`), the single source every other layer derives from.
 //! * `toy`     — the paper's Figure 2 landscape and the five optimizers
 //!   compared there.
 //! * `theory`  — Section 4 / Appendix D: full-Hessian clipped Newton
@@ -14,5 +17,6 @@
 pub mod engine;
 pub mod kernels;
 pub mod linalg;
+pub mod rules;
 pub mod theory;
 pub mod toy;

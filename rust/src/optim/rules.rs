@@ -1,0 +1,964 @@
+//! `UpdateRule`: the one-stop description of an optimizer.
+//!
+//! Sophia's pitch is that a second-order update is a *drop-in swap* for
+//! Adam — "the moving average of the gradients divided by the moving
+//! average of the estimated Hessian, followed by element-wise clipping"
+//! (PAPER.md). Before this module that swap was smeared across the
+//! codebase: a hypers `match` in the trainer, a hand-kept
+//! `engine_resident_supported` list, string mappings for the estimator
+//! artifacts, and a 90-line per-optimizer `match` inside
+//! `Trainer::engine_step`. Every rule now lives in exactly one place.
+//!
+//! # How to add an optimizer (one file: this one)
+//!
+//! 1. Add the variant to [`crate::config::Optimizer`] (parse + name).
+//! 2. Write a unit struct implementing [`UpdateRule`]:
+//!    * [`UpdateRule::hyper_schema`] — the manifest `hypers` slots the rule
+//!      reads (group/key/default, mirroring `python/compile/configs.py
+//!      HYPERS`). The trainer resolves them once; `apply` indexes them.
+//!    * [`UpdateRule::estimator`] — which raw curvature artifact feeds the
+//!      every-k refresh on the engine-resident path ([`Estimator::None`]
+//!      for first-order rules).
+//!    * [`UpdateRule::artifact_ops`] — the artifact names the rule needs,
+//!      kept in lockstep with `python/compile/registry.json` (the
+//!      cross-language registry `aot.py` lowering is checked against; see
+//!      `registry_json_matches_rule_artifact_ops` below and
+//!      `python -m compile.registry`).
+//!    * [`UpdateRule::apply`] — the engine-resident update: one or more
+//!      [`UpdateKernel`] calls over the [`FlatState`] arena. Works on all
+//!      four backends (scalar/blocked/threads/pool) for free, and is
+//!      proptested bit-identical to the scalar oracle in
+//!      `rust/tests/proptests.rs`.
+//! 3. Register the rule in [`rule_for`] and add it to
+//!    `registry.json`. Everything else — artifact loading, hypers, engine
+//!    gating, clipfrac reporting — is derived; `config::Optimizer`'s
+//!    artifact accessors delegate here.
+//!
+//! Rules that have no pure-Rust update yet (the AdaHessian pair) still
+//! register: they describe their artifact-path contract and return
+//! `engine_resident() == false`, which is what
+//! `Optimizer::engine_resident_supported()` now reports — derived from
+//! the registry, not a hand-kept list.
+
+use crate::config::{ModelConfig, Optimizer};
+use crate::optim::engine::{FlatState, UpdateKernel};
+use anyhow::{bail, Result};
+
+/// The gradient-only artifact every engine-resident rule executes:
+/// `(params*, tokens) -> (clipped grads*, loss, gnorm)`.
+pub const GRAD_ARTIFACT: &str = "grad_step";
+
+/// The no-clip ablation's update cap, as a power of two (≈ the 1e6 the
+/// artifact path's `NOCLIP_CAP` uses). Power-of-two scaling commutes
+/// exactly with f32 rounding, which lets [`SophiaRule`] implement the
+/// Fig 8(c) no-clip update through the *shared* clipped kernel with
+/// rescaled `(lr, gamma, eps, wd)` — bit-identical to a dedicated
+/// `clamp(±CAP)` kernel (asserted in the tests below), no second kernel
+/// on any backend.
+pub const NOCLIP_CAP: f32 = 1_048_576.0; // 2^20
+
+/// Raw curvature estimator the engine-resident path gathers every k steps.
+/// The EMA over the estimate is fused into the rule's update pass, so the
+/// artifact returns the *un-EMA'd* point estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Estimator {
+    /// First-order rule: no curvature artifact, no refresh.
+    None,
+    /// Gauss–Newton–Bartlett (Alg. 2): resampled-label gradient from the
+    /// `ghat_gnb` artifact; EMA of `n_terms · ĝ ⊙ ĝ`.
+    Gnb,
+    /// Hutchinson (Alg. 1): precomputed `u ⊙ (Hu)` product from the
+    /// `uhvp` artifact; EMA of the raw product.
+    Hutchinson,
+    /// Empirical Fisher (Fig 8b): TRUE-label gradient from the `ghat_ef`
+    /// artifact; same squared-gradient EMA form as GNB.
+    EmpiricalFisher,
+}
+
+impl Estimator {
+    /// Name of the raw-estimator artifact (`None` = first-order rule).
+    pub fn artifact(self) -> Option<&'static str> {
+        match self {
+            Estimator::None => None,
+            Estimator::Gnb => Some("ghat_gnb"),
+            Estimator::Hutchinson => Some("uhvp"),
+            Estimator::EmpiricalFisher => Some("ghat_ef"),
+        }
+    }
+
+    /// Host-side point-estimate scale: the squared-gradient estimators
+    /// multiply by `n_terms = hess_batch_g * ctx` (Alg. 2 line 6); the
+    /// Hutchinson product arrives fully formed.
+    pub fn scale(self, model: &ModelConfig) -> f32 {
+        match self {
+            Estimator::Gnb | Estimator::EmpiricalFisher => {
+                (model.hess_batch_g * model.ctx) as f32
+            }
+            Estimator::None | Estimator::Hutchinson => 1.0,
+        }
+    }
+}
+
+/// One optimizer hyperparameter slot: where it lives in the manifest's
+/// `hypers` table (configs.py `HYPERS`) and the configs.py default used
+/// when an old manifest predates the key.
+#[derive(Clone, Copy, Debug)]
+pub struct HyperSpec {
+    pub group: &'static str,
+    pub key: &'static str,
+    pub default: f32,
+}
+
+const fn hyper(group: &'static str, key: &'static str, default: f32) -> HyperSpec {
+    HyperSpec { group, key, default }
+}
+
+/// Resolve a rule's hyper schema against one model's manifest, in schema
+/// order (the `StepCtx::hypers` the rule's `apply` indexes into).
+pub fn resolve_hypers(rule: &dyn UpdateRule, model: &ModelConfig) -> Vec<f32> {
+    rule.hyper_schema()
+        .iter()
+        .map(|s| model.hyper_f32(s.group, s.key, s.default))
+        .collect()
+}
+
+/// Schema defaults only (benches / tests without a manifest).
+pub fn default_hypers(rule: &dyn UpdateRule) -> Vec<f32> {
+    rule.hyper_schema().iter().map(|s| s.default).collect()
+}
+
+/// Every artifact name a rule touches, on both step paths. This is the
+/// Rust half of the cross-language registry (`python/compile/
+/// registry.json`); `aot.py`'s lowered set is checked against it by
+/// `python -m compile.registry` in CI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactOps {
+    /// Artifact-path fused train step.
+    pub train: &'static str,
+    /// Artifact-path Hessian refresh (None = first-order).
+    pub hess: Option<&'static str>,
+    /// Engine-resident raw estimator (== `estimator().artifact()`).
+    pub ghat: Option<&'static str>,
+}
+
+/// What one engine-resident step produced.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Coordinates whose preconditioned update hit the clip boundary.
+    pub clipped: usize,
+    /// Whether `clipped` is the paper's Fig 7(a) statistic for this rule.
+    /// Unclipped rules report 0 clipfrac by construction — the trainer
+    /// never guesses from the optimizer enum again.
+    pub reports_clipfrac: bool,
+}
+
+/// Per-step inputs to [`UpdateRule::apply`] beyond state + gradients.
+pub struct StepCtx<'a> {
+    /// Scheduled learning rate for this step.
+    pub lr: f32,
+    /// 1-based step counter (AdamW bias correction).
+    pub t: f32,
+    /// Raw estimator gathered from the rule's `ghat` artifact — `Some` on
+    /// refresh steps, `None` otherwise (and always `None` for rules with
+    /// [`Estimator::None`]).
+    pub estimator: Option<&'a [f32]>,
+    /// [`Estimator::scale`] resolved once per run.
+    pub est_scale: f32,
+    /// [`resolve_hypers`] output, in `hyper_schema()` order.
+    pub hypers: &'a [f32],
+}
+
+/// A first-class optimizer: everything the trainer, artifact loader and
+/// benches need, in one object. `apply` mutates the [`FlatState`] arena
+/// through an [`UpdateKernel`], so every rule runs on every backend.
+pub trait UpdateRule: Send + Sync {
+    /// The `config::Optimizer` variant this rule implements.
+    fn optimizer(&self) -> Optimizer;
+
+    /// Manifest hypers this rule reads (see [`HyperSpec`]).
+    fn hyper_schema(&self) -> &'static [HyperSpec];
+
+    /// Which raw curvature estimator feeds the every-k engine refresh.
+    fn estimator(&self) -> Estimator;
+
+    /// Artifact names on both step paths (the registry contract).
+    fn artifact_ops(&self) -> ArtifactOps;
+
+    /// Whether [`UpdateRule::apply`] has a pure-Rust implementation (the
+    /// source of truth for `Optimizer::engine_resident_supported`).
+    fn engine_resident(&self) -> bool {
+        true
+    }
+
+    /// One engine-resident optimizer step over the arena. `g` is the
+    /// globally-clipped gradient from [`GRAD_ARTIFACT`]; on refresh steps
+    /// `ctx.estimator` carries the raw estimate and the rule fuses its EMA
+    /// into the same memory pass where a fused kernel exists.
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome>;
+}
+
+/// L2 norm with f64 accumulation — the hnorm statistic the trainer logs,
+/// and the Normalize rule's global momentum norm. One sequential pass so
+/// the value is identical on every backend by construction.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+// ---------------------------------------------------------------------
+// The Sophia family: SophiaG / SophiaH / SophiaEF / SophiaNoClip
+// ---------------------------------------------------------------------
+
+/// Sophia (Alg. 3) and its Fig 8 ablations. One struct, four statics: the
+/// variants differ only in estimator, clip gamma, and whether the clamp
+/// boundary sits at 1 (clipped) or at [`NOCLIP_CAP`] (the no-clip
+/// ablation, implemented by exact power-of-two rescaling — see
+/// [`NOCLIP_CAP`]).
+pub struct SophiaRule {
+    opt: Optimizer,
+    schema: &'static [HyperSpec],
+    est: Estimator,
+    ops: ArtifactOps,
+    noclip: bool,
+}
+
+/// Sophia hyper slots (indices into `StepCtx::hypers`).
+const S_BETA1: usize = 0;
+const S_HBETA2: usize = 1;
+const S_EPS: usize = 2;
+const S_WD: usize = 3;
+const S_GAMMA: usize = 4;
+
+const SOPHIA_SCHEMA_G: &[HyperSpec] = &[
+    hyper("sophia", "beta1", 0.96),
+    hyper("sophia", "beta2", 0.99),
+    hyper("sophia", "eps", 1e-12),
+    hyper("sophia", "wd", 0.2),
+    hyper("sophia", "gamma_g", 0.05),
+];
+
+const SOPHIA_SCHEMA_H: &[HyperSpec] = &[
+    hyper("sophia", "beta1", 0.96),
+    hyper("sophia", "beta2", 0.99),
+    hyper("sophia", "eps", 1e-12),
+    hyper("sophia", "wd", 0.2),
+    hyper("sophia", "gamma_h", 0.01),
+];
+
+impl UpdateRule for SophiaRule {
+    fn optimizer(&self) -> Optimizer {
+        self.opt
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        self.schema
+    }
+
+    fn estimator(&self) -> Estimator {
+        self.est
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        self.ops
+    }
+
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        let h = ctx.hypers;
+        let (beta1, hbeta2) = (h[S_BETA1], h[S_HBETA2]);
+        // No-clip ablation: the same kernel, with (lr, gamma, eps, wd)
+        // rescaled by the power-of-two cap so the kernel's clamp at ±1
+        // lands at ±NOCLIP_CAP in raw preconditioned units. Exact: every
+        // rescale is a pure exponent shift, so p/m/h match a dedicated
+        // no-clip kernel bit for bit (assuming |gamma·h| stays below
+        // f32::MAX / NOCLIP_CAP, which any finite training run does).
+        let (lr, gamma, eps, wd) = if self.noclip {
+            (
+                ctx.lr * NOCLIP_CAP,
+                h[S_GAMMA] * NOCLIP_CAP,
+                h[S_EPS] * NOCLIP_CAP,
+                h[S_WD] / NOCLIP_CAP,
+            )
+        } else {
+            (ctx.lr, h[S_GAMMA], h[S_EPS], h[S_WD])
+        };
+        let clipped = match (ctx.estimator, self.est) {
+            // refresh step: estimator EMA fused into the update's memory
+            // pass. GNB and Empirical Fisher share the squared-gradient
+            // kernel (they differ only in how the artifact sampled labels);
+            // Hutchinson consumes the precomputed u⊙(Hu) product.
+            (Some(ghat), Estimator::Gnb | Estimator::EmpiricalFisher) => k
+                .sophia_update_with_gnb_refresh(
+                    &mut fs.p,
+                    &mut fs.m,
+                    &mut fs.h,
+                    g,
+                    ghat,
+                    ctx.est_scale,
+                    hbeta2,
+                    lr,
+                    beta1,
+                    gamma,
+                    eps,
+                    wd,
+                ),
+            (Some(uhvp), Estimator::Hutchinson) => k.sophia_update_with_hutchinson_refresh(
+                &mut fs.p,
+                &mut fs.m,
+                &mut fs.h,
+                g,
+                uhvp,
+                hbeta2,
+                lr,
+                beta1,
+                gamma,
+                eps,
+                wd,
+            ),
+            (None, _) => {
+                k.sophia_update(&mut fs.p, &mut fs.m, &fs.h, g, lr, beta1, gamma, eps, wd)
+            }
+            (Some(_), Estimator::None) => {
+                bail!("{}: estimator buffer without an estimator", self.opt.name())
+            }
+        };
+        Ok(StepOutcome { clipped, reports_clipfrac: !self.noclip })
+    }
+}
+
+static SOPHIA_G: SophiaRule = SophiaRule {
+    opt: Optimizer::SophiaG,
+    schema: SOPHIA_SCHEMA_G,
+    est: Estimator::Gnb,
+    ops: ArtifactOps {
+        train: "train_sophia",
+        hess: Some("hess_gnb"),
+        ghat: Some("ghat_gnb"),
+    },
+    noclip: false,
+};
+
+static SOPHIA_H: SophiaRule = SophiaRule {
+    opt: Optimizer::SophiaH,
+    schema: SOPHIA_SCHEMA_H,
+    est: Estimator::Hutchinson,
+    ops: ArtifactOps {
+        train: "train_sophia_h",
+        hess: Some("hess_hutchinson"),
+        ghat: Some("uhvp"),
+    },
+    noclip: false,
+};
+
+static SOPHIA_EF: SophiaRule = SophiaRule {
+    opt: Optimizer::SophiaEF,
+    schema: SOPHIA_SCHEMA_G,
+    est: Estimator::EmpiricalFisher,
+    ops: ArtifactOps {
+        train: "train_sophia",
+        hess: Some("hess_ef"),
+        ghat: Some("ghat_ef"),
+    },
+    noclip: false,
+};
+
+static SOPHIA_NOCLIP: SophiaRule = SophiaRule {
+    opt: Optimizer::SophiaNoClip,
+    schema: SOPHIA_SCHEMA_G,
+    est: Estimator::Gnb,
+    ops: ArtifactOps {
+        train: "train_sophia_noclip",
+        hess: Some("hess_gnb"),
+        ghat: Some("ghat_gnb"),
+    },
+    noclip: true,
+};
+
+// ---------------------------------------------------------------------
+// First-order rules: AdamW / Lion / Signum / Normalize
+// ---------------------------------------------------------------------
+
+/// AdamW. Threads its second moment through the uniform `h` slot — the
+/// same convention the artifacts use (python/compile/optim.py), so
+/// checkpoints stay interchangeable between paths (the arena carries
+/// exactly the checkpoint's (p, m, h) triple, nothing more).
+pub struct AdamWRule;
+
+const A_BETA1: usize = 0;
+const A_BETA2: usize = 1;
+const A_EPS: usize = 2;
+const A_WD: usize = 3;
+
+impl UpdateRule for AdamWRule {
+    fn optimizer(&self) -> Optimizer {
+        Optimizer::AdamW
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        &[
+            hyper("adamw", "beta1", 0.9),
+            hyper("adamw", "beta2", 0.95),
+            hyper("adamw", "eps", 1e-8),
+            hyper("adamw", "wd", 0.1),
+        ]
+    }
+
+    fn estimator(&self) -> Estimator {
+        Estimator::None
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        ArtifactOps { train: "train_adamw", hess: None, ghat: None }
+    }
+
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        let h = ctx.hypers;
+        k.adamw_update(
+            &mut fs.p,
+            &mut fs.m,
+            &mut fs.h,
+            g,
+            ctx.lr,
+            ctx.t,
+            h[A_BETA1],
+            h[A_BETA2],
+            h[A_EPS],
+            h[A_WD],
+        );
+        Ok(StepOutcome { clipped: 0, reports_clipfrac: false })
+    }
+}
+
+pub struct LionRule;
+
+const L_BETA1: usize = 0;
+const L_BETA2: usize = 1;
+const L_WD: usize = 2;
+
+impl UpdateRule for LionRule {
+    fn optimizer(&self) -> Optimizer {
+        Optimizer::Lion
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        &[
+            hyper("lion", "beta1", 0.95),
+            hyper("lion", "beta2", 0.98),
+            hyper("lion", "wd", 0.2),
+        ]
+    }
+
+    fn estimator(&self) -> Estimator {
+        Estimator::None
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        ArtifactOps { train: "train_lion", hess: None, ghat: None }
+    }
+
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        let h = ctx.hypers;
+        k.lion_update(&mut fs.p, &mut fs.m, g, ctx.lr, h[L_BETA1], h[L_BETA2], h[L_WD]);
+        Ok(StepOutcome { clipped: 0, reports_clipfrac: false })
+    }
+}
+
+/// Sign-momentum SGD — the paper's "Clip" ablation (Fig 8c: element-wise
+/// clipping with no preconditioner reduces to sign momentum). With
+/// `beta2 := beta1` the Lion kernel *is* signum, expression tree and all:
+/// `u = sign(beta1·m + (1-beta1)·g)` and the momentum write both evaluate
+/// the same polynomial, so no fifth kernel is needed on any backend.
+///
+/// Known zero-sign deviation from the artifact path (shared with the Lion
+/// rule, which predates this one): `f32::signum(±0.0)` is ±1 while the
+/// artifact's `jnp.sign(0.0)` is 0, so a coordinate whose momentum is
+/// *exactly* zero steps by ∓lr on the engine but stands still in XLA.
+/// Engine ≡ scalar-oracle bit-identity (the tested contract) is
+/// unaffected; exact-zero momentum needs an exactly-zero gradient
+/// history, which the softmax loss does not produce for live parameters.
+pub struct SignumRule;
+
+const SG_BETA1: usize = 0;
+const SG_WD: usize = 1;
+
+impl UpdateRule for SignumRule {
+    fn optimizer(&self) -> Optimizer {
+        Optimizer::Signum
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        // signum shares the lion hyper group (configs.py maps it so)
+        &[hyper("lion", "beta1", 0.95), hyper("lion", "wd", 0.2)]
+    }
+
+    fn estimator(&self) -> Estimator {
+        Estimator::None
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        ArtifactOps { train: "train_signum", hess: None, ghat: None }
+    }
+
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        let h = ctx.hypers;
+        let beta1 = h[SG_BETA1];
+        k.lion_update(&mut fs.p, &mut fs.m, g, ctx.lr, beta1, beta1, h[SG_WD]);
+        Ok(StepOutcome { clipped: 0, reports_clipfrac: false })
+    }
+}
+
+/// The Fig 8(c) "Normalize" ablation: momentum EMA, then a step scaled by
+/// the *global* (cross-tensor) inverse momentum norm. The norm is a
+/// single sequential host pass over the arena ([`l2_norm`]), identical on
+/// every backend by construction; the two element-wise passes run on the
+/// kernel engine.
+pub struct NormalizeRule;
+
+const N_BETA1: usize = 0;
+const N_WD: usize = 1;
+
+impl UpdateRule for NormalizeRule {
+    fn optimizer(&self) -> Optimizer {
+        Optimizer::Normalize
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        // normalize shares the lion hyper group (configs.py maps it so)
+        &[hyper("lion", "beta1", 0.95), hyper("lion", "wd", 0.2)]
+    }
+
+    fn estimator(&self) -> Estimator {
+        Estimator::None
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        ArtifactOps { train: "train_normalize", hess: None, ghat: None }
+    }
+
+    fn apply(
+        &self,
+        fs: &mut FlatState,
+        k: &dyn UpdateKernel,
+        g: &[f32],
+        ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        let h = ctx.hypers;
+        k.ema_update(&mut fs.m, g, h[N_BETA1]);
+        let scale = (1.0 / l2_norm(&fs.m).max(1e-12)) as f32;
+        k.scaled_step(&mut fs.p, &fs.m, ctx.lr, scale, h[N_WD]);
+        Ok(StepOutcome { clipped: 0, reports_clipfrac: false })
+    }
+}
+
+// ---------------------------------------------------------------------
+// AdaHessian pair: artifact-path only (for now)
+// ---------------------------------------------------------------------
+
+/// AdaHessian (Yao et al.) and its clipped variant: registered so the
+/// artifact path and the registry stay total over `config::Optimizer`,
+/// but with no engine-resident update yet (`engine_resident() == false`;
+/// the bias-corrected sqrt preconditioner needs its own fused kernel —
+/// add it here when the Fig 8(b) engine runs are wanted).
+pub struct AdaHessianRule {
+    clip: bool,
+}
+
+impl UpdateRule for AdaHessianRule {
+    fn optimizer(&self) -> Optimizer {
+        if self.clip {
+            Optimizer::AdaHessianClip
+        } else {
+            Optimizer::AdaHessian
+        }
+    }
+
+    fn hyper_schema(&self) -> &'static [HyperSpec] {
+        &[
+            hyper("adahessian", "beta1", 0.92),
+            hyper("adahessian", "beta2", 0.99),
+            hyper("adahessian", "eps", 1e-8),
+            hyper("adahessian", "wd", 0.1),
+        ]
+    }
+
+    fn estimator(&self) -> Estimator {
+        Estimator::None
+    }
+
+    fn engine_resident(&self) -> bool {
+        false
+    }
+
+    fn artifact_ops(&self) -> ArtifactOps {
+        ArtifactOps {
+            train: if self.clip { "train_adahessian_clip" } else { "train_adahessian" },
+            hess: Some("hess_ah"),
+            ghat: None,
+        }
+    }
+
+    fn apply(
+        &self,
+        _fs: &mut FlatState,
+        _k: &dyn UpdateKernel,
+        _g: &[f32],
+        _ctx: &StepCtx,
+    ) -> Result<StepOutcome> {
+        bail!("{} has no engine-resident update rule", self.optimizer().name())
+    }
+}
+
+static ADAHESSIAN: AdaHessianRule = AdaHessianRule { clip: false };
+static ADAHESSIAN_CLIP: AdaHessianRule = AdaHessianRule { clip: true };
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Every optimizer variant, in `config::Optimizer` declaration order (the
+/// exhaustiveness tests iterate this).
+pub const ALL_OPTIMIZERS: [Optimizer; 10] = [
+    Optimizer::AdamW,
+    Optimizer::Lion,
+    Optimizer::Signum,
+    Optimizer::Normalize,
+    Optimizer::SophiaG,
+    Optimizer::SophiaH,
+    Optimizer::SophiaEF,
+    Optimizer::SophiaNoClip,
+    Optimizer::AdaHessian,
+    Optimizer::AdaHessianClip,
+];
+
+/// Compile-time totality guard for [`ALL_OPTIMIZERS`]: the `match` below
+/// is exhaustive WITHOUT a wildcard, so adding a `config::Optimizer`
+/// variant refuses to compile until it gets an index here — and the const
+/// block then proves every variant sits at its index in the array (so the
+/// array can neither drop nor duplicate a variant). The registry tests
+/// iterate `ALL_OPTIMIZERS`, so this is what keeps them from passing
+/// vacuously for a forgotten variant.
+const fn variant_index(opt: Optimizer) -> usize {
+    match opt {
+        Optimizer::AdamW => 0,
+        Optimizer::Lion => 1,
+        Optimizer::Signum => 2,
+        Optimizer::Normalize => 3,
+        Optimizer::SophiaG => 4,
+        Optimizer::SophiaH => 5,
+        Optimizer::SophiaEF => 6,
+        Optimizer::SophiaNoClip => 7,
+        Optimizer::AdaHessian => 8,
+        Optimizer::AdaHessianClip => 9,
+    }
+}
+
+const _: () = {
+    let mut i = 0;
+    while i < ALL_OPTIMIZERS.len() {
+        assert!(variant_index(ALL_OPTIMIZERS[i]) == i);
+        i += 1;
+    }
+};
+
+/// THE registry: the only per-optimizer `match` in the system. Everything
+/// else (trainer dispatch, artifact names, hypers, engine gating) goes
+/// through the returned trait object.
+pub fn rule_for(opt: Optimizer) -> &'static dyn UpdateRule {
+    match opt {
+        Optimizer::AdamW => &AdamWRule,
+        Optimizer::Lion => &LionRule,
+        Optimizer::Signum => &SignumRule,
+        Optimizer::Normalize => &NormalizeRule,
+        Optimizer::SophiaG => &SOPHIA_G,
+        Optimizer::SophiaH => &SOPHIA_H,
+        Optimizer::SophiaEF => &SOPHIA_EF,
+        Optimizer::SophiaNoClip => &SOPHIA_NOCLIP,
+        Optimizer::AdaHessian => &ADAHESSIAN,
+        Optimizer::AdaHessianClip => &ADAHESSIAN_CLIP,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::engine::{Backend, StateKind};
+    use crate::optim::kernels;
+    use crate::rng::Rng;
+    use crate::util::json::Json;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(scale)).collect()
+    }
+
+    fn fresh_state(seed: u64, lens: &[usize]) -> (FlatState, Vec<f32>, Vec<f32>) {
+        let total: usize = lens.iter().sum();
+        let mut rng = Rng::new(seed);
+        let mut fs = FlatState::new(lens);
+        let p = rand_vec(&mut rng, total, 1.0);
+        let m = rand_vec(&mut rng, total, 0.5);
+        let h: Vec<f32> = rand_vec(&mut rng, total, 0.5).iter().map(|x| x.abs()).collect();
+        fs.buf_mut(StateKind::P).copy_from_slice(&p);
+        fs.buf_mut(StateKind::M).copy_from_slice(&m);
+        fs.buf_mut(StateKind::H).copy_from_slice(&h);
+        let g = rand_vec(&mut rng, total, 1.0);
+        let ghat = rand_vec(&mut rng, total, 1.0);
+        (fs, g, ghat)
+    }
+
+    #[test]
+    fn registry_is_total_and_consistent() {
+        for opt in ALL_OPTIMIZERS {
+            let rule = rule_for(opt);
+            assert_eq!(rule.optimizer(), opt, "registry maps {opt:?} to the wrong rule");
+            // the ghat field is the estimator's artifact, by definition
+            assert_eq!(
+                rule.artifact_ops().ghat,
+                rule.estimator().artifact(),
+                "{}: artifact_ops.ghat out of sync with estimator()",
+                opt.name()
+            );
+            // an engine rule with an estimator must have a ghat artifact
+            if rule.engine_resident() && rule.estimator() != Estimator::None {
+                assert!(rule.artifact_ops().ghat.is_some(), "{}", opt.name());
+            }
+            assert!(!rule.hyper_schema().is_empty(), "{}: empty hyper schema", opt.name());
+        }
+    }
+
+    #[test]
+    fn config_accessors_are_derived_from_the_registry() {
+        for opt in ALL_OPTIMIZERS {
+            let rule = rule_for(opt);
+            assert_eq!(opt.train_artifact(), rule.artifact_ops().train, "{}", opt.name());
+            assert_eq!(opt.hess_artifact(), rule.artifact_ops().hess, "{}", opt.name());
+            assert_eq!(opt.ghat_artifact(), rule.estimator().artifact(), "{}", opt.name());
+            assert_eq!(
+                opt.engine_resident_supported(),
+                rule.engine_resident(),
+                "{}",
+                opt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn registry_json_matches_rule_artifact_ops() {
+        // the cross-language registry: python/compile/registry.json is the
+        // single source aot.py lowering is checked against (CI
+        // registry-parity step); the Rust rules must agree with it exactly.
+        let text = include_str!("../../../python/compile/registry.json");
+        let reg = Json::parse(text).expect("registry.json parses");
+        let opts = reg.get("optimizers").and_then(Json::as_obj).expect("optimizers table");
+        assert_eq!(opts.len(), ALL_OPTIMIZERS.len(), "registry.json entry count");
+        for opt in ALL_OPTIMIZERS {
+            let rule = rule_for(opt);
+            let ent = opts
+                .get(opt.name())
+                .unwrap_or_else(|| panic!("registry.json missing {}", opt.name()));
+            let s = |k: &str| ent.get(k).and_then(Json::as_str);
+            assert_eq!(s("train"), Some(rule.artifact_ops().train), "{} train", opt.name());
+            assert_eq!(s("hess"), rule.artifact_ops().hess, "{} hess", opt.name());
+            assert_eq!(s("ghat"), rule.artifact_ops().ghat, "{} ghat", opt.name());
+            assert_eq!(
+                matches!(ent.get("engine"), Some(Json::Bool(true))),
+                rule.engine_resident(),
+                "{} engine flag",
+                opt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn signum_rule_is_sign_momentum() {
+        // the Lion-with-beta2:=beta1 trick really is signum: compare
+        // against a literal transcription of kernels/lion_update.py's
+        // signum_update
+        let (mut fs, g, _) = fresh_state(11, &[257, 1000]);
+        let n = fs.len();
+        let (p0, m0) = (fs.buf(StateKind::P).to_vec(), fs.buf(StateKind::M).to_vec());
+        let (beta1, wd, lr) = (0.95f32, 0.2f32, 2e-3f32);
+        let rule = rule_for(Optimizer::Signum);
+        let ctx = StepCtx {
+            lr,
+            t: 1.0,
+            estimator: None,
+            est_scale: 1.0,
+            hypers: &[beta1, wd],
+        };
+        rule.apply(&mut fs, &*Backend::Scalar.build(), &g, &ctx).unwrap();
+        let (mut pr, mut mr) = (p0, m0);
+        for i in 0..n {
+            let mi = beta1 * mr[i] + (1.0 - beta1) * g[i];
+            pr[i] = pr[i] * (1.0 - lr * wd) - lr * mi.signum();
+            mr[i] = mi;
+        }
+        for i in 0..n {
+            assert_eq!(fs.buf(StateKind::P)[i].to_bits(), pr[i].to_bits(), "p[{i}]");
+            assert_eq!(fs.buf(StateKind::M)[i].to_bits(), mr[i].to_bits(), "m[{i}]");
+        }
+    }
+
+    #[test]
+    fn normalize_rule_matches_reference_composition() {
+        let (mut fs, g, _) = fresh_state(12, &[513, 64]);
+        let n = fs.len();
+        let (p0, m0) = (fs.buf(StateKind::P).to_vec(), fs.buf(StateKind::M).to_vec());
+        let (beta1, wd, lr) = (0.95f32, 0.2f32, 3e-2f32);
+        let rule = rule_for(Optimizer::Normalize);
+        let ctx = StepCtx {
+            lr,
+            t: 1.0,
+            estimator: None,
+            est_scale: 1.0,
+            hypers: &[beta1, wd],
+        };
+        rule.apply(&mut fs, &*Backend::Scalar.build(), &g, &ctx).unwrap();
+        let (mut pr, mut mr) = (p0, m0);
+        kernels::ema_update(&mut mr, &g, beta1);
+        let scale = (1.0 / l2_norm(&mr).max(1e-12)) as f32;
+        kernels::scaled_step(&mut pr, &mr, lr, scale, wd);
+        for i in 0..n {
+            assert_eq!(fs.buf(StateKind::P)[i].to_bits(), pr[i].to_bits(), "p[{i}]");
+            assert_eq!(fs.buf(StateKind::M)[i].to_bits(), mr[i].to_bits(), "m[{i}]");
+        }
+    }
+
+    #[test]
+    fn noclip_rescaling_equals_dedicated_noclip_update_bitwise() {
+        // the power-of-two (lr, gamma, eps, wd) rescale through the shared
+        // clipped kernel == a literal transcription of the python
+        // sophia_noclip_update with cap = NOCLIP_CAP, bit for bit
+        let (mut fs, g, ghat) = fresh_state(13, &[129, 2048]);
+        let n = fs.len();
+        let (p0, m0, h0) = (
+            fs.buf(StateKind::P).to_vec(),
+            fs.buf(StateKind::M).to_vec(),
+            fs.buf(StateKind::H).to_vec(),
+        );
+        let (beta1, hbeta2, eps, wd, gamma, lr) =
+            (0.96f32, 0.99f32, 1e-12f32, 0.2f32, 0.05f32, 1e-3f32);
+        let rule = rule_for(Optimizer::SophiaNoClip);
+        // non-refresh step
+        let ctx = StepCtx {
+            lr,
+            t: 1.0,
+            estimator: None,
+            est_scale: 240.0,
+            hypers: &[beta1, hbeta2, eps, wd, gamma],
+        };
+        let out = rule.apply(&mut fs, &*Backend::Scalar.build(), &g, &ctx).unwrap();
+        assert!(!out.reports_clipfrac, "no-clip must not report clipfrac");
+        let (mut pr, mut mr) = (p0.clone(), m0.clone());
+        for i in 0..n {
+            let mi = beta1 * mr[i] + (1.0 - beta1) * g[i];
+            mr[i] = mi;
+            let r = (mi / (gamma * h0[i]).max(eps)).clamp(-NOCLIP_CAP, NOCLIP_CAP);
+            pr[i] = pr[i] * (1.0 - lr * wd) - lr * r;
+        }
+        for i in 0..n {
+            assert_eq!(fs.buf(StateKind::P)[i].to_bits(), pr[i].to_bits(), "p[{i}]");
+            assert_eq!(fs.buf(StateKind::M)[i].to_bits(), mr[i].to_bits(), "m[{i}]");
+        }
+        // refresh step: fused GNB EMA writes raw (unscaled) h
+        let mut fs2 = FlatState::new(&[n]);
+        fs2.buf_mut(StateKind::P).copy_from_slice(&p0);
+        fs2.buf_mut(StateKind::M).copy_from_slice(&m0);
+        fs2.buf_mut(StateKind::H).copy_from_slice(&h0);
+        let ctx2 = StepCtx { estimator: Some(&ghat), ..ctx };
+        rule.apply(&mut fs2, &*Backend::Scalar.build(), &g, &ctx2).unwrap();
+        let mut hr = h0.clone();
+        kernels::gnb_ema(&mut hr, &ghat, 240.0, hbeta2);
+        let (mut pr2, mut mr2) = (p0, m0);
+        for i in 0..n {
+            let mi = beta1 * mr2[i] + (1.0 - beta1) * g[i];
+            mr2[i] = mi;
+            let r = (mi / (gamma * hr[i]).max(eps)).clamp(-NOCLIP_CAP, NOCLIP_CAP);
+            pr2[i] = pr2[i] * (1.0 - lr * wd) - lr * r;
+        }
+        for i in 0..n {
+            assert_eq!(fs2.buf(StateKind::H)[i].to_bits(), hr[i].to_bits(), "h[{i}]");
+            assert_eq!(fs2.buf(StateKind::P)[i].to_bits(), pr2[i].to_bits(), "p[{i}]");
+            assert_eq!(fs2.buf(StateKind::M)[i].to_bits(), mr2[i].to_bits(), "m[{i}]");
+        }
+    }
+
+    #[test]
+    fn sophia_ef_rule_reuses_gnb_fused_kernel_with_ef_scale() {
+        let (mut fs, g, ghat) = fresh_state(14, &[100, 900]);
+        let n = fs.len();
+        let (p0, m0, h0) = (
+            fs.buf(StateKind::P).to_vec(),
+            fs.buf(StateKind::M).to_vec(),
+            fs.buf(StateKind::H).to_vec(),
+        );
+        let hypers = default_hypers(rule_for(Optimizer::SophiaEF));
+        let scale = 128.0; // EF n_terms
+        let ctx = StepCtx {
+            lr: 1e-3,
+            t: 1.0,
+            estimator: Some(&ghat),
+            est_scale: scale,
+            hypers: &hypers,
+        };
+        let out =
+            rule_for(Optimizer::SophiaEF).apply(&mut fs, &*Backend::Scalar.build(), &g, &ctx).unwrap();
+        assert!(out.reports_clipfrac, "SophiaEF clips and must say so");
+        let (mut pr, mut mr, mut hr) = (p0, m0, h0);
+        let c = kernels::sophia_update_with_gnb_refresh(
+            &mut pr, &mut mr, &mut hr, &g, &ghat, scale, hypers[S_HBETA2], 1e-3,
+            hypers[S_BETA1], hypers[S_GAMMA], hypers[S_EPS], hypers[S_WD],
+        );
+        assert_eq!(out.clipped, c, "clip count");
+        for i in 0..n {
+            assert_eq!(fs.buf(StateKind::P)[i].to_bits(), pr[i].to_bits(), "p[{i}]");
+            assert_eq!(fs.buf(StateKind::H)[i].to_bits(), hr[i].to_bits(), "h[{i}]");
+        }
+    }
+
+    #[test]
+    fn adahessian_rules_refuse_engine_apply() {
+        for opt in [Optimizer::AdaHessian, Optimizer::AdaHessianClip] {
+            let rule = rule_for(opt);
+            assert!(!rule.engine_resident());
+            let mut fs = FlatState::new(&[8]);
+            let g = vec![0.0; 8];
+            let hypers = default_hypers(rule);
+            let ctx = StepCtx {
+                lr: 1e-3,
+                t: 1.0,
+                estimator: None,
+                est_scale: 1.0,
+                hypers: &hypers,
+            };
+            assert!(rule.apply(&mut fs, &*Backend::Scalar.build(), &g, &ctx).is_err());
+        }
+    }
+}

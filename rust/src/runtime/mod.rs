@@ -350,7 +350,7 @@ impl ModelState {
     }
 
     /// Scatter a `FlatState` back into per-leaf literals (engine → artifact
-    /// boundary). `v` is not part of the artifact state and is ignored.
+    /// boundary).
     pub fn from_flat(&mut self, fs: &FlatState) -> Result<()> {
         let total = self.total_numel();
         if fs.len() != total {

@@ -217,6 +217,76 @@ fn engine_resident_sophia_h_end_to_end() -> Result<()> {
 }
 
 #[test]
+fn engine_resident_ablation_optimizers_end_to_end() -> Result<()> {
+    // The UpdateRule coverage additions (PR 4): Signum, Normalize and
+    // Sophia-EF train engine-resident and descend; their clipfrac obeys
+    // the rule's StepOutcome::reports_clipfrac contract (0 by construction
+    // for unclipped rules, in [0,1] for Sophia-EF).
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = sophia::ModelConfig::load(&artifacts_root(), "nano")?;
+    if !model.has_artifact("grad_step") || !model.has_artifact("ghat_ef") {
+        eprintln!("SKIP: artifacts predate grad_step/ghat_ef (re-run `make artifacts`)");
+        return Ok(());
+    }
+    for opt in [Optimizer::Signum, Optimizer::Normalize, Optimizer::SophiaEF] {
+        let mut cfg = base("nano", opt, 25);
+        cfg.hess_interval = 5;
+        cfg.engine_resident = true;
+        let mut t = Trainer::new(cfg)?;
+        assert!(t.engine_resident(), "{}", opt.name());
+        let first = t.train_step()?.loss;
+        let out = t.train_steps(24, false)?;
+        assert!(!out.diverged, "{} engine path diverged", opt.name());
+        assert!(
+            out.final_train_loss < first - 0.05,
+            "{} engine path did not descend: {first} -> {}",
+            opt.name(),
+            out.final_train_loss
+        );
+        for rec in &t.log.records {
+            match opt {
+                Optimizer::SophiaEF => assert!(
+                    (0.0..=1.0).contains(&rec.clipfrac),
+                    "sophia_ef clipfrac {}",
+                    rec.clipfrac
+                ),
+                _ => assert_eq!(
+                    rec.clipfrac,
+                    0.0,
+                    "{} must report clipfrac 0 by construction",
+                    opt.name()
+                ),
+            }
+        }
+        // Sophia-EF's curvature refresh ran through the fused GNB-form
+        // kernel and produced a live EMA
+        if opt == Optimizer::SophiaEF {
+            let refreshes: Vec<_> =
+                t.log.records.iter().filter(|r| r.hess_ms > 0.0).collect();
+            assert!(!refreshes.is_empty(), "no EF refresh recorded");
+            assert!(refreshes.iter().all(|r| r.hnorm > 0.0), "hnorm not captured");
+        }
+    }
+
+    // SophiaNoClip's engine rule runs too — but the no-clip ablation is
+    // fragile BY DESIGN (Fig 8c shows it diverging), so only step sanity
+    // and the clipfrac contract are asserted, not descent.
+    let mut cfg = base("nano", Optimizer::SophiaNoClip, 6);
+    cfg.hess_interval = 2;
+    cfg.engine_resident = true;
+    let mut t = Trainer::new(cfg)?;
+    assert!(t.engine_resident());
+    let first = t.train_step()?;
+    assert!(first.loss.is_finite(), "fresh-model loss must be finite");
+    assert_eq!(first.clipfrac, 0.0, "no-clip must report clipfrac 0");
+    t.train_steps(5, false)?; // may diverge; must not error
+    Ok(())
+}
+
+#[test]
 fn divergence_detection_stops_training() -> Result<()> {
     if !have("nano") {
         eprintln!("SKIP: run `make artifacts` first");

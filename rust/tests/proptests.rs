@@ -395,7 +395,8 @@ fn prop_flat_state_step_is_invariant_to_backend_and_leaf_layout() {
             let mut fs = FlatState::new(&lens);
             fs.buf_mut(StateKind::P).copy_from_slice(&init_p);
             fs.buf_mut(StateKind::H).copy_from_slice(&init_h);
-            let clipped = fs.sophia_step(k, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
+            let clipped =
+                k.sophia_update(&mut fs.p, &mut fs.m, &fs.h, &g, 1e-3, 0.96, 0.05, 1e-12, 0.1);
             (clipped, fs.buf(StateKind::P).to_vec())
         };
         let (c0, p0) = run(&*Backend::Scalar.build());
@@ -506,8 +507,9 @@ fn prop_model_state_to_flat_engine_from_flat_round_trips_bitwise() {
         // engine path: to_flat → pool kernel → from_flat
         let mut fs = st.to_flat().unwrap();
         let k = pool_unpinned(2);
-        let ce = fs.sophia_step_with_gnb_refresh(
-            &k, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12, 0.1,
+        let ce = k.sophia_update_with_gnb_refresh(
+            &mut fs.p, &mut fs.m, &mut fs.h, &g, &ghat, 240.0, 0.99, 1e-3, 0.96, 0.05, 1e-12,
+            0.1,
         );
         assert_eq!(c0, ce, "clip count seed {seed}");
         st.from_flat(&fs).unwrap();
@@ -524,6 +526,120 @@ fn prop_model_state_to_flat_engine_from_flat_round_trips_bitwise() {
                     got[i].to_bits(),
                     "{name}[{i}] seed {seed}"
                 );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// UpdateRule registry (rust/src/optim/rules.rs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_update_rule_registry_is_exhaustive_and_derives_config() {
+    use sophia::config::Optimizer;
+    use sophia::optim::rules::{rule_for, ALL_OPTIMIZERS};
+    // every config::Optimizer variant resolves to a rule, and every
+    // config-level accessor is exactly the registry's answer — there is no
+    // second hand-kept list to drift
+    for opt in ALL_OPTIMIZERS {
+        let rule = rule_for(opt);
+        assert_eq!(rule.optimizer(), opt, "{}", opt.name());
+        assert_eq!(opt.engine_resident_supported(), rule.engine_resident(), "{}", opt.name());
+        assert_eq!(opt.train_artifact(), rule.artifact_ops().train, "{}", opt.name());
+        assert_eq!(opt.hess_artifact(), rule.artifact_ops().hess, "{}", opt.name());
+        assert_eq!(opt.ghat_artifact(), rule.estimator().artifact(), "{}", opt.name());
+    }
+    // the coverage the UpdateRule redesign closed: all four Fig 8 ablation
+    // optimizers now run engine-resident
+    for opt in [
+        Optimizer::Signum,
+        Optimizer::Normalize,
+        Optimizer::SophiaEF,
+        Optimizer::SophiaNoClip,
+    ] {
+        assert!(opt.engine_resident_supported(), "{} must be engine-resident", opt.name());
+    }
+}
+
+#[test]
+fn prop_engine_rules_match_scalar_oracle_across_ragged_shards_and_workers() {
+    // Every engine-resident rule, applied through `UpdateRule::apply` on
+    // the blocked/threaded/pool tiers (1/2/4 workers, ragged shard
+    // lengths), must reproduce the scalar oracle: bitwise p/m/h and
+    // identical clip counts (AdamW's bias-corrected sqrt path is the
+    // documented 1-ulp exception). Covers both refresh and non-refresh
+    // steps for the estimator-carrying rules.
+    use sophia::config::Optimizer;
+    use sophia::optim::engine::ScalarOracle;
+    use sophia::optim::rules::{default_hypers, rule_for, Estimator, StepCtx, ALL_OPTIMIZERS};
+    for opt in ALL_OPTIMIZERS {
+        let rule = rule_for(opt);
+        if !rule.engine_resident() {
+            continue;
+        }
+        let hypers = default_hypers(rule);
+        let backends = engine_backends();
+        for seed in 0..6u64 {
+            let mut rng = Rng::new((seed << 8) ^ (opt as u64) ^ 0x9E1E);
+            // random ragged leaf partition
+            let total = 500 + rng.below(3000) as usize;
+            let mut lens = Vec::new();
+            let mut left = total;
+            while left > 0 {
+                let take = (1 + rng.below(900) as usize).min(left);
+                lens.push(take);
+                left -= take;
+            }
+            let p0 = rand_vec(&mut rng, total, 1.0);
+            let m0 = rand_vec(&mut rng, total, 0.5);
+            let h0: Vec<f32> =
+                rand_vec(&mut rng, total, 0.5).iter().map(|x| x.abs()).collect();
+            let g = rand_vec(&mut rng, total, 1.0);
+            let ghat = rand_vec(&mut rng, total, 1.0);
+            let refresh_cases: &[bool] =
+                if rule.estimator() == Estimator::None { &[false] } else { &[false, true] };
+            for &refresh in refresh_cases {
+                let ctx = StepCtx {
+                    lr: 1e-3,
+                    t: 3.0,
+                    estimator: if refresh { Some(&ghat[..]) } else { None },
+                    est_scale: 240.0,
+                    hypers: &hypers,
+                };
+                let run = |k: &dyn UpdateKernel| {
+                    let mut fs = FlatState::new(&lens);
+                    fs.buf_mut(StateKind::P).copy_from_slice(&p0);
+                    fs.buf_mut(StateKind::M).copy_from_slice(&m0);
+                    fs.buf_mut(StateKind::H).copy_from_slice(&h0);
+                    let out = rule.apply(&mut fs, k, &g, &ctx).unwrap();
+                    (
+                        out.clipped,
+                        out.reports_clipfrac,
+                        fs.buf(StateKind::P).to_vec(),
+                        fs.buf(StateKind::M).to_vec(),
+                        fs.buf(StateKind::H).to_vec(),
+                    )
+                };
+                let (c0, rc0, pr, mr, hr) = run(&ScalarOracle);
+                for k in &backends {
+                    let (c, rc, pe, me, he) = run(&**k);
+                    let tag = || format!("{} {} seed {seed} refresh {refresh}", opt.name(), k.name());
+                    assert_eq!(c, c0, "clip count: {}", tag());
+                    assert_eq!(rc, rc0, "reports_clipfrac: {}", tag());
+                    for i in 0..total {
+                        if matches!(opt, Optimizer::AdamW) {
+                            let ulp = (pr[i].to_bits() as i64 - pe[i].to_bits() as i64).abs();
+                            assert!(ulp <= 1, "p[{i}] {} ({ulp} ulp)", tag());
+                            let ulp = (hr[i].to_bits() as i64 - he[i].to_bits() as i64).abs();
+                            assert!(ulp <= 1, "h[{i}] {} ({ulp} ulp)", tag());
+                        } else {
+                            assert_eq!(pr[i].to_bits(), pe[i].to_bits(), "p[{i}] {}", tag());
+                            assert_eq!(hr[i].to_bits(), he[i].to_bits(), "h[{i}] {}", tag());
+                        }
+                        assert_eq!(mr[i].to_bits(), me[i].to_bits(), "m[{i}] {}", tag());
+                    }
+                }
             }
         }
     }
