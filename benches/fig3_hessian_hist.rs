@@ -4,10 +4,10 @@
 
 mod common;
 
-use sophia::config::Optimizer;
+use sophia::config::{Optimizer, OutRole};
 use sophia::data;
 use sophia::metrics::LogHistogram;
-use sophia::runtime::{self, lit_i32, run as run_exe, scalar_i32, Runtime};
+use sophia::runtime::{self, Binds, Program, Runtime, Session};
 use sophia::util::bench::scaled;
 
 fn main() -> anyhow::Result<()> {
@@ -29,16 +29,17 @@ fn main() -> anyhow::Result<()> {
     let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
     let mut loader = data::Loader::new(tok, 1, data::Split::Val, model.batch, model.ctx);
     let mut vals: Vec<f64> = Vec::new();
+    let mut sess = Session::new(Program::load(&mut rt, &model, "hess_diag")?, 0);
     for seed in 0..4 {
         let b = loader.next_batch();
-        let tokens = lit_i32(&b.tokens, &[b.batch, b.width])?;
-        let s = scalar_i32(seed);
-        let mut inputs: Vec<&xla::Literal> = trainer.state.params.iter().collect();
-        inputs.push(&tokens);
-        inputs.push(&s);
-        let exe = rt.load_artifact(&model, "hess_diag")?;
-        let out = run_exe(exe, &inputs)?;
-        for leaf in &out {
+        let mut out = sess.run(
+            &mut rt,
+            &Binds::new()
+                .params(&trainer.state.params)
+                .tokens(&b.tokens, [b.batch, b.width])
+                .seed(seed),
+        )?;
+        for leaf in &out.take_group(OutRole::Ghat)? {
             vals.extend(runtime::to_f32(leaf)?.iter().map(|&x| x as f64));
         }
     }

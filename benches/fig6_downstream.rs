@@ -38,12 +38,10 @@ fn main() -> anyhow::Result<()> {
         let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
         let mut rt = Runtime::cpu()?;
         let mut accs = Vec::new();
+        let mut dec =
+            eval::Decoder::new(&mut rt, &model, tok.clone(), &trainer.state.params)?;
         for task in eval::SUBTASKS {
             let items = eval::build(task, n_items, 5);
-            let mut dec = eval::Decoder {
-                rt: &mut rt, model: &model, tok: tok.clone(),
-                params: &trainer.state.params,
-            };
             accs.push(eval::score_mc(&mut dec, &items)?);
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;

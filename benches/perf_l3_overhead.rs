@@ -15,7 +15,7 @@ mod common;
 
 use sophia::config::Optimizer;
 use sophia::data::{self, Split};
-use sophia::runtime::{lit_i32, run as run_exe, scalar_f32, ModelState, Runtime};
+use sophia::runtime::{lit_i32, run as run_exe, scalar_f32, Binds, ModelState, Program, Runtime, Session};
 use sophia::util::bench::{bench, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -48,6 +48,22 @@ fn main() -> anyhow::Result<()> {
         let _ = run_exe(exe, &inputs).unwrap();
     });
 
+    // (1b) the same artifact through the typed-ABI Session: role
+    // binding + slot checks + StepOut decode on top of (1). The delta
+    // (`session_dispatch_delta_ms`) is the Session abstraction's per-step
+    // overhead — measured, not assumed.
+    drop(inputs);
+    let mut sess = Session::new(Program::load(&mut rt, &model, "train_adamw")?, 0);
+    let binds = Binds::new()
+        .state(&state)
+        .tokens(&batch.tokens, [batch.batch, batch.width])
+        .lr(1e-3)
+        .t(1.0);
+    let sess_stats = bench(3, 15, || {
+        let _ = sess.run(&mut rt, &binds).unwrap();
+    });
+    let session_delta = sess_stats.median_ms - raw.median_ms;
+
     // (2) full Trainer step (includes batch fetch, literals, logging)
     let mut cfg = common::base_cfg();
     cfg.preset = preset.into();
@@ -64,7 +80,12 @@ fn main() -> anyhow::Result<()> {
     });
 
     let mut table = Table::new(&["component", "median ms", "min ms", "max ms"]);
-    for (name, s) in [("execute only", &raw), ("full train_step", &full), ("next_batch", &data_t)] {
+    for (name, s) in [
+        ("execute only", &raw),
+        ("Session::run", &sess_stats),
+        ("full train_step", &full),
+        ("next_batch", &data_t),
+    ] {
         table.row(&[
             name.into(),
             format!("{:.2}", s.median_ms),
@@ -80,9 +101,14 @@ fn main() -> anyhow::Result<()> {
     // cheap non-refresh steps.
     let mut csv_rows = vec![
         vec!["execute".into(), raw.median_ms.to_string()],
+        vec!["session_run".into(), sess_stats.median_ms.to_string()],
+        vec!["session_dispatch_delta_ms".into(), session_delta.to_string()],
         vec!["train_step".into(), full.median_ms.to_string()],
         vec!["next_batch".into(), data_t.median_ms.to_string()],
     ];
+    println!(
+        "session dispatch delta (Session::run - raw execute): {session_delta:.3} ms/step"
+    );
     for (opt, ghat) in [(Optimizer::SophiaG, "ghat_gnb"), (Optimizer::SophiaH, "uhvp")] {
         if !model.has_artifact("grad_step") || !model.has_artifact(ghat) {
             println!(

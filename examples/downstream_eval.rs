@@ -34,14 +34,9 @@ fn main() -> Result<()> {
         let model = trainer.model.clone();
         let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
         let mut rt = Runtime::cpu()?;
+        let mut dec = eval::Decoder::new(&mut rt, &model, tok.clone(), &trainer.state.params)?;
         for task in eval::SUBTASKS {
             let items = eval::build(task, n_items, 5);
-            let mut dec = eval::Decoder {
-                rt: &mut rt,
-                model: &model,
-                tok: tok.clone(),
-                params: &trainer.state.params,
-            };
             let acc = eval::score_mc(&mut dec, &items)?;
             let floor = 1.0 / items[0].n_candidates as f64;
             println!("  {task:>12}: acc {acc:.3} (random floor {floor:.3})");

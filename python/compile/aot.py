@@ -110,6 +110,108 @@ def artifact_plan(cfg):
     return plan
 
 
+# ---------------------------------------------------------------------
+# Typed artifact ABI: the io.signatures table
+# ---------------------------------------------------------------------
+# Every lowered artifact declares its calling convention as an ordered
+# list of typed input/output roles instead of a prose string. The Rust
+# side (`config::ArtifactSig`) parses this table, rejects unknown roles,
+# and `runtime::Program` validates each signature's literal arity against
+# the compiled executable at load time — a mismatched manifest fails
+# before step 1, not mid-run.
+#
+# Roles (the full vocabulary — both sides reject anything else):
+#   inputs:  params, m, h      leaf groups (one literal per parameter leaf)
+#            tokens            the [B, T(+1)] i32 batch
+#            lr, t             f32 scalars (LR, 1-based step counter)
+#            seed              i32 scalar (estimator sampling)
+#   outputs: params, m, h      updated state leaf groups
+#            grads             clipped-gradient leaf group (grad_step)
+#            ghat              raw estimator leaf group (ghat_*/uhvp/
+#                              hess_diag — un-EMA'd point estimates)
+#            loss, gnorm, clipfrac, hnorm   f32 scalars
+#            logits            one [B, V] f32 tensor (logits_last)
+#
+# `arity` is either the string "leaves" (n_params literals, manifest
+# param-table order) or the integer 1 (a single literal). An input is
+# `donatable` when an output carries the same role+arity: the runtime may
+# donate that input buffer to the output once the xla binding grows a
+# buffer-donation API (the ROADMAP device-resident-state item) — the
+# signature is where that contract is declared.
+
+IN_ROLES = ("params", "m", "h", "tokens", "lr", "t", "seed")
+OUT_ROLES = (
+    "params", "m", "h", "grads", "ghat",
+    "loss", "gnorm", "clipfrac", "hnorm", "logits",
+)
+
+
+def _leaves(role, donatable=False):
+    sig = {"role": role, "arity": "leaves"}
+    if donatable:
+        sig["donatable"] = True
+    return sig
+
+
+def _one(role):
+    return {"role": role, "arity": 1}
+
+
+def signature_for(name):
+    """The typed IO signature of one lowered artifact, classified by name
+    (hyper-variant suffixes like `train_sophia_gamma0p005`, `_trick` or
+    `_pk` share their base artifact's signature). Raises KeyError for a
+    name no rule claims — `python -m compile.registry` turns that into a
+    parity failure, so an artifact can't be lowered without an ABI."""
+    if name.startswith("train_"):
+        return {
+            "inputs": [
+                _leaves("params", donatable=True),
+                _leaves("m", donatable=True),
+                _leaves("h", donatable=True),
+                _one("tokens"), _one("lr"), _one("t"),
+            ],
+            "outputs": [
+                _leaves("params"), _leaves("m"), _leaves("h"),
+                _one("loss"), _one("gnorm"), _one("clipfrac"),
+            ],
+        }
+    if name == "hess_diag":  # before the hess_ prefix: raw per-leaf probe
+        return {
+            "inputs": [_leaves("params"), _one("tokens"), _one("seed")],
+            "outputs": [_leaves("ghat")],
+        }
+    if name.startswith("hess_"):
+        return {
+            "inputs": [
+                _leaves("params"), _leaves("h", donatable=True),
+                _one("tokens"), _one("seed"),
+            ],
+            "outputs": [_leaves("h"), _one("hnorm")],
+        }
+    if name == "grad_step":
+        return {
+            "inputs": [_leaves("params"), _one("tokens")],
+            "outputs": [_leaves("grads"), _one("loss"), _one("gnorm")],
+        }
+    if name in ("ghat_gnb", "ghat_ef", "uhvp"):
+        return {
+            "inputs": [_leaves("params"), _one("tokens"), _one("seed")],
+            "outputs": [_leaves("ghat")],
+        }
+    if name.startswith("eval_step"):
+        return {
+            "inputs": [_leaves("params"), _one("tokens")],
+            "outputs": [_one("loss")],
+        }
+    if name == "logits_last":
+        return {
+            "inputs": [_leaves("params"), _one("tokens")],
+            "outputs": [_one("logits")],
+        }
+    raise KeyError(f"no IO signature rule claims artifact {name!r}")
+
+
 def write_manifest(cfg, outdir, names):
     man = {
         "config": cfg.to_dict(),
@@ -120,17 +222,17 @@ def write_manifest(cfg, outdir, names):
         "artifacts": {n: f"{n}.hlo.txt" for n in names},
         "hypers": HYPERS,
         "io": {
-            "train_inputs": "params*, m*, h*, tokens[B,T+1]:i32, lr:f32, t:f32",
-            "train_outputs": "params*, m*, h*, loss, gnorm, clipfrac",
-            "hess_inputs": "params*, h*, tokens[B,T+1]:i32, seed:i32",
-            "hess_outputs": "h*, hnorm",
-            "grad": "(params*, tokens[B,T+1]:i32) -> (clipped grads*, loss, gnorm)",
-            "ghat_gnb": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
-            "ghat_ef": "(params*, tokens[B,T+1]:i32, seed:i32) -> (ghat*,)",
-            "uhvp": "(params*, tokens[B,T+1]:i32, seed:i32) -> (u*Hu*,)",
-            "eval": "(params*, tokens) -> (loss,)",
-            "logits_last": "(params*, tokens[B,T]) -> (logits[B,V],)",
-            "hess_diag": "(params*, tokens, seed) -> (hhat*,)",
+            "_doc": (
+                "Typed artifact ABI. signatures[name] = ordered input/"
+                "output roles with arity ('leaves' = one literal per "
+                "parameter leaf, 1 = a single literal); donatable inputs "
+                "may alias the same-role output once buffer donation "
+                "lands. Parsed by config::ArtifactSig; runtime::Program "
+                "arity-checks each signature against the executable at "
+                "load time. Manifests without this table get synthesized "
+                "legacy signatures (deprecated)."
+            ),
+            "signatures": {n: signature_for(n) for n in names},
         },
     }
     with open(os.path.join(outdir, "manifest.json"), "w") as fh:

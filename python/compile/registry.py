@@ -14,10 +14,17 @@ lowered artifact plan covers the registry —
     `hess_gnb_b20p9` count as claimed by their base artifact), so no
     optimizer artifact can be lowered that the registry doesn't know;
  3. for the full presets (those that trim nothing), every registry
-    `train`/`hess` artifact is actually in the plan.
+    `train`/`hess` artifact is actually in the plan;
+ 4. signature coverage (the typed artifact ABI): every lowered artifact
+    has an `aot.signature_for` entry whose roles come from the declared
+    role vocabulary, and the signatures of the artifacts each registry
+    entry names have the shape the Rust runtime expects (train steps
+    return updated state + loss/gnorm/clipfrac, hess steps return h +
+    hnorm, estimator artifacts take a seed and return the raw `ghat`
+    leaf group, `grad_step` returns clipped grads + loss + gnorm).
 
-Run `python -m compile.registry` (the CI registry-parity step): exits
-non-zero listing every violation.
+Run `python -m compile.registry` (the CI registry-parity + signature-
+coverage step): exits non-zero listing every violation.
 """
 
 import json
@@ -100,6 +107,55 @@ def check_preset(cfg, registry=None):
                 if art and art not in plan:
                     errors.append(f"{cfg.name}: registry entry {name} needs {art}, not lowered")
 
+    # 4. signature coverage: every lowered artifact carries a typed ABI
+    errors.extend(check_signatures(cfg, reg, plan))
+
+    return errors
+
+
+def _sig_roles(sig, which):
+    return [e["role"] for e in sig[which]]
+
+
+def check_signatures(cfg, reg, plan):
+    """Rule 4: the typed artifact ABI covers the plan and matches what the
+    registry's artifacts mean to the Rust runtime."""
+    errors = []
+    sigs = {}
+    for art in sorted(plan):
+        try:
+            sigs[art] = aot.signature_for(art)
+        except KeyError:
+            errors.append(f"{cfg.name}: artifact {art} has no IO signature rule")
+            continue
+        for ent in sigs[art]["inputs"]:
+            if ent["role"] not in aot.IN_ROLES:
+                errors.append(f"{cfg.name}: {art} input role {ent['role']!r} not in vocabulary")
+        for ent in sigs[art]["outputs"]:
+            if ent["role"] not in aot.OUT_ROLES:
+                errors.append(f"{cfg.name}: {art} output role {ent['role']!r} not in vocabulary")
+
+    def outputs_of(art):
+        return _sig_roles(sigs[art], "outputs") if art in sigs else None
+
+    def inputs_of(art):
+        return _sig_roles(sigs[art], "inputs") if art in sigs else None
+
+    for name, ent in reg.items():
+        t = ent["train"]
+        if t in sigs and outputs_of(t) != ["params", "m", "h", "loss", "gnorm", "clipfrac"]:
+            errors.append(f"{cfg.name}: {name} train artifact {t} has non-train output signature")
+        h = ent["hess"]
+        if h and h in sigs and outputs_of(h) != ["h", "hnorm"]:
+            errors.append(f"{cfg.name}: {name} hess artifact {h} has non-hess output signature")
+        g = ent["ghat"]
+        if g and g in sigs:
+            if outputs_of(g) != ["ghat"]:
+                errors.append(f"{cfg.name}: {name} estimator artifact {g} must return the raw ghat group")
+            if "seed" not in inputs_of(g):
+                errors.append(f"{cfg.name}: {name} estimator artifact {g} takes no seed input")
+    if GRAD_ARTIFACT in sigs and outputs_of(GRAD_ARTIFACT) != ["grads", "loss", "gnorm"]:
+        errors.append(f"{cfg.name}: {GRAD_ARTIFACT} has non-grad output signature")
     return errors
 
 
@@ -118,7 +174,10 @@ def main():
         for e in errors:
             print(f"  - {e}")
         sys.exit(1)
-    print(f"registry parity OK: {len(load())} optimizers x {len(PRESETS)} presets")
+    print(
+        f"registry parity + signature coverage OK: "
+        f"{len(load())} optimizers x {len(PRESETS)} presets"
+    )
 
 
 if __name__ == "__main__":

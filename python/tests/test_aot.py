@@ -61,6 +61,23 @@ def test_golden_init_bin_size_matches_param_count():
     assert n == PRESETS["nano"].n_params()
 
 
+def test_manifest_signatures_cover_every_artifact():
+    # the written manifest's io.signatures table must have one entry per
+    # artifact, identical to what signature_for computes (the Rust
+    # ArtifactSig parser consumes this table verbatim)
+    man = _manifest("nano")
+    io = man["io"]
+    assert "signatures" in io, "manifest predates the typed artifact ABI"
+    sigs = io["signatures"]
+    assert set(sigs) == set(man["artifacts"])
+    for name, sig in sigs.items():
+        assert sig == aot.signature_for(name), name
+    # the golden-trace artifacts carry the shapes integration tests lean on
+    assert [e["role"] for e in sigs["train_sophia"]["outputs"]] == [
+        "params", "m", "h", "loss", "gnorm", "clipfrac"]
+    assert [e["role"] for e in sigs["eval_step"]["outputs"]] == ["loss"]
+
+
 def test_artifact_plan_covers_figures():
     """The per-experiment index in DESIGN.md needs these variants."""
     plan = aot.artifact_plan(PRESETS["b0"])

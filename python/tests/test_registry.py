@@ -51,3 +51,58 @@ def test_engine_estimator_artifacts_are_the_raw_ghat_family():
         if ent["ghat"] is not None:
             assert ent["ghat"] in raw, f"{name}: {ent['ghat']} is not a raw estimator"
             assert ent["engine"], f"{name}: estimator artifact without engine support"
+
+
+def test_signature_rule_claims_every_planned_artifact():
+    # the typed ABI (io.signatures) must classify every artifact any
+    # preset lowers — an unclassifiable name is a rule-4 parity failure
+    from compile import aot
+
+    for cfg in PRESETS.values():
+        for art in aot.artifact_plan(cfg):
+            sig = aot.signature_for(art)
+            assert sig["inputs"] and sig["outputs"], art
+            for ent in sig["inputs"]:
+                assert ent["role"] in aot.IN_ROLES, (art, ent)
+                assert ent["arity"] == "leaves" or ent["arity"] == 1, (art, ent)
+            for ent in sig["outputs"]:
+                assert ent["role"] in aot.OUT_ROLES, (art, ent)
+
+
+def test_signature_shapes_and_donation_contract():
+    from compile import aot
+
+    train = aot.signature_for("train_sophia")
+    assert [e["role"] for e in train["inputs"]] == [
+        "params", "m", "h", "tokens", "lr", "t"]
+    assert [e["role"] for e in train["outputs"]] == [
+        "params", "m", "h", "loss", "gnorm", "clipfrac"]
+    # donation contract: exactly the inputs whose role recurs as a
+    # same-arity output are donatable
+    donatable = [e["role"] for e in train["inputs"] if e.get("donatable")]
+    assert donatable == ["params", "m", "h"]
+    hess = aot.signature_for("hess_gnb")
+    assert [e["role"] for e in hess["outputs"]] == ["h", "hnorm"]
+    assert [e["role"] for e in hess["inputs"] if e.get("donatable")] == ["h"]
+    # hyper-variants share the base signature; unknown names are rejected
+    assert aot.signature_for("train_sophia_gamma0p005") == train
+    assert aot.signature_for("hess_diag")["outputs"] == [
+        {"role": "ghat", "arity": "leaves"}]
+    import pytest
+
+    with pytest.raises(KeyError):
+        aot.signature_for("mystery_step")
+
+
+def test_signature_check_flags_bad_registry_shapes():
+    # doctor a registry so its hess artifact resolves to a train-shaped
+    # signature: rule 4 must flag it
+    reg = registry.load()
+    bad = {k: dict(v) for k, v in reg.items()}
+    bad["sophia_g"] = dict(bad["sophia_g"], hess="train_adamw")
+    cfg = PRESETS["nano"]
+    from compile import aot
+
+    plan = set(aot.artifact_plan(cfg))
+    errors = registry.check_signatures(cfg, bad, plan)
+    assert any("non-hess output signature" in e for e in errors), errors

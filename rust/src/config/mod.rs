@@ -23,6 +23,362 @@ impl ParamSpec {
     }
 }
 
+// ---------------------------------------------------------------------
+// Typed artifact ABI: manifest-declared signatures
+// ---------------------------------------------------------------------
+
+/// Input role of one artifact argument (the manifest `io.signatures`
+/// vocabulary — aot.py's `IN_ROLES`). Unknown roles are rejected at
+/// manifest parse time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InRole {
+    Params,
+    M,
+    H,
+    Tokens,
+    Lr,
+    T,
+    Seed,
+}
+
+impl InRole {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "params" => Self::Params,
+            "m" => Self::M,
+            "h" => Self::H,
+            "tokens" => Self::Tokens,
+            "lr" => Self::Lr,
+            "t" => Self::T,
+            "seed" => Self::Seed,
+            _ => bail!("unknown artifact input role {s:?} (manifest newer than this binary?)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Params => "params",
+            Self::M => "m",
+            Self::H => "h",
+            Self::Tokens => "tokens",
+            Self::Lr => "lr",
+            Self::T => "t",
+            Self::Seed => "seed",
+        }
+    }
+
+    /// Whether this role names a leaf group (one literal per parameter
+    /// leaf) as opposed to a single literal.
+    pub fn is_group(self) -> bool {
+        matches!(self, Self::Params | Self::M | Self::H)
+    }
+}
+
+/// Output role of one artifact result (aot.py's `OUT_ROLES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutRole {
+    Params,
+    M,
+    H,
+    Grads,
+    Ghat,
+    Loss,
+    Gnorm,
+    Clipfrac,
+    Hnorm,
+    Logits,
+}
+
+impl OutRole {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "params" => Self::Params,
+            "m" => Self::M,
+            "h" => Self::H,
+            "grads" => Self::Grads,
+            "ghat" => Self::Ghat,
+            "loss" => Self::Loss,
+            "gnorm" => Self::Gnorm,
+            "clipfrac" => Self::Clipfrac,
+            "hnorm" => Self::Hnorm,
+            "logits" => Self::Logits,
+            _ => bail!("unknown artifact output role {s:?} (manifest newer than this binary?)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Params => "params",
+            Self::M => "m",
+            Self::H => "h",
+            Self::Grads => "grads",
+            Self::Ghat => "ghat",
+            Self::Loss => "loss",
+            Self::Gnorm => "gnorm",
+            Self::Clipfrac => "clipfrac",
+            Self::Hnorm => "hnorm",
+            Self::Logits => "logits",
+        }
+    }
+
+    pub fn is_group(self) -> bool {
+        matches!(self, Self::Params | Self::M | Self::H | Self::Grads | Self::Ghat)
+    }
+}
+
+/// Literal count of one signature entry: a leaf group (`"leaves"` in the
+/// manifest — n_params literals in param-table order) or one literal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arity {
+    Leaves,
+    One,
+}
+
+impl Arity {
+    fn parse(j: &Json) -> Result<Self> {
+        if j.as_str() == Some("leaves") {
+            return Ok(Arity::Leaves);
+        }
+        match j.as_f64() {
+            Some(x) if x == 1.0 => Ok(Arity::One),
+            _ => bail!("signature arity must be \"leaves\" or 1, got {j:?}"),
+        }
+    }
+
+    pub fn len(self, n_leaves: usize) -> usize {
+        match self {
+            Arity::Leaves => n_leaves,
+            Arity::One => 1,
+        }
+    }
+}
+
+/// One typed input slot of an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SigIn {
+    pub role: InRole,
+    pub arity: Arity,
+    /// The runtime may donate this input's buffers to the same-role
+    /// output once the xla binding grows a buffer-donation API (the
+    /// ROADMAP device-resident-state item). Declared, not yet exercised.
+    pub donatable: bool,
+}
+
+/// One typed output slot of an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SigOut {
+    pub role: OutRole,
+    pub arity: Arity,
+}
+
+/// The machine-checked calling convention of one artifact: ordered typed
+/// input and output roles. Parsed from the manifest's `io.signatures`
+/// table (or synthesized for pre-signature manifests — see
+/// [`ArtifactSig::synthesize`]); `runtime::Program` validates the literal
+/// arity against the compiled executable at load time, and
+/// `runtime::Session`/`runtime::StepOut` bind and decode by role so no
+/// exec site ever does index arithmetic on raw literal tuples again.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub inputs: Vec<SigIn>,
+    pub outputs: Vec<SigOut>,
+}
+
+impl ArtifactSig {
+    fn parse(name: &str, j: &Json) -> Result<Self> {
+        let entries = |which: &str| -> Result<&[Json]> {
+            j.get(which)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("signature for {name} missing {which} list"))
+        };
+        let role_str = |e: &Json| -> Result<&str> {
+            e.get("role")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("signature entry in {name} missing role"))
+        };
+        let arity = |e: &Json| -> Result<Arity> {
+            Arity::parse(e.get("arity").unwrap_or(&Json::Null))
+                .with_context(|| format!("signature for {name}"))
+        };
+        let inputs = entries("inputs")?
+            .iter()
+            .map(|e| -> Result<SigIn> {
+                Ok(SigIn {
+                    role: InRole::parse(role_str(e)?)
+                        .with_context(|| format!("signature for {name}"))?,
+                    arity: arity(e)?,
+                    donatable: e.get("donatable") == Some(&Json::Bool(true)),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = entries("outputs")?
+            .iter()
+            .map(|e| -> Result<SigOut> {
+                Ok(SigOut {
+                    role: OutRole::parse(role_str(e)?)
+                        .with_context(|| format!("signature for {name}"))?,
+                    arity: arity(e)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactSig { name: name.to_string(), inputs, outputs })
+    }
+
+    /// Legacy fallback for manifests that predate `io.signatures`
+    /// (pre-PR-5 artifact dirs): synthesize the signature from the
+    /// artifact name, using the same classification rules aot.py's
+    /// `signature_for` applies at lowering time. Returns None for a name
+    /// the legacy rules don't claim (such artifacts cannot be run through
+    /// [`crate::runtime::Program`] until the manifest is regenerated).
+    pub fn synthesize(name: &str) -> Option<Self> {
+        let leaf = |role, donatable| SigIn { role, arity: Arity::Leaves, donatable };
+        let one = |role| SigIn { role, arity: Arity::One, donatable: false };
+        let oleaf = |role| SigOut { role, arity: Arity::Leaves };
+        let oone = |role| SigOut { role, arity: Arity::One };
+        let (inputs, outputs) = if name.starts_with("train_") {
+            (
+                vec![
+                    leaf(InRole::Params, true),
+                    leaf(InRole::M, true),
+                    leaf(InRole::H, true),
+                    one(InRole::Tokens),
+                    one(InRole::Lr),
+                    one(InRole::T),
+                ],
+                vec![
+                    oleaf(OutRole::Params),
+                    oleaf(OutRole::M),
+                    oleaf(OutRole::H),
+                    oone(OutRole::Loss),
+                    oone(OutRole::Gnorm),
+                    oone(OutRole::Clipfrac),
+                ],
+            )
+        } else if name == "hess_diag" {
+            // before the hess_ prefix: the raw per-leaf Hutchinson probe
+            (
+                vec![leaf(InRole::Params, false), one(InRole::Tokens), one(InRole::Seed)],
+                vec![oleaf(OutRole::Ghat)],
+            )
+        } else if name.starts_with("hess_") {
+            (
+                vec![
+                    leaf(InRole::Params, false),
+                    leaf(InRole::H, true),
+                    one(InRole::Tokens),
+                    one(InRole::Seed),
+                ],
+                vec![oleaf(OutRole::H), oone(OutRole::Hnorm)],
+            )
+        } else if name == "grad_step" {
+            (
+                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
+                vec![oleaf(OutRole::Grads), oone(OutRole::Loss), oone(OutRole::Gnorm)],
+            )
+        } else if matches!(name, "ghat_gnb" | "ghat_ef" | "uhvp") {
+            (
+                vec![leaf(InRole::Params, false), one(InRole::Tokens), one(InRole::Seed)],
+                vec![oleaf(OutRole::Ghat)],
+            )
+        } else if name.starts_with("eval_step") {
+            (
+                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
+                vec![oone(OutRole::Loss)],
+            )
+        } else if name == "logits_last" {
+            (
+                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
+                vec![oone(OutRole::Logits)],
+            )
+        } else {
+            return None;
+        };
+        Some(ArtifactSig { name: name.to_string(), inputs, outputs })
+    }
+
+    /// Total input literal count for a model with `n_leaves` leaves.
+    pub fn n_inputs(&self, n_leaves: usize) -> usize {
+        self.inputs.iter().map(|i| i.arity.len(n_leaves)).sum()
+    }
+
+    /// Total output literal count for a model with `n_leaves` leaves.
+    pub fn n_outputs(&self, n_leaves: usize) -> usize {
+        self.outputs.iter().map(|o| o.arity.len(n_leaves)).sum()
+    }
+
+    /// Flat literal range of one output role plus its declared arity, in
+    /// declaration order. The arity comes back alongside the range so
+    /// consumers type-check against the *declaration*, not the range
+    /// length (a leaf group on a single-leaf model also has length 1).
+    pub fn out_entry(
+        &self,
+        role: OutRole,
+        n_leaves: usize,
+    ) -> Option<(std::ops::Range<usize>, Arity)> {
+        let mut off = 0;
+        for o in &self.outputs {
+            let len = o.arity.len(n_leaves);
+            if o.role == role {
+                return Some((off..off + len, o.arity));
+            }
+            off += len;
+        }
+        None
+    }
+
+    /// Flat literal range of one output role, in declaration order.
+    pub fn out_range(&self, role: OutRole, n_leaves: usize) -> Option<std::ops::Range<usize>> {
+        self.out_entry(role, n_leaves).map(|(r, _)| r)
+    }
+
+    pub fn has_output(&self, role: OutRole) -> bool {
+        self.outputs.iter().any(|o| o.role == role)
+    }
+
+    pub fn has_input(&self, role: InRole) -> bool {
+        self.inputs.iter().any(|i| i.role == role)
+    }
+
+    /// Semantic validation beyond parse-time structure: every group role
+    /// carries leaf-group arity (and scalar roles don't), and no role
+    /// repeats. Run by `runtime::Program::load` so a corrupt manifest
+    /// fails at startup with the artifact named, not mid-run.
+    pub fn validate(&self) -> Result<()> {
+        for i in &self.inputs {
+            if i.role.is_group() != matches!(i.arity, Arity::Leaves) {
+                bail!(
+                    "artifact {}: input role {:?} has wrong arity {:?}",
+                    self.name,
+                    i.role.name(),
+                    i.arity
+                );
+            }
+        }
+        for o in &self.outputs {
+            if o.role.is_group() != matches!(o.arity, Arity::Leaves) {
+                bail!(
+                    "artifact {}: output role {:?} has wrong arity {:?}",
+                    self.name,
+                    o.role.name(),
+                    o.arity
+                );
+            }
+        }
+        let no_dup = |names: Vec<&'static str>, kind: &str| -> Result<()> {
+            for i in 0..names.len() {
+                if names[i + 1..].contains(&names[i]) {
+                    bail!("artifact {}: duplicate {kind} role {:?}", self.name, names[i]);
+                }
+            }
+            Ok(())
+        };
+        no_dup(self.inputs.iter().map(|i| i.role.name()).collect(), "input")?;
+        no_dup(self.outputs.iter().map(|o| o.role.name()).collect(), "output")?;
+        Ok(())
+    }
+}
+
 /// Model preset, loaded from artifacts/<preset>/manifest.json.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
@@ -42,6 +398,15 @@ pub struct ModelConfig {
     /// resident trainer reads the optimizer constants that the artifact
     /// path bakes into its HLO at lowering time.
     pub hypers: Json,
+    /// Typed artifact ABI: `io.signatures` parsed per artifact. Unknown
+    /// roles fail the load; manifests predating the table get synthesized
+    /// legacy signatures (see [`ArtifactSig::synthesize`]) and set
+    /// [`ModelConfig::legacy_signatures`].
+    pub signatures: std::collections::BTreeMap<String, ArtifactSig>,
+    /// True when the manifest carried no `io.signatures` table and the
+    /// signatures above were synthesized from artifact names (deprecated;
+    /// regenerate with `make artifacts`).
+    pub legacy_signatures: bool,
 }
 
 impl ModelConfig {
@@ -84,13 +449,44 @@ impl ModelConfig {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        let artifacts = man
+        let artifacts: Vec<String> = man
             .get("artifacts")
             .and_then(Json::as_obj)
             .ok_or_else(|| anyhow!("manifest missing artifacts"))?
             .keys()
             .cloned()
             .collect();
+        let sig_table = man.get("io").and_then(|io| io.get("signatures"));
+        let mut signatures = std::collections::BTreeMap::new();
+        let legacy_signatures = sig_table.is_none();
+        match sig_table {
+            Some(tbl) => {
+                let tbl = tbl
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("manifest io.signatures is not an object"))?;
+                for (name, sig) in tbl {
+                    signatures.insert(
+                        name.clone(),
+                        ArtifactSig::parse(name, sig)
+                            .with_context(|| format!("manifest {man_path:?}"))?,
+                    );
+                }
+            }
+            None => {
+                // pre-signature manifest: synthesize from artifact names so
+                // old artifact dirs keep working (deprecated path)
+                eprintln!(
+                    "WARNING: {man_path:?} predates the typed artifact ABI \
+                     (io.signatures); synthesizing legacy signatures. \
+                     Regenerate with `make artifacts`."
+                );
+                for name in &artifacts {
+                    if let Some(sig) = ArtifactSig::synthesize(name) {
+                        signatures.insert(name.clone(), sig);
+                    }
+                }
+            }
+        }
         Ok(ModelConfig {
             name: preset.to_string(),
             vocab: usize_of("vocab")?,
@@ -105,6 +501,20 @@ impl ModelConfig {
             artifacts,
             dir,
             hypers: man.get("hypers").cloned().unwrap_or(Json::Null),
+            signatures,
+            legacy_signatures,
+        })
+    }
+
+    /// The typed IO signature of one artifact (the runtime refuses to run
+    /// artifacts without one).
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSig> {
+        self.signatures.get(name).ok_or_else(|| {
+            anyhow!(
+                "preset {} has no IO signature for artifact {name} \
+                 (manifest predates the typed ABI? re-run `make artifacts`)",
+                self.name
+            )
         })
     }
 
@@ -404,6 +814,110 @@ mod tests {
         // the AdaHessian pair is the remaining artifact-path-only family
         assert!(!Optimizer::AdaHessian.engine_resident_supported());
         assert!(!Optimizer::AdaHessianClip.engine_resident_supported());
+    }
+
+    #[test]
+    fn artifact_sig_parses_roles_and_rejects_unknown() {
+        let j = Json::parse(
+            r#"{"inputs": [{"role": "params", "arity": "leaves", "donatable": true},
+                           {"role": "tokens", "arity": 1}, {"role": "lr", "arity": 1}],
+                "outputs": [{"role": "params", "arity": "leaves"},
+                            {"role": "loss", "arity": 1}]}"#,
+        )
+        .unwrap();
+        let sig = ArtifactSig::parse("train_x", &j).unwrap();
+        assert_eq!(sig.inputs.len(), 3);
+        assert!(sig.inputs[0].donatable);
+        assert!(!sig.inputs[1].donatable);
+        assert_eq!(sig.n_inputs(9), 11);
+        assert_eq!(sig.n_outputs(9), 10);
+        assert_eq!(sig.out_range(OutRole::Loss, 9), Some(9..10));
+        assert_eq!(sig.out_range(OutRole::Params, 9), Some(0..9));
+        assert_eq!(sig.out_range(OutRole::Hnorm, 9), None);
+        assert!(sig.validate().is_ok());
+
+        let bad = Json::parse(
+            r#"{"inputs": [{"role": "momentum", "arity": "leaves"}], "outputs": []}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", ArtifactSig::parse("train_x", &bad).unwrap_err());
+        assert!(err.contains("momentum"), "{err}");
+    }
+
+    #[test]
+    fn artifact_sig_validate_catches_wrong_arity_and_duplicates() {
+        // scalar role with leaf-group arity
+        let j = Json::parse(
+            r#"{"inputs": [{"role": "lr", "arity": "leaves"}], "outputs": []}"#,
+        )
+        .unwrap();
+        let sig = ArtifactSig::parse("x", &j).unwrap();
+        let err = sig.validate().unwrap_err().to_string();
+        assert!(err.contains("wrong arity"), "{err}");
+        // group role with scalar arity
+        let j = Json::parse(
+            r#"{"inputs": [], "outputs": [{"role": "ghat", "arity": 1}]}"#,
+        )
+        .unwrap();
+        assert!(ArtifactSig::parse("x", &j).unwrap().validate().is_err());
+        // duplicate role
+        let j = Json::parse(
+            r#"{"inputs": [{"role": "tokens", "arity": 1}, {"role": "tokens", "arity": 1}],
+                "outputs": []}"#,
+        )
+        .unwrap();
+        let err = ArtifactSig::parse("x", &j).unwrap().validate().unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn legacy_synthesis_matches_aot_classification() {
+        // the synthesized fallback mirrors aot.py's signature_for rules
+        let train = ArtifactSig::synthesize("train_sophia_gamma0p005").unwrap();
+        assert_eq!(
+            train.inputs.iter().map(|i| i.role).collect::<Vec<_>>(),
+            vec![InRole::Params, InRole::M, InRole::H, InRole::Tokens, InRole::Lr, InRole::T]
+        );
+        assert_eq!(
+            train.outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
+            vec![
+                OutRole::Params,
+                OutRole::M,
+                OutRole::H,
+                OutRole::Loss,
+                OutRole::Gnorm,
+                OutRole::Clipfrac
+            ]
+        );
+        // donation contract: exactly the state inputs that recur as outputs
+        assert!(train.inputs.iter().all(|i| i.donatable == i.role.is_group()));
+        let hess = ArtifactSig::synthesize("hess_gnb_b20p9").unwrap();
+        assert_eq!(
+            hess.outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
+            vec![OutRole::H, OutRole::Hnorm]
+        );
+        // hess_diag is the raw probe, not an EMA refresh
+        let diag = ArtifactSig::synthesize("hess_diag").unwrap();
+        assert_eq!(diag.outputs.iter().map(|o| o.role).collect::<Vec<_>>(), vec![OutRole::Ghat]);
+        assert!(diag.has_input(InRole::Seed));
+        for name in ["ghat_gnb", "ghat_ef", "uhvp"] {
+            let s = ArtifactSig::synthesize(name).unwrap();
+            assert_eq!(s.outputs.iter().map(|o| o.role).collect::<Vec<_>>(), vec![OutRole::Ghat]);
+        }
+        assert_eq!(
+            ArtifactSig::synthesize("grad_step").unwrap().outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
+            vec![OutRole::Grads, OutRole::Loss, OutRole::Gnorm]
+        );
+        assert!(ArtifactSig::synthesize("eval_step_pk").is_some());
+        assert!(ArtifactSig::synthesize("logits_last").is_some());
+        assert!(ArtifactSig::synthesize("mystery_step").is_none());
+        // every synthesized signature passes semantic validation
+        for name in [
+            "train_adamw", "hess_hutchinson", "hess_diag", "grad_step", "ghat_gnb",
+            "uhvp", "eval_step", "logits_last",
+        ] {
+            ArtifactSig::synthesize(name).unwrap().validate().unwrap();
+        }
     }
 
     #[test]

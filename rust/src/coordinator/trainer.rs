@@ -18,17 +18,23 @@
 //!   literal→`Vec<f32>`→literal round trips of the artifact path
 //!   disappear. Which optimizers run here is decided by the rule registry
 //!   (`optim::rules`), not a hand-kept list.
+//!
+//! Both paths execute artifacts exclusively through the typed-ABI
+//! runtime API: each exec site owns a [`Session`] whose [`Program`] was
+//! arity-validated against the manifest signature at `Trainer::new`
+//! time, binds input roles by name, and decodes outputs by role — no
+//! raw input slices or tuple index arithmetic anywhere in the
+//! coordinator (see `runtime::program`).
 
-use crate::config::{ModelConfig, TrainConfig};
+use crate::config::{ModelConfig, OutRole, TrainConfig};
 use crate::data::{self, Loader, Prefetcher, Split};
 use crate::metrics::{RunLog, StepRecord};
 use crate::optim::engine::{default_threads, AlignedBuf, Backend, FlatState, UpdateKernel};
 use crate::optim::rules::{self, l2_norm, StepCtx, UpdateRule};
-use crate::rng::Rng;
-use crate::runtime::{self, run, scalar_i32, InputBuf, ModelState, Runtime, ScalarSlot, TokenSlot};
+use crate::runtime::{Binds, ModelState, Program, Runtime, Session};
 use crate::schedule::Schedule;
 use anyhow::{bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::time::Instant;
 
 /// The gradient-only artifact every engine-resident optimizer executes
@@ -37,9 +43,11 @@ pub use crate::optim::rules::GRAD_ARTIFACT;
 
 /// Everything the engine-resident path keeps out of literal-land: the
 /// state arena, the update kernel (persistent pool by default), the
-/// optimizer's [`UpdateRule`] with its resolved hypers, gradient scratch
-/// arenas, and the gradient-only artifact paths. Fully optimizer-agnostic:
-/// every per-optimizer fact comes through the rule.
+/// optimizer's [`UpdateRule`] with its resolved hypers, and gradient
+/// scratch arenas. Fully optimizer-agnostic: every per-optimizer fact
+/// comes through the rule; the artifacts themselves live in the
+/// trainer's [`Session`]s (grad_step in `train_sess`, the raw estimator
+/// in `hess_sess`).
 struct EngineState {
     fs: FlatState,
     kernel: Box<dyn UpdateKernel>,
@@ -50,8 +58,6 @@ struct EngineState {
     hypers: Vec<f32>,
     /// `rule.estimator()` point-estimate scale (GNB/EF n_terms).
     est_scale: f32,
-    grad_path: PathBuf,
-    ghat_path: Option<PathBuf>,
     /// clipped-gradient gather target (grad_step outputs)
     g: AlignedBuf,
     /// raw estimator gather target (ghat_gnb / ghat_ef / uhvp outputs);
@@ -64,15 +70,13 @@ impl EngineState {
         let fs = state.to_flat()?;
         let n = fs.len();
         let rule = rules::rule_for(cfg.optimizer);
-        let ghat_name = rule.estimator().artifact();
+        let has_ghat = rule.estimator().artifact().is_some();
         Ok(EngineState {
             kernel: Backend::from_env_or(Backend::Pool(default_threads())).build(),
             hypers: rules::resolve_hypers(rule, model),
             est_scale: rule.estimator().scale(model),
-            grad_path: model.artifact_path(GRAD_ARTIFACT),
-            ghat_path: ghat_name.map(|g| model.artifact_path(g)),
             g: AlignedBuf::zeroed(n),
-            ghat: AlignedBuf::zeroed(if ghat_name.is_some() { n } else { 0 }),
+            ghat: AlignedBuf::zeroed(if has_ghat { n } else { 0 }),
             rule,
             fs,
         })
@@ -99,19 +103,14 @@ pub struct Trainer {
     pub step: usize,
     train_data: Prefetcher,
     val_data: Loader,
-    seed_rng: Rng,
-    // Hot-loop caches: artifact paths resolved once, scalar/token literal
-    // slots overwritten in place, and the input-pointer table reused
-    // across steps (no per-step Vec/lookup-string allocation).
-    train_path: PathBuf,
-    hess_path: Option<PathBuf>,
-    eval_path: PathBuf,
-    lr_slot: ScalarSlot,
-    t_slot: ScalarSlot,
-    tok_train: TokenSlot,
-    tok_hess: TokenSlot,
-    tok_eval: TokenSlot,
-    inputs: InputBuf,
+    // The typed-ABI exec sites: each Session owns one arity-validated
+    // Program plus its hot-loop literal slots and input-pointer table
+    // (no per-step Vec/lookup-string allocation, no index arithmetic).
+    // Artifact path: train artifact + optional hess artifact. Engine
+    // path: grad_step + optional raw estimator (ghat_*/uhvp) artifact.
+    train_sess: Session,
+    hess_sess: Option<Session>,
+    eval_sess: Session,
     /// Some = engine-resident training (state lives in the arena).
     engine: Option<EngineState>,
     /// accumulated wall-clock of hessian refreshes / train execs (Table 1)
@@ -142,8 +141,12 @@ impl Trainer {
             Some("artifact") => false,
             _ => cfg.engine_resident,
         };
-        // compile everything up front so the hot loop never compiles
-        if engine_resident {
+        // Compile + signature-validate everything up front (Program::load
+        // arity-checks each manifest signature against its executable) so
+        // a mismatched manifest fails here, never mid-run, and the hot
+        // loop never compiles.
+        let sess_seed = cfg.seed ^ 0x4E55_5348;
+        let (train_sess, hess_sess) = if engine_resident {
             if !cfg.optimizer.engine_resident_supported() {
                 bail!(
                     "{} has no engine-resident update rule (see optim::rules)",
@@ -153,22 +156,26 @@ impl Trainer {
             if cfg.train_artifact_override.is_some() || cfg.hess_artifact_override.is_some() {
                 bail!("engine-resident training does not support artifact overrides");
             }
-            rt.load_artifact(&model, GRAD_ARTIFACT).with_context(|| {
+            let grad = Program::load(&mut rt, &model, GRAD_ARTIFACT).with_context(|| {
                 format!("engine-resident mode needs the {GRAD_ARTIFACT} artifact; re-run `make artifacts`")
             })?;
-            if let Some(g) = cfg.optimizer.ghat_artifact() {
-                rt.load_artifact(&model, g).with_context(|| {
+            let ghat = match cfg.optimizer.ghat_artifact() {
+                Some(g) => Some(Program::load(&mut rt, &model, g).with_context(|| {
                     format!("engine-resident mode needs the {g} artifact; re-run `make artifacts`")
-                })?;
-            }
+                })?),
+                None => None,
+            };
+            (Session::new(grad, sess_seed), ghat.map(|p| Session::new(p, sess_seed)))
         } else {
-            rt.load_artifact(&model, &cfg.train_artifact())
+            let train = Program::load(&mut rt, &model, &cfg.train_artifact())
                 .with_context(|| format!("train artifact for {}", cfg.optimizer.name()))?;
-            if let Some(h) = cfg.hess_artifact() {
-                rt.load_artifact(&model, &h)?;
-            }
-        }
-        rt.load_artifact(&model, "eval_step")?;
+            let hess = match cfg.hess_artifact() {
+                Some(h) => Some(Program::load(&mut rt, &model, &h)?),
+                None => None,
+            };
+            (Session::new(train, sess_seed), hess.map(|p| Session::new(p, sess_seed)))
+        };
+        let eval_sess = Session::new(Program::load(&mut rt, &model, "eval_step")?, sess_seed);
 
         let tok = data::tokenizer_for_vocab(model.vocab, cfg.data_seed)?;
         let train_loader = Loader::new(
@@ -181,13 +188,6 @@ impl Trainer {
             cfg.effective_lr(), cfg.effective_warmup(), cfg.steps, cfg.final_lr_frac);
         let log = RunLog::new(cfg.log_path.as_deref())?;
 
-        // resolve artifact paths once; the hot loop only does borrowed
-        // cache lookups from here on (the load_artifact calls above already
-        // validated them against the manifest and compiled them)
-        let train_path = model.artifact_path(&cfg.train_artifact());
-        let hess_path = cfg.hess_artifact().map(|h| model.artifact_path(&h));
-        let eval_path = model.artifact_path("eval_step");
-
         let engine = if engine_resident {
             Some(EngineState::build(&cfg, &model, &state)?)
         } else {
@@ -195,7 +195,6 @@ impl Trainer {
         };
 
         Ok(Trainer {
-            seed_rng: Rng::new(cfg.seed ^ 0x4E55__5348),
             cfg,
             model,
             rt,
@@ -205,15 +204,9 @@ impl Trainer {
             step: 0,
             train_data: Prefetcher::spawn(train_loader, 4),
             val_data,
-            train_path,
-            hess_path,
-            eval_path,
-            lr_slot: ScalarSlot::new(0.0),
-            t_slot: ScalarSlot::new(0.0),
-            tok_train: TokenSlot::new(),
-            tok_hess: TokenSlot::new(),
-            tok_eval: TokenSlot::new(),
-            inputs: InputBuf::new(),
+            train_sess,
+            hess_sess,
+            eval_sess,
             engine,
             total_hess_ms: 0.0,
             total_step_ms: 0.0,
@@ -258,23 +251,23 @@ impl Trainer {
         self.restore_engine_from_state()
     }
 
+    /// Algorithm 3 line 7 (artifact path): run the Hessian-EMA refresh
+    /// artifact and swap the returned `h` group into state. The session
+    /// draws the estimator seed from its own rng.
     fn hess_refresh(&mut self) -> Result<f64> {
-        let Some(hess_path) = self.hess_path.as_deref() else {
+        let Some(sess) = self.hess_sess.as_mut() else {
             return Ok(0.0);
         };
         let batch = self.train_data.next_batch();
-        let seed = scalar_i32(self.seed_rng.next_u64() as i32);
-        let n = self.state.n_leaves();
-
-        let tokens = self.tok_hess.set(&batch.tokens, &[batch.batch, batch.width])?;
-        let exe = self.rt.load(hess_path)?;
-        let inputs = self
-            .inputs
-            .assemble(self.state.params.iter().chain(self.state.h.iter()).chain([tokens, &seed]));
-        let mut out = run(exe, inputs)?;
-        let hnorm = runtime::scalar_of(&out[n])? as f64;
-        out.truncate(n);
-        self.state.h = out;
+        let out = sess.run(
+            &mut self.rt,
+            &Binds::new()
+                .params(&self.state.params)
+                .h(&self.state.h)
+                .tokens(&batch.tokens, [batch.batch, batch.width]),
+        )?;
+        let hnorm = out.scalar(OutRole::Hnorm)? as f64;
+        out.into_state(&mut self.state)?;
         self.n_hess += 1;
         Ok(hnorm)
     }
@@ -309,15 +302,16 @@ impl Trainer {
     }
 
     /// The default path: the train artifact computes the optimizer update
-    /// in XLA, state threads through literals.
+    /// in XLA, state threads through literals. One `Session::run` binds
+    /// the (params, m, h) groups plus tokens/lr/t by role; the decoded
+    /// [`crate::runtime::StepOut`] hands back the scalars by name and
+    /// moves the updated state groups in with no index arithmetic.
     fn artifact_step(&mut self, t: usize, lr: f64) -> Result<StepStats> {
         // Algorithm 3 line 7: refresh the Hessian EMA every k steps
         // (t mod k == 1 in the paper's 1-based indexing).
         let mut hess_ms = 0.0;
         let mut hnorm = 0.0;
-        if self.cfg.hess_artifact().is_some()
-            && (t - 1) % self.cfg.hess_interval.max(1) == 0
-        {
+        if self.hess_sess.is_some() && (t - 1) % self.cfg.hess_interval.max(1) == 0 {
             let t0 = Instant::now();
             hnorm = self.hess_refresh()?;
             hess_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -325,35 +319,18 @@ impl Trainer {
 
         let batch = self.train_data.next_batch();
         let t0 = Instant::now();
-        // hot loop: overwrite the cached lr/t/token slots and reuse the
-        // input table instead of rebuilding literals + a 3n+3 Vec per step
-        self.lr_slot.set(lr as f32);
-        self.t_slot.set(t as f32);
-        let n = self.state.n_leaves();
-        let tokens = self.tok_train.set(&batch.tokens, &[batch.batch, batch.width])?;
-
-        let exe = self.rt.load(&self.train_path)?;
-        let inputs = self.inputs.assemble(
-            self.state
-                .params
-                .iter()
-                .chain(self.state.m.iter())
-                .chain(self.state.h.iter())
-                .chain([tokens, self.lr_slot.lit(), self.t_slot.lit()]),
-        );
-        let mut out = run(exe, inputs)?;
-        if out.len() != 3 * n + 3 {
-            bail!("train artifact returned {} outputs, expected {}", out.len(), 3 * n + 3);
-        }
-        let clipfrac = runtime::scalar_of(&out[3 * n + 2])? as f64;
-        let gnorm = runtime::scalar_of(&out[3 * n + 1])? as f64;
-        let loss = runtime::scalar_of(&out[3 * n])? as f64;
-        out.truncate(3 * n);
-        let h_new: Vec<_> = out.drain(2 * n..).collect();
-        let m_new: Vec<_> = out.drain(n..).collect();
-        self.state.params = out;
-        self.state.m = m_new;
-        self.state.h = h_new;
+        let out = self.train_sess.run(
+            &mut self.rt,
+            &Binds::new()
+                .state(&self.state)
+                .tokens(&batch.tokens, [batch.batch, batch.width])
+                .lr(lr as f32)
+                .t(t as f32),
+        )?;
+        let loss = out.scalar(OutRole::Loss)? as f64;
+        let gnorm = out.scalar(OutRole::Gnorm)? as f64;
+        let clipfrac = out.scalar(OutRole::Clipfrac)? as f64;
+        out.into_state(&mut self.state)?;
 
         let step_ms = t0.elapsed().as_secs_f64() * 1e3 + hess_ms;
         Ok(StepStats { loss, gnorm, clipfrac, hnorm, step_ms, hess_ms })
@@ -372,56 +349,53 @@ impl Trainer {
             state,
             engine,
             train_data,
-            seed_rng,
-            tok_train,
-            tok_hess,
-            inputs,
+            train_sess,
+            hess_sess,
             n_hess,
             ..
         } = self;
         let eng = engine.as_mut().expect("engine_step without engine state");
         let lr32 = lr as f32;
-        let n = state.n_leaves();
 
         // Algorithm 3 line 7: raw estimator gradient every k steps; its
-        // EMA is fused into the engine update pass below.
-        let refresh =
-            eng.ghat_path.is_some() && (t - 1) % cfg.hess_interval.max(1) == 0;
+        // EMA is fused into the engine update pass below. On this path
+        // `hess_sess` wraps the rule's raw estimator artifact
+        // (ghat_gnb/ghat_ef/uhvp); the session draws the seed.
+        let refresh = hess_sess.is_some() && (t - 1) % cfg.hess_interval.max(1) == 0;
         let mut hess_ms = 0.0;
         let mut hnorm = 0.0;
         if refresh {
             let t0 = Instant::now();
             let batch = train_data.next_batch();
             state.upload_params(&eng.fs)?;
-            let tokens = tok_hess.set(&batch.tokens, &[batch.batch, batch.width])?;
-            let seed = scalar_i32(seed_rng.next_u64() as i32);
-            let exe = rt.load(eng.ghat_path.as_deref().unwrap())?;
-            let ins = inputs.assemble(state.params.iter().chain([tokens, &seed]));
-            let out = run(exe, ins)?;
-            if out.len() != n {
-                bail!("ghat artifact returned {} outputs, expected {n}", out.len());
-            }
-            runtime::gather_into(&out, eng.fs.leaf_ranges(), &mut eng.ghat)?;
+            let sess = hess_sess.as_mut().unwrap();
+            let out = sess.run(
+                rt,
+                &Binds::new()
+                    .params(&state.params)
+                    .tokens(&batch.tokens, [batch.batch, batch.width]),
+            )?;
+            out.gather_into(OutRole::Ghat, eng.fs.leaf_ranges(), &mut eng.ghat)?;
             *n_hess += 1;
             hess_ms = t0.elapsed().as_secs_f64() * 1e3;
         }
 
-        // gradient-only artifact: loss + globally-clipped grads
+        // gradient-only artifact: loss + globally-clipped grads, gathered
+        // straight into the engine's scratch arena by role
         let batch = train_data.next_batch();
         let t0 = Instant::now();
         if !refresh {
             state.upload_params(&eng.fs)?;
         }
-        let tokens = tok_train.set(&batch.tokens, &[batch.batch, batch.width])?;
-        let exe = rt.load(&eng.grad_path)?;
-        let ins = inputs.assemble(state.params.iter().chain([tokens]));
-        let out = run(exe, ins)?;
-        if out.len() != n + 2 {
-            bail!("grad artifact returned {} outputs, expected {}", out.len(), n + 2);
-        }
-        let gnorm = runtime::scalar_of(&out[n + 1])? as f64;
-        let loss = runtime::scalar_of(&out[n])? as f64;
-        runtime::gather_into(&out[..n], eng.fs.leaf_ranges(), &mut eng.g)?;
+        let out = train_sess.run(
+            rt,
+            &Binds::new()
+                .params(&state.params)
+                .tokens(&batch.tokens, [batch.batch, batch.width]),
+        )?;
+        let gnorm = out.scalar(OutRole::Gnorm)? as f64;
+        let loss = out.scalar(OutRole::Loss)? as f64;
+        out.gather_into(OutRole::Grads, eng.fs.leaf_ranges(), &mut eng.g)?;
 
         // optimizer update on the engine: one rule call, state never
         // leaves the arena. On refresh steps the rule fuses the estimator
@@ -462,11 +436,13 @@ impl Trainer {
         let mut total = 0.0;
         for _ in 0..n_batches.max(1) {
             let batch = self.val_data.next_batch();
-            let tokens = self.tok_eval.set(&batch.tokens, &[batch.batch, batch.width])?;
-            let exe = self.rt.load(&self.eval_path)?;
-            let inputs = self.inputs.assemble(self.state.params.iter().chain([tokens]));
-            let out = run(exe, inputs)?;
-            total += runtime::scalar_of(&out[0])? as f64;
+            let out = self.eval_sess.run(
+                &mut self.rt,
+                &Binds::new()
+                    .params(&self.state.params)
+                    .tokens(&batch.tokens, [batch.batch, batch.width]),
+            )?;
+            total += out.scalar(OutRole::Loss)? as f64;
         }
         Ok(total / n_batches.max(1) as f64)
     }

@@ -4,9 +4,9 @@
 
 pub mod tasks;
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, OutRole};
 use crate::data::Tokenizer;
-use crate::runtime::{self, lit_i32, run, Runtime};
+use crate::runtime::{Binds, Program, Runtime, Session};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -14,45 +14,82 @@ pub use tasks::{build, TaskItem, SUBTASKS};
 
 /// Greedy-decode `max_new` tokens given a prompt, through the batched
 /// `logits_last` artifact (we use batch row 0 and pad the rest).
+///
+/// Decoding runs through a [`Session`]: the `logits_last` signature is
+/// arity-checked at [`Decoder::new`] time, and the per-token hot loop
+/// reuses the session's token slot and input-pointer table plus two
+/// local staging buffers — no fresh `Vec<&Literal>`, token `Vec` or
+/// window `Vec` per generated token.
 pub struct Decoder<'a> {
     pub rt: &'a mut Runtime,
     pub model: &'a ModelConfig,
     pub tok: Arc<dyn Tokenizer>,
     pub params: &'a [xla::Literal],
+    sess: Session,
+    /// reusable [ctx] window + [batch*ctx] batch staging buffers
+    row_buf: Vec<i32>,
+    tok_buf: Vec<i32>,
 }
 
 impl<'a> Decoder<'a> {
-    /// Window of the last `ctx` tokens, left-padded with spaces.
-    fn window(&self, ids: &[i32]) -> Vec<i32> {
+    pub fn new(
+        rt: &'a mut Runtime,
+        model: &'a ModelConfig,
+        tok: Arc<dyn Tokenizer>,
+        params: &'a [xla::Literal],
+    ) -> Result<Self> {
+        let program = Program::load(rt, model, "logits_last")?;
+        Ok(Decoder {
+            sess: Session::new(program, 0),
+            row_buf: Vec::with_capacity(model.ctx),
+            tok_buf: Vec::with_capacity(model.batch * model.ctx),
+            rt,
+            model,
+            tok,
+            params,
+        })
+    }
+
+    /// Fill `row_buf` with the last `ctx` tokens, left-padded with spaces.
+    fn window(&mut self, ids: &[i32]) {
         let ctx = self.model.ctx;
         let pad = b' ' as i32;
-        let mut w = vec![pad; ctx];
         let tail = if ids.len() > ctx { &ids[ids.len() - ctx..] } else { ids };
-        w[ctx - tail.len()..].copy_from_slice(tail);
-        w
+        self.row_buf.clear();
+        self.row_buf.resize(ctx - tail.len(), pad);
+        self.row_buf.extend_from_slice(tail);
+    }
+
+    /// Row-0 logits for the next token after `ids`, through the session
+    /// (row 0 carries the prompt; the other batch rows are copies).
+    fn logits_row0(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
+        let b = self.model.batch;
+        let ctx = self.model.ctx;
+        let v = self.model.vocab;
+        self.window(ids);
+        self.tok_buf.clear();
+        for _ in 0..b {
+            self.tok_buf.extend_from_slice(&self.row_buf);
+        }
+        let out = self.sess.run(
+            self.rt,
+            &Binds::new().params(self.params).tokens(&self.tok_buf, [b, ctx]),
+        )?;
+        let mut logits = out.vec_f32(OutRole::Logits)?;
+        if logits.len() != b * v {
+            bail!("logits_last returned {} values, expected {}", logits.len(), b * v);
+        }
+        logits.truncate(v);
+        Ok(logits)
     }
 
     /// Log-softmax row-0 logits for the next token after `ids`.
     pub fn next_logprobs(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
-        let b = self.model.batch;
-        let ctx = self.model.ctx;
-        let row = self.window(ids);
-        let mut tokens = Vec::with_capacity(b * ctx);
-        for _ in 0..b {
-            tokens.extend_from_slice(&row);
-        }
-        let lit = lit_i32(&tokens, &[b, ctx])?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
-        inputs.extend(self.params.iter());
-        inputs.push(&lit);
-        let exe = self.rt.load_artifact(self.model, "logits_last")?;
-        let out = run(exe, &inputs)?;
-        let logits = runtime::to_f32(&out[0])?;
-        let v = self.model.vocab;
-        let row0 = &logits[..v];
+        let mut row0 = self.logits_row0(ids)?;
         let max = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let lse = max + row0.iter().map(|&z| (z - max).exp()).sum::<f32>().ln();
-        Ok(row0.iter().map(|&z| z - lse).collect())
+        row0.iter_mut().for_each(|z| *z -= lse);
+        Ok(row0)
     }
 
     /// Sum of token log-probs of `continuation` given `prompt` ids
@@ -70,25 +107,7 @@ impl<'a> Decoder<'a> {
     }
 
     pub fn next_token(&mut self, ids: &[i32]) -> Result<i32> {
-        let b = self.model.batch;
-        let ctx = self.model.ctx;
-        let row = self.window(ids);
-        let mut tokens = Vec::with_capacity(b * ctx);
-        for _ in 0..b {
-            tokens.extend_from_slice(&row);
-        }
-        let lit = lit_i32(&tokens, &[b, ctx])?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
-        inputs.extend(self.params.iter());
-        inputs.push(&lit);
-        let exe = self.rt.load_artifact(self.model, "logits_last")?;
-        let out = run(exe, &inputs)?;
-        let logits = runtime::to_f32(&out[0])?;
-        let v = self.model.vocab;
-        if logits.len() != b * v {
-            bail!("logits_last returned {} values, expected {}", logits.len(), b * v);
-        }
-        let row0 = &logits[..v];
+        let row0 = self.logits_row0(ids)?;
         let argmax = row0
             .iter()
             .enumerate()

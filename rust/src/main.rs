@@ -2,11 +2,11 @@
 
 use anyhow::{anyhow, Result};
 use sophia::cli::{build_train_config, Args, USAGE};
-use sophia::config::{ModelConfig, Optimizer};
+use sophia::config::{ModelConfig, Optimizer, OutRole};
 use sophia::coordinator::{sweep, Trainer};
 use sophia::metrics::LogHistogram;
 use sophia::optim::toy::{self, ToyOpt};
-use sophia::runtime::{self, lit_i32, scalar_i32};
+use sophia::runtime;
 use sophia::{data, eval};
 
 fn main() {
@@ -72,9 +72,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     let n = args.usize_or("n", 20)?;
     let task_list = args.str_or("tasks", &eval::SUBTASKS.join(","));
+    let mut dec = eval::Decoder::new(&mut rt, &model, tok.clone(), &state.params)?;
     for task in task_list.split(',') {
         let items = eval::build(task.trim(), n, args.u64_or("task-seed", 5)?);
-        let mut dec = eval::Decoder { rt: &mut rt, model: &model, tok: tok.clone(), params: &state.params };
         let acc = eval::score_mc(&mut dec, &items)?;
         let floor = 1.0 / items[0].n_candidates as f64;
         println!("{task:>12}: acc {acc:.3}  (random floor {floor:.3}, n={n})");
@@ -126,15 +126,16 @@ fn cmd_hist(args: &Args) -> Result<()> {
     let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
     let mut loader = data::Loader::new(tok, 1, data::Split::Val, model.batch, model.ctx);
     let b = loader.next_batch();
-    let tokens = lit_i32(&b.tokens, &[b.batch, b.width])?;
-    let seed = scalar_i32(args.u64_or("hess-seed", 7)? as i32);
-    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-    inputs.push(&tokens);
-    inputs.push(&seed);
-    let exe = rt.load_artifact(&model, "hess_diag")?;
-    let out = runtime::run(exe, &inputs)?;
+    let mut sess = runtime::Session::new(runtime::Program::load(&mut rt, &model, "hess_diag")?, 0);
+    let mut out = sess.run(
+        &mut rt,
+        &runtime::Binds::new()
+            .params(&state.params)
+            .tokens(&b.tokens, [b.batch, b.width])
+            .seed(args.u64_or("hess-seed", 7)? as i32),
+    )?;
     let mut vals: Vec<f64> = Vec::new();
-    for leaf in &out {
+    for leaf in &out.take_group(OutRole::Ghat)? {
         vals.extend(runtime::to_f32(leaf)?.iter().map(|&x| x as f64));
     }
     let bins = args.usize_or("bins", 40)?;

@@ -2,15 +2,45 @@
 //! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
 //! executes them from the training hot path.  Python never runs here.
 //!
-//! Calling conventions are defined in python/compile/optim.py and carried
-//! by artifacts/<preset>/manifest.json (see config::ModelConfig).
+//! # The typed artifact ABI
+//!
+//! Every artifact's calling convention is *data*, not prose: the manifest
+//! carries an `io.signatures` table (aot.py `signature_for`) that
+//! [`crate::config::ArtifactSig`] parses into ordered, typed input roles
+//! (`params`/`m`/`h` leaf groups, `tokens`, `lr`, `t`, `seed`) and output
+//! roles (state groups, `grads`/`ghat` groups, `loss`/`gnorm`/`clipfrac`/
+//! `hnorm` scalars, `logits`). The two runtime entry points are:
+//!
+//! * [`Program`] — a compiled executable bound to its signature,
+//!   arity-validated against the HLO entry computation at load time, so a
+//!   manifest/HLO mismatch fails at startup with the artifact named.
+//! * [`Session`] — owns the hot-loop machinery (the [`ScalarSlot`]/
+//!   [`TokenSlot`] pinned literals, the [`InputBuf`] pointer table, the
+//!   estimator seed rng), binds input roles by name from a [`Binds`]
+//!   value, and decodes every run into a typed [`StepOut`] with named
+//!   scalar accessors and leaf-group views that can [`StepOut::gather_into`]
+//!   an engine arena directly.
+//!
+//! All exec sites — trainer, few-shot decoder, CLI tools, benches,
+//! integration tests — go through `Session::run`; nothing outside this
+//! module assembles raw input slices or indexes raw output tuples. The
+//! signature also declares which inputs are *donatable* (state groups
+//! that recur as outputs), the contract device-resident/donated parameter
+//! buffers will build on once the xla binding exposes buffer donation.
+//!
+//! Manifests that predate `io.signatures` get legacy signatures
+//! synthesized from artifact names (deprecated — see
+//! [`crate::config::ArtifactSig::synthesize`]).
+
+pub mod program;
+
+pub use program::{Binds, Program, Session, StepOut};
 
 use crate::config::{ModelConfig, ParamSpec};
 use crate::optim::engine::{FlatState, StateKind};
 use crate::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::ops::Range;
 use std::path::{Path, PathBuf};
 
 pub struct Runtime {
@@ -128,6 +158,11 @@ impl TokenSlot {
         }
         Ok(self.lit.as_ref().unwrap())
     }
+
+    /// The currently pinned literal, if `set` has run.
+    pub fn lit(&self) -> Option<&xla::Literal> {
+        self.lit.as_ref()
+    }
 }
 
 /// Reusable argument table for [`run`]. Assembling a train step's
@@ -203,25 +238,6 @@ pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
         .map_err(|e| anyhow!("scalar: {e:?}"))
 }
 
-/// Copy leaf literals into a pre-laid-out flat buffer: `lits[i]` lands in
-/// `dst[leaves[i]]`. The binding exposes no borrowed host view of a
-/// literal, so `to_vec` is the narrowest bridge — one host copy per leaf,
-/// straight into the caller's arena slice, with no growing/staging vector
-/// (the engine-resident gradient gather).
-pub fn gather_into(lits: &[xla::Literal], leaves: &[Range<usize>], dst: &mut [f32]) -> Result<()> {
-    if lits.len() != leaves.len() {
-        bail!("gather_into: {} literals for {} leaves", lits.len(), leaves.len());
-    }
-    for (lit, r) in lits.iter().zip(leaves) {
-        let v = to_f32(lit)?;
-        if v.len() != r.len() {
-            bail!("gather_into: leaf has {} elements, layout says {}", v.len(), r.len());
-        }
-        dst[r.clone()].copy_from_slice(&v);
-    }
-    Ok(())
-}
-
 // ---------------------------------------------------------------------
 // Model state: the (params, m, h) triple at the artifact boundary
 // ---------------------------------------------------------------------
@@ -250,17 +266,11 @@ impl ModelState {
             };
             params.push(lit_f32(&data, &spec.shape)?);
         }
-        let zeros = |specs: &[ParamSpec]| -> Result<Vec<xla::Literal>> {
-            specs
-                .iter()
-                .map(|s| lit_f32(&vec![0.0; s.numel()], &s.shape))
-                .collect()
-        };
         Ok(ModelState {
             specs: model.params.clone(),
             params,
-            m: zeros(&model.params)?,
-            h: zeros(&model.params)?,
+            m: zeros_like(&model.params)?,
+            h: zeros_like(&model.params)?,
         })
     }
 
@@ -270,23 +280,20 @@ impl ModelState {
         if flat.len() != model.n_params() {
             bail!("flat param blob has {} floats, expected {}", flat.len(), model.n_params());
         }
-        let mut params = Vec::new();
+        let mut params = Vec::with_capacity(model.params.len());
         let mut off = 0;
         for spec in &model.params {
             let n = spec.numel();
             params.push(lit_f32(&flat[off..off + n], &spec.shape)?);
             off += n;
         }
-        let zeros: Vec<xla::Literal> = model
-            .params
-            .iter()
-            .map(|s| lit_f32(&vec![0.0; s.numel()], &s.shape))
-            .collect::<Result<_>>()?;
+        // Build both zero vectors directly from one shared zero buffer —
+        // no per-leaf host round trip through a literal clone.
         Ok(ModelState {
             specs: model.params.clone(),
             params,
-            m: zeros.iter().map(clone_lit).collect::<Result<_>>()?,
-            h: zeros,
+            m: zeros_like(&model.params)?,
+            h: zeros_like(&model.params)?,
         })
     }
 
@@ -392,13 +399,12 @@ impl ModelState {
     }
 }
 
-fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
-    // Literal has no Clone; round-trip through host data.
-    let shape = l
-        .array_shape()
-        .map_err(|e| anyhow!("shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    lit_f32(&to_f32(l)?, &dims)
+/// One zeroed literal per leaf spec, all sliced from a single shared
+/// zero buffer (no per-leaf allocation, no literal round trips).
+fn zeros_like(specs: &[ParamSpec]) -> Result<Vec<xla::Literal>> {
+    let max_n = specs.iter().map(|s| s.numel()).max().unwrap_or(0);
+    let zbuf = vec![0.0f32; max_n];
+    specs.iter().map(|s| lit_f32(&zbuf[..s.numel()], &s.shape)).collect()
 }
 
 /// Read a flat little-endian f32 binary file (golden_init.bin).
@@ -455,17 +461,6 @@ mod tests {
         let b = [9i32, 8, 7, 6, 5, 4];
         assert_eq!(slot.set(&b, &[2, 3]).unwrap().to_vec::<i32>().unwrap(), b);
         assert_eq!(slot.set(&b, &[3, 2]).unwrap().to_vec::<i32>().unwrap(), b);
-    }
-
-    #[test]
-    fn gather_into_lands_leaves_in_layout_order() {
-        let l0 = lit_f32(&[1.0, 2.0], &[2]).unwrap();
-        let l1 = lit_f32(&[3.0, 4.0, 5.0], &[3]).unwrap();
-        let mut dst = vec![0.0f32; 5];
-        gather_into(&[l0, l1], &[0..2, 2..5], &mut dst).unwrap();
-        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
-        let bad = lit_f32(&[1.0], &[1]).unwrap();
-        assert!(gather_into(&[bad], &[0..2], &mut dst).is_err());
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! `Program` / `Session`: the typed-ABI runtime API.
+//!
+//! A [`Program`] is a compiled artifact plus its manifest-declared
+//! [`ArtifactSig`], arity-validated against the executable's entry
+//! computation at load time — a manifest that disagrees with its HLO
+//! fails at startup with the artifact named, never mid-run. A
+//! [`Session`] owns the hot-loop machinery one exec site needs (the
+//! pinned scalar/token literal slots, the reusable input-pointer table,
+//! and the estimator seed rng), binds input roles by name from a
+//! [`Binds`] value, and decodes each run into a typed [`StepOut`] with
+//! named scalar accessors and leaf-group views.
+//!
+//! No exec site outside `runtime/` assembles raw input slices or indexes
+//! raw output tuples; the trainer, the few-shot decoder, the CLI tools,
+//! benches and integration tests all go through `Session::run`.
+
+use crate::config::{ArtifactSig, Arity, InRole, ModelConfig, OutRole};
+use crate::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use super::{
+    scalar_i32, scalar_of, to_f32, InputBuf, ModelState, Runtime, ScalarSlot, TokenSlot,
+};
+
+// ---------------------------------------------------------------------
+// Program: executable + signature, checked at load time
+// ---------------------------------------------------------------------
+
+/// A compiled artifact bound to its typed signature. Construction
+/// compiles the HLO (through the [`Runtime`] cache, so the hot loop only
+/// ever takes borrowed cache hits) and cross-checks the signature's
+/// literal arity against the executable's entry computation.
+pub struct Program {
+    name: String,
+    path: PathBuf,
+    sig: ArtifactSig,
+    n_leaves: usize,
+}
+
+impl Program {
+    pub fn load(rt: &mut Runtime, model: &ModelConfig, name: &str) -> Result<Program> {
+        if !model.has_artifact(name) {
+            bail!("preset {} has no artifact {name} (see manifest.json)", model.name);
+        }
+        let sig = model.signature(name)?.clone();
+        sig.validate()?;
+        let n_leaves = model.params.len();
+        let path = model.artifact_path(name);
+        rt.load(&path)?;
+        let (n_in, n_out) = hlo_entry_arity(&path)
+            .with_context(|| format!("validating artifact {name} against its signature"))?;
+        let (want_in, want_out) = (sig.n_inputs(n_leaves), sig.n_outputs(n_leaves));
+        if (n_in, n_out) != (want_in, want_out) {
+            bail!(
+                "artifact {name}: manifest signature declares {want_in} input / {want_out} \
+                 output literals for {n_leaves} leaves, but the executable takes {n_in} and \
+                 returns {n_out} — manifest and HLO out of sync (re-run `make artifacts`)"
+            );
+        }
+        Ok(Program { name: name.to_string(), path, sig, n_leaves })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn sig(&self) -> &ArtifactSig {
+        &self.sig
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+}
+
+/// Literal arity of an HLO-text module's entry computation: the number
+/// of `parameter(...)` instructions and of operands in the ROOT tuple.
+/// The text format is the interchange ABI (see aot.py), so this is the
+/// ground truth the manifest signature is validated against.
+fn hlo_entry_arity(path: &Path) -> Result<(usize, usize)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut in_entry = false;
+    let mut n_in = 0usize;
+    let mut n_out = None;
+    for line in text.lines() {
+        if line.starts_with("ENTRY") {
+            in_entry = true;
+            continue;
+        }
+        if !in_entry {
+            continue;
+        }
+        if line.starts_with('}') {
+            break;
+        }
+        let l = line.trim_start();
+        if l.contains(" parameter(") {
+            n_in += 1;
+        }
+        if l.starts_with("ROOT ") {
+            // `ROOT tuple.N = (<shapes>) tuple(op, op, ...)` — artifacts
+            // lower with return_tuple=True, so ROOT is always a tuple.
+            if let Some(p) = l.rfind(" tuple(") {
+                let args = l[p + " tuple(".len()..].trim_end_matches(')');
+                n_out =
+                    Some(if args.trim().is_empty() { 0 } else { args.split(',').count() });
+            }
+        }
+    }
+    match n_out {
+        Some(n) if in_entry => Ok((n_in, n)),
+        _ => bail!("{path:?}: no ENTRY computation with a ROOT tuple found"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binds: per-run role bindings
+// ---------------------------------------------------------------------
+
+/// What a [`Session::run`] call binds to the program's input roles.
+/// Only the roles the signature declares are consumed; binding a role
+/// the signature doesn't use is fine (so one `Binds` construction can
+/// serve artifact variants), but a declared role left unbound is an
+/// error naming the artifact and the role.
+#[derive(Default, Clone, Copy)]
+pub struct Binds<'a> {
+    params: Option<&'a [xla::Literal]>,
+    m: Option<&'a [xla::Literal]>,
+    h: Option<&'a [xla::Literal]>,
+    tokens: Option<(&'a [i32], [usize; 2])>,
+    lr: Option<f32>,
+    t: Option<f32>,
+    seed: Option<i32>,
+}
+
+impl<'a> Binds<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind the full (params, m, h) triple from a [`ModelState`].
+    pub fn state(mut self, s: &'a ModelState) -> Self {
+        self.params = Some(&s.params);
+        self.m = Some(&s.m);
+        self.h = Some(&s.h);
+        self
+    }
+
+    pub fn params(mut self, p: &'a [xla::Literal]) -> Self {
+        self.params = Some(p);
+        self
+    }
+
+    pub fn m(mut self, m: &'a [xla::Literal]) -> Self {
+        self.m = Some(m);
+        self
+    }
+
+    pub fn h(mut self, h: &'a [xla::Literal]) -> Self {
+        self.h = Some(h);
+        self
+    }
+
+    pub fn tokens(mut self, data: &'a [i32], shape: [usize; 2]) -> Self {
+        self.tokens = Some((data, shape));
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn t(mut self, t: f32) -> Self {
+        self.t = Some(t);
+        self
+    }
+
+    /// Explicit estimator seed (golden replays); when absent the
+    /// session's own seed rng draws one.
+    pub fn seed(mut self, seed: i32) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    fn group(&self, role: InRole) -> Option<&'a [xla::Literal]> {
+        match role {
+            InRole::Params => self.params,
+            InRole::M => self.m,
+            InRole::H => self.h,
+            _ => None,
+        }
+    }
+}
+
+/// Iterator over the literals one signature entry contributes.
+enum Part<'a> {
+    Group(std::slice::Iter<'a, xla::Literal>),
+    One(Option<&'a xla::Literal>),
+}
+
+impl<'a> Iterator for Part<'a> {
+    type Item = &'a xla::Literal;
+
+    fn next(&mut self) -> Option<&'a xla::Literal> {
+        match self {
+            Part::Group(it) => it.next(),
+            Part::One(slot) => slot.take(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session: the per-exec-site hot-loop driver
+// ---------------------------------------------------------------------
+
+/// Owns one [`Program`] plus the reusable hot-loop machinery: pinned
+/// `lr`/`t` scalar slots, the token-literal slot (skips rebuilds for
+/// bit-identical batches), the input-pointer table, and the estimator
+/// seed rng. `run` binds roles in signature order, executes, and decodes
+/// into a [`StepOut`] — no per-step `Vec` growth, no index arithmetic at
+/// the call site.
+pub struct Session {
+    program: Program,
+    lr: ScalarSlot,
+    t: ScalarSlot,
+    seed_rng: Rng,
+    seed_lit: Option<xla::Literal>,
+    tokens: TokenSlot,
+    inputs: InputBuf,
+}
+
+impl Session {
+    pub fn new(program: Program, seed: u64) -> Session {
+        Session {
+            program,
+            lr: ScalarSlot::new(0.0),
+            t: ScalarSlot::new(0.0),
+            seed_rng: Rng::new(seed),
+            seed_lit: None,
+            tokens: TokenSlot::new(),
+            inputs: InputBuf::new(),
+        }
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Execute one step: bind every input role the signature declares,
+    /// run the executable (compiled-cache hit through `rt`), and decode
+    /// the output tuple against the signature.
+    pub fn run(&mut self, rt: &mut Runtime, binds: &Binds) -> Result<StepOut<'_>> {
+        let n = self.program.n_leaves;
+        let art = self.program.name.as_str();
+        // phase 1: validate the bindings and refresh the mutable slots
+        for inp in &self.program.sig.inputs {
+            match inp.role {
+                InRole::Params | InRole::M | InRole::H => {
+                    let g = binds.group(inp.role).ok_or_else(|| unbound(art, inp.role))?;
+                    if g.len() != n {
+                        bail!(
+                            "artifact {art}: {} group has {} literals, model has {n} leaves",
+                            inp.role.name(),
+                            g.len()
+                        );
+                    }
+                }
+                InRole::Tokens => {
+                    let (data, shape) =
+                        binds.tokens.ok_or_else(|| unbound(art, InRole::Tokens))?;
+                    self.tokens.set(data, &shape)?;
+                }
+                InRole::Lr => {
+                    let v = binds.lr.ok_or_else(|| unbound(art, InRole::Lr))?;
+                    self.lr.set(v);
+                }
+                InRole::T => {
+                    let v = binds.t.ok_or_else(|| unbound(art, InRole::T))?;
+                    self.t.set(v);
+                }
+                InRole::Seed => {
+                    let s = match binds.seed {
+                        Some(s) => s,
+                        None => self.seed_rng.next_u64() as i32,
+                    };
+                    self.seed_lit = Some(scalar_i32(s));
+                }
+            }
+        }
+        // phase 2: assemble the pointer table in signature order and run
+        let Session { program, lr, t, seed_lit, tokens, inputs, .. } = self;
+        let parts = program.sig.inputs.iter().flat_map(|inp| match inp.role {
+            InRole::Params => Part::Group(binds.params.unwrap_or(&[]).iter()),
+            InRole::M => Part::Group(binds.m.unwrap_or(&[]).iter()),
+            InRole::H => Part::Group(binds.h.unwrap_or(&[]).iter()),
+            InRole::Tokens => Part::One(tokens.lit()),
+            InRole::Lr => Part::One(Some(lr.lit())),
+            InRole::T => Part::One(Some(t.lit())),
+            InRole::Seed => Part::One(seed_lit.as_ref()),
+        });
+        let ins = inputs.assemble(parts);
+        let exe = rt.load(&program.path)?;
+        let out = super::run(exe, ins)?;
+        StepOut::decode(out, &program.sig, program.n_leaves)
+    }
+}
+
+fn unbound(art: &str, role: InRole) -> anyhow::Error {
+    anyhow!("artifact {art}: input role {:?} declared by the signature but not bound", role.name())
+}
+
+fn kind(a: Arity) -> &'static str {
+    match a {
+        Arity::Leaves => "a leaf group",
+        Arity::One => "a single literal",
+    }
+}
+
+// ---------------------------------------------------------------------
+// StepOut: typed output decoding
+// ---------------------------------------------------------------------
+
+/// One run's outputs, decoded against the artifact signature. Scalars
+/// are read in place by role; leaf groups can be moved out
+/// ([`StepOut::take_group`], [`StepOut::into_state`]) or copied straight
+/// into an engine arena ([`StepOut::gather_into`]) without the caller
+/// ever computing a tuple index.
+pub struct StepOut<'p> {
+    sig: &'p ArtifactSig,
+    n_leaves: usize,
+    lits: Vec<Option<xla::Literal>>,
+}
+
+impl<'p> StepOut<'p> {
+    /// Check the raw output tuple against the signature and wrap it.
+    /// (Public so tests can decode hand-built tuples; exec sites get
+    /// their `StepOut` from [`Session::run`].)
+    pub fn decode(
+        out: Vec<xla::Literal>,
+        sig: &'p ArtifactSig,
+        n_leaves: usize,
+    ) -> Result<StepOut<'p>> {
+        let want = sig.n_outputs(n_leaves);
+        if out.len() != want {
+            bail!(
+                "artifact {}: returned {} output literals, signature declares {want} \
+                 for {n_leaves} leaves",
+                sig.name,
+                out.len()
+            );
+        }
+        Ok(StepOut { sig, n_leaves, lits: out.into_iter().map(Some).collect() })
+    }
+
+    /// Range + declared arity of one output role. Typing is checked
+    /// against the *declared* arity, never the range length — a leaf
+    /// group on a single-leaf model also has length 1.
+    fn entry(&self, role: OutRole) -> Result<(Range<usize>, Arity)> {
+        self.sig.out_entry(role, self.n_leaves).ok_or_else(|| {
+            anyhow!("artifact {} has no output role {:?}", self.sig.name, role.name())
+        })
+    }
+
+    fn range_of(&self, role: OutRole, want: Arity) -> Result<Range<usize>> {
+        let (r, arity) = self.entry(role)?;
+        if arity != want {
+            bail!(
+                "artifact {}: role {:?} is declared {}, not {}",
+                self.sig.name,
+                role.name(),
+                kind(arity),
+                kind(want)
+            );
+        }
+        Ok(r)
+    }
+
+    fn lit(&self, i: usize) -> Result<&xla::Literal> {
+        self.lits[i]
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact {}: output {i} already taken", self.sig.name))
+    }
+
+    /// Read a single-literal output role as an f32 scalar.
+    pub fn scalar(&self, role: OutRole) -> Result<f32> {
+        let r = self.range_of(role, Arity::One)?;
+        scalar_of(self.lit(r.start)?)
+    }
+
+    /// Read a single-literal output role (e.g. `logits`) as a flat f32
+    /// vector.
+    pub fn vec_f32(&self, role: OutRole) -> Result<Vec<f32>> {
+        let r = self.range_of(role, Arity::One)?;
+        to_f32(self.lit(r.start)?)
+    }
+
+    /// Move a leaf-group output out of the step (state replacement).
+    pub fn take_group(&mut self, role: OutRole) -> Result<Vec<xla::Literal>> {
+        let r = self.range_of(role, Arity::Leaves)?;
+        let mut out = Vec::with_capacity(r.len());
+        for i in r {
+            out.push(self.lits[i].take().ok_or_else(|| {
+                anyhow!("artifact {}: output {i} already taken", self.sig.name)
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Copy a leaf-group output into a pre-laid-out flat buffer (the
+    /// engine-resident gradient/estimator gather): group literal `i`
+    /// lands in `dst[leaves[i]]`, no staging vector.
+    pub fn gather_into(
+        &self,
+        role: OutRole,
+        leaves: &[Range<usize>],
+        dst: &mut [f32],
+    ) -> Result<()> {
+        let r = self.range_of(role, Arity::Leaves)?;
+        if r.len() != leaves.len() {
+            bail!(
+                "artifact {}: {} group has {} literals for {} layout leaves",
+                self.sig.name,
+                role.name(),
+                r.len(),
+                leaves.len()
+            );
+        }
+        for (i, lr) in r.zip(leaves) {
+            let v = to_f32(self.lit(i)?)?;
+            if v.len() != lr.len() {
+                bail!(
+                    "artifact {}: {} leaf has {} elements, layout says {}",
+                    self.sig.name,
+                    role.name(),
+                    v.len(),
+                    lr.len()
+                );
+            }
+            dst[lr.clone()].copy_from_slice(&v);
+        }
+        Ok(())
+    }
+
+    /// Move every state leaf group the signature declares (`params`,
+    /// `m`, `h`) into `state` — the single way artifact outputs become
+    /// model state.
+    pub fn into_state(mut self, state: &mut ModelState) -> Result<()> {
+        if state.n_leaves() != self.n_leaves {
+            bail!(
+                "artifact {}: decoding against {} leaves but state has {}",
+                self.sig.name,
+                self.n_leaves,
+                state.n_leaves()
+            );
+        }
+        for role in [OutRole::Params, OutRole::M, OutRole::H] {
+            if self.sig.has_output(role) {
+                let group = self.take_group(role)?;
+                match role {
+                    OutRole::Params => state.params = group,
+                    OutRole::M => state.m = group,
+                    OutRole::H => state.h = group,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arity, SigIn, SigOut};
+    use crate::runtime::lit_f32;
+
+    fn sig(inputs: Vec<SigIn>, outputs: Vec<SigOut>) -> ArtifactSig {
+        ArtifactSig { name: "test_art".into(), inputs, outputs }
+    }
+
+    fn oleaf(role: OutRole) -> SigOut {
+        SigOut { role, arity: Arity::Leaves }
+    }
+
+    fn oone(role: OutRole) -> SigOut {
+        SigOut { role, arity: Arity::One }
+    }
+
+    #[test]
+    fn step_out_decodes_by_role_not_index() {
+        // grad-step shape: (grads*, loss, gnorm) with 2 ragged leaves
+        let s = sig(vec![], vec![oleaf(OutRole::Grads), oone(OutRole::Loss), oone(OutRole::Gnorm)]);
+        let lits = vec![
+            lit_f32(&[1.0, 2.0], &[2]).unwrap(),
+            lit_f32(&[3.0, 4.0, 5.0], &[3]).unwrap(),
+            lit_f32(&[0.5], &[1]).unwrap(),
+            lit_f32(&[7.0], &[1]).unwrap(),
+        ];
+        let mut out = StepOut::decode(lits, &s, 2).unwrap();
+        assert_eq!(out.scalar(OutRole::Loss).unwrap(), 0.5);
+        assert_eq!(out.scalar(OutRole::Gnorm).unwrap(), 7.0);
+        // role not in the signature / group-as-scalar are clear errors
+        assert!(out.scalar(OutRole::Clipfrac).is_err());
+        assert!(out.scalar(OutRole::Grads).is_err());
+        let mut dst = vec![0.0f32; 5];
+        out.gather_into(OutRole::Grads, &[0..2, 2..5], &mut dst).unwrap();
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let g = out.take_group(OutRole::Grads).unwrap();
+        assert_eq!(g.len(), 2);
+        // double-take is an error, scalars remain readable
+        assert!(out.take_group(OutRole::Grads).is_err());
+        assert_eq!(out.scalar(OutRole::Loss).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn step_out_types_by_declared_arity_even_with_one_leaf() {
+        // on a single-leaf model a leaf group also has range length 1 —
+        // the typing must come from the declared arity, not the length
+        let s = sig(vec![], vec![oleaf(OutRole::Grads), oone(OutRole::Loss)]);
+        let lits =
+            vec![lit_f32(&[1.0, 2.0], &[2]).unwrap(), lit_f32(&[0.5], &[1]).unwrap()];
+        let mut out = StepOut::decode(lits, &s, 1).unwrap();
+        let err = out.scalar(OutRole::Grads).unwrap_err().to_string();
+        assert!(err.contains("leaf group"), "{err}");
+        assert!(out.vec_f32(OutRole::Grads).is_err());
+        assert!(out.take_group(OutRole::Loss).is_err());
+        assert!(out.gather_into(OutRole::Loss, &[0..1], &mut [0.0]).is_err());
+        assert_eq!(out.scalar(OutRole::Loss).unwrap(), 0.5);
+        assert_eq!(out.take_group(OutRole::Grads).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn step_out_rejects_wrong_output_count() {
+        let s = sig(vec![], vec![oone(OutRole::Loss)]);
+        let lits = vec![
+            lit_f32(&[0.5], &[1]).unwrap(),
+            lit_f32(&[0.6], &[1]).unwrap(),
+        ];
+        let err = StepOut::decode(lits, &s, 4).unwrap_err().to_string();
+        assert!(err.contains("returned 2 output literals"), "{err}");
+    }
+
+    #[test]
+    fn hlo_entry_arity_parses_entry_and_root_tuple() {
+        let dir = std::env::temp_dir().join("sophia_hlo_arity_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.hlo.txt");
+        std::fs::write(
+            &p,
+            "HloModule m\n\n\
+             region_0.5 {\n  Arg_0.6 = f32[] parameter(0)\n  ROOT neg.7 = f32[] negate(Arg_0.6)\n}\n\n\
+             ENTRY main.9 {\n\
+             \x20 Arg_0.1 = f32[2]{0} parameter(0)\n\
+             \x20 Arg_1.2 = s32[4,65]{1,0} parameter(1)\n\
+             \x20 add.3 = f32[2]{0} add(Arg_0.1, Arg_0.1)\n\
+             \x20 ROOT tuple.4 = (f32[2]{0}, f32[]) tuple(add.3, Arg_0.1)\n\
+             }\n",
+        )
+        .unwrap();
+        assert_eq!(hlo_entry_arity(&p).unwrap(), (2, 2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,10 +1,12 @@
 //! Runtime integration: the Rust PJRT path must reproduce the golden
-//! trace recorded by aot.py (same artifacts, same inputs => same numbers).
+//! trace recorded by aot.py (same artifacts, same inputs => same numbers),
+//! now through the typed-ABI `Program`/`Session` API — every artifact run
+//! binds roles by name and decodes by role, no tuple index arithmetic.
 //! Skips gracefully (with a loud message) if `make artifacts` hasn't run.
 
 use anyhow::Result;
-use sophia::config::ModelConfig;
-use sophia::runtime::{self, lit_i32, run, scalar_f32, scalar_i32, ModelState, Runtime};
+use sophia::config::{ModelConfig, OutRole};
+use sophia::runtime::{self, Binds, ModelState, Program, Runtime, Session};
 use sophia::util::json::Json;
 use std::path::PathBuf;
 
@@ -50,8 +52,8 @@ fn golden_sophia_trace_reproduced() -> Result<()> {
         "init checksum {got_init} vs {want_init}"
     );
 
-    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
-    let n = state.n_leaves();
+    let tokens = golden_tokens(&model);
+    let shape = [model.batch, model.ctx + 1];
     let k = g.get("k").unwrap().as_usize().unwrap();
     let lr = g.get("lr").unwrap().as_f64().unwrap() as f32;
     let want_losses: Vec<f64> = g
@@ -61,32 +63,36 @@ fn golden_sophia_trace_reproduced() -> Result<()> {
         .get("clipfracs").unwrap().as_arr().unwrap()
         .iter().map(|x| x.as_f64().unwrap()).collect();
 
+    let mut hess = Session::new(Program::load(&mut rt, &model, "hess_gnb")?, 0);
+    let mut train = Session::new(Program::load(&mut rt, &model, "train_sophia")?, 0);
+    let mut eval = Session::new(Program::load(&mut rt, &model, "eval_step")?, 0);
+
     let mut hnorm_last = 0.0f32;
     for t in 1..=want_losses.len() {
         if (t - 1) % k == 0 {
-            let seed = scalar_i32(t as i32);
-            let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-            inputs.extend(state.h.iter());
-            inputs.push(&tokens);
-            inputs.push(&seed);
-            let exe = rt.load_artifact(&model, "hess_gnb")?;
-            let mut out = run(exe, &inputs)?;
-            hnorm_last = runtime::scalar_of(&out[n])?;
-            out.truncate(n);
-            state.h = out;
+            // golden trace pins the estimator seed to t (Binds::seed
+            // overrides the session rng)
+            let out = hess.run(
+                &mut rt,
+                &Binds::new()
+                    .params(&state.params)
+                    .h(&state.h)
+                    .tokens(&tokens, shape)
+                    .seed(t as i32),
+            )?;
+            hnorm_last = out.scalar(OutRole::Hnorm)?;
+            out.into_state(&mut state)?;
         }
-        let lr_lit = scalar_f32(lr);
-        let t_lit = scalar_f32(t as f32);
-        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-        inputs.extend(state.m.iter());
-        inputs.extend(state.h.iter());
-        inputs.push(&tokens);
-        inputs.push(&lr_lit);
-        inputs.push(&t_lit);
-        let exe = rt.load_artifact(&model, "train_sophia")?;
-        let mut out = run(exe, &inputs)?;
-        let loss = runtime::scalar_of(&out[3 * n])? as f64;
-        let clip = runtime::scalar_of(&out[3 * n + 2])? as f64;
+        let out = train.run(
+            &mut rt,
+            &Binds::new()
+                .state(&state)
+                .tokens(&tokens, shape)
+                .lr(lr)
+                .t(t as f32),
+        )?;
+        let loss = out.scalar(OutRole::Loss)? as f64;
+        let clip = out.scalar(OutRole::Clipfrac)? as f64;
         assert!(
             (loss - want_losses[t - 1]).abs() < 2e-4,
             "step {t}: loss {loss} vs golden {}",
@@ -97,10 +103,7 @@ fn golden_sophia_trace_reproduced() -> Result<()> {
             "step {t}: clipfrac {clip} vs {}",
             want_clip[t - 1]
         );
-        out.truncate(3 * n);
-        state.h = out.split_off(2 * n);
-        state.m = out.split_off(n);
-        state.params = out;
+        out.into_state(&mut state)?;
     }
 
     // final hnorm, eval loss and parameter checksum
@@ -109,11 +112,8 @@ fn golden_sophia_trace_reproduced() -> Result<()> {
         (hnorm_last as f64 - want_hnorm).abs() / want_hnorm.max(1e-9) < 1e-3,
         "hnorm {hnorm_last} vs {want_hnorm}"
     );
-    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-    inputs.push(&tokens);
-    let exe = rt.load_artifact(&model, "eval_step")?;
-    let out = run(exe, &inputs)?;
-    let eval_loss = runtime::scalar_of(&out[0])? as f64;
+    let out = eval.run(&mut rt, &Binds::new().params(&state.params).tokens(&tokens, shape))?;
+    let eval_loss = out.scalar(OutRole::Loss)? as f64;
     let want_eval = g.get("eval_loss").unwrap().as_f64().unwrap();
     assert!(
         (eval_loss - want_eval).abs() < 2e-4,
@@ -140,15 +140,14 @@ fn pallas_model_artifact_matches_jnp_model_artifact() -> Result<()> {
     let mut rt = Runtime::cpu()?;
     let init = runtime::read_f32_file(&artifacts_root().join("nano/golden_init.bin"))?;
     let state = ModelState::from_flat_params(&model, &init)?;
-    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
+    let tokens = golden_tokens(&model);
+    let shape = [model.batch, model.ctx + 1];
 
     let mut losses = Vec::new();
     for art in ["eval_step", "eval_step_pk"] {
-        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-        inputs.push(&tokens);
-        let exe = rt.load_artifact(&model, art)?;
-        let out = run(exe, &inputs)?;
-        losses.push(runtime::scalar_of(&out[0])? as f64);
+        let mut sess = Session::new(Program::load(&mut rt, &model, art)?, 0);
+        let out = sess.run(&mut rt, &Binds::new().params(&state.params).tokens(&tokens, shape))?;
+        losses.push(out.scalar(OutRole::Loss)? as f64);
     }
     assert!(
         (losses[0] - losses[1]).abs() < 1e-4,
@@ -160,15 +159,19 @@ fn pallas_model_artifact_matches_jnp_model_artifact() -> Result<()> {
 }
 
 #[test]
-fn all_manifest_artifacts_compile() -> Result<()> {
+fn all_manifest_artifacts_compile_and_match_their_signatures() -> Result<()> {
+    // Program::load arity-checks every manifest signature against its
+    // compiled executable — this is the whole-manifest ABI conformance
+    // sweep, not just a compile smoke test.
     if !have_nano() {
         eprintln!("SKIP: run `make artifacts` first");
         return Ok(());
     }
     let model = ModelConfig::load(&artifacts_root(), "nano")?;
+    assert!(!model.legacy_signatures, "nano manifest should carry io.signatures");
     let mut rt = Runtime::cpu()?;
     for name in model.artifacts.clone() {
-        rt.load_artifact(&model, &name)?;
+        Program::load(&mut rt, &model, &name)?;
     }
     Ok(())
 }
@@ -182,18 +185,21 @@ fn hess_diag_returns_per_leaf_estimates() -> Result<()> {
     let model = ModelConfig::load(&artifacts_root(), "nano")?;
     let mut rt = Runtime::cpu()?;
     let state = ModelState::init(&model, 3)?;
-    let tokens = lit_i32(&golden_tokens(&model), &[model.batch, model.ctx + 1])?;
-    let seed = scalar_i32(9);
-    let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
-    inputs.push(&tokens);
-    inputs.push(&seed);
-    let exe = rt.load_artifact(&model, "hess_diag")?;
-    let out = run(exe, &inputs)?;
-    assert_eq!(out.len(), state.n_leaves());
+    let tokens = golden_tokens(&model);
+    let mut sess = Session::new(Program::load(&mut rt, &model, "hess_diag")?, 0);
+    let mut out = sess.run(
+        &mut rt,
+        &Binds::new()
+            .params(&state.params)
+            .tokens(&tokens, [model.batch, model.ctx + 1])
+            .seed(9),
+    )?;
+    let leaves = out.take_group(OutRole::Ghat)?;
+    assert_eq!(leaves.len(), state.n_leaves());
     // Hutchinson on a transformer: finite, non-degenerate, mixed signs
     let mut any_neg = false;
     let mut any_pos = false;
-    for leaf in &out {
+    for leaf in &leaves {
         for v in runtime::to_f32(leaf)? {
             assert!(v.is_finite());
             any_neg |= v < 0.0;
@@ -201,5 +207,128 @@ fn hess_diag_returns_per_leaf_estimates() -> Result<()> {
         }
     }
     assert!(any_pos && any_neg);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Signature failure modes: a wrong manifest fails at Program load,
+// before step 1 — never mid-run.
+// ---------------------------------------------------------------------
+
+/// Copy the nano manifest + one artifact into a temp preset dir, after
+/// applying `doctor` to the parsed manifest JSON.
+fn doctored_preset(tag: &str, doctor: impl FnOnce(&mut Json)) -> Result<PathBuf> {
+    let root = std::env::temp_dir().join(format!("sophia_abi_{tag}"));
+    let dir = root.join("nano");
+    std::fs::create_dir_all(&dir)?;
+    let text = std::fs::read_to_string(artifacts_root().join("nano/manifest.json"))?;
+    let mut man = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    doctor(&mut man);
+    std::fs::write(dir.join("manifest.json"), man.to_string())?;
+    std::fs::copy(
+        artifacts_root().join("nano/eval_step.hlo.txt"),
+        dir.join("eval_step.hlo.txt"),
+    )?;
+    Ok(root)
+}
+
+/// Mutable handle on manifest.io.signatures.<art>.<which> (a Json array).
+fn sig_list<'j>(man: &'j mut Json, art: &str, which: &str) -> &'j mut Vec<Json> {
+    let Json::Obj(man) = man else { panic!("manifest not an object") };
+    let Some(Json::Obj(io)) = man.get_mut("io") else { panic!("no io") };
+    let Some(Json::Obj(sigs)) = io.get_mut("signatures") else { panic!("no signatures") };
+    let Some(Json::Obj(sig)) = sigs.get_mut(art) else { panic!("no {art} signature") };
+    let Some(Json::Arr(list)) = sig.get_mut(which) else { panic!("no {which}") };
+    list
+}
+
+#[test]
+fn wrong_arity_signature_fails_at_program_load() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    // drop the tokens input from eval_step's declared signature: the
+    // literal count no longer matches the executable's entry computation
+    let root = doctored_preset("wrong_arity", |man| {
+        sig_list(man, "eval_step", "inputs").retain(|e| {
+            e.get("role").and_then(Json::as_str) != Some("tokens")
+        });
+    })?;
+    let model = ModelConfig::load(&root, "nano")?;
+    let mut rt = Runtime::cpu()?;
+    let err = Program::load(&mut rt, &model, "eval_step")
+        .err()
+        .expect("mismatched signature must fail at load");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("out of sync"), "unexpected error: {msg}");
+    assert!(msg.contains("eval_step"), "error must name the artifact: {msg}");
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}
+
+#[test]
+fn group_role_with_scalar_arity_fails_at_program_load() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    // declare params with arity 1: structural parse succeeds, but the
+    // semantic validation in Program::load rejects it
+    let root = doctored_preset("bad_group_arity", |man| {
+        let inputs = sig_list(man, "eval_step", "inputs");
+        let Json::Obj(first) = &mut inputs[0] else { panic!("input 0") };
+        first.insert("arity".into(), Json::Num(1.0));
+    })?;
+    let model = ModelConfig::load(&root, "nano")?;
+    let mut rt = Runtime::cpu()?;
+    let err = Program::load(&mut rt, &model, "eval_step")
+        .err()
+        .expect("group role with scalar arity must fail at load");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("wrong arity"), "unexpected error: {msg}");
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}
+
+#[test]
+fn unknown_role_signature_fails_before_program_load() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    // an unknown role is rejected when the manifest is parsed — even
+    // earlier than Program::load, so no artifact can run against it
+    let root = doctored_preset("unknown_role", |man| {
+        let inputs = sig_list(man, "eval_step", "inputs");
+        let Json::Obj(first) = &mut inputs[0] else { panic!("input 0") };
+        first.insert("role".into(), Json::Str("momentum".into()));
+    })?;
+    let err = ModelConfig::load(&root, "nano").err().expect("unknown role must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("momentum"), "error must name the bad role: {msg}");
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}
+
+#[test]
+fn legacy_manifest_without_signatures_still_loads() -> Result<()> {
+    if !have_nano() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    // pre-PR-5 manifest: no io.signatures table at all — synthesized
+    // legacy signatures keep old artifact dirs working (deprecated)
+    let root = doctored_preset("legacy", |man| {
+        let Json::Obj(m) = man else { panic!("manifest not an object") };
+        m.remove("io");
+    })?;
+    let model = ModelConfig::load(&root, "nano")?;
+    assert!(model.legacy_signatures);
+    let mut rt = Runtime::cpu()?;
+    // the synthesized signature still arity-checks against the executable
+    let prog = Program::load(&mut rt, &model, "eval_step")?;
+    assert_eq!(prog.sig().n_inputs(model.params.len()), model.params.len() + 1);
+    std::fs::remove_dir_all(&root).ok();
     Ok(())
 }

@@ -335,7 +335,7 @@ fn fewshot_decoder_runs_on_fresh_model() -> Result<()> {
     let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
     let state = sophia::runtime::ModelState::init(&model, 0)?;
     let items = eval::build("copy", 4, 3);
-    let mut dec = eval::Decoder { rt: &mut rt, model: &model, tok, params: &state.params };
+    let mut dec = eval::Decoder::new(&mut rt, &model, tok, &state.params)?;
     let acc = eval::score(&mut dec, &items)?;
     assert!((0.0..=1.0).contains(&acc));
     Ok(())

@@ -665,3 +665,100 @@ fn prop_adamw_step_norm_bounded_by_lr_over_eps_regime() {
         }
     }
 }
+
+#[test]
+fn prop_step_out_decoding_matches_hand_indexed_path() {
+    // The typed StepOut decode must be bit-exact against the old
+    // hand-indexed tuple arithmetic (out[3n], out.drain(2n..), ...) for
+    // ragged leaf layouts — the contract the trainer port relies on.
+    use sophia::config::{ArtifactSig, Arity, OutRole, SigOut};
+    use sophia::runtime::{lit_f32, scalar_of, to_f32, StepOut};
+
+    let oleaf = |role| SigOut { role, arity: Arity::Leaves };
+    let oone = |role| SigOut { role, arity: Arity::One };
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0xAB1E);
+        let n = 1 + rng.below(6) as usize;
+        let lens: Vec<usize> = (0..n).map(|_| 1 + rng.below(40) as usize).collect();
+        let group = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            lens.iter().map(|&l| rand_vec(rng, l, 1.0)).collect()
+        };
+        let p = group(&mut rng);
+        let m = group(&mut rng);
+        let h = group(&mut rng);
+        let scalars = [rng.normal_f32(1.0), rng.normal_f32(1.0), rng.normal_f32(1.0)];
+        let build = || -> Vec<xla::Literal> {
+            let mut out = Vec::new();
+            for grp in [&p, &m, &h] {
+                for d in grp.iter() {
+                    out.push(lit_f32(d, &[d.len()]).unwrap());
+                }
+            }
+            for s in scalars {
+                out.push(lit_f32(&[s], &[1]).unwrap());
+            }
+            out
+        };
+
+        // old hand-indexed path: scalars at 3n.., groups split by drain
+        let mut old = build();
+        let old_loss = scalar_of(&old[3 * n]).unwrap();
+        let old_gnorm = scalar_of(&old[3 * n + 1]).unwrap();
+        let old_clip = scalar_of(&old[3 * n + 2]).unwrap();
+        old.truncate(3 * n);
+        let old_h: Vec<_> = old.drain(2 * n..).collect();
+        let old_m: Vec<_> = old.drain(n..).collect();
+        let old_p = old;
+
+        // typed path: decode by role against a train-shaped signature
+        let sig = ArtifactSig {
+            name: "train_prop".into(),
+            inputs: vec![],
+            outputs: vec![
+                oleaf(OutRole::Params),
+                oleaf(OutRole::M),
+                oleaf(OutRole::H),
+                oone(OutRole::Loss),
+                oone(OutRole::Gnorm),
+                oone(OutRole::Clipfrac),
+            ],
+        };
+        sig.validate().unwrap();
+        assert_eq!(sig.n_outputs(n), 3 * n + 3);
+        let mut out = StepOut::decode(build(), &sig, n).unwrap();
+        assert_eq!(out.scalar(OutRole::Loss).unwrap().to_bits(), old_loss.to_bits());
+        assert_eq!(out.scalar(OutRole::Gnorm).unwrap().to_bits(), old_gnorm.to_bits());
+        assert_eq!(out.scalar(OutRole::Clipfrac).unwrap().to_bits(), old_clip.to_bits());
+        for (role, old_grp) in
+            [(OutRole::Params, &old_p), (OutRole::M, &old_m), (OutRole::H, &old_h)]
+        {
+            let new_grp = out.take_group(role).unwrap();
+            assert_eq!(new_grp.len(), old_grp.len(), "seed {seed}");
+            for (a, b) in new_grp.iter().zip(old_grp.iter()) {
+                let (av, bv) = (to_f32(a).unwrap(), to_f32(b).unwrap());
+                assert_eq!(av.len(), bv.len());
+                for (x, y) in av.iter().zip(&bv) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+                }
+            }
+        }
+
+        // gather_into lands the M group in the flat layout bit-exactly
+        let out2 = StepOut::decode(build(), &sig, n).unwrap();
+        let total: usize = lens.iter().sum();
+        let mut ranges = Vec::new();
+        let mut off = 0;
+        for &l in &lens {
+            ranges.push(off..off + l);
+            off += l;
+        }
+        let mut dst = vec![0.0f32; total];
+        out2.gather_into(OutRole::M, &ranges, &mut dst).unwrap();
+        let want: Vec<f32> = m.concat();
+        for (x, y) in dst.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+        }
+        // ragged-mismatch is a decode-time error, not silent corruption
+        assert!(StepOut::decode(build(), &sig, n + 1).is_err());
+    }
+}
