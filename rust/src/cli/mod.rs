@@ -97,6 +97,16 @@ USAGE: sophia <subcommand> [--flags]
           adahessian pair. Backend via
           SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>, default
           pool:<ncpu>.)
+         [--workers N] [--shards S] [--straggler-ms T] [--fault-plan SPEC]
+         (--workers > 1 = fault-tolerant data-parallel training: a
+          coordinator drives N in-process workers over S fixed data shards
+          (default one per worker) with a deterministic fixed-order
+          all-reduce — bit-identical results for any worker count at a
+          fixed shard count. Stragglers silent past --straggler-ms are
+          dropped and their shards rebalanced; crashed workers trigger
+          recovery from the newest intact checkpoint epoch under
+          --ckpt-dir. --fault-plan / SOPHIA_FAULT inject deterministic
+          faults: kill:w@step, delay:w@step:ms, tear:step.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]
@@ -143,8 +153,17 @@ pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if args.bool("engine") {
         cfg.engine_resident = true;
     }
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.dp_shards = args.usize_or("shards", cfg.dp_shards)?;
+    cfg.straggler_timeout_ms = args.u64_or("straggler-ms", cfg.straggler_timeout_ms)?;
+    if let Some(p) = args.flags.get("fault-plan") {
+        cfg.fault_plan = Some(p.clone());
+    }
     if cfg.steps == 0 {
         bail!("--steps must be > 0");
+    }
+    if cfg.workers == 0 {
+        bail!("--workers must be > 0");
     }
     Ok(cfg)
 }
@@ -192,6 +211,26 @@ mod tests {
         assert!(build_train_config(&a).unwrap().engine_resident);
         let b = Args::parse(&argv("train --preset nano")).unwrap();
         assert!(!build_train_config(&b).unwrap().engine_resident);
+    }
+
+    #[test]
+    fn dp_flags_wire_into_train_config() {
+        let a = Args::parse(&argv(
+            "train --preset nano --workers 4 --shards 8 --straggler-ms 500 \
+             --fault-plan kill:1@5,tear:4",
+        ))
+        .unwrap();
+        let c = build_train_config(&a).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.dp_shards, 8);
+        assert_eq!(c.straggler_timeout_ms, 500);
+        assert_eq!(c.fault_plan.as_deref(), Some("kill:1@5,tear:4"));
+        let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.dp_shards, 0);
+        assert!(d.fault_plan.is_none());
+        let z = Args::parse(&argv("train --preset nano --workers 0")).unwrap();
+        assert!(build_train_config(&z).is_err());
     }
 
     #[test]

@@ -173,8 +173,7 @@ pub struct SigOut {
 
 /// The machine-checked calling convention of one artifact: ordered typed
 /// input and output roles. Parsed from the manifest's `io.signatures`
-/// table (or synthesized for pre-signature manifests — see
-/// [`ArtifactSig::synthesize`]); `runtime::Program` validates the literal
+/// table; `runtime::Program` validates the literal
 /// arity against the compiled executable at load time, and
 /// `runtime::Session`/`runtime::StepOut` bind and decode by role so no
 /// exec site ever does index arithmetic on raw literal tuples again.
@@ -223,78 +222,6 @@ impl ArtifactSig {
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(ArtifactSig { name: name.to_string(), inputs, outputs })
-    }
-
-    /// Legacy fallback for manifests that predate `io.signatures`
-    /// (pre-PR-5 artifact dirs): synthesize the signature from the
-    /// artifact name, using the same classification rules aot.py's
-    /// `signature_for` applies at lowering time. Returns None for a name
-    /// the legacy rules don't claim (such artifacts cannot be run through
-    /// [`crate::runtime::Program`] until the manifest is regenerated).
-    pub fn synthesize(name: &str) -> Option<Self> {
-        let leaf = |role, donatable| SigIn { role, arity: Arity::Leaves, donatable };
-        let one = |role| SigIn { role, arity: Arity::One, donatable: false };
-        let oleaf = |role| SigOut { role, arity: Arity::Leaves };
-        let oone = |role| SigOut { role, arity: Arity::One };
-        let (inputs, outputs) = if name.starts_with("train_") {
-            (
-                vec![
-                    leaf(InRole::Params, true),
-                    leaf(InRole::M, true),
-                    leaf(InRole::H, true),
-                    one(InRole::Tokens),
-                    one(InRole::Lr),
-                    one(InRole::T),
-                ],
-                vec![
-                    oleaf(OutRole::Params),
-                    oleaf(OutRole::M),
-                    oleaf(OutRole::H),
-                    oone(OutRole::Loss),
-                    oone(OutRole::Gnorm),
-                    oone(OutRole::Clipfrac),
-                ],
-            )
-        } else if name == "hess_diag" {
-            // before the hess_ prefix: the raw per-leaf Hutchinson probe
-            (
-                vec![leaf(InRole::Params, false), one(InRole::Tokens), one(InRole::Seed)],
-                vec![oleaf(OutRole::Ghat)],
-            )
-        } else if name.starts_with("hess_") {
-            (
-                vec![
-                    leaf(InRole::Params, false),
-                    leaf(InRole::H, true),
-                    one(InRole::Tokens),
-                    one(InRole::Seed),
-                ],
-                vec![oleaf(OutRole::H), oone(OutRole::Hnorm)],
-            )
-        } else if name == "grad_step" {
-            (
-                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
-                vec![oleaf(OutRole::Grads), oone(OutRole::Loss), oone(OutRole::Gnorm)],
-            )
-        } else if matches!(name, "ghat_gnb" | "ghat_ef" | "uhvp") {
-            (
-                vec![leaf(InRole::Params, false), one(InRole::Tokens), one(InRole::Seed)],
-                vec![oleaf(OutRole::Ghat)],
-            )
-        } else if name.starts_with("eval_step") {
-            (
-                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
-                vec![oone(OutRole::Loss)],
-            )
-        } else if name == "logits_last" {
-            (
-                vec![leaf(InRole::Params, false), one(InRole::Tokens)],
-                vec![oone(OutRole::Logits)],
-            )
-        } else {
-            return None;
-        };
-        Some(ArtifactSig { name: name.to_string(), inputs, outputs })
     }
 
     /// Total input literal count for a model with `n_leaves` leaves.
@@ -399,14 +326,10 @@ pub struct ModelConfig {
     /// path bakes into its HLO at lowering time.
     pub hypers: Json,
     /// Typed artifact ABI: `io.signatures` parsed per artifact. Unknown
-    /// roles fail the load; manifests predating the table get synthesized
-    /// legacy signatures (see [`ArtifactSig::synthesize`]) and set
-    /// [`ModelConfig::legacy_signatures`].
+    /// roles fail the load, and a manifest without the table is rejected
+    /// outright (the legacy name-based synthesis fallback is gone; no
+    /// pre-typed-ABI artifact dirs remain).
     pub signatures: std::collections::BTreeMap<String, ArtifactSig>,
-    /// True when the manifest carried no `io.signatures` table and the
-    /// signatures above were synthesized from artifact names (deprecated;
-    /// regenerate with `make artifacts`).
-    pub legacy_signatures: bool,
 }
 
 impl ModelConfig {
@@ -456,36 +379,24 @@ impl ModelConfig {
             .keys()
             .cloned()
             .collect();
-        let sig_table = man.get("io").and_then(|io| io.get("signatures"));
+        let sig_table = man
+            .get("io")
+            .and_then(|io| io.get("signatures"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "manifest {man_path:?} has no io.signatures table — \
+                     pre-typed-ABI artifact dirs are no longer supported; \
+                     regenerate with `make artifacts`"
+                )
+            })?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest io.signatures is not an object"))?;
         let mut signatures = std::collections::BTreeMap::new();
-        let legacy_signatures = sig_table.is_none();
-        match sig_table {
-            Some(tbl) => {
-                let tbl = tbl
-                    .as_obj()
-                    .ok_or_else(|| anyhow!("manifest io.signatures is not an object"))?;
-                for (name, sig) in tbl {
-                    signatures.insert(
-                        name.clone(),
-                        ArtifactSig::parse(name, sig)
-                            .with_context(|| format!("manifest {man_path:?}"))?,
-                    );
-                }
-            }
-            None => {
-                // pre-signature manifest: synthesize from artifact names so
-                // old artifact dirs keep working (deprecated path)
-                eprintln!(
-                    "WARNING: {man_path:?} predates the typed artifact ABI \
-                     (io.signatures); synthesizing legacy signatures. \
-                     Regenerate with `make artifacts`."
-                );
-                for name in &artifacts {
-                    if let Some(sig) = ArtifactSig::synthesize(name) {
-                        signatures.insert(name.clone(), sig);
-                    }
-                }
-            }
+        for (name, sig) in sig_table {
+            signatures.insert(
+                name.clone(),
+                ArtifactSig::parse(name, sig).with_context(|| format!("manifest {man_path:?}"))?,
+            );
         }
         Ok(ModelConfig {
             name: preset.to_string(),
@@ -502,7 +413,6 @@ impl ModelConfig {
             dir,
             hypers: man.get("hypers").cloned().unwrap_or(Json::Null),
             signatures,
-            legacy_signatures,
         })
     }
 
@@ -677,6 +587,22 @@ pub struct TrainConfig {
     /// backend, default `pool:<ncpu>`). Env `SOPHIA_TRAIN_MODE=engine|
     /// artifact` overrides this flag at `Trainer::new` time.
     pub engine_resident: bool,
+    /// Data-parallel worker threads (1 = the single-process `Trainer`).
+    /// With > 1, `coordinator::dp` drives the run: workers each own a
+    /// `runtime::Session`, gradients meet in a fixed-shard-order
+    /// all-reduce, and faults recover from the last good checkpoint.
+    pub workers: usize,
+    /// Fixed data-shard count for the DP all-reduce (0 = one per worker).
+    /// Shards — not workers — define the reduction order, so results are
+    /// bit-identical for any worker count at a fixed shard count.
+    pub dp_shards: usize,
+    /// Heartbeat deadline (ms) before a silent worker is classified:
+    /// thread exited → crash recovery; still running → straggler drop
+    /// with its shards rebalanced onto the survivors.
+    pub straggler_timeout_ms: u64,
+    /// Deterministic fault-injection plan ("kill:w@step", "delay:w@step:ms",
+    /// "tear:step", comma-separated); merged with env `SOPHIA_FAULT`.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -700,6 +626,10 @@ impl Default for TrainConfig {
             train_artifact_override: None,
             hess_artifact_override: None,
             engine_resident: false,
+            workers: 1,
+            dp_shards: 0,
+            straggler_timeout_ms: 2000,
+            fault_plan: None,
         }
     }
 }
@@ -769,6 +699,18 @@ impl TrainConfig {
             self.eval_batches = v as usize;
         }
         self.engine_resident = doc.bool_or("engine", "resident", self.engine_resident);
+        if let Some(v) = doc.get("dp", "workers").and_then(|v| v.as_i64()) {
+            self.workers = v as usize;
+        }
+        if let Some(v) = doc.get("dp", "shards").and_then(|v| v.as_i64()) {
+            self.dp_shards = v as usize;
+        }
+        if let Some(v) = doc.get("dp", "straggler_timeout_ms").and_then(|v| v.as_i64()) {
+            self.straggler_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get("dp", "fault_plan").and_then(|v| v.as_str()) {
+            self.fault_plan = Some(v.to_string());
+        }
         Ok(())
     }
 }
@@ -871,56 +813,6 @@ mod tests {
     }
 
     #[test]
-    fn legacy_synthesis_matches_aot_classification() {
-        // the synthesized fallback mirrors aot.py's signature_for rules
-        let train = ArtifactSig::synthesize("train_sophia_gamma0p005").unwrap();
-        assert_eq!(
-            train.inputs.iter().map(|i| i.role).collect::<Vec<_>>(),
-            vec![InRole::Params, InRole::M, InRole::H, InRole::Tokens, InRole::Lr, InRole::T]
-        );
-        assert_eq!(
-            train.outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
-            vec![
-                OutRole::Params,
-                OutRole::M,
-                OutRole::H,
-                OutRole::Loss,
-                OutRole::Gnorm,
-                OutRole::Clipfrac
-            ]
-        );
-        // donation contract: exactly the state inputs that recur as outputs
-        assert!(train.inputs.iter().all(|i| i.donatable == i.role.is_group()));
-        let hess = ArtifactSig::synthesize("hess_gnb_b20p9").unwrap();
-        assert_eq!(
-            hess.outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
-            vec![OutRole::H, OutRole::Hnorm]
-        );
-        // hess_diag is the raw probe, not an EMA refresh
-        let diag = ArtifactSig::synthesize("hess_diag").unwrap();
-        assert_eq!(diag.outputs.iter().map(|o| o.role).collect::<Vec<_>>(), vec![OutRole::Ghat]);
-        assert!(diag.has_input(InRole::Seed));
-        for name in ["ghat_gnb", "ghat_ef", "uhvp"] {
-            let s = ArtifactSig::synthesize(name).unwrap();
-            assert_eq!(s.outputs.iter().map(|o| o.role).collect::<Vec<_>>(), vec![OutRole::Ghat]);
-        }
-        assert_eq!(
-            ArtifactSig::synthesize("grad_step").unwrap().outputs.iter().map(|o| o.role).collect::<Vec<_>>(),
-            vec![OutRole::Grads, OutRole::Loss, OutRole::Gnorm]
-        );
-        assert!(ArtifactSig::synthesize("eval_step_pk").is_some());
-        assert!(ArtifactSig::synthesize("logits_last").is_some());
-        assert!(ArtifactSig::synthesize("mystery_step").is_none());
-        // every synthesized signature passes semantic validation
-        for name in [
-            "train_adamw", "hess_hutchinson", "hess_diag", "grad_step", "ghat_gnb",
-            "uhvp", "eval_step", "logits_last",
-        ] {
-            ArtifactSig::synthesize(name).unwrap().validate().unwrap();
-        }
-    }
-
-    #[test]
     fn toml_overrides_defaults() {
         let doc = toml::Toml::parse(
             "preset = \"b2\"\nsteps = 77\n[optimizer]\nname = \"adamw\"\nlr = 3e-4\n",
@@ -932,5 +824,24 @@ mod tests {
         assert_eq!(c.steps, 77);
         assert_eq!(c.optimizer, Optimizer::AdamW);
         assert!((c.effective_lr() - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_dp_section_wires_fault_tolerance_knobs() {
+        let doc = toml::Toml::parse(
+            "[dp]\nworkers = 4\nshards = 8\nstraggler_timeout_ms = 250\n\
+             fault_plan = \"kill:1@5,tear:4\"\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.dp_shards, 8);
+        assert_eq!(c.straggler_timeout_ms, 250);
+        assert_eq!(c.fault_plan.as_deref(), Some("kill:1@5,tear:4"));
+        // defaults stay single-process with no plan
+        let d = TrainConfig::default();
+        assert_eq!((d.workers, d.dp_shards), (1, 0));
+        assert!(d.fault_plan.is_none());
     }
 }

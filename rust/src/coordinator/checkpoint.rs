@@ -1,6 +1,17 @@
-//! Checkpointing: raw little-endian f32 blobs for (params, m, h) plus a
-//! JSON meta file with the step counter and config fingerprint. Restore is
-//! exact (bit-identical state), which the integration tests assert.
+//! Crash-consistent checkpointing: raw little-endian f32 blobs for
+//! (params, m, h) plus a JSON meta file carrying the step counter, a config
+//! fingerprint, and a per-blob FNV-1a checksum. Every file is written to a
+//! temp name and atomically renamed into place, with `meta.json` renamed
+//! last — meta is the commit record, so a crash mid-save leaves either the
+//! old checkpoint or the new one, never a half-written hybrid that loads.
+//! `load_state` verifies blob lengths and checksums and rejects truncated or
+//! corrupt blobs with an error naming the offending file. Restore is exact
+//! (bit-identical state), which the integration tests assert.
+//!
+//! The free functions ([`save_state`], [`save_state_atomic`], [`load_state`])
+//! are shared by the single-process [`Trainer`] and the data-parallel
+//! coordinator in [`super::dp`], which keeps a rolling window of epoch
+//! directories (`step-<n>/`) for crash recovery.
 
 use super::trainer::Trainer;
 use crate::optim::engine::StateKind;
@@ -9,57 +20,321 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+/// The state blobs every checkpoint directory carries, in layout order.
+pub const CKPT_BLOBS: [&str; 3] = ["params.bin", "m.bin", "h.bin"];
+
+/// Checkpoint identity: enough to refuse restoring into the wrong run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptMeta {
+    pub step: usize,
+    pub preset: String,
+    pub optimizer: String,
+    pub n_params: usize,
+}
+
+/// FNV-1a 64-bit over raw bytes — tiny, dependency-free, and plenty to
+/// catch truncation and bit-rot (this is an integrity check, not crypto).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn f32_bytes(data: &[f32]) -> Vec<u8> {
     let mut bytes = Vec::with_capacity(data.len() * 4);
     for v in data {
         bytes.extend(v.to_le_bytes());
     }
-    std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+    bytes
+}
+
+/// Write `bytes` to `dir/name` via temp-file + atomic rename; returns the
+/// content checksum so the caller can record it in `meta.json`.
+fn write_blob_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<u64> {
+    let tmp = dir.join(format!(".tmp-{name}"));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    let fin = dir.join(name);
+    std::fs::rename(&tmp, &fin).with_context(|| format!("committing {fin:?}"))?;
+    Ok(fnv1a64(bytes))
+}
+
+/// Save one checkpoint into `dir` (created if missing). Blobs land first via
+/// per-file atomic renames; `meta.json` (with the checksums) commits last.
+pub fn save_state(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &[f32]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let mut sums = BTreeMap::new();
+    for (name, data) in CKPT_BLOBS.iter().zip([p, m, h]) {
+        let sum = write_blob_atomic(dir, name, &f32_bytes(data))?;
+        sums.insert(name.to_string(), Json::Str(format!("{sum:016x}")));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("format".to_string(), Json::Num(2.0));
+    obj.insert("step".to_string(), Json::Num(meta.step as f64));
+    obj.insert("preset".to_string(), Json::Str(meta.preset.clone()));
+    obj.insert("optimizer".to_string(), Json::Str(meta.optimizer.clone()));
+    obj.insert("n_params".to_string(), Json::Num(meta.n_params as f64));
+    obj.insert("checksums".to_string(), Json::Obj(sums));
+    write_blob_atomic(dir, "meta.json", Json::Obj(obj).to_string().as_bytes())?;
+    Ok(())
+}
+
+/// Whole-directory atomic save for epoch checkpoints: the blobs are staged
+/// in a sibling `.tmp-<name>` directory which is renamed into place, so an
+/// epoch directory either exists complete or not at all. If `dir` already
+/// exists (a replayed step after recovery re-saves the same epoch) it is
+/// replaced; determinism guarantees the content is identical anyway.
+pub fn save_state_atomic(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &[f32]) -> Result<()> {
+    let parent = dir
+        .parent()
+        .ok_or_else(|| anyhow!("checkpoint dir {dir:?} has no parent"))?;
+    let name = dir
+        .file_name()
+        .ok_or_else(|| anyhow!("checkpoint dir {dir:?} has no file name"))?
+        .to_string_lossy()
+        .into_owned();
+    std::fs::create_dir_all(parent).with_context(|| format!("creating {parent:?}"))?;
+    let tmp = parent.join(format!(".tmp-{name}"));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    save_state(&tmp, meta, p, m, h)?;
+    if dir.exists() {
+        std::fs::remove_dir_all(dir).with_context(|| format!("replacing {dir:?}"))?;
+    }
+    std::fs::rename(&tmp, dir).with_context(|| format!("committing {dir:?}"))?;
+    Ok(())
+}
+
+fn read_blob(dir: &Path, name: &str, n_params: usize, sums: &Json) -> Result<Vec<f32>> {
+    let path = dir.join(name);
+    let bytes = std::fs::read(&path).with_context(|| format!("reading checkpoint blob {path:?}"))?;
+    if bytes.len() != n_params * 4 {
+        bail!(
+            "checkpoint blob {path:?} is truncated: {} bytes on disk, expected {} ({n_params} f32s)",
+            bytes.len(),
+            n_params * 4
+        );
+    }
+    let want = sums
+        .get(name)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("meta.json in {dir:?} has no checksum entry for {name}"))?;
+    let want = u64::from_str_radix(want, 16)
+        .map_err(|e| anyhow!("meta.json in {dir:?}: bad checksum for {name}: {e}"))?;
+    let got = fnv1a64(&bytes);
+    if got != want {
+        bail!(
+            "checkpoint blob {path:?} is corrupt: checksum {got:016x} != recorded {want:016x}"
+        );
+    }
+    let mut out = Vec::with_capacity(n_params);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+/// Load and verify one checkpoint directory. Errors name the offending file
+/// so a torn write is diagnosable from the message alone.
+pub fn load_state(dir: &Path) -> Result<(CkptMeta, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let meta_path = dir.join("meta.json");
+    let meta_text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("reading {meta_path:?}"))?;
+    let meta = Json::parse(&meta_text).map_err(|e| anyhow!("parsing {meta_path:?}: {e}"))?;
+    let n_params = meta
+        .get("n_params")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{meta_path:?} has no n_params field"))?;
+    let sums = meta.get("checksums").ok_or_else(|| {
+        anyhow!("{meta_path:?} has no checksums table — pre-crash-consistent checkpoint; re-save it")
+    })?;
+    let ck = CkptMeta {
+        step: meta.get("step").and_then(Json::as_usize).unwrap_or(0),
+        preset: meta
+            .get("preset")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        optimizer: meta
+            .get("optimizer")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        n_params,
+    };
+    let p = read_blob(dir, "params.bin", n_params, sums)?;
+    let m = read_blob(dir, "m.bin", n_params, sums)?;
+    let h = read_blob(dir, "h.bin", n_params, sums)?;
+    Ok((ck, p, m, h))
+}
+
+/// Fault-injection helper: tear a checkpoint the way a crash mid-write
+/// would, by truncating `params.bin` half way through the blob. Used by the
+/// DP `FaultPlan` harness and the torn-checkpoint tests.
+pub fn inject_tear(dir: &Path) -> Result<()> {
+    let path = dir.join("params.bin");
+    let bytes = std::fs::read(&path).with_context(|| format!("tearing {path:?}"))?;
+    std::fs::write(&path, &bytes[..bytes.len() / 2])
+        .with_context(|| format!("tearing {path:?}"))
 }
 
 pub fn checkpoint_save(t: &Trainer, dir: &Path) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
+    let meta = CkptMeta {
+        step: t.step,
+        preset: t.model.name.clone(),
+        optimizer: t.cfg.optimizer.name().to_string(),
+        n_params: t.model.n_params(),
+    };
     if let Some(fs) = t.flat_view() {
         // engine-resident run: the arena IS the state — write it directly,
         // no literal gather at all (both checkpoint layouts are identical,
         // so artifact-path runs restore engine checkpoints and vice versa)
-        write_f32(&dir.join("params.bin"), fs.buf(StateKind::P))?;
-        write_f32(&dir.join("m.bin"), fs.buf(StateKind::M))?;
-        write_f32(&dir.join("h.bin"), fs.buf(StateKind::H))?;
+        save_state(
+            dir,
+            &meta,
+            fs.buf(StateKind::P),
+            fs.buf(StateKind::M),
+            fs.buf(StateKind::H),
+        )
     } else {
-        write_f32(&dir.join("params.bin"), &t.state.flat_state("params")?)?;
-        write_f32(&dir.join("m.bin"), &t.state.flat_state("m")?)?;
-        write_f32(&dir.join("h.bin"), &t.state.flat_state("h")?)?;
+        save_state(
+            dir,
+            &meta,
+            &t.state.flat_state("params")?,
+            &t.state.flat_state("m")?,
+            &t.state.flat_state("h")?,
+        )
     }
-    let mut meta = BTreeMap::new();
-    meta.insert("step".to_string(), Json::Num(t.step as f64));
-    meta.insert("preset".to_string(), Json::Str(t.model.name.clone()));
-    meta.insert(
-        "optimizer".to_string(),
-        Json::Str(t.cfg.optimizer.name().to_string()),
-    );
-    meta.insert("n_params".to_string(), Json::Num(t.model.n_params() as f64));
-    std::fs::write(dir.join("meta.json"), Json::Obj(meta).to_string())?;
-    Ok(())
 }
 
 pub fn checkpoint_load(t: &mut Trainer, dir: &Path) -> Result<()> {
-    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
-        .with_context(|| format!("reading {dir:?}/meta.json"))?;
-    let meta = Json::parse(&meta_text).map_err(|e| anyhow!("meta.json: {e}"))?;
-    let preset = meta.get("preset").and_then(Json::as_str).unwrap_or("");
-    if preset != t.model.name {
-        bail!("checkpoint is for preset {preset:?}, trainer uses {:?}", t.model.name);
+    let (meta, params, m, h) = load_state(dir)?;
+    if meta.preset != t.model.name {
+        bail!(
+            "checkpoint is for preset {:?}, trainer uses {:?}",
+            meta.preset,
+            t.model.name
+        );
     }
-    let n = meta.get("n_params").and_then(Json::as_usize).unwrap_or(0);
-    if n != t.model.n_params() {
-        bail!("checkpoint has {n} params, model needs {}", t.model.n_params());
+    if meta.n_params != t.model.n_params() {
+        bail!(
+            "checkpoint has {} params, model needs {}",
+            meta.n_params,
+            t.model.n_params()
+        );
     }
-    let params = crate::runtime::read_f32_file(&dir.join("params.bin"))?;
-    let m = crate::runtime::read_f32_file(&dir.join("m.bin"))?;
-    let h = crate::runtime::read_f32_file(&dir.join("h.bin"))?;
     t.state.restore(&params, &m, &h)?;
     t.restore_engine_from_state()?;
-    t.step = meta.get("step").and_then(Json::as_usize).unwrap_or(0);
+    t.step = meta.step;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sophia_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn meta(n: usize) -> CkptMeta {
+        CkptMeta {
+            step: 7,
+            preset: "unit".to_string(),
+            optimizer: "sophia_g".to_string(),
+            n_params: n,
+        }
+    }
+
+    fn blobs(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let p: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let m: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let h: Vec<f32> = (0..n).map(|i| i as f32 * 1e-3).collect();
+        (p, m, h)
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let dir = tdir("round_trip");
+        let (p, m, h) = blobs(33);
+        save_state(&dir, &meta(33), &p, &m, &h).unwrap();
+        let (ck, p2, m2, h2) = load_state(&dir).unwrap();
+        assert_eq!(ck, meta(33));
+        for (a, b) in [(&p, &p2), (&m, &m2), (&h, &h2)] {
+            assert!(a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // no temp litter left behind after a clean save
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(names.iter().all(|n| !n.starts_with(".tmp-")), "{names:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_blob_is_rejected_with_named_file() {
+        let dir = tdir("truncated");
+        let (p, m, h) = blobs(16);
+        save_state(&dir, &meta(16), &p, &m, &h).unwrap();
+        inject_tear(&dir).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("params.bin"), "error should name the file: {err}");
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_blob_is_rejected_with_named_file() {
+        let dir = tdir("corrupt");
+        let (p, m, h) = blobs(16);
+        save_state(&dir, &meta(16), &p, &m, &h).unwrap();
+        // flip one byte in m.bin without changing its length
+        let path = dir.join("m.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("m.bin"), "error should name the file: {err}");
+        assert!(err.contains("corrupt"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_checksums_table_is_rejected() {
+        let dir = tdir("no_sums");
+        let (p, m, h) = blobs(8);
+        save_state(&dir, &meta(8), &p, &m, &h).unwrap();
+        // strip the checksums table the way a pre-format-2 writer would
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).unwrap();
+        let json = Json::parse(&text).unwrap();
+        let mut obj = json.as_obj().unwrap().clone();
+        obj.remove("checksums");
+        std::fs::write(&meta_path, Json::Obj(obj).to_string()).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("checksums"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn atomic_dir_save_replaces_existing_epoch() {
+        let root = tdir("epochs");
+        let dir = root.join("step-000004");
+        let (p, m, h) = blobs(8);
+        save_state_atomic(&dir, &meta(8), &p, &m, &h).unwrap();
+        inject_tear(&dir).unwrap();
+        assert!(load_state(&dir).is_err());
+        // re-saving the same epoch (a replayed step) heals the torn copy
+        save_state_atomic(&dir, &meta(8), &p, &m, &h).unwrap();
+        let (_, p2, _, _) = load_state(&dir).unwrap();
+        assert!(p.iter().zip(p2.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
 }

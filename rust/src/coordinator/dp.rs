@@ -1,0 +1,1484 @@
+//! Fault-tolerant in-process data-parallel training.
+//!
+//! A coordinator thread drives N worker threads. Each worker owns its own
+//! gradient source (for real runs a `runtime::Session` over the
+//! [`GRAD_ARTIFACT`] plus per-shard data streams; for artifact-free tests a
+//! deterministic synthetic source) and computes gradients for the *data
+//! shards* assigned to it. Gradients meet in a deterministic fixed-order
+//! all-reduce straight into the `FlatState` arena
+//! ([`crate::optim::engine::reduce_fixed_order`]): the reduction folds in
+//! shard order 0..S-1, never worker order, so the result is bit-identical
+//! across 1/2/4 workers — the same discipline the pool engine's proptests
+//! enforce — and stays bit-identical across straggler drops, rebalances and
+//! crash recoveries, because every shard gradient is a pure function of
+//! (shard, step, params).
+//!
+//! The run lifecycle is a state machine (Psyche's coordinator/client
+//! layout): `WaitingForMembers → Warmup → Train → Checkpoint` epochs, with
+//! `Recovering` entered on worker death and `Done` at the end. Health
+//! tracking is heartbeat-based: a worker silent past the straggler deadline
+//! is classified by whether its thread exited — still running means
+//! straggler (permanently dropped, its shards rebalanced onto survivors,
+//! in-step), exited means crash (the step aborts and the run restores the
+//! newest loadable checkpoint epoch, then replays). Torn checkpoints are
+//! detected at load by the checksum layer in [`super::checkpoint`] and
+//! skipped in favor of an older epoch.
+//!
+//! Every degraded path is exercised in `cargo test` through [`FaultPlan`],
+//! a deterministic fault-injection harness driven by `--fault-plan` or the
+//! `SOPHIA_FAULT` env var: `kill:w@step` (worker thread exits silently),
+//! `delay:w@step:ms` (worker stalls past the straggler deadline),
+//! `tear:step` (the epoch checkpoint written at `step` is truncated
+//! mid-blob, as a crash during the write would).
+
+use super::checkpoint::{self, CkptMeta};
+use crate::config::{ModelConfig, Optimizer, OutRole, TrainConfig};
+use crate::data::{self, Loader, Split};
+use crate::metrics::{HealthCounters, StepRecord};
+use crate::optim::engine::{
+    default_threads, reduce_fixed_order, AlignedBuf, Backend, FlatState, StateKind, UpdateKernel,
+};
+use crate::optim::rules::{self, l2_norm, StepCtx, UpdateRule, GRAD_ARTIFACT};
+use crate::rng::Rng;
+use crate::runtime::{Binds, ModelState, Program, Runtime, Session};
+use crate::schedule::Schedule;
+use anyhow::{anyhow, bail, Context, Result};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Fault-injection plan
+
+/// A deterministic fault-injection plan: every entry fires at an exact
+/// (worker, step) coordinate, so a faulted run is as reproducible as a
+/// clean one. Parsed from `--fault-plan` and/or the `SOPHIA_FAULT` env var
+/// as a comma-separated list of `kill:w@step`, `delay:w@step:ms`,
+/// `tear:step`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// (worker, step): the worker thread exits silently when it receives
+    /// the step command — a simulated crash, no goodbye message.
+    pub kills: Vec<(usize, usize)>,
+    /// (worker, step, ms): the worker sleeps before computing — a
+    /// simulated straggler.
+    pub delays: Vec<(usize, usize, u64)>,
+    /// Steps whose epoch checkpoint is truncated right after the write —
+    /// a simulated crash mid-checkpoint.
+    pub tears: Vec<usize>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec. Empty string = empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = item
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault {item:?}: expected kind:args"))?;
+            let at = |s: &str| -> Result<(usize, usize)> {
+                let (w, k) = s
+                    .split_once('@')
+                    .ok_or_else(|| anyhow!("fault {item:?}: expected w@step"))?;
+                Ok((
+                    w.parse().with_context(|| format!("fault {item:?}: worker"))?,
+                    k.parse().with_context(|| format!("fault {item:?}: step"))?,
+                ))
+            };
+            match kind {
+                "kill" => plan.kills.push(at(rest)?),
+                "delay" => {
+                    let (coord, ms) = rest
+                        .rsplit_once(':')
+                        .ok_or_else(|| anyhow!("fault {item:?}: expected delay:w@step:ms"))?;
+                    let (w, k) = at(coord)?;
+                    plan.delays.push((
+                        w,
+                        k,
+                        ms.parse().with_context(|| format!("fault {item:?}: ms"))?,
+                    ));
+                }
+                "tear" => plan
+                    .tears
+                    .push(rest.parse().with_context(|| format!("fault {item:?}: step"))?),
+                other => bail!("unknown fault kind {other:?} in {item:?} (kill|delay|tear)"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Merge the CLI/TOML spec (if any) with the `SOPHIA_FAULT` env var.
+    pub fn resolve(flag: Option<&str>) -> Result<FaultPlan> {
+        let mut plan = match flag {
+            Some(s) => FaultPlan::parse(s)?,
+            None => FaultPlan::default(),
+        };
+        if let Ok(env) = std::env::var("SOPHIA_FAULT") {
+            let extra = FaultPlan::parse(&env).context("SOPHIA_FAULT")?;
+            plan.kills.extend(extra.kills);
+            plan.delays.extend(extra.delays);
+            plan.tears.extend(extra.tears);
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.delays.is_empty() && self.tears.is_empty()
+    }
+
+    fn kill_at(&self, worker: usize, step: usize) -> bool {
+        self.kills.iter().any(|&(w, k)| w == worker && k == step)
+    }
+
+    fn delay_ms(&self, worker: usize, step: usize) -> Option<u64> {
+        self.delays
+            .iter()
+            .find(|&&(w, k, _)| w == worker && k == step)
+            .map(|&(_, _, ms)| ms)
+    }
+
+    fn tear_at(&self, step: usize) -> bool {
+        self.tears.contains(&step)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run lifecycle
+
+/// Run-lifecycle states, in the order a healthy run visits them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Coordinator is collecting worker ready messages.
+    WaitingForMembers,
+    /// LR warmup steps.
+    Warmup,
+    /// Steady-state training steps.
+    Train,
+    /// Committing a checkpoint epoch.
+    Checkpoint,
+    /// Restoring from the newest loadable epoch after a crash.
+    Recovering,
+    /// Run finished (target steps reached or diverged).
+    Done,
+}
+
+/// The lifecycle state machine with a transition log, so tests can assert
+/// that degraded runs actually visited `Recovering` (and in what order).
+#[derive(Debug, Default)]
+pub struct Lifecycle {
+    phase: Option<RunPhase>,
+    history: Vec<(usize, RunPhase)>,
+}
+
+impl Lifecycle {
+    fn set(&mut self, step: usize, phase: RunPhase) {
+        if self.phase != Some(phase) {
+            self.phase = Some(phase);
+            self.history.push((step, phase));
+        }
+    }
+
+    pub fn phase(&self) -> Option<RunPhase> {
+        self.phase
+    }
+
+    /// (step, phase) transition log, in occurrence order.
+    pub fn history(&self) -> &[(usize, RunPhase)] {
+        &self.history
+    }
+}
+
+/// Per-worker health as tracked by the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerHealth {
+    /// Spawned, ready message not yet seen.
+    Joining,
+    /// Healthy member of the run.
+    Alive,
+    /// Permanently dropped as a straggler; shards rebalanced away.
+    Dropped,
+    /// Thread exited (crash); triggers checkpoint recovery.
+    Dead,
+}
+
+// ---------------------------------------------------------------------------
+// Gradient sources
+
+/// Scalar outputs of one shard-gradient computation.
+#[derive(Clone, Copy, Debug)]
+pub struct GradOut {
+    pub loss: f64,
+    pub gnorm: f64,
+}
+
+/// A worker's gradient provider. The contract that makes every recovery
+/// path bit-exact: `grad` must be a *pure function* of (step, shard,
+/// params) — same inputs, bit-identical output — no matter how often or on
+/// which worker it is invoked. `estimator` likewise must be pure in
+/// (step, seed, params).
+pub trait GradSource {
+    /// Compute the clipped gradient of shard `shard`'s batch at `step`
+    /// into `out` (len = n_params).
+    fn grad(&mut self, step: usize, shard: usize, params: &[f32], out: &mut [f32])
+        -> Result<GradOut>;
+
+    /// Compute the rule's raw curvature estimate with an explicit seed.
+    /// Only called on rules with an estimator.
+    fn estimator(&mut self, step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()>;
+}
+
+/// Builds one [`GradSource`] per worker, *on the worker's own thread* (XLA
+/// sessions are not `Send`; only the factory crosses the thread boundary).
+/// Worker ids are 0..N-1; the coordinator's own estimator source is built
+/// with id N.
+pub type SourceFactory = Arc<dyn Fn(usize) -> Result<Box<dyn GradSource>> + Send + Sync>;
+
+/// Deterministic synthetic gradients for artifact-free tests: a decay pull
+/// toward zero plus seeded noise keyed by (shard, step), so every property
+/// the real path guarantees (purity in (step, shard, params)) holds by
+/// construction and the whole fault matrix runs in plain `cargo test`.
+pub struct SyntheticGrad {
+    pub data_seed: u64,
+}
+
+impl GradSource for SyntheticGrad {
+    fn grad(
+        &mut self,
+        step: usize,
+        shard: usize,
+        params: &[f32],
+        out: &mut [f32],
+    ) -> Result<GradOut> {
+        let mut rng = Rng::new(self.data_seed).fold(shard as u64 + 1).fold(step as u64 + 1);
+        for (o, &p) in out.iter_mut().zip(params) {
+            *o = 0.05 * p + 0.02 * rng.normal_f32(1.0);
+        }
+        let n = params.len().max(1) as f64;
+        let loss = l2_norm(params).powi(2) / (2.0 * n) + 1.0;
+        Ok(GradOut { loss, gnorm: l2_norm(out) })
+    }
+
+    fn estimator(&mut self, _step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()> {
+        let mut rng = Rng::new(self.data_seed ^ 0x5EED).fold(seed as u64);
+        for (o, &p) in out.iter_mut().zip(params) {
+            *o = 0.05 + 0.5 * rng.normal_f32(1.0).abs() + 1e-3 * p.abs();
+        }
+        Ok(())
+    }
+}
+
+/// The real gradient source: one `Runtime` + `Session` per worker over the
+/// shared [`GRAD_ARTIFACT`] (and the rule's raw estimator artifact for the
+/// coordinator's copy). Purity in (step, shard, params) comes from giving
+/// every (shard, step) its own document offset in the corpus stream — the
+/// batch depends only on those coordinates, never on call history — and
+/// re-uploading `params` per call.
+pub struct SessionGrad {
+    rt: Runtime,
+    state: ModelState,
+    grad_sess: Session,
+    est_sess: Option<Session>,
+    tok: Arc<dyn data::Tokenizer>,
+    data_seed: u64,
+    batch: usize,
+    ctx: usize,
+    leaf_ranges: Vec<Range<usize>>,
+}
+
+/// Document offset of one (stream, step) batch: streams are 2^20 documents
+/// apart per step, steps 2^20 documents apart within a stream — far more
+/// than any batch consumes, so batches never overlap.
+fn stream_offset(stream: u64, step: usize) -> u64 {
+    (stream << 40) | ((step as u64) << 20)
+}
+
+/// The estimator's reserved data stream (distinct from every shard id).
+const EST_STREAM: u64 = 0xFF_FFFF;
+
+impl SessionGrad {
+    pub fn new(model: &ModelConfig, seed: u64, data_seed: u64, ghat_artifact: Option<&str>) -> Result<Self> {
+        let mut rt = Runtime::cpu()?;
+        let grad = Program::load(&mut rt, model, GRAD_ARTIFACT)
+            .with_context(|| format!("grad artifact for preset {}", model.name))?;
+        let est = match ghat_artifact {
+            Some(a) => Some(Program::load(&mut rt, model, a)?),
+            None => None,
+        };
+        let sess_seed = seed ^ 0x4E55_5348;
+        let state = ModelState::init(model, seed)?;
+        let mut off = 0;
+        let leaf_ranges: Vec<Range<usize>> = model
+            .params
+            .iter()
+            .map(|s| {
+                let r = off..off + s.numel();
+                off = r.end;
+                r
+            })
+            .collect();
+        Ok(SessionGrad {
+            rt,
+            state,
+            grad_sess: Session::new(grad, sess_seed),
+            est_sess: est.map(|p| Session::new(p, sess_seed)),
+            tok: data::tokenizer_for_vocab(model.vocab, data_seed)?,
+            data_seed,
+            batch: model.batch,
+            ctx: model.ctx,
+            leaf_ranges,
+        })
+    }
+
+    fn batch_at(&self, stream: u64, step: usize) -> data::Batch {
+        let mut loader = Loader::new(self.tok.clone(), self.data_seed, Split::Train, self.batch, self.ctx)
+            .with_doc_offset(stream_offset(stream, step));
+        loader.next_batch()
+    }
+}
+
+impl GradSource for SessionGrad {
+    fn grad(
+        &mut self,
+        step: usize,
+        shard: usize,
+        params: &[f32],
+        out: &mut [f32],
+    ) -> Result<GradOut> {
+        self.state.set_params_flat(params)?;
+        let batch = self.batch_at(shard as u64, step);
+        let r = self.grad_sess.run(
+            &mut self.rt,
+            &Binds::new()
+                .params(&self.state.params)
+                .tokens(&batch.tokens, [batch.batch, batch.width]),
+        )?;
+        let loss = r.scalar(OutRole::Loss)? as f64;
+        let gnorm = r.scalar(OutRole::Gnorm)? as f64;
+        r.gather_into(OutRole::Grads, &self.leaf_ranges, out)?;
+        Ok(GradOut { loss, gnorm })
+    }
+
+    fn estimator(&mut self, step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()> {
+        let sess = self
+            .est_sess
+            .as_mut()
+            .ok_or_else(|| anyhow!("no estimator artifact loaded"))?;
+        self.state.set_params_flat(params)?;
+        let batch = {
+            let mut loader =
+                Loader::new(self.tok.clone(), self.data_seed, Split::Train, self.batch, self.ctx)
+                    .with_doc_offset(stream_offset(EST_STREAM, step));
+            loader.next_batch()
+        };
+        let r = sess.run(
+            &mut self.rt,
+            &Binds::new()
+                .params(&self.state.params)
+                .tokens(&batch.tokens, [batch.batch, batch.width])
+                .seed(seed),
+        )?;
+        r.gather_into(OutRole::Ghat, &self.leaf_ranges, out)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker protocol
+
+struct Job {
+    shard: usize,
+    buf: Vec<f32>,
+}
+
+enum ToWorker {
+    Step {
+        gen: u64,
+        step: usize,
+        params: Arc<Vec<f32>>,
+        jobs: Vec<Job>,
+    },
+    Stop,
+}
+
+enum FromWorker {
+    Ready {
+        worker: usize,
+    },
+    ShardDone {
+        worker: usize,
+        gen: u64,
+        step: usize,
+        shard: usize,
+        loss: f64,
+        gnorm: f64,
+        buf: Vec<f32>,
+    },
+    Fatal {
+        worker: usize,
+        msg: String,
+    },
+}
+
+fn worker_main(
+    id: usize,
+    factory: SourceFactory,
+    fault: FaultPlan,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+) {
+    let mut src = match factory(id) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = tx.send(FromWorker::Fatal { worker: id, msg: format!("{e:#}") });
+            return;
+        }
+    };
+    let _ = tx.send(FromWorker::Ready { worker: id });
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ToWorker::Step { gen, step, params, jobs } => {
+                if fault.kill_at(id, step) {
+                    // simulated crash: vanish without a goodbye — the
+                    // coordinator must detect this via the heartbeat
+                    // deadline + thread-exit check, like a real panic
+                    return;
+                }
+                if let Some(ms) = fault.delay_ms(id, step) {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                for Job { shard, mut buf } in jobs {
+                    buf.resize(params.len(), 0.0);
+                    match src.grad(step, shard, &params, &mut buf) {
+                        Ok(o) => {
+                            let msg = FromWorker::ShardDone {
+                                worker: id,
+                                gen,
+                                step,
+                                shard,
+                                loss: o.loss,
+                                gnorm: o.gnorm,
+                                buf,
+                            };
+                            if tx.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(FromWorker::Fatal {
+                                worker: id,
+                                msg: format!("{e:#}"),
+                            });
+                            return;
+                        }
+                    }
+                }
+            }
+            ToWorker::Stop => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+
+/// Everything the coordinator needs for one run. Built by [`build_dp`] from
+/// a [`TrainConfig`], or directly (with [`DpConfig::default`] +
+/// struct-update) by the synthetic tests.
+#[derive(Clone, Debug)]
+pub struct DpConfig {
+    pub workers: usize,
+    /// Fixed data-shard count (0 = one per worker). The all-reduce folds
+    /// in shard order, so at a fixed shard count the run is bit-identical
+    /// for any worker count.
+    pub n_shards: usize,
+    pub steps: usize,
+    pub optimizer: Optimizer,
+    /// Resolved hypers in `hyper_schema()` order (empty = schema defaults).
+    pub hypers: Vec<f32>,
+    pub est_scale: f32,
+    pub hess_interval: usize,
+    pub peak_lr: f64,
+    pub warmup: usize,
+    pub final_lr_frac: f64,
+    pub seed: u64,
+    /// Epoch-checkpoint root (`<dir>/step-<n>/`); None disables both
+    /// checkpointing and crash recovery.
+    pub ckpt_dir: Option<PathBuf>,
+    pub ckpt_every: usize,
+    pub straggler_timeout_ms: u64,
+    pub join_timeout_ms: u64,
+    /// Recovery attempts before the run gives up (guards against a fault
+    /// environment where every replay crashes again).
+    pub max_recoveries: usize,
+    /// Run fingerprint stored in checkpoint meta (preset name for real
+    /// runs); recovery refuses epochs from a different run.
+    pub run_tag: String,
+    pub fault: FaultPlan,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        DpConfig {
+            workers: 2,
+            n_shards: 0,
+            steps: 10,
+            optimizer: Optimizer::SophiaG,
+            hypers: Vec::new(),
+            est_scale: 1.0,
+            hess_interval: 10,
+            peak_lr: 1e-3,
+            warmup: 2,
+            final_lr_frac: 0.05,
+            seed: 0,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            straggler_timeout_ms: 2000,
+            join_timeout_ms: 10_000,
+            max_recoveries: 8,
+            run_tag: "dp".to_string(),
+            fault: FaultPlan::default(),
+        }
+    }
+}
+
+impl DpConfig {
+    fn effective_shards(&self) -> usize {
+        if self.n_shards == 0 {
+            self.workers.max(1)
+        } else {
+            self.n_shards
+        }
+    }
+}
+
+/// Final report of a data-parallel run.
+#[derive(Clone, Debug)]
+pub struct DpOutcome {
+    pub steps_done: usize,
+    pub final_loss: f64,
+    pub total_clipped: usize,
+    pub diverged: bool,
+    pub counters: HealthCounters,
+    pub phase_history: Vec<(usize, RunPhase)>,
+}
+
+struct WorkerSlot {
+    tx: Option<Sender<ToWorker>>,
+    handle: Option<JoinHandle<()>>,
+    state: WorkerHealth,
+}
+
+enum StepError {
+    /// Membership changed mid-step in a way that needs checkpoint
+    /// recovery (worker crash). Stragglers do NOT raise this — they are
+    /// handled in-step by rebalancing.
+    MembersLost,
+    Fatal(anyhow::Error),
+}
+
+/// Deterministic shard assignment: shard s → alive[s mod |alive|]. Depends
+/// only on the (ordered) alive set, so every coordinator replay with the
+/// same membership produces the same placement — and placement never
+/// affects results anyway, because shard gradients are pure.
+fn assign_shards(n_shards: usize, alive: &[usize]) -> Vec<usize> {
+    (0..n_shards).map(|s| alive[s % alive.len()]).collect()
+}
+
+/// Estimator refresh seed for step `t`: pure in (cfg.seed, t), so a
+/// replayed refresh regenerates the identical probe no matter how many
+/// recoveries preceded it.
+fn est_seed(seed: u64, t: usize) -> i32 {
+    let mut r = Rng::new(seed ^ 0xE57_5EED).fold(t as u64);
+    (r.next_u64() & 0x7FFF_FFFF) as i32
+}
+
+pub struct DpCoordinator {
+    cfg: DpConfig,
+    rule: &'static dyn UpdateRule,
+    kernel: Box<dyn UpdateKernel>,
+    fs: FlatState,
+    /// Init-time parameter snapshot: the recovery target of last resort
+    /// when no checkpoint epoch is loadable (restart from step 0).
+    init_p: Vec<f32>,
+    g: AlignedBuf,
+    ghat: Vec<f32>,
+    est_src: Option<Box<dyn GradSource>>,
+    schedule: Schedule,
+    workers: Vec<WorkerSlot>,
+    rx: Receiver<FromWorker>,
+    /// Keeps the channel open even if every worker is gone, so recv can
+    /// never see Disconnected ahead of the health logic.
+    _tx: Sender<FromWorker>,
+    /// Membership/recovery generation: bumped on every recovery so stale
+    /// in-flight results from an aborted step can never be mistaken for
+    /// replayed-step results.
+    gen: u64,
+    grads: Vec<Option<Vec<f32>>>,
+    spare: Vec<Vec<f32>>,
+    pub step: usize,
+    pub lifecycle: Lifecycle,
+    pub counters: HealthCounters,
+    pub records: Vec<StepRecord>,
+    clipped_per_step: Vec<usize>,
+    diverged: bool,
+    stopped: bool,
+}
+
+impl DpCoordinator {
+    /// Build a coordinator over an explicit arena layout and initial
+    /// parameters. `factory` is invoked once per worker (ids 0..N-1, on
+    /// the worker's thread) and once for the coordinator's estimator
+    /// source (id N) when the rule has one.
+    pub fn new(
+        cfg: DpConfig,
+        leaf_lens: &[usize],
+        init_p: Vec<f32>,
+        factory: SourceFactory,
+    ) -> Result<Self> {
+        if cfg.workers == 0 {
+            bail!("data-parallel run needs at least one worker");
+        }
+        let rule = rules::rule_for(cfg.optimizer);
+        if !rule.engine_resident() {
+            bail!(
+                "optimizer {} has no engine-resident update rule; data-parallel \
+                 training requires one",
+                cfg.optimizer.name()
+            );
+        }
+        let mut fs = FlatState::new(leaf_lens);
+        if init_p.len() != fs.len() {
+            bail!("init params have {} elements, arena needs {}", init_p.len(), fs.len());
+        }
+        fs.buf_mut(StateKind::P).copy_from_slice(&init_p);
+        let n = fs.len();
+        let mut cfg = cfg;
+        if cfg.hypers.is_empty() {
+            cfg.hypers = rules::default_hypers(rule);
+        }
+        let est_src = if rule.estimator().artifact().is_some() {
+            Some(factory(cfg.workers)?)
+        } else {
+            None
+        };
+        let ghat = vec![0.0; if est_src.is_some() { n } else { 0 }];
+        let schedule = Schedule::cosine(cfg.peak_lr, cfg.warmup.max(1), cfg.steps, cfg.final_lr_frac);
+        let (tx, rx) = channel();
+        let workers: Vec<WorkerSlot> = (0..cfg.workers)
+            .map(|id| {
+                let (wtx, wrx) = channel();
+                let f = factory.clone();
+                let fault = cfg.fault.clone();
+                let out = tx.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("dp-worker-{id}"))
+                    .spawn(move || worker_main(id, f, fault, wrx, out))
+                    .expect("spawn dp worker");
+                WorkerSlot {
+                    tx: Some(wtx),
+                    handle: Some(handle),
+                    state: WorkerHealth::Joining,
+                }
+            })
+            .collect();
+        let n_shards = cfg.effective_shards();
+        Ok(DpCoordinator {
+            cfg,
+            rule,
+            kernel: Backend::from_env_or(Backend::Pool(default_threads())).build(),
+            fs,
+            init_p,
+            g: AlignedBuf::zeroed(n),
+            ghat,
+            est_src,
+            schedule,
+            workers,
+            rx,
+            _tx: tx,
+            gen: 0,
+            grads: (0..n_shards).map(|_| None).collect(),
+            spare: Vec::new(),
+            step: 0,
+            lifecycle: Lifecycle::default(),
+            counters: HealthCounters::default(),
+            records: Vec::new(),
+            clipped_per_step: Vec::new(),
+            diverged: false,
+            stopped: false,
+        })
+    }
+
+    /// Artifact-free coordinator over [`SyntheticGrad`] sources — the
+    /// harness the proptests and unit tests drive the full fault matrix
+    /// through.
+    pub fn synthetic(cfg: DpConfig, leaf_lens: &[usize], init_seed: u64) -> Result<Self> {
+        let n: usize = leaf_lens.iter().sum();
+        let mut rng = Rng::new(init_seed).fold(0xD0);
+        let init_p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+        let data_seed = cfg.seed ^ 0xDA7A;
+        let factory: SourceFactory =
+            Arc::new(move |_id| Ok(Box::new(SyntheticGrad { data_seed }) as Box<dyn GradSource>));
+        Self::new(cfg, leaf_lens, init_p, factory)
+    }
+
+    pub fn flat(&self) -> &FlatState {
+        &self.fs
+    }
+
+    fn alive_ids(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.state == WorkerHealth::Alive)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Phase 1 of the lifecycle: collect ready messages until every worker
+    /// joined or the join deadline passes; non-joiners are dropped and
+    /// their shards simply never get assigned to them.
+    fn wait_for_members(&mut self) -> Result<()> {
+        self.lifecycle.set(0, RunPhase::WaitingForMembers);
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms.max(1));
+        let mut first_fatal: Option<String> = None;
+        let mut joined = 0usize;
+        while joined + self.dead_count() < self.cfg.workers {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok(FromWorker::Ready { worker }) => {
+                    self.workers[worker].state = WorkerHealth::Alive;
+                    joined += 1;
+                }
+                Ok(FromWorker::Fatal { worker, msg }) => {
+                    eprintln!("dp: worker {worker} failed to join: {msg}");
+                    self.workers[worker].state = WorkerHealth::Dead;
+                    self.counters.workers_crashed += 1;
+                    first_fatal.get_or_insert(msg);
+                }
+                Ok(FromWorker::ShardDone { buf, .. }) => self.spare.push(buf),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for w in self.workers.iter_mut().filter(|w| w.state == WorkerHealth::Joining) {
+            w.state = WorkerHealth::Dropped;
+            w.tx = None;
+            self.counters.workers_dropped += 1;
+        }
+        if self.alive_ids().is_empty() {
+            match first_fatal {
+                Some(msg) => bail!("no workers joined the run; first failure: {msg}"),
+                None => bail!("no workers joined the run within the join timeout"),
+            }
+        }
+        Ok(())
+    }
+
+    fn dead_count(&self) -> usize {
+        self.workers.iter().filter(|w| w.state == WorkerHealth::Dead).count()
+    }
+
+    /// Send one Step command to every alive worker (workers with no shards
+    /// this step still get the command — fault injection keys off it, and
+    /// it keeps the kill path exercised deterministically). Returns the
+    /// ids whose channel was already closed (crashed before the send).
+    fn dispatch(
+        &mut self,
+        t: usize,
+        params: &Arc<Vec<f32>>,
+        assigned: &[usize],
+        pending: &[bool],
+    ) -> Vec<usize> {
+        let mut per_worker: Vec<Vec<Job>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
+        for (shard, &w) in assigned.iter().enumerate() {
+            if pending[shard] {
+                let buf = self.spare.pop().unwrap_or_default();
+                per_worker[w].push(Job { shard, buf });
+            }
+        }
+        let gen = self.gen;
+        let mut closed = Vec::new();
+        for (id, jobs) in per_worker.into_iter().enumerate() {
+            if self.workers[id].state != WorkerHealth::Alive {
+                continue;
+            }
+            let msg = ToWorker::Step { gen, step: t, params: params.clone(), jobs };
+            let tx = self.workers[id].tx.as_ref().expect("alive worker has a channel");
+            if let Err(e) = tx.send(msg) {
+                if let ToWorker::Step { jobs, .. } = e.0 {
+                    self.spare.extend(jobs.into_iter().map(|j| j.buf));
+                }
+                closed.push(id);
+            }
+        }
+        closed
+    }
+
+    fn mark_crashed(&mut self, id: usize) {
+        self.workers[id].state = WorkerHealth::Dead;
+        self.workers[id].tx = None;
+        self.counters.workers_crashed += 1;
+        eprintln!("dp: worker {id} crashed (step {})", self.step + 1);
+    }
+
+    fn mark_dropped(&mut self, id: usize) {
+        self.workers[id].state = WorkerHealth::Dropped;
+        self.workers[id].tx = None;
+        self.counters.straggler_timeouts += 1;
+        self.counters.workers_dropped += 1;
+        eprintln!("dp: worker {id} dropped as straggler (step {})", self.step + 1);
+    }
+
+    /// One full training step: estimator refresh (coordinator-owned),
+    /// gradient fan-out/gather with straggler handling, fixed-order
+    /// all-reduce, engine-resident rule update.
+    fn try_step(&mut self, t: usize) -> std::result::Result<StepRecord, StepError> {
+        let s_count = self.grads.len();
+        // recycle buffers from any earlier aborted attempt
+        for slot in &mut self.grads {
+            if let Some(buf) = slot.take() {
+                self.spare.push(buf);
+            }
+        }
+
+        // estimator refresh: the coordinator owns the estimator source so
+        // the probe is computed exactly once per refresh step regardless
+        // of worker count, with a step-derived seed for replay purity
+        let refresh =
+            self.est_src.is_some() && (t - 1) % self.cfg.hess_interval.max(1) == 0;
+        if refresh {
+            let seed = est_seed(self.cfg.seed, t);
+            let src = self.est_src.as_mut().expect("refresh implies estimator source");
+            src.estimator(t, seed, &self.fs.p, &mut self.ghat)
+                .map_err(StepError::Fatal)?;
+        }
+
+        // fan out shard jobs over the alive membership
+        let alive = self.alive_ids();
+        if alive.is_empty() {
+            return Err(StepError::MembersLost);
+        }
+        let params = Arc::new(self.fs.buf(StateKind::P).to_vec());
+        let mut assigned = assign_shards(s_count, &alive);
+        let mut pending = vec![true; s_count];
+        let mut n_pending = s_count;
+        let closed = self.dispatch(t, &params, &assigned, &pending);
+        if !closed.is_empty() {
+            for id in closed {
+                self.mark_crashed(id);
+            }
+            return Err(StepError::MembersLost);
+        }
+
+        // gather with heartbeat deadline
+        let timeout = Duration::from_millis(self.cfg.straggler_timeout_ms.max(1));
+        let mut deadline = Instant::now() + timeout;
+        let mut shard_loss = vec![0f64; s_count];
+        let mut shard_gnorm = vec![0f64; s_count];
+        while n_pending > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok(FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf }) => {
+                    self.counters.heartbeats += 1;
+                    let fresh = gen == self.gen
+                        && step == t
+                        && self.workers[worker].state == WorkerHealth::Alive
+                        && assigned[shard] == worker
+                        && pending[shard];
+                    if !fresh {
+                        self.spare.push(buf);
+                        continue;
+                    }
+                    shard_loss[shard] = loss;
+                    shard_gnorm[shard] = gnorm;
+                    self.grads[shard] = Some(buf);
+                    pending[shard] = false;
+                    n_pending -= 1;
+                }
+                Ok(FromWorker::Ready { .. }) => {}
+                Ok(FromWorker::Fatal { worker, msg }) => {
+                    eprintln!("dp: worker {worker} fatal: {msg}");
+                    self.mark_crashed(worker);
+                    return Err(StepError::MembersLost);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // classify every worker still owed a shard: thread
+                    // exited → crash; still running → straggler
+                    let mut laggards: Vec<usize> = (0..s_count)
+                        .filter(|&s| pending[s])
+                        .map(|s| assigned[s])
+                        .collect();
+                    laggards.sort_unstable();
+                    laggards.dedup();
+                    let mut crashed = false;
+                    for id in laggards {
+                        let finished = self.workers[id]
+                            .handle
+                            .as_ref()
+                            .map(|h| h.is_finished())
+                            .unwrap_or(true);
+                        if finished {
+                            self.mark_crashed(id);
+                            crashed = true;
+                        } else {
+                            self.mark_dropped(id);
+                        }
+                    }
+                    if crashed {
+                        return Err(StepError::MembersLost);
+                    }
+                    // straggler-only timeout: rebalance the pending shards
+                    // onto the survivors and finish the step in place
+                    let alive = self.alive_ids();
+                    if alive.is_empty() {
+                        return Err(StepError::MembersLost);
+                    }
+                    let pending_shards: Vec<usize> =
+                        (0..s_count).filter(|&s| pending[s]).collect();
+                    for (i, &s) in pending_shards.iter().enumerate() {
+                        assigned[s] = alive[i % alive.len()];
+                    }
+                    self.counters.shards_rebalanced += pending_shards.len();
+                    let closed = self.dispatch(t, &params, &assigned, &pending);
+                    if !closed.is_empty() {
+                        for id in closed {
+                            self.mark_crashed(id);
+                        }
+                        return Err(StepError::MembersLost);
+                    }
+                    deadline = Instant::now() + timeout;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(StepError::Fatal(anyhow!("dp: result channel disconnected")));
+                }
+            }
+        }
+
+        // deterministic meeting point: fold the shard gradients in shard
+        // order (never worker order) straight into the arena's grad buffer
+        let parts: Vec<&[f32]> = self
+            .grads
+            .iter()
+            .map(|g| g.as_ref().expect("all shards gathered").as_slice())
+            .collect();
+        let inv_s = 1.0 / s_count as f32;
+        let ranges = self.fs.worker_ranges(default_threads());
+        reduce_fixed_order(default_threads(), &ranges, &parts, inv_s, &mut self.g);
+        for slot in &mut self.grads {
+            if let Some(buf) = slot.take() {
+                self.spare.push(buf);
+            }
+        }
+
+        let loss = shard_loss.iter().sum::<f64>() / s_count as f64;
+        let gnorm = shard_gnorm.iter().sum::<f64>() / s_count as f64;
+        let lr = self.schedule.lr(t);
+        let ctx = StepCtx {
+            lr: lr as f32,
+            t: t as f32,
+            estimator: if refresh { Some(&self.ghat[..]) } else { None },
+            est_scale: self.cfg.est_scale,
+            hypers: &self.cfg.hypers,
+        };
+        let outcome = self
+            .rule
+            .apply(&mut self.fs, &*self.kernel, &self.g, &ctx)
+            .map_err(StepError::Fatal)?;
+        let clipfrac = if outcome.reports_clipfrac {
+            outcome.clipped as f64 / self.fs.len().max(1) as f64
+        } else {
+            0.0
+        };
+        self.clipped_per_step.push(outcome.clipped);
+        Ok(StepRecord {
+            step: t,
+            loss,
+            lr,
+            gnorm,
+            clipfrac,
+            hnorm: if refresh { l2_norm(&self.fs.h) } else { 0.0 },
+            ..Default::default()
+        })
+    }
+
+    fn epoch_dir(root: &Path, step: usize) -> PathBuf {
+        root.join(format!("step-{step:06}"))
+    }
+
+    fn list_epochs(root: &Path) -> Vec<(usize, PathBuf)> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(root) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(s) = name.strip_prefix("step-") {
+                    if let Ok(step) = s.parse::<usize>() {
+                        out.push((step, e.path()));
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    fn ckpt_meta(&self) -> CkptMeta {
+        CkptMeta {
+            step: self.step,
+            preset: self.cfg.run_tag.clone(),
+            optimizer: self.cfg.optimizer.name().to_string(),
+            n_params: self.fs.len(),
+        }
+    }
+
+    /// Commit one epoch checkpoint (whole-dir atomic), then apply any
+    /// scheduled tear injection to the just-committed epoch.
+    fn save_epoch(&mut self) -> Result<()> {
+        let Some(root) = self.cfg.ckpt_dir.clone() else {
+            return Ok(());
+        };
+        let dir = Self::epoch_dir(&root, self.step);
+        checkpoint::save_state_atomic(
+            &dir,
+            &self.ckpt_meta(),
+            self.fs.buf(StateKind::P),
+            self.fs.buf(StateKind::M),
+            self.fs.buf(StateKind::H),
+        )?;
+        self.counters.checkpoints_saved += 1;
+        if self.cfg.fault.tear_at(self.step) {
+            checkpoint::inject_tear(&dir)?;
+            eprintln!("dp: fault injection tore checkpoint {dir:?}");
+        }
+        Ok(())
+    }
+
+    /// Crash recovery: restore the newest loadable epoch (torn or
+    /// mismatched epochs are rejected and skipped), or fall back to the
+    /// init snapshot at step 0. Bumps the generation so stale in-flight
+    /// results can never contaminate the replay.
+    fn recover(&mut self) -> Result<()> {
+        self.lifecycle.set(self.step, RunPhase::Recovering);
+        self.counters.recoveries += 1;
+        self.gen += 1;
+        while self.rx.try_recv().is_ok() {}
+        if self.alive_ids().is_empty() {
+            bail!(
+                "dp: no alive workers left to recover with \
+                 ({} crashed, {} dropped of {})",
+                self.dead_count(),
+                self.workers.iter().filter(|w| w.state == WorkerHealth::Dropped).count(),
+                self.workers.len()
+            );
+        }
+        let before = self.step;
+        let mut restored = None;
+        if let Some(root) = self.cfg.ckpt_dir.clone() {
+            let epochs = Self::list_epochs(&root);
+            for (step, dir) in epochs.iter().rev() {
+                if *step > self.step {
+                    continue;
+                }
+                match checkpoint::load_state(dir) {
+                    Ok((meta, p, m, h)) => {
+                        if meta.n_params != self.fs.len() || meta.preset != self.cfg.run_tag {
+                            eprintln!("dp: checkpoint {dir:?} is from a different run; skipping");
+                            continue;
+                        }
+                        self.fs.buf_mut(StateKind::P).copy_from_slice(&p);
+                        self.fs.buf_mut(StateKind::M).copy_from_slice(&m);
+                        self.fs.buf_mut(StateKind::H).copy_from_slice(&h);
+                        restored = Some(meta.step);
+                        break;
+                    }
+                    Err(e) => {
+                        self.counters.torn_checkpoints_detected += 1;
+                        eprintln!("dp: checkpoint {dir:?} rejected: {e:#}");
+                    }
+                }
+            }
+        }
+        match restored {
+            Some(step) => {
+                self.step = step;
+                eprintln!("dp: recovered from checkpoint epoch step-{step:06}");
+            }
+            None => {
+                self.fs.buf_mut(StateKind::P).copy_from_slice(&self.init_p);
+                self.fs.buf_mut(StateKind::M).fill(0.0);
+                self.fs.buf_mut(StateKind::H).fill(0.0);
+                self.step = 0;
+                eprintln!("dp: no loadable checkpoint epoch; restarting from init");
+            }
+        }
+        self.counters.steps_replayed += before - self.step;
+        self.records.truncate(self.step);
+        self.clipped_per_step.truncate(self.step);
+        Ok(())
+    }
+
+    /// Run the full lifecycle to completion.
+    pub fn train(&mut self) -> Result<DpOutcome> {
+        self.wait_for_members()?;
+        let mut recoveries_left = self.cfg.max_recoveries;
+        while self.step < self.cfg.steps && !self.diverged {
+            let t = self.step + 1;
+            let phase = if t <= self.cfg.warmup.max(1) {
+                RunPhase::Warmup
+            } else {
+                RunPhase::Train
+            };
+            self.lifecycle.set(t, phase);
+            match self.try_step(t) {
+                Ok(rec) => {
+                    self.step = t;
+                    if !rec.loss.is_finite() {
+                        self.diverged = true;
+                    }
+                    self.records.push(rec);
+                    if self.cfg.ckpt_every > 0
+                        && self.step % self.cfg.ckpt_every == 0
+                        && self.cfg.ckpt_dir.is_some()
+                    {
+                        self.lifecycle.set(t, RunPhase::Checkpoint);
+                        self.save_epoch()?;
+                    }
+                }
+                Err(StepError::MembersLost) => {
+                    if recoveries_left == 0 {
+                        bail!("dp: recovery budget exhausted after {} attempts", self.cfg.max_recoveries);
+                    }
+                    recoveries_left -= 1;
+                    self.recover()?;
+                }
+                Err(StepError::Fatal(e)) => return Err(e),
+            }
+        }
+        self.lifecycle.set(self.step, RunPhase::Done);
+        self.shutdown();
+        Ok(DpOutcome {
+            steps_done: self.step,
+            final_loss: self.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
+            total_clipped: self.clipped_per_step.iter().sum(),
+            diverged: self.diverged,
+            counters: self.counters.clone(),
+            phase_history: self.lifecycle.history().to_vec(),
+        })
+    }
+
+    /// Per-step clip counts (truncated on recovery, so replays don't
+    /// double-count): the bit-exactness oracle includes these.
+    pub fn clip_counts(&self) -> &[usize] {
+        &self.clipped_per_step
+    }
+
+    /// Write the final state as a Trainer-compatible checkpoint directory
+    /// (params.bin/m.bin/h.bin + meta.json), so `eval`/`hist` tooling and
+    /// `Trainer` restores work on DP runs unchanged.
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        checkpoint::save_state(
+            dir,
+            &self.ckpt_meta(),
+            self.fs.buf(StateKind::P),
+            self.fs.buf(StateKind::M),
+            self.fs.buf(StateKind::H),
+        )
+    }
+
+    fn shutdown(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        for w in &mut self.workers {
+            if let Some(tx) = w.tx.take() {
+                let _ = tx.send(ToWorker::Stop);
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for DpCoordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Build the data-parallel coordinator from a [`TrainConfig`] (the
+/// `--workers N` path of `cmd_train`): per-worker [`SessionGrad`] sources
+/// over the preset's `grad_step` artifact plus the rule's estimator
+/// artifact for the coordinator.
+pub fn build_dp(train: &TrainConfig) -> Result<DpCoordinator> {
+    let model = ModelConfig::load(&train.artifacts_root, &train.preset)?;
+    let rule = rules::rule_for(train.optimizer);
+    if !rule.engine_resident() {
+        bail!(
+            "optimizer {} has no engine-resident update rule; data-parallel \
+             training requires one",
+            train.optimizer.name()
+        );
+    }
+    if train.train_artifact_override.is_some() || train.hess_artifact_override.is_some() {
+        bail!("data-parallel training does not support artifact overrides");
+    }
+    let state = ModelState::init(&model, train.seed)?;
+    let init_p = state.flat_params()?;
+    let leaf_lens: Vec<usize> = model.params.iter().map(|s| s.numel()).collect();
+    let cfg = DpConfig {
+        workers: train.workers.max(1),
+        n_shards: train.dp_shards,
+        steps: train.steps,
+        optimizer: train.optimizer,
+        hypers: rules::resolve_hypers(rule, &model),
+        est_scale: rule.estimator().scale(&model),
+        hess_interval: train.hess_interval,
+        peak_lr: train.effective_lr(),
+        warmup: train.effective_warmup(),
+        final_lr_frac: train.final_lr_frac,
+        seed: train.seed,
+        ckpt_dir: train.ckpt_dir.clone(),
+        ckpt_every: train.ckpt_every,
+        straggler_timeout_ms: train.straggler_timeout_ms,
+        // per-worker XLA compilation can take a while on first load
+        join_timeout_ms: 120_000,
+        max_recoveries: 8,
+        run_tag: train.preset.clone(),
+        fault: FaultPlan::resolve(train.fault_plan.as_deref())?,
+    };
+    let ghat = rule.estimator().artifact();
+    let seed = train.seed;
+    let data_seed = train.data_seed;
+    let factory: SourceFactory = Arc::new(move |_id| {
+        Ok(Box::new(SessionGrad::new(&model, seed, data_seed, ghat)?) as Box<dyn GradSource>)
+    });
+    DpCoordinator::new(cfg, &leaf_lens, init_p, factory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parse_round_trip() {
+        let p = FaultPlan::parse("kill:1@5, delay:0@3:250 ,tear:4,kill:2@7").unwrap();
+        assert_eq!(p.kills, vec![(1, 5), (2, 7)]);
+        assert_eq!(p.delays, vec![(0, 3, 250)]);
+        assert_eq!(p.tears, vec![4]);
+        assert!(p.kill_at(1, 5) && !p.kill_at(1, 4) && !p.kill_at(0, 5));
+        assert_eq!(p.delay_ms(0, 3), Some(250));
+        assert_eq!(p.delay_ms(0, 4), None);
+        assert!(p.tear_at(4) && !p.tear_at(5));
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        for bad in ["boom:1@2", "kill:1", "delay:1@2", "kill:x@2", "tear:x"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_balanced_and_deterministic() {
+        let a = assign_shards(8, &[0, 2, 3]);
+        assert_eq!(a, assign_shards(8, &[0, 2, 3]));
+        for (s, &w) in a.iter().enumerate() {
+            assert_eq!(w, [0, 2, 3][s % 3]);
+        }
+        let mut load = [0usize; 4];
+        for &w in &a {
+            load[w] += 1;
+        }
+        assert_eq!(load, [3, 0, 3, 2]);
+    }
+
+    fn run_synthetic(cfg: DpConfig, leaf_lens: &[usize]) -> (DpOutcome, Vec<f32>, Vec<f32>, Vec<f32>, Vec<usize>) {
+        let mut dp = DpCoordinator::synthetic(cfg, leaf_lens, 7).unwrap();
+        let out = dp.train().unwrap();
+        (
+            out,
+            dp.flat().buf(StateKind::P).to_vec(),
+            dp.flat().buf(StateKind::M).to_vec(),
+            dp.flat().buf(StateKind::H).to_vec(),
+            dp.clip_counts().to_vec(),
+        )
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    const LENS: [usize; 3] = [33, 257, 64];
+
+    #[test]
+    fn clean_run_lifecycle_and_counters() {
+        let cfg = DpConfig { workers: 2, n_shards: 4, steps: 6, ..DpConfig::default() };
+        let (out, _, _, _, _) = run_synthetic(cfg, &LENS);
+        assert_eq!(out.steps_done, 6);
+        assert!(!out.diverged);
+        assert!(out.final_loss.is_finite());
+        let phases: Vec<RunPhase> = out.phase_history.iter().map(|&(_, p)| p).collect();
+        assert_eq!(
+            phases,
+            vec![
+                RunPhase::WaitingForMembers,
+                RunPhase::Warmup,
+                RunPhase::Train,
+                RunPhase::Done
+            ]
+        );
+        assert_eq!(out.counters.recoveries, 0);
+        assert_eq!(out.counters.workers_dropped, 0);
+        assert_eq!(out.counters.workers_crashed, 0);
+        // 6 steps x 4 shards, every completion heartbeats
+        assert_eq!(out.counters.heartbeats, 24);
+    }
+
+    #[test]
+    fn checkpoint_epochs_interleave_lifecycle() {
+        let root = std::env::temp_dir()
+            .join(format!("sophia_dp_epochs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let cfg = DpConfig {
+            workers: 2,
+            n_shards: 2,
+            steps: 6,
+            ckpt_dir: Some(root.clone()),
+            ckpt_every: 2,
+            ..DpConfig::default()
+        };
+        let (out, _, _, _, _) = run_synthetic(cfg, &LENS);
+        assert_eq!(out.counters.checkpoints_saved, 3);
+        let epochs = DpCoordinator::list_epochs(&root);
+        assert_eq!(
+            epochs.iter().map(|&(s, _)| s).collect::<Vec<_>>(),
+            vec![2, 4, 6]
+        );
+        for (_, dir) in &epochs {
+            checkpoint::load_state(dir).unwrap();
+        }
+        assert!(out
+            .phase_history
+            .iter()
+            .any(|&(_, p)| p == RunPhase::Checkpoint));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn straggler_drop_rebalances_and_stays_bit_identical() {
+        let mk = |fault: FaultPlan, timeout: u64| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            straggler_timeout_ms: timeout,
+            fault,
+            ..DpConfig::default()
+        };
+        let (clean, p0, m0, h0, c0) = run_synthetic(mk(FaultPlan::default(), 5000), &LENS);
+        let fault = FaultPlan::parse("delay:1@3:600").unwrap();
+        let (faulted, p1, m1, h1, c1) = run_synthetic(mk(fault, 120), &LENS);
+        assert_eq!(faulted.counters.workers_dropped, 1);
+        assert!(faulted.counters.shards_rebalanced >= 1);
+        assert_eq!(faulted.counters.recoveries, 0, "stragglers are in-step, not recovery");
+        assert_eq!(clean.steps_done, faulted.steps_done);
+        assert!(bits_eq(&p0, &p1), "params must be bit-identical after a straggler drop");
+        assert!(bits_eq(&m0, &m1));
+        assert!(bits_eq(&h0, &h1));
+        assert_eq!(c0, c1, "clip counts must match too");
+    }
+
+    #[test]
+    fn killed_worker_recovers_from_checkpoint_bit_identically() {
+        let root = std::env::temp_dir()
+            .join(format!("sophia_dp_kill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mk = |fault: FaultPlan, dir: Option<PathBuf>, timeout: u64| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 7,
+            hess_interval: 3,
+            ckpt_dir: dir,
+            ckpt_every: 2,
+            straggler_timeout_ms: timeout,
+            fault,
+            ..DpConfig::default()
+        };
+        let (clean, p0, m0, h0, c0) = run_synthetic(mk(FaultPlan::default(), None, 5000), &LENS);
+        // kill at step 6: step 5 is already committed, so recovery must
+        // roll back to the epoch at step 4 and replay step 5
+        let fault = FaultPlan::parse("kill:1@6").unwrap();
+        let (faulted, p1, m1, h1, c1) =
+            run_synthetic(mk(fault, Some(root.clone()), 400), &LENS);
+        assert_eq!(faulted.counters.workers_crashed, 1);
+        assert_eq!(faulted.counters.recoveries, 1);
+        assert_eq!(faulted.counters.steps_replayed, 1, "rolled back from step 5 to epoch 4");
+        assert!(faulted
+            .phase_history
+            .iter()
+            .any(|&(_, p)| p == RunPhase::Recovering));
+        assert_eq!(clean.steps_done, faulted.steps_done);
+        assert!(bits_eq(&p0, &p1), "crash recovery must be bit-identical");
+        assert!(bits_eq(&m0, &m1));
+        assert!(bits_eq(&h0, &h1));
+        assert_eq!(c0, c1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn torn_checkpoint_is_detected_and_older_epoch_used() {
+        let root = std::env::temp_dir()
+            .join(format!("sophia_dp_tear_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mk = |fault: FaultPlan, dir: Option<PathBuf>, timeout: u64| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 7,
+            hess_interval: 3,
+            ckpt_dir: dir,
+            ckpt_every: 2,
+            straggler_timeout_ms: timeout,
+            fault,
+            ..DpConfig::default()
+        };
+        let (_, p0, m0, h0, c0) = run_synthetic(mk(FaultPlan::default(), None, 5000), &LENS);
+        // epoch 4 is torn, so the kill at step 5 must recover from epoch 2
+        let fault = FaultPlan::parse("tear:4,kill:1@5").unwrap();
+        let (faulted, p1, m1, h1, c1) =
+            run_synthetic(mk(fault, Some(root.clone()), 400), &LENS);
+        assert!(faulted.counters.torn_checkpoints_detected >= 1);
+        assert_eq!(faulted.counters.recoveries, 1);
+        assert_eq!(faulted.counters.steps_replayed, 2, "rolled back past the torn epoch to 2");
+        assert!(bits_eq(&p0, &p1));
+        assert!(bits_eq(&m0, &m1));
+        assert!(bits_eq(&h0, &h1));
+        assert_eq!(c0, c1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn killing_the_only_worker_fails_cleanly() {
+        let cfg = DpConfig {
+            workers: 1,
+            n_shards: 2,
+            steps: 5,
+            straggler_timeout_ms: 200,
+            fault: FaultPlan::parse("kill:0@2").unwrap(),
+            ..DpConfig::default()
+        };
+        let mut dp = DpCoordinator::synthetic(cfg, &LENS, 7).unwrap();
+        let err = format!("{:#}", dp.train().unwrap_err());
+        assert!(err.contains("no alive workers"), "{err}");
+    }
+
+    #[test]
+    fn est_seed_is_pure_and_step_dependent() {
+        assert_eq!(est_seed(3, 11), est_seed(3, 11));
+        assert_ne!(est_seed(3, 11), est_seed(3, 12));
+        assert_ne!(est_seed(3, 11), est_seed(4, 11));
+        assert!(est_seed(3, 11) >= 0);
+    }
+}

@@ -8,8 +8,10 @@
 //! checkpoint.
 
 pub mod checkpoint;
+pub mod dp;
 pub mod flops;
 pub mod sweep;
 pub mod trainer;
 
+pub use dp::{build_dp, DpConfig, DpCoordinator, DpOutcome, FaultPlan, RunPhase};
 pub use trainer::{TrainOutcome, Trainer};

@@ -44,6 +44,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.effective_lr(),
         cfg.hess_interval
     );
+    if cfg.workers > 1 {
+        return cmd_train_dp(cfg);
+    }
     let mut trainer = Trainer::new(cfg)?;
     let out = trainer.train()?;
     println!(
@@ -53,6 +56,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if let Some(dir) = trainer.cfg.ckpt_dir.clone() {
         trainer.save_checkpoint(&dir)?;
+        eprintln!("checkpoint saved to {dir:?}");
+    }
+    Ok(())
+}
+
+/// Fault-tolerant data-parallel training (`--workers N`, N > 1): the
+/// in-process coordinator/worker split with deterministic recovery.
+fn cmd_train_dp(cfg: sophia::config::TrainConfig) -> Result<()> {
+    let ckpt_dir = cfg.ckpt_dir.clone();
+    eprintln!(
+        "data-parallel: {} workers over {} shards (straggler timeout {}ms)",
+        cfg.workers,
+        if cfg.dp_shards == 0 { cfg.workers } else { cfg.dp_shards },
+        cfg.straggler_timeout_ms
+    );
+    let mut dp = sophia::coordinator::build_dp(&cfg)?;
+    let out = dp.train()?;
+    println!(
+        "done: steps={} train_loss={:.4} diverged={} clipped={}",
+        out.steps_done, out.final_loss, out.diverged, out.total_clipped
+    );
+    println!("health: {}", out.counters.to_json().to_string());
+    if let Some(dir) = ckpt_dir {
+        // Trainer-compatible final checkpoint at the root, alongside any
+        // step-<n> recovery epochs, so eval/hist work on DP runs unchanged
+        dp.save_checkpoint(&dir)?;
         eprintln!("checkpoint saved to {dir:?}");
     }
     Ok(())

@@ -98,6 +98,60 @@ impl RunLog {
     }
 }
 
+/// Fault-tolerance counters for the data-parallel coordinator: every
+/// degraded-path event (straggler drop, crash, checkpoint rejection,
+/// replayed step) is counted here so tests can assert that a recovery
+/// actually happened and operators can see run health at a glance.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthCounters {
+    /// Shard-completion messages received (the heartbeat signal).
+    pub heartbeats: usize,
+    /// Straggler deadline expiries that led to a worker drop.
+    pub straggler_timeouts: usize,
+    /// Workers permanently dropped as stragglers (shards rebalanced).
+    pub workers_dropped: usize,
+    /// Workers observed dead (thread exited without a goodbye).
+    pub workers_crashed: usize,
+    /// Shard reassignments performed after a drop.
+    pub shards_rebalanced: usize,
+    /// Checkpoint-restore recoveries after a crash.
+    pub recoveries: usize,
+    /// Steps re-run because a recovery rolled the run back.
+    pub steps_replayed: usize,
+    /// Checkpoint epochs committed.
+    pub checkpoints_saved: usize,
+    /// Checkpoints rejected at load (truncated/corrupt blobs).
+    pub torn_checkpoints_detected: usize,
+}
+
+impl HealthCounters {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("heartbeats".into(), Json::Num(self.heartbeats as f64));
+        m.insert(
+            "straggler_timeouts".into(),
+            Json::Num(self.straggler_timeouts as f64),
+        );
+        m.insert("workers_dropped".into(), Json::Num(self.workers_dropped as f64));
+        m.insert("workers_crashed".into(), Json::Num(self.workers_crashed as f64));
+        m.insert(
+            "shards_rebalanced".into(),
+            Json::Num(self.shards_rebalanced as f64),
+        );
+        m.insert("recoveries".into(), Json::Num(self.recoveries as f64));
+        m.insert("steps_replayed".into(), Json::Num(self.steps_replayed as f64));
+        m.insert(
+            "checkpoints_saved".into(),
+            Json::Num(self.checkpoints_saved as f64),
+        );
+        m.insert(
+            "torn_checkpoints_detected".into(),
+            Json::Num(self.torn_checkpoints_detected as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
 /// First step at which a (step, loss) curve reaches `target` (Figures 1/4:
 /// "number of steps to achieve the same level of validation loss").
 pub fn steps_to_loss(curve: &[(usize, f64)], target: f64) -> Option<usize> {
@@ -211,6 +265,27 @@ mod tests {
         assert_eq!(rec.get("val_loss").unwrap().as_f64(), Some(4.5));
         assert_eq!(log.val_curve(), vec![(2, 4.5)]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn health_counters_serialize_every_field() {
+        let c = HealthCounters {
+            heartbeats: 12,
+            straggler_timeouts: 1,
+            workers_dropped: 1,
+            workers_crashed: 2,
+            shards_rebalanced: 3,
+            recoveries: 2,
+            steps_replayed: 5,
+            checkpoints_saved: 4,
+            torn_checkpoints_detected: 1,
+        };
+        let j = c.to_json();
+        assert_eq!(j.get("heartbeats").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("recoveries").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("torn_checkpoints_detected").unwrap().as_usize(), Some(1));
+        assert_eq!(j.as_obj().unwrap().len(), 9);
+        assert_eq!(HealthCounters::default(), HealthCounters::default());
     }
 
     #[test]

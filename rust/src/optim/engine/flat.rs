@@ -181,6 +181,33 @@ impl FlatState {
     pub fn load_leaf(&mut self, kind: StateKind, i: usize, src: &[f32]) {
         self.leaf_mut(kind, i).copy_from_slice(src);
     }
+
+    /// Split the arena into at most `n` contiguous, roughly balanced index
+    /// ranges, each a whole number of cache shards (so ranges never
+    /// straddle a leaf edge either). These are the per-worker views the
+    /// data-parallel coordinator parallelizes its fixed-order all-reduce
+    /// over; because each range is element-disjoint, rebalancing after a
+    /// worker drop is just handing the same ranges to fewer threads.
+    pub fn worker_ranges(&self, n: usize) -> Vec<Range<usize>> {
+        let n = n.max(1);
+        let total = self.len();
+        if total == 0 {
+            return Vec::new();
+        }
+        let target = total.div_ceil(n);
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for s in &self.shards {
+            if s.end - start >= target && out.len() + 1 < n {
+                out.push(start..s.end);
+                start = s.end;
+            }
+        }
+        if start < total {
+            out.push(start..total);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -238,5 +265,25 @@ mod tests {
                 assert!(!straddles, "shard {s:?} straddles leaf edge {}", lr.start);
             }
         }
+    }
+
+    #[test]
+    fn worker_ranges_cover_disjointly_and_stay_shard_aligned() {
+        let lens = [10usize, 200_000, 3, 65_536, 77];
+        let fs = FlatState::new(&lens);
+        let edges: Vec<usize> = fs.shards().iter().map(|s| s.start).collect();
+        for n in [1usize, 2, 3, 4, 8, 100] {
+            let ranges = fs.worker_ranges(n);
+            assert!(ranges.len() <= n, "n={n} got {} ranges", ranges.len());
+            assert!(!ranges.is_empty());
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at n={n}");
+                assert!(edges.contains(&r.start), "range not shard-aligned at n={n}");
+                next = r.end;
+            }
+            assert_eq!(next, fs.len(), "ranges must cover the arena (n={n})");
+        }
+        assert!(FlatState::new(&[]).worker_ranges(4).is_empty());
     }
 }

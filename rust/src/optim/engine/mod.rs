@@ -29,7 +29,9 @@ pub mod parallel;
 pub mod pool;
 
 pub use self::flat::{AlignedBuf, FlatState, StateKind, ALIGN};
-pub use self::parallel::{partition, partition_leaves, run_sharded, SendPtr, DEFAULT_SHARD_LEN};
+pub use self::parallel::{
+    partition, partition_leaves, reduce_fixed_order, run_sharded, SendPtr, DEFAULT_SHARD_LEN,
+};
 pub use self::pool::{PoolEngine, WorkerPool};
 
 use self::parallel::shard_mut;

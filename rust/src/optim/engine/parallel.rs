@@ -95,6 +95,49 @@ where
     counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
 }
 
+/// Deterministic fixed-order all-reduce: for every element `i`,
+/// `dst[i] = scale * (parts[0][i] + parts[1][i] + ... )`, with the partial
+/// sums folded in part order using plain f32 arithmetic. Parallelism is
+/// only across the element ranges in `shards` — the summation order per
+/// element never changes — so the result is bit-identical for any thread
+/// count. This is the gradient meeting point of the data-parallel
+/// coordinator: `parts` are the per-data-shard gradients (one slice per
+/// shard, in shard order 0..S-1), which makes the reduced gradient
+/// independent of how shards were distributed over workers.
+pub fn reduce_fixed_order(
+    threads: usize,
+    shards: &[Range<usize>],
+    parts: &[&[f32]],
+    scale: f32,
+    dst: &mut [f32],
+) {
+    if parts.is_empty() {
+        dst.fill(0.0);
+        return;
+    }
+    for p in parts {
+        assert_eq!(p.len(), dst.len(), "all-reduce parts must match dst length");
+    }
+    let base = SendPtr(dst.as_mut_ptr());
+    run_sharded(threads, shards, |_, r| {
+        // SAFETY: `shards` ranges are disjoint and in-bounds for `dst`
+        // (the caller partitions 0..dst.len()).
+        let d = unsafe { shard_mut(base, &r) };
+        d.copy_from_slice(&parts[0][r.clone()]);
+        for p in &parts[1..] {
+            for (x, &y) in d.iter_mut().zip(&p[r.clone()]) {
+                *x += y;
+            }
+        }
+        if scale != 1.0 {
+            for x in d.iter_mut() {
+                *x *= scale;
+            }
+        }
+        0
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +175,52 @@ mod tests {
             let got = run_sharded(threads, &shards, |_, r| r.len() / 3);
             assert_eq!(got, serial, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn reduce_fixed_order_is_bitwise_stable_across_thread_counts() {
+        let n = 40_001;
+        let s = 5;
+        // adversarial magnitudes so float addition order actually matters
+        let parts_owned: Vec<Vec<f32>> = (0..s)
+            .map(|k| {
+                (0..n)
+                    .map(|i| {
+                        let x = ((i * 2654435761 + k * 40503) % 1000) as f32 - 500.0;
+                        x * 10f32.powi((k as i32 % 5) - 2)
+                    })
+                    .collect()
+            })
+            .collect();
+        let parts: Vec<&[f32]> = parts_owned.iter().map(|p| p.as_slice()).collect();
+        let scale = 1.0 / s as f32;
+        // serial oracle: fold in part order per element
+        let mut oracle = vec![0f32; n];
+        for (i, o) in oracle.iter_mut().enumerate() {
+            let mut acc = parts[0][i];
+            for p in &parts[1..] {
+                acc += p[i];
+            }
+            *o = acc * scale;
+        }
+        for threads in [1, 2, 4, 8] {
+            for shard_len in [37, 1 << 10, 1 << 16] {
+                let shards = partition(n, shard_len);
+                let mut dst = vec![0f32; n];
+                reduce_fixed_order(threads, &shards, &parts, scale, &mut dst);
+                assert!(
+                    dst.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "threads={threads} shard_len={shard_len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_fixed_order_empty_parts_zeroes_dst() {
+        let mut dst = vec![1f32; 10];
+        reduce_fixed_order(4, &partition(10, 4), &[], 1.0, &mut dst);
+        assert!(dst.iter().all(|&x| x == 0.0));
     }
 
     #[test]

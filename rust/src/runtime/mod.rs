@@ -27,10 +27,6 @@
 //! signature also declares which inputs are *donatable* (state groups
 //! that recur as outputs), the contract device-resident/donated parameter
 //! buffers will build on once the xla binding exposes buffer donation.
-//!
-//! Manifests that predate `io.signatures` get legacy signatures
-//! synthesized from artifact names (deprecated — see
-//! [`crate::config::ArtifactSig::synthesize`]).
 
 pub mod program;
 
@@ -376,6 +372,22 @@ impl ModelState {
         }
         for (i, spec) in self.specs.iter().enumerate() {
             self.params[i] = lit_f32(fs.leaf(StateKind::P, i), &spec.shape)?;
+        }
+        Ok(())
+    }
+
+    /// Refresh only the parameter literals from one flat slice — the
+    /// data-parallel worker's upload path, where the coordinator broadcasts
+    /// the arena's parameter buffer rather than a whole `FlatState`.
+    pub fn set_params_flat(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.total_numel() {
+            bail!("flat params have {} elements, model needs {}", flat.len(), self.total_numel());
+        }
+        let mut off = 0;
+        for (i, spec) in self.specs.iter().enumerate() {
+            let n = spec.numel();
+            self.params[i] = lit_f32(&flat[off..off + n], &spec.shape)?;
+            off += n;
         }
         Ok(())
     }

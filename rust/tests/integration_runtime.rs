@@ -168,7 +168,6 @@ fn all_manifest_artifacts_compile_and_match_their_signatures() -> Result<()> {
         return Ok(());
     }
     let model = ModelConfig::load(&artifacts_root(), "nano")?;
-    assert!(!model.legacy_signatures, "nano manifest should carry io.signatures");
     let mut rt = Runtime::cpu()?;
     for name in model.artifacts.clone() {
         Program::load(&mut rt, &model, &name)?;
@@ -312,23 +311,21 @@ fn unknown_role_signature_fails_before_program_load() -> Result<()> {
 }
 
 #[test]
-fn legacy_manifest_without_signatures_still_loads() -> Result<()> {
+fn manifest_without_signatures_is_rejected() -> Result<()> {
     if !have_nano() {
         eprintln!("SKIP: run `make artifacts` first");
         return Ok(());
     }
-    // pre-PR-5 manifest: no io.signatures table at all — synthesized
-    // legacy signatures keep old artifact dirs working (deprecated)
+    // the legacy name-based signature synthesis is gone: a manifest with
+    // no io.signatures table fails the load with a regeneration hint
     let root = doctored_preset("legacy", |man| {
         let Json::Obj(m) = man else { panic!("manifest not an object") };
         m.remove("io");
     })?;
-    let model = ModelConfig::load(&root, "nano")?;
-    assert!(model.legacy_signatures);
-    let mut rt = Runtime::cpu()?;
-    // the synthesized signature still arity-checks against the executable
-    let prog = Program::load(&mut rt, &model, "eval_step")?;
-    assert_eq!(prog.sig().n_inputs(model.params.len()), model.params.len() + 1);
+    let err = ModelConfig::load(&root, "nano").err().expect("pre-ABI manifest must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no io.signatures table"), "unhelpful error: {msg}");
+    assert!(msg.contains("make artifacts"), "error must say how to fix it: {msg}");
     std::fs::remove_dir_all(&root).ok();
     Ok(())
 }

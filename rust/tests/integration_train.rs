@@ -362,6 +362,197 @@ fn trainer_reports_paper_statistics() -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Fault-tolerant data-parallel training (rust/src/coordinator/dp.rs)
+//
+// All `dp_` tests honor SOPHIA_DP_WORKERS (default 2) so CI can run the
+// same suite across worker counts {1, 2, 4}.
+// ---------------------------------------------------------------------
+
+fn dp_workers() -> usize {
+    std::env::var("SOPHIA_DP_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+}
+
+fn have_dp_artifacts() -> bool {
+    if !have("nano") {
+        eprintln!("SKIP: run `make artifacts` first");
+        return false;
+    }
+    let model = sophia::ModelConfig::load(&artifacts_root(), "nano").unwrap();
+    if !model.has_artifact("grad_step") || !model.has_artifact("ghat_gnb") {
+        eprintln!("SKIP: artifacts predate grad_step/ghat_gnb (re-run `make artifacts`)");
+        return false;
+    }
+    true
+}
+
+fn dp_base(steps: usize) -> TrainConfig {
+    let mut cfg = base("nano", Optimizer::SophiaG, steps);
+    cfg.hess_interval = 3;
+    // fixed shard count => worker count never changes results; 4 divides
+    // evenly into the CI worker matrix {1, 2, 4}, so every worker always
+    // holds at least one shard (a kill is therefore always observable)
+    cfg.dp_shards = 4;
+    cfg.workers = dp_workers();
+    // generous deadline: nano grads run in ms, but CI machines stall
+    cfg.straggler_timeout_ms = 5000;
+    cfg
+}
+
+/// Run a DP config to completion; return (p, m, h, clip counts, outcome).
+fn run_dp(
+    cfg: &TrainConfig,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<usize>, sophia::coordinator::DpOutcome)> {
+    use sophia::optim::engine::StateKind;
+    let mut dp = sophia::coordinator::build_dp(cfg)?;
+    let out = dp.train()?;
+    Ok((
+        dp.flat().buf(StateKind::P).to_vec(),
+        dp.flat().buf(StateKind::M).to_vec(),
+        dp.flat().buf(StateKind::H).to_vec(),
+        dp.clip_counts().to_vec(),
+        out,
+    ))
+}
+
+fn assert_state_eq(tag: &str, a: &(Vec<f32>, Vec<f32>, Vec<f32>), b: &(Vec<f32>, Vec<f32>, Vec<f32>)) {
+    for (name, x, y) in [("p", &a.0, &b.0), ("m", &a.1, &b.1), ("h", &a.2, &b.2)] {
+        assert_eq!(x.len(), y.len(), "{tag} {name} len");
+        for i in 0..x.len() {
+            assert_eq!(x[i].to_bits(), y[i].to_bits(), "{tag} {name}[{i}]");
+        }
+    }
+}
+
+#[test]
+fn dp_all_reduce_matches_single_worker_oracle() -> Result<()> {
+    // the fixed-order all-reduce over real XLA gradients: N workers over
+    // 4 fixed data shards produce the single-worker run's state, bitwise
+    if !have_dp_artifacts() {
+        return Ok(());
+    }
+    let mut oracle_cfg = dp_base(5);
+    oracle_cfg.workers = 1;
+    let (p1, m1, h1, c1, o1) = run_dp(&oracle_cfg)?;
+    assert!(!o1.diverged);
+    let cfg = dp_base(5);
+    let (p, m, h, c, o) = run_dp(&cfg)?;
+    assert!(!o.diverged);
+    assert_eq!(o.counters.recoveries, 0);
+    let tag = format!("workers {}", cfg.workers);
+    assert_state_eq(&tag, &(p1, m1, h1), &(p, m, h));
+    assert_eq!(c1, c, "{tag} clip counts");
+    assert_eq!(o1.final_loss.to_bits(), o.final_loss.to_bits(), "{tag} final loss");
+    Ok(())
+}
+
+#[test]
+fn dp_kill_recovery_is_bit_identical() -> Result<()> {
+    // FaultPlan-injected worker crash at step 6 of 6: the run restores
+    // the step-4 epoch, replays on the surviving members, and finishes in
+    // a state bitwise equal to the uninterrupted run's.
+    if !have_dp_artifacts() {
+        return Ok(());
+    }
+    let w = dp_workers();
+    let root = std::env::temp_dir().join(format!("sophia_dp_e2e_kill_{w}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let victim = w - 1;
+    let mut cfg = dp_base(6);
+    cfg.ckpt_dir = Some(root.clone());
+    cfg.ckpt_every = 2;
+    cfg.fault_plan = Some(format!("kill:{victim}@6"));
+    if w == 1 {
+        // killing the only member is unrecoverable — must fail loudly,
+        // not hang or corrupt
+        let err = run_dp(&cfg).expect_err("1-worker kill must error");
+        assert!(format!("{err:#}").contains("no alive workers"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&root);
+        return Ok(());
+    }
+    let clean_cfg = dp_base(6);
+    let (p0, m0, h0, c0, o0) = run_dp(&clean_cfg)?;
+    assert!(!o0.diverged);
+    let (p, m, h, c, o) = run_dp(&cfg)?;
+    assert_eq!(o.counters.workers_crashed, 1);
+    assert_eq!(o.counters.recoveries, 1);
+    assert!(o.counters.steps_replayed >= 1, "crash after step 5 rolls back to epoch 4");
+    assert!(o.phase_history.iter().any(|&(_, ph)| ph == sophia::coordinator::RunPhase::Recovering));
+    assert_state_eq("kill-recovery", &(p0, m0, h0), &(p, m, h));
+    assert_eq!(c0, c, "clip counts");
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}
+
+#[test]
+fn dp_torn_checkpoint_is_detected_and_skipped() -> Result<()> {
+    // a checkpoint torn mid-write (crash during the epoch commit) must be
+    // rejected at load by the checksum layer — recovery falls back to the
+    // previous intact epoch and still converges to the bit-identical state
+    if !have_dp_artifacts() {
+        return Ok(());
+    }
+    let w = dp_workers().max(2); // needs a survivor
+    let root = std::env::temp_dir().join(format!("sophia_dp_e2e_tear_{w}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut clean_cfg = dp_base(6);
+    clean_cfg.workers = w;
+    let (p0, m0, h0, c0, o0) = run_dp(&clean_cfg)?;
+    assert!(!o0.diverged);
+    let mut cfg = dp_base(6);
+    cfg.workers = w;
+    cfg.ckpt_dir = Some(root.clone());
+    cfg.ckpt_every = 2;
+    cfg.fault_plan = Some(format!("tear:4,kill:{}@6", w - 1));
+    let (p, m, h, c, o) = run_dp(&cfg)?;
+    assert!(o.counters.torn_checkpoints_detected >= 1, "torn epoch not detected");
+    assert_eq!(o.counters.recoveries, 1);
+    assert_eq!(o.counters.steps_replayed, 3, "rolled back past torn epoch 4 to epoch 2");
+    assert_state_eq("torn-recovery", &(p0, m0, h0), &(p, m, h));
+    assert_eq!(c0, c, "clip counts");
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}
+
+#[test]
+fn dp_final_checkpoint_interops_with_trainer_and_rejects_corruption() -> Result<()> {
+    // the DP run's final checkpoint is Trainer-compatible (same on-disk
+    // layout), and a corrupted blob is rejected at load with an error
+    // naming the file — the crash-consistency contract end to end
+    if !have_dp_artifacts() {
+        return Ok(());
+    }
+    let root = std::env::temp_dir().join(format!("sophia_dp_e2e_interop_{}", dp_workers()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cfg = dp_base(4);
+    let mut dp = sophia::coordinator::build_dp(&cfg)?;
+    let out = dp.train()?;
+    assert!(!out.diverged);
+    dp.save_checkpoint(&root)?;
+    drop(dp);
+
+    let mut t = Trainer::new(cfg.clone())?;
+    t.load_checkpoint(&root)?;
+    assert_eq!(t.step, 4);
+    assert!(t.train_step()?.loss.is_finite());
+
+    // flip one byte in m.bin: load must fail and name the file
+    let blob = root.join("m.bin");
+    let mut bytes = std::fs::read(&blob)?;
+    bytes[7] ^= 0x40;
+    std::fs::write(&blob, &bytes)?;
+    let err = Trainer::new(cfg)?
+        .load_checkpoint(&root)
+        .expect_err("corrupt blob must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("m.bin"), "error must name the corrupt file: {msg}");
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}
+
 #[test]
 fn seed_determinism_across_trainers() -> Result<()> {
     if !have("nano") {

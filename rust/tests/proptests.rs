@@ -645,6 +645,143 @@ fn prop_engine_rules_match_scalar_oracle_across_ragged_shards_and_workers() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fault-tolerant data-parallel coordinator (rust/src/coordinator/dp.rs)
+// ---------------------------------------------------------------------
+
+/// Final arena state + per-step clip counts + per-step loss bits of one
+/// synthetic DP run — the full bit-exactness oracle tuple.
+fn run_dp(
+    cfg: sophia::coordinator::DpConfig,
+    lens: &[usize],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<usize>, Vec<u64>) {
+    use sophia::optim::engine::StateKind;
+    let mut dp = sophia::coordinator::DpCoordinator::synthetic(cfg, lens, 11).unwrap();
+    let out = dp.train().unwrap();
+    assert!(!out.diverged);
+    (
+        dp.flat().buf(StateKind::P).to_vec(),
+        dp.flat().buf(StateKind::M).to_vec(),
+        dp.flat().buf(StateKind::H).to_vec(),
+        dp.clip_counts().to_vec(),
+        dp.records.iter().map(|r| r.loss.to_bits()).collect(),
+    )
+}
+
+fn assert_bits_eq(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag} len");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{tag}[{i}]");
+    }
+}
+
+#[test]
+fn prop_dp_all_reduce_bit_identical_across_worker_counts() {
+    // At a fixed shard count the fixed-order all-reduce makes the entire
+    // run — params, momentum, Hessian EMA, per-step clip counts AND
+    // per-step losses — bit-identical for 1, 2 and 4 workers. The
+    // 1-worker run is the serial oracle.
+    use sophia::coordinator::DpConfig;
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed ^ 0xD9A1);
+        let lens = [
+            1 + rng.below(50) as usize,
+            100 + rng.below(400) as usize,
+            1 + rng.below(90) as usize,
+        ];
+        let mk = |workers: usize| DpConfig {
+            workers,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            seed,
+            straggler_timeout_ms: 10_000,
+            ..DpConfig::default()
+        };
+        let (p1, m1, h1, c1, l1) = run_dp(mk(1), &lens);
+        for workers in [2usize, 4] {
+            let (p, m, h, c, l) = run_dp(mk(workers), &lens);
+            let tag = format!("seed {seed} workers {workers}");
+            assert_bits_eq(&format!("{tag} p"), &p1, &p);
+            assert_bits_eq(&format!("{tag} m"), &m1, &m);
+            assert_bits_eq(&format!("{tag} h"), &h1, &h);
+            assert_eq!(c1, c, "{tag} clip counts");
+            assert_eq!(l1, l, "{tag} per-step losses");
+        }
+    }
+}
+
+#[test]
+fn prop_dp_fault_recovery_bit_identical() {
+    // Randomized fault plans — a worker killed at a random step (with a
+    // random checkpoint cadence, sometimes behind a torn epoch), or a
+    // straggler delayed past the deadline — must leave the final state
+    // bit-identical to the uninterrupted run at the same shard count.
+    use sophia::coordinator::{DpConfig, FaultPlan};
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0xFA_17);
+        let lens = [1 + rng.below(40) as usize, 80 + rng.below(300) as usize];
+        let steps = 6 + rng.below(3) as usize;
+        let ckpt_every = 1 + rng.below(2) as usize;
+        let root = std::env::temp_dir().join(format!(
+            "sophia_prop_dp_{}_{seed}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let mk = |fault: FaultPlan, ckpt: bool, timeout: u64| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps,
+            hess_interval: 2,
+            seed,
+            ckpt_dir: if ckpt { Some(root.clone()) } else { None },
+            ckpt_every,
+            straggler_timeout_ms: timeout,
+            fault,
+            ..DpConfig::default()
+        };
+        let (p0, m0, h0, c0, l0) = run_dp(mk(FaultPlan::default(), false, 10_000), &lens);
+
+        let victim = rng.below(2) as usize;
+        let (fault, ckpt, timeout, tag) = if seed % 2 == 0 {
+            // crash path: kill one worker at a random mid-run step; half
+            // the time also tear the newest epoch it would recover from
+            let kill_step = 2 + rng.below(steps as u64 - 1) as usize;
+            let last_epoch = ((kill_step - 1) / ckpt_every) * ckpt_every;
+            let mut spec = format!("kill:{victim}@{kill_step}");
+            if last_epoch >= 1 && rng.below(2) == 0 {
+                spec = format!("tear:{last_epoch},{spec}");
+            }
+            (FaultPlan::parse(&spec).unwrap(), true, 300, format!("seed {seed} {spec}"))
+        } else {
+            // straggler path: delay one worker far past the deadline
+            let slow_step = 2 + rng.below(steps as u64 - 1) as usize;
+            let spec = format!("delay:{victim}@{slow_step}:600");
+            (FaultPlan::parse(&spec).unwrap(), false, 120, format!("seed {seed} {spec}"))
+        };
+        let is_kill = !fault.kills.is_empty();
+        let mut dp =
+            sophia::coordinator::DpCoordinator::synthetic(mk(fault, ckpt, timeout), &lens, 11)
+                .unwrap();
+        let out = dp.train().unwrap();
+        assert!(!out.diverged, "{tag}");
+        if is_kill {
+            assert!(out.counters.recoveries >= 1, "{tag}: kill must trigger recovery");
+        } else {
+            assert_eq!(out.counters.workers_dropped, 1, "{tag}: delay must drop the straggler");
+            assert_eq!(out.counters.recoveries, 0, "{tag}: straggler handling is in-step");
+        }
+        use sophia::optim::engine::StateKind;
+        assert_bits_eq(&format!("{tag} p"), &p0, dp.flat().buf(StateKind::P));
+        assert_bits_eq(&format!("{tag} m"), &m0, dp.flat().buf(StateKind::M));
+        assert_bits_eq(&format!("{tag} h"), &h0, dp.flat().buf(StateKind::H));
+        assert_eq!(c0, dp.clip_counts(), "{tag} clip counts");
+        let l: Vec<u64> = dp.records.iter().map(|r| r.loss.to_bits()).collect();
+        assert_eq!(l0, l, "{tag} per-step losses");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
 #[test]
 fn prop_adamw_step_norm_bounded_by_lr_over_eps_regime() {
     // AdamW's per-coordinate update magnitude is ~lr after bias
