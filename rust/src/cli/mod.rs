@@ -1,12 +1,14 @@
 //! Hand-rolled CLI (no clap in the offline vendor set).
 //!
 //! Subcommands:
-//!   train   -- run a training job (the launcher)
-//!   eval    -- few-shot evaluation of a checkpoint (Figure 6)
-//!   toy     -- the Figure 2 toy-landscape trajectories
-//!   hist    -- diagonal-Hessian histogram of a checkpoint (Figure 3)
-//!   sweep   -- LR escalation / grid sweeps (Figures 7b, 12)
-//!   info    -- print a preset's manifest summary
+//!   train     -- run a training job (the launcher)
+//!   dp-serve  -- TCP data-parallel coordinator (listens for dp-worker)
+//!   dp-worker -- TCP data-parallel worker (connects to dp-serve)
+//!   eval      -- few-shot evaluation of a checkpoint (Figure 6)
+//!   toy       -- the Figure 2 toy-landscape trajectories
+//!   hist      -- diagonal-Hessian histogram of a checkpoint (Figure 3)
+//!   sweep     -- LR escalation / grid sweeps (Figures 7b, 12)
+//!   info      -- print a preset's manifest summary
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -98,7 +100,9 @@ USAGE: sophia <subcommand> [--flags]
           SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>, default
           pool:<ncpu>.)
          [--workers N] [--shards S] [--straggler-ms T] [--fault-plan SPEC]
-         (--workers > 1 = fault-tolerant data-parallel training: a
+         [--synthetic] [--params P]
+         (--workers > 1 — or --synthetic at any worker count — runs
+          fault-tolerant data-parallel training: a
           coordinator drives N in-process workers over S fixed data shards
           (default one per worker) with a deterministic fixed-order
           all-reduce — bit-identical results for any worker count at a
@@ -106,7 +110,36 @@ USAGE: sophia <subcommand> [--flags]
           dropped and their shards rebalanced; crashed workers trigger
           recovery from the newest intact checkpoint epoch under
           --ckpt-dir. --fault-plan / SOPHIA_FAULT inject deterministic
-          faults: kill:w@step, delay:w@step:ms, tear:step.)
+          faults: kill:w@step, delay:w@step:ms, tear:step, and the network
+          verbs drop:w@step (sever a TCP connection), stall:w@step:ms
+          (freeze a socket mid-step), garble:w@step (send one corrupt
+          frame), join:w@step (defer a worker to a mid-run step boundary).
+          --synthetic swaps the XLA artifacts for the closed-form quadratic
+          gradient source with --params parameters — artifact-free, and
+          byte-comparable with a dp-serve run at the same flags.)
+  dp-serve  --preset b1 --steps 1000 --workers N [--listen 127.0.0.1:0]
+         [--shards S] [--straggler-ms T] [--io-timeout-ms 10000]
+         [--port-file path] [--synthetic] [--params P] [--ckpt-dir D]
+         (TCP coordinator: binds --listen (port 0 = OS-assigned; the bound
+          address is printed and, with --port-file, written to a file),
+          waits for --workers dp-worker processes, then runs the same
+          deterministic fixed-shard-order training loop as --workers N —
+          final checkpoints are bit-identical to the in-process tier at the
+          same shard count. Workers may drop, reconnect (generation-fenced,
+          state re-delivered over the wire — no shared filesystem), or join
+          mid-run at a step boundary. --synthetic runs the closed-form
+          quadratic gradient source with --params parameters instead of
+          XLA artifacts. Prints a machine-readable health-counter JSON
+          banner at end of run.)
+  dp-worker --connect host:port [--worker-id W] [--synthetic] [--params P]
+         [--preset b1] [--io-timeout-ms 10000] [--backoff-base-ms 50]
+         [--backoff-cap-ms 2000] [--max-reconnects 40] [--fault-plan SPEC]
+         [--seed 0] [--data-seed 1]
+         (TCP worker: connects to a dp-serve coordinator with capped
+          exponential backoff + deterministic jitter, handshakes for a slot
+          (--worker-id claims a specific one), receives optimizer state
+          over the protocol, and serves gradient shards until Stop.
+          --fault-plan network verbs are executed worker-side.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]
@@ -159,6 +192,10 @@ pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if let Some(p) = args.flags.get("fault-plan") {
         cfg.fault_plan = Some(p.clone());
     }
+    if let Some(l) = args.flags.get("listen") {
+        cfg.dp_listen = Some(l.clone());
+    }
+    cfg.dp_io_timeout_ms = args.u64_or("io-timeout-ms", cfg.dp_io_timeout_ms)?;
     if cfg.steps == 0 {
         bail!("--steps must be > 0");
     }
@@ -231,6 +268,22 @@ mod tests {
         assert!(d.fault_plan.is_none());
         let z = Args::parse(&argv("train --preset nano --workers 0")).unwrap();
         assert!(build_train_config(&z).is_err());
+    }
+
+    #[test]
+    fn tcp_flags_wire_into_train_config() {
+        let a = Args::parse(&argv(
+            "dp-serve --preset nano --workers 2 --listen 127.0.0.1:0 \
+             --io-timeout-ms 750 --fault-plan drop:1@4,garble:0@2",
+        ))
+        .unwrap();
+        let c = build_train_config(&a).unwrap();
+        assert_eq!(c.dp_listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.dp_io_timeout_ms, 750);
+        assert_eq!(c.fault_plan.as_deref(), Some("drop:1@4,garble:0@2"));
+        let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
+        assert!(d.dp_listen.is_none());
+        assert_eq!(d.dp_io_timeout_ms, 10_000);
     }
 
     #[test]

@@ -601,8 +601,15 @@ pub struct TrainConfig {
     /// with its shards rebalanced onto the survivors.
     pub straggler_timeout_ms: u64,
     /// Deterministic fault-injection plan ("kill:w@step", "delay:w@step:ms",
-    /// "tear:step", comma-separated); merged with env `SOPHIA_FAULT`.
+    /// "tear:step", plus the network verbs "drop:w@step", "stall:w@step:ms",
+    /// "garble:w@step", "join:w@step", comma-separated); merged with env
+    /// `SOPHIA_FAULT`.
     pub fault_plan: Option<String>,
+    /// TCP tier: listen address for `sophia dp-serve` (e.g.
+    /// "127.0.0.1:7700"). None = in-process channel tier.
+    pub dp_listen: Option<String>,
+    /// TCP tier: per-connection socket read/write timeout (ms).
+    pub dp_io_timeout_ms: u64,
 }
 
 impl Default for TrainConfig {
@@ -630,6 +637,8 @@ impl Default for TrainConfig {
             dp_shards: 0,
             straggler_timeout_ms: 2000,
             fault_plan: None,
+            dp_listen: None,
+            dp_io_timeout_ms: 10_000,
         }
     }
 }
@@ -710,6 +719,12 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("dp", "fault_plan").and_then(|v| v.as_str()) {
             self.fault_plan = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("dp", "listen").and_then(|v| v.as_str()) {
+            self.dp_listen = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("dp", "io_timeout_ms").and_then(|v| v.as_i64()) {
+            self.dp_io_timeout_ms = v as u64;
         }
         Ok(())
     }
@@ -830,7 +845,8 @@ mod tests {
     fn toml_dp_section_wires_fault_tolerance_knobs() {
         let doc = toml::Toml::parse(
             "[dp]\nworkers = 4\nshards = 8\nstraggler_timeout_ms = 250\n\
-             fault_plan = \"kill:1@5,tear:4\"\n",
+             fault_plan = \"kill:1@5,tear:4\"\n\
+             listen = \"127.0.0.1:7700\"\nio_timeout_ms = 1500\n",
         )
         .unwrap();
         let mut c = TrainConfig::default();
@@ -839,9 +855,13 @@ mod tests {
         assert_eq!(c.dp_shards, 8);
         assert_eq!(c.straggler_timeout_ms, 250);
         assert_eq!(c.fault_plan.as_deref(), Some("kill:1@5,tear:4"));
-        // defaults stay single-process with no plan
+        assert_eq!(c.dp_listen.as_deref(), Some("127.0.0.1:7700"));
+        assert_eq!(c.dp_io_timeout_ms, 1500);
+        // defaults stay single-process with no plan, channel tier
         let d = TrainConfig::default();
         assert_eq!((d.workers, d.dp_shards), (1, 0));
         assert!(d.fault_plan.is_none());
+        assert!(d.dp_listen.is_none());
+        assert_eq!(d.dp_io_timeout_ms, 10_000);
     }
 }

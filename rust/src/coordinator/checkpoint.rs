@@ -110,12 +110,16 @@ pub fn save_state_atomic(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &
 
 fn read_blob(dir: &Path, name: &str, n_params: usize, sums: &Json) -> Result<Vec<f32>> {
     let path = dir.join(name);
+    // n_params comes from untrusted meta.json: checked arithmetic, and the
+    // actual file length is the allocation bound, never the declared count
+    let expect = n_params
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("meta.json in {dir:?}: absurd n_params {n_params} (overflows)"))?;
     let bytes = std::fs::read(&path).with_context(|| format!("reading checkpoint blob {path:?}"))?;
-    if bytes.len() != n_params * 4 {
+    if bytes.len() != expect {
         bail!(
-            "checkpoint blob {path:?} is truncated: {} bytes on disk, expected {} ({n_params} f32s)",
+            "checkpoint blob {path:?} is truncated: {} bytes on disk, expected {expect} ({n_params} f32s)",
             bytes.len(),
-            n_params * 4
         );
     }
     let want = sums
@@ -320,6 +324,39 @@ mod tests {
         std::fs::write(&meta_path, Json::Obj(obj).to_string()).unwrap();
         let err = format!("{:#}", load_state(&dir).unwrap_err());
         assert!(err.contains("checksums"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn adversarial_meta_json_never_panics_or_overallocates() {
+        let dir = tdir("adversarial_meta");
+        let (p, m, h) = blobs(8);
+        save_state(&dir, &meta(8), &p, &m, &h).unwrap();
+        let meta_path = dir.join("meta.json");
+        // every case must produce an error naming meta.json (or a blob),
+        // never panic — and the huge-n_params cases must be rejected before
+        // any blob-sized allocation happens
+        let cases = [
+            "",
+            "not json at all",
+            "{\"step\": 7}",
+            "{\"n_params\": -3, \"checksums\": {}}",
+            "{\"n_params\": 1e30, \"checksums\": {}}",
+            "{\"n_params\": 4611686018427387904, \"checksums\": {}}",
+            "{\"n_params\": 8, \"checksums\": \"nope\"}",
+            "{\"n_params\": 8, \"checksums\": {\"params.bin\": \"zzzz\"}}",
+            "[1,2,3]",
+            "{\"n_params\": 8, \"step\": \"x\", \"checksums\": {}}",
+        ];
+        for c in cases {
+            std::fs::write(&meta_path, c).unwrap();
+            let err = format!("{:#}", load_state(&dir).unwrap_err());
+            assert!(!err.is_empty(), "case {c:?}");
+            assert!(
+                err.contains("meta.json") || err.contains(".bin"),
+                "error should name the offending input for {c:?}: {err}"
+            );
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -29,7 +29,15 @@
 //! `SOPHIA_FAULT` env var: `kill:w@step` (worker thread exits silently),
 //! `delay:w@step:ms` (worker stalls past the straggler deadline),
 //! `tear:step` (the epoch checkpoint written at `step` is truncated
-//! mid-blob, as a crash during the write would).
+//! mid-blob, as a crash during the write would), plus the network verbs
+//! (`drop:w@step`, `stall:w@step:ms`, `garble:w@step`) honored by the TCP
+//! worker client in [`super::net`] and `join:w@step` (a worker enters the
+//! run at a step boundary instead of at startup).
+//!
+//! The coordinator itself is transport-agnostic: it drives its fleet
+//! through the [`Transport`] trait, implemented by the in-process
+//! [`ChannelTransport`] here and by [`super::net::TcpTransport`] for the
+//! process-isolated socket tier — one state machine, two wires.
 
 use super::checkpoint::{self, CkptMeta};
 use crate::config::{ModelConfig, Optimizer, OutRole, TrainConfig};
@@ -69,6 +77,25 @@ pub struct FaultPlan {
     /// Steps whose epoch checkpoint is truncated right after the write —
     /// a simulated crash mid-checkpoint.
     pub tears: Vec<usize>,
+    /// (worker, step): the worker severs its connection when it receives
+    /// the step command, then reconnects with capped backoff. Socket tier
+    /// only (the in-process tier has no wire to sever); fires once per
+    /// client process so a replayed step cannot re-trigger it forever.
+    pub drops: Vec<(usize, usize)>,
+    /// (worker, step, ms): the worker freezes with its socket left open —
+    /// the network-visible straggler (connection intact, no frames). The
+    /// in-process tier treats it exactly like `delay`.
+    pub stalls: Vec<(usize, usize, u64)>,
+    /// (worker, step): the worker sends one deliberately corrupt frame
+    /// (payload checksum mismatch) in place of its first shard result.
+    /// Socket tier only; the coordinator must reject the frame, count it,
+    /// and sever the connection. Fires once per client process.
+    pub garbles: Vec<(usize, usize)>,
+    /// (worker, step): coordinator-side — worker `w` is expected to enter
+    /// the run at the boundary before `step` rather than at startup; the
+    /// coordinator holds that boundary (up to the join timeout) until the
+    /// worker arrives, then rebalances shards onto it.
+    pub joins: Vec<(usize, usize)>,
 }
 
 impl FaultPlan {
@@ -104,7 +131,24 @@ impl FaultPlan {
                 "tear" => plan
                     .tears
                     .push(rest.parse().with_context(|| format!("fault {item:?}: step"))?),
-                other => bail!("unknown fault kind {other:?} in {item:?} (kill|delay|tear)"),
+                "drop" => plan.drops.push(at(rest)?),
+                "stall" => {
+                    let (coord, ms) = rest
+                        .rsplit_once(':')
+                        .ok_or_else(|| anyhow!("fault {item:?}: expected stall:w@step:ms"))?;
+                    let (w, k) = at(coord)?;
+                    plan.stalls.push((
+                        w,
+                        k,
+                        ms.parse().with_context(|| format!("fault {item:?}: ms"))?,
+                    ));
+                }
+                "garble" => plan.garbles.push(at(rest)?),
+                "join" => plan.joins.push(at(rest)?),
+                other => bail!(
+                    "unknown fault kind {other:?} in {item:?} \
+                     (kill|delay|tear|drop|stall|garble|join)"
+                ),
             }
         }
         Ok(plan)
@@ -121,19 +165,31 @@ impl FaultPlan {
             plan.kills.extend(extra.kills);
             plan.delays.extend(extra.delays);
             plan.tears.extend(extra.tears);
+            plan.drops.extend(extra.drops);
+            plan.stalls.extend(extra.stalls);
+            plan.garbles.extend(extra.garbles);
+            plan.joins.extend(extra.joins);
         }
         Ok(plan)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.kills.is_empty() && self.delays.is_empty() && self.tears.is_empty()
+        self.kills.is_empty()
+            && self.delays.is_empty()
+            && self.tears.is_empty()
+            && self.drops.is_empty()
+            && self.stalls.is_empty()
+            && self.garbles.is_empty()
+            && self.joins.is_empty()
     }
 
-    fn kill_at(&self, worker: usize, step: usize) -> bool {
+    /// Pub so the TCP client ([`super::net::run_worker`]) executes the
+    /// same verb worker-side that the channel tier executes in-thread.
+    pub fn kill_at(&self, worker: usize, step: usize) -> bool {
         self.kills.iter().any(|&(w, k)| w == worker && k == step)
     }
 
-    fn delay_ms(&self, worker: usize, step: usize) -> Option<u64> {
+    pub fn delay_ms(&self, worker: usize, step: usize) -> Option<u64> {
         self.delays
             .iter()
             .find(|&&(w, k, _)| w == worker && k == step)
@@ -142,6 +198,33 @@ impl FaultPlan {
 
     fn tear_at(&self, step: usize) -> bool {
         self.tears.contains(&step)
+    }
+
+    /// Worker-side network verb: sever the connection at this step.
+    pub fn drop_at(&self, worker: usize, step: usize) -> bool {
+        self.drops.iter().any(|&(w, k)| w == worker && k == step)
+    }
+
+    /// Worker-side network verb: freeze (socket open) for `ms` at this step.
+    pub fn stall_ms(&self, worker: usize, step: usize) -> Option<u64> {
+        self.stalls
+            .iter()
+            .find(|&&(w, k, _)| w == worker && k == step)
+            .map(|&(_, _, ms)| ms)
+    }
+
+    /// Worker-side network verb: corrupt one frame at this step.
+    pub fn garble_at(&self, worker: usize, step: usize) -> bool {
+        self.garbles.iter().any(|&(w, k)| w == worker && k == step)
+    }
+
+    /// Coordinator-side: the boundary step at which `worker` is planned to
+    /// join, if its startup is deferred at all.
+    pub fn join_step(&self, worker: usize) -> Option<usize> {
+        self.joins
+            .iter()
+            .find(|&&(w, _)| w == worker)
+            .map(|&(_, k)| k)
     }
 }
 
@@ -196,11 +279,20 @@ impl Lifecycle {
 pub enum WorkerHealth {
     /// Spawned, ready message not yet seen.
     Joining,
+    /// Greeted (Welcome sent) but not yet a member: join-planned workers
+    /// before their boundary, and reconnected workers mid-step. Activated
+    /// to `Alive` only at a step boundary, so membership never changes
+    /// mid-gather.
+    Standby,
     /// Healthy member of the run.
     Alive,
-    /// Permanently dropped as a straggler; shards rebalanced away.
+    /// Dropped as a straggler; shards rebalanced away. On transports
+    /// without rejoin (the channel tier) a later reconnect attempt is
+    /// refused; on the TCP tier the worker may reconnect and is
+    /// re-admitted at the next step boundary.
     Dropped,
-    /// Thread exited (crash); triggers checkpoint recovery.
+    /// Thread/connection gone (crash); triggers checkpoint recovery. On a
+    /// transport that supports rejoin, a Dead worker may come back.
     Dead,
 }
 
@@ -212,6 +304,24 @@ pub enum WorkerHealth {
 pub struct GradOut {
     pub loss: f64,
     pub gnorm: f64,
+}
+
+/// Full optimizer-state snapshot carried by a `Welcome` — checkpoint
+/// distribution over the protocol, so a (re)joining worker needs no shared
+/// filesystem to enter a run. On the wire ([`super::net`]) each blob
+/// travels with the same FNV-1a checksum `checkpoint::save_state` records
+/// in `meta.json`, making wire delivery and filesystem restore mutually
+/// verifiable bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateSync {
+    /// The committed step this state corresponds to (the join boundary).
+    pub step: usize,
+    /// Run fingerprint (mirrors `CkptMeta::preset`).
+    pub run_tag: String,
+    pub optimizer: String,
+    pub p: Vec<f32>,
+    pub m: Vec<f32>,
+    pub h: Vec<f32>,
 }
 
 /// A worker's gradient provider. The contract that makes every recovery
@@ -228,6 +338,15 @@ pub trait GradSource {
     /// Compute the rule's raw curvature estimate with an explicit seed.
     /// Only called on rules with an estimator.
     fn estimator(&mut self, step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()>;
+
+    /// Receive the protocol-delivered state snapshot carried by a
+    /// `Welcome`. Sources that keep no cross-step state ignore it (the
+    /// default): every `grad` call already receives `params`. The hook
+    /// exists for sources that cache device state — and for tests
+    /// asserting that wire-delivered state matches a filesystem restore.
+    fn restore(&mut self, _sync: &StateSync) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Builds one [`GradSource`] per worker, *on the worker's own thread* (XLA
@@ -388,12 +507,23 @@ impl GradSource for SessionGrad {
 // ---------------------------------------------------------------------------
 // Worker protocol
 
-struct Job {
-    shard: usize,
-    buf: Vec<f32>,
+/// One shard assignment plus a recycled gradient buffer (the buffer is an
+/// in-process optimization; on the wire only the shard id travels).
+pub struct Job {
+    pub shard: usize,
+    pub buf: Vec<f32>,
 }
 
-enum ToWorker {
+/// Coordinator → worker commands. `super::net` defines the wire encoding;
+/// the in-process tier sends them over an mpsc channel as-is.
+pub enum ToWorker {
+    /// Handshake step 2: admission into the run at `step`, with the
+    /// current state snapshot and generation.
+    Welcome {
+        gen: u64,
+        step: usize,
+        sync: Arc<StateSync>,
+    },
     Step {
         gen: u64,
         step: usize,
@@ -403,7 +533,8 @@ enum ToWorker {
     Stop,
 }
 
-enum FromWorker {
+/// Worker → coordinator messages.
+pub enum FromWorker {
     Ready {
         worker: usize,
     },
@@ -439,6 +570,12 @@ fn worker_main(
     let _ = tx.send(FromWorker::Ready { worker: id });
     while let Ok(cmd) = rx.recv() {
         match cmd {
+            ToWorker::Welcome { sync, .. } => {
+                if let Err(e) = src.restore(&sync) {
+                    let _ = tx.send(FromWorker::Fatal { worker: id, msg: format!("{e:#}") });
+                    return;
+                }
+            }
             ToWorker::Step { gen, step, params, jobs } => {
                 if fault.kill_at(id, step) {
                     // simulated crash: vanish without a goodbye — the
@@ -446,7 +583,10 @@ fn worker_main(
                     // deadline + thread-exit check, like a real panic
                     return;
                 }
-                if let Some(ms) = fault.delay_ms(id, step) {
+                // in-process there is no socket to stall, so `stall`
+                // degrades to `delay` (same observable: silence past the
+                // straggler deadline with the thread still running)
+                if let Some(ms) = fault.delay_ms(id, step).or(fault.stall_ms(id, step)) {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
                 for Job { shard, mut buf } in jobs {
@@ -482,6 +622,193 @@ fn worker_main(
 }
 
 // ---------------------------------------------------------------------------
+// Transport abstraction
+
+/// Wire-level statistics a transport accumulates (all zero in-process).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    pub bytes_sent: usize,
+    pub bytes_received: usize,
+    /// Frames rejected by the framing layer (bad magic/version/length/
+    /// checksum) before they could become protocol messages.
+    pub frames_rejected: usize,
+}
+
+/// What the coordinator hears from its transport.
+pub enum Event {
+    /// A protocol message from an admitted worker.
+    Msg(FromWorker),
+    /// A worker finished the transport-level handshake (thread spawned
+    /// and ready in-process; `Hello` frame accepted over TCP) and awaits
+    /// a `Welcome`. `retries` is how many connect attempts it reported
+    /// burning in backoff before this one succeeded.
+    Joined { worker: usize, retries: usize },
+    /// The thread/connection backing `worker` is gone.
+    Closed { worker: usize },
+}
+
+/// The coordinator's view of its worker fleet. Exactly one state machine
+/// ([`DpCoordinator`]) drives both implementations — the in-process
+/// [`ChannelTransport`] and the socket-tier [`super::net::TcpTransport`];
+/// this trait is the seam between them.
+pub trait Transport {
+    /// Deliver `msg` to worker `w`; on failure the message comes back so
+    /// the caller can recycle its buffers.
+    fn send(&mut self, w: usize, msg: ToWorker) -> std::result::Result<(), ToWorker>;
+
+    /// Next event, waiting at most `timeout`.
+    fn recv_timeout(&mut self, timeout: Duration)
+        -> std::result::Result<Event, RecvTimeoutError>;
+
+    /// Whether the thread/connection behind `w` has terminated — the
+    /// straggler-vs-crash classifier (a stalled worker is slow but its
+    /// backing is intact; a crashed one is gone).
+    fn is_finished(&self, w: usize) -> bool;
+
+    /// Number of worker slots currently tracked (grows on mid-run join).
+    fn n_slots(&self) -> usize;
+
+    /// Grow the slot table to hold worker `w`.
+    fn ensure_slot(&mut self, w: usize);
+
+    /// Bring up worker `w`'s backing: spawns the thread in-process; no-op
+    /// over TCP, where clients connect on their own schedule.
+    fn activate(&mut self, w: usize) -> Result<()>;
+
+    /// Sever worker `w` (drop its channel / shut down its socket).
+    fn disconnect(&mut self, w: usize);
+
+    /// Whether a severed worker can come back (TCP reconnect). The
+    /// in-process tier answers no: a dead thread stays dead.
+    fn supports_rejoin(&self) -> bool;
+
+    fn stats(&self) -> NetStats;
+
+    /// Stop every worker and release transport resources.
+    fn shutdown(&mut self);
+}
+
+/// The in-process tier: one mpsc pair and one named thread per worker.
+pub struct ChannelTransport {
+    factory: SourceFactory,
+    fault: FaultPlan,
+    slots: Vec<ChannelSlot>,
+    rx: Receiver<FromWorker>,
+    /// Keeps the result channel open even if every worker is gone, so
+    /// recv can never see Disconnected ahead of the health logic.
+    tx: Sender<FromWorker>,
+}
+
+struct ChannelSlot {
+    tx: Option<Sender<ToWorker>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn every worker whose entry is not deferred by a `join:w@step`
+    /// plan entry; deferred workers get an empty slot until
+    /// [`Transport::activate`] fires at their boundary.
+    pub fn new(workers: usize, factory: SourceFactory, fault: FaultPlan) -> Self {
+        let (tx, rx) = channel();
+        let mut t = ChannelTransport { factory, fault, slots: Vec::new(), rx, tx };
+        for id in 0..workers {
+            t.slots.push(ChannelSlot { tx: None, handle: None });
+            if t.fault.join_step(id).is_none() {
+                t.spawn(id);
+            }
+        }
+        t
+    }
+
+    fn spawn(&mut self, id: usize) {
+        let (wtx, wrx) = channel();
+        let f = self.factory.clone();
+        let fault = self.fault.clone();
+        let out = self.tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("dp-worker-{id}"))
+            .spawn(move || worker_main(id, f, fault, wrx, out))
+            .expect("spawn dp worker");
+        self.slots[id] = ChannelSlot { tx: Some(wtx), handle: Some(handle) };
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, w: usize, msg: ToWorker) -> std::result::Result<(), ToWorker> {
+        match self.slots[w].tx.as_ref() {
+            Some(tx) => tx.send(msg).map_err(|e| e.0),
+            None => Err(msg),
+        }
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> std::result::Result<Event, RecvTimeoutError> {
+        match self.rx.recv_timeout(timeout)? {
+            FromWorker::Ready { worker } => Ok(Event::Joined { worker, retries: 0 }),
+            msg => Ok(Event::Msg(msg)),
+        }
+    }
+
+    fn is_finished(&self, w: usize) -> bool {
+        self.slots[w]
+            .handle
+            .as_ref()
+            .map(|h| h.is_finished())
+            .unwrap_or(true)
+    }
+
+    fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn ensure_slot(&mut self, w: usize) {
+        while self.slots.len() <= w {
+            self.slots.push(ChannelSlot { tx: None, handle: None });
+        }
+    }
+
+    fn activate(&mut self, w: usize) -> Result<()> {
+        self.ensure_slot(w);
+        let running = self.slots[w]
+            .handle
+            .as_ref()
+            .map(|h| !h.is_finished())
+            .unwrap_or(false);
+        if !running {
+            self.spawn(w);
+        }
+        Ok(())
+    }
+
+    fn disconnect(&mut self, w: usize) {
+        self.slots[w].tx = None;
+    }
+
+    fn supports_rejoin(&self) -> bool {
+        false
+    }
+
+    fn stats(&self) -> NetStats {
+        NetStats::default()
+    }
+
+    fn shutdown(&mut self) {
+        for s in &mut self.slots {
+            if let Some(tx) = s.tx.take() {
+                let _ = tx.send(ToWorker::Stop);
+            }
+        }
+        for s in &mut self.slots {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Coordinator
 
 /// Everything the coordinator needs for one run. Built by [`build_dp`] from
@@ -510,6 +837,9 @@ pub struct DpConfig {
     pub ckpt_every: usize,
     pub straggler_timeout_ms: u64,
     pub join_timeout_ms: u64,
+    /// Per-connection socket read/write timeout for the TCP tier; the
+    /// in-process tier has no sockets and ignores it.
+    pub io_timeout_ms: u64,
     /// Recovery attempts before the run gives up (guards against a fault
     /// environment where every replay crashes again).
     pub max_recoveries: usize,
@@ -537,6 +867,7 @@ impl Default for DpConfig {
             ckpt_every: 0,
             straggler_timeout_ms: 2000,
             join_timeout_ms: 10_000,
+            io_timeout_ms: 10_000,
             max_recoveries: 8,
             run_tag: "dp".to_string(),
             fault: FaultPlan::default(),
@@ -563,12 +894,6 @@ pub struct DpOutcome {
     pub diverged: bool,
     pub counters: HealthCounters,
     pub phase_history: Vec<(usize, RunPhase)>,
-}
-
-struct WorkerSlot {
-    tx: Option<Sender<ToWorker>>,
-    handle: Option<JoinHandle<()>>,
-    state: WorkerHealth,
 }
 
 enum StepError {
@@ -607,11 +932,16 @@ pub struct DpCoordinator {
     ghat: Vec<f32>,
     est_src: Option<Box<dyn GradSource>>,
     schedule: Schedule,
-    workers: Vec<WorkerSlot>,
-    rx: Receiver<FromWorker>,
-    /// Keeps the channel open even if every worker is gone, so recv can
-    /// never see Disconnected ahead of the health logic.
-    _tx: Sender<FromWorker>,
+    /// The worker fleet behind the transport seam — in-process channels
+    /// ([`ChannelTransport`]) or sockets ([`super::net::TcpTransport`]).
+    /// One state machine, two wires.
+    link: Box<dyn Transport>,
+    /// Coordinator-side health, indexed like the transport's slots (grows
+    /// on mid-run join).
+    health: Vec<WorkerHealth>,
+    /// Whether a slot has ever been promoted to `Alive` — splits the
+    /// `workers_joined` counter (first admission) from `reconnects`.
+    joined_once: Vec<bool>,
     /// Membership/recovery generation: bumped on every recovery so stale
     /// in-flight results from an aborted step can never be mistaken for
     /// replayed-step results.
@@ -627,11 +957,19 @@ pub struct DpCoordinator {
     stopped: bool,
 }
 
+/// The synthetic-harness data seed derived from a run seed — one shared
+/// convention so `dp-worker --synthetic` clients, `dp-serve --synthetic`
+/// oracles, and in-process tests generate identical shard gradients for
+/// the same `--seed`.
+pub fn synthetic_data_seed(seed: u64) -> u64 {
+    seed ^ 0xDA7A
+}
+
 impl DpCoordinator {
-    /// Build a coordinator over an explicit arena layout and initial
-    /// parameters. `factory` is invoked once per worker (ids 0..N-1, on
-    /// the worker's thread) and once for the coordinator's estimator
-    /// source (id N) when the rule has one.
+    /// Build an in-process coordinator over an explicit arena layout and
+    /// initial parameters. `factory` is invoked once per worker (ids
+    /// 0..N-1, on the worker's thread) and once for the coordinator's
+    /// estimator source (id N) when the rule has one.
     pub fn new(
         cfg: DpConfig,
         leaf_lens: &[usize],
@@ -641,6 +979,43 @@ impl DpCoordinator {
         if cfg.workers == 0 {
             bail!("data-parallel run needs at least one worker");
         }
+        let link = ChannelTransport::new(cfg.workers, factory.clone(), cfg.fault.clone());
+        Self::build(cfg, leaf_lens, init_p, factory, Box::new(link))
+    }
+
+    /// Socket-tier coordinator: bind `listen` and run the exact same state
+    /// machine over [`super::net::TcpTransport`]. Workers bring their own
+    /// gradient sources (`est_factory` only builds the coordinator's
+    /// estimator source). Returns the bound address so callers that listen
+    /// on port 0 know where workers should connect.
+    pub fn over_tcp(
+        cfg: DpConfig,
+        leaf_lens: &[usize],
+        init_p: Vec<f32>,
+        est_factory: SourceFactory,
+        listen: &str,
+    ) -> Result<(Self, std::net::SocketAddr)> {
+        if cfg.workers == 0 {
+            bail!("data-parallel run needs at least one worker");
+        }
+        let link = super::net::TcpTransport::bind(
+            listen,
+            cfg.workers,
+            Duration::from_millis(cfg.io_timeout_ms.max(1)),
+        )?;
+        let addr = link.local_addr();
+        let me = Self::build(cfg, leaf_lens, init_p, est_factory, Box::new(link))?;
+        Ok((me, addr))
+    }
+
+    /// Shared construction behind both tiers.
+    fn build(
+        cfg: DpConfig,
+        leaf_lens: &[usize],
+        init_p: Vec<f32>,
+        est_factory: SourceFactory,
+        link: Box<dyn Transport>,
+    ) -> Result<Self> {
         let rule = rules::rule_for(cfg.optimizer);
         if !rule.engine_resident() {
             bail!(
@@ -660,31 +1035,14 @@ impl DpCoordinator {
             cfg.hypers = rules::default_hypers(rule);
         }
         let est_src = if rule.estimator().artifact().is_some() {
-            Some(factory(cfg.workers)?)
+            Some(est_factory(cfg.workers)?)
         } else {
             None
         };
         let ghat = vec![0.0; if est_src.is_some() { n } else { 0 }];
         let schedule = Schedule::cosine(cfg.peak_lr, cfg.warmup.max(1), cfg.steps, cfg.final_lr_frac);
-        let (tx, rx) = channel();
-        let workers: Vec<WorkerSlot> = (0..cfg.workers)
-            .map(|id| {
-                let (wtx, wrx) = channel();
-                let f = factory.clone();
-                let fault = cfg.fault.clone();
-                let out = tx.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("dp-worker-{id}"))
-                    .spawn(move || worker_main(id, f, fault, wrx, out))
-                    .expect("spawn dp worker");
-                WorkerSlot {
-                    tx: Some(wtx),
-                    handle: Some(handle),
-                    state: WorkerHealth::Joining,
-                }
-            })
-            .collect();
         let n_shards = cfg.effective_shards();
+        let n_slots = link.n_slots().max(cfg.workers);
         Ok(DpCoordinator {
             cfg,
             rule,
@@ -695,9 +1053,9 @@ impl DpCoordinator {
             ghat,
             est_src,
             schedule,
-            workers,
-            rx,
-            _tx: tx,
+            link,
+            health: vec![WorkerHealth::Joining; n_slots],
+            joined_once: vec![false; n_slots],
             gen: 0,
             grads: (0..n_shards).map(|_| None).collect(),
             spare: Vec::new(),
@@ -718,10 +1076,28 @@ impl DpCoordinator {
         let n: usize = leaf_lens.iter().sum();
         let mut rng = Rng::new(init_seed).fold(0xD0);
         let init_p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
-        let data_seed = cfg.seed ^ 0xDA7A;
+        let data_seed = synthetic_data_seed(cfg.seed);
         let factory: SourceFactory =
             Arc::new(move |_id| Ok(Box::new(SyntheticGrad { data_seed }) as Box<dyn GradSource>));
         Self::new(cfg, leaf_lens, init_p, factory)
+    }
+
+    /// Artifact-free socket-tier coordinator — the localhost mirror of
+    /// [`DpCoordinator::synthetic`], sharing its init-parameter derivation
+    /// so both tiers start from bit-identical state.
+    pub fn synthetic_over_tcp(
+        cfg: DpConfig,
+        leaf_lens: &[usize],
+        init_seed: u64,
+        listen: &str,
+    ) -> Result<(Self, std::net::SocketAddr)> {
+        let n: usize = leaf_lens.iter().sum();
+        let mut rng = Rng::new(init_seed).fold(0xD0);
+        let init_p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+        let data_seed = synthetic_data_seed(cfg.seed);
+        let factory: SourceFactory =
+            Arc::new(move |_id| Ok(Box::new(SyntheticGrad { data_seed }) as Box<dyn GradSource>));
+        Self::over_tcp(cfg, leaf_lens, init_p, factory, listen)
     }
 
     pub fn flat(&self) -> &FlatState {
@@ -729,46 +1105,169 @@ impl DpCoordinator {
     }
 
     fn alive_ids(&self) -> Vec<usize> {
-        self.workers
+        self.health
             .iter()
             .enumerate()
-            .filter(|(_, w)| w.state == WorkerHealth::Alive)
+            .filter(|(_, &h)| h == WorkerHealth::Alive)
             .map(|(i, _)| i)
             .collect()
     }
 
-    /// Phase 1 of the lifecycle: collect ready messages until every worker
-    /// joined or the join deadline passes; non-joiners are dropped and
-    /// their shards simply never get assigned to them.
+    fn dead_count(&self) -> usize {
+        self.health.iter().filter(|&&h| h == WorkerHealth::Dead).count()
+    }
+
+    fn dropped_count(&self) -> usize {
+        self.health.iter().filter(|&&h| h == WorkerHealth::Dropped).count()
+    }
+
+    /// Current state snapshot for a `Welcome` — checkpoint distribution
+    /// over the protocol.
+    fn make_sync(&self) -> StateSync {
+        StateSync {
+            step: self.step,
+            run_tag: self.cfg.run_tag.clone(),
+            optimizer: self.cfg.optimizer.name().to_string(),
+            p: self.fs.buf(StateKind::P).to_vec(),
+            m: self.fs.buf(StateKind::M).to_vec(),
+            h: self.fs.buf(StateKind::H).to_vec(),
+        }
+    }
+
+    /// Handshake step 2: send `Welcome` (current gen + state) and park the
+    /// worker in `Standby`. Returns false if the worker was gone already.
+    fn send_welcome(&mut self, worker: usize) -> bool {
+        let msg = ToWorker::Welcome {
+            gen: self.gen,
+            step: self.step,
+            sync: Arc::new(self.make_sync()),
+        };
+        if self.link.send(worker, msg).is_ok() {
+            self.health[worker] = WorkerHealth::Standby;
+            true
+        } else {
+            self.link.disconnect(worker);
+            false
+        }
+    }
+
+    /// React to a transport `Joined` event: grow the slot tables for a
+    /// never-seen worker id, refuse ids the run has written off (on
+    /// transports where gone means gone), greet everyone else.
+    fn greet_joiner(&mut self, worker: usize, retries: usize) {
+        while self.health.len() <= worker {
+            self.health.push(WorkerHealth::Joining);
+            self.joined_once.push(false);
+        }
+        match self.health[worker] {
+            // duplicate join event for a current member: stale, ignore
+            WorkerHealth::Alive | WorkerHealth::Standby => return,
+            WorkerHealth::Dead | WorkerHealth::Dropped if !self.link.supports_rejoin() => {
+                let _ = self.link.send(worker, ToWorker::Stop);
+                return;
+            }
+            _ => {}
+        }
+        if self.send_welcome(worker) {
+            self.counters.backoff_retries += retries;
+            if self.joined_once[worker] {
+                self.counters.reconnects += 1;
+            }
+        }
+    }
+
+    /// Membership changes only at step boundaries: move a greeted worker
+    /// into the alive set ahead of boundary `t`.
+    fn promote(&mut self, worker: usize, t: usize) {
+        self.health[worker] = WorkerHealth::Alive;
+        if !self.joined_once[worker] {
+            self.joined_once[worker] = true;
+            self.counters.workers_joined += 1;
+            eprintln!("dp: worker {worker} joined at step boundary {t}");
+        } else {
+            eprintln!("dp: worker {worker} rejoined at step boundary {t}");
+        }
+    }
+
+    /// Whether a `Standby` worker may be promoted at boundary `t` — a
+    /// first-time joiner with a `join:w@step` plan entry is held until its
+    /// planned boundary; everyone else is eligible immediately.
+    fn promotable(&self, worker: usize, t: usize) -> bool {
+        self.joined_once[worker]
+            || self.cfg.fault.join_step(worker).map(|js| js <= t).unwrap_or(true)
+    }
+
+    /// The connection/thread behind `worker` is gone.
+    fn on_closed(&mut self, worker: usize) {
+        if worker >= self.health.len() {
+            return;
+        }
+        match self.health[worker] {
+            WorkerHealth::Alive => self.mark_crashed(worker),
+            WorkerHealth::Standby | WorkerHealth::Joining => {
+                self.link.disconnect(worker);
+                self.health[worker] = WorkerHealth::Joining;
+            }
+            _ => {}
+        }
+    }
+
+    /// Phase 1 of the lifecycle: greet joiners until every non-deferred
+    /// worker is standing by or the join deadline passes; non-joiners are
+    /// dropped and their shards simply never get assigned to them.
+    /// (Promotion to `Alive` happens at the first step boundary, in
+    /// [`Self::admit_standby`] — membership changes only at boundaries.)
     fn wait_for_members(&mut self) -> Result<()> {
         self.lifecycle.set(0, RunPhase::WaitingForMembers);
+        let deferred = (0..self.cfg.workers)
+            .filter(|&w| self.cfg.fault.join_step(w).is_some())
+            .count();
+        let expected = self.cfg.workers - deferred;
+        if expected == 0 {
+            bail!("dp: every worker is join-deferred; none can start the run");
+        }
         let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms.max(1));
         let mut first_fatal: Option<String> = None;
-        let mut joined = 0usize;
-        while joined + self.dead_count() < self.cfg.workers {
+        loop {
+            // join-deferred workers may connect early (TCP) and stand by,
+            // but they don't count toward the start quorum — otherwise a
+            // race could start the run before a regular worker connects
+            // and write the laggard off
+            let standing = (0..self.health.len())
+                .filter(|&w| {
+                    self.health[w] == WorkerHealth::Standby
+                        && self.cfg.fault.join_step(w).is_none()
+                })
+                .count();
+            if standing + self.dead_count() >= expected {
+                break;
+            }
             let left = deadline.saturating_duration_since(Instant::now());
-            match self.rx.recv_timeout(left) {
-                Ok(FromWorker::Ready { worker }) => {
-                    self.workers[worker].state = WorkerHealth::Alive;
-                    joined += 1;
-                }
-                Ok(FromWorker::Fatal { worker, msg }) => {
+            match self.link.recv_timeout(left) {
+                Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
+                Ok(Event::Msg(FromWorker::Fatal { worker, msg })) => {
                     eprintln!("dp: worker {worker} failed to join: {msg}");
-                    self.workers[worker].state = WorkerHealth::Dead;
-                    self.counters.workers_crashed += 1;
+                    if worker < self.health.len() {
+                        self.health[worker] = WorkerHealth::Dead;
+                        self.counters.workers_crashed += 1;
+                    }
                     first_fatal.get_or_insert(msg);
                 }
-                Ok(FromWorker::ShardDone { buf, .. }) => self.spare.push(buf),
+                Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                Ok(Event::Msg(FromWorker::Ready { .. })) => {}
+                Ok(Event::Closed { worker }) => self.on_closed(worker),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        for w in self.workers.iter_mut().filter(|w| w.state == WorkerHealth::Joining) {
-            w.state = WorkerHealth::Dropped;
-            w.tx = None;
-            self.counters.workers_dropped += 1;
+        for w in 0..self.health.len() {
+            if self.health[w] == WorkerHealth::Joining && self.cfg.fault.join_step(w).is_none() {
+                self.health[w] = WorkerHealth::Dropped;
+                self.link.disconnect(w);
+                self.counters.workers_dropped += 1;
+            }
         }
-        if self.alive_ids().is_empty() {
+        if !self.health.contains(&WorkerHealth::Standby) {
             match first_fatal {
                 Some(msg) => bail!("no workers joined the run; first failure: {msg}"),
                 None => bail!("no workers joined the run within the join timeout"),
@@ -777,8 +1276,63 @@ impl DpCoordinator {
         Ok(())
     }
 
-    fn dead_count(&self) -> usize {
-        self.workers.iter().filter(|w| w.state == WorkerHealth::Dead).count()
+    /// Step-boundary membership update: activate join-deferred workers
+    /// whose boundary arrived, ingest pending join/close events, and
+    /// promote every eligible `Standby` worker before the step dispatches.
+    fn admit_standby(&mut self, t: usize) -> Result<()> {
+        let due: Vec<usize> = (0..self.health.len())
+            .filter(|&w| {
+                self.health[w] == WorkerHealth::Joining
+                    && !self.joined_once[w]
+                    && self.cfg.fault.join_step(w).map(|js| js <= t).unwrap_or(false)
+            })
+            .collect();
+        for &w in &due {
+            self.link.activate(w)?;
+        }
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms.max(1));
+        loop {
+            let waiting = due.iter().any(|&w| self.health[w] == WorkerHealth::Joining);
+            let left = if waiting {
+                deadline.saturating_duration_since(Instant::now())
+            } else {
+                Duration::ZERO
+            };
+            match self.link.recv_timeout(left) {
+                Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
+                Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                Ok(Event::Msg(FromWorker::Fatal { worker, msg })) => {
+                    eprintln!("dp: worker {worker} fatal between steps: {msg}");
+                    if worker < self.health.len() && self.health[worker] == WorkerHealth::Alive {
+                        self.mark_crashed(worker);
+                    }
+                }
+                Ok(Event::Msg(FromWorker::Ready { .. })) => {}
+                Ok(Event::Closed { worker }) => self.on_closed(worker),
+                Err(_) => {
+                    if !waiting {
+                        break;
+                    }
+                    // a due joiner never came up: write it off so the run
+                    // doesn't re-block at every subsequent boundary
+                    for &w in &due {
+                        if self.health[w] == WorkerHealth::Joining {
+                            eprintln!("dp: planned joiner {w} missed boundary {t}; dropping");
+                            self.health[w] = WorkerHealth::Dropped;
+                            self.link.disconnect(w);
+                            self.counters.workers_dropped += 1;
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        for w in 0..self.health.len() {
+            if self.health[w] == WorkerHealth::Standby && self.promotable(w, t) {
+                self.promote(w, t);
+            }
+        }
+        Ok(())
     }
 
     /// Send one Step command to every alive worker (workers with no shards
@@ -792,7 +1346,7 @@ impl DpCoordinator {
         assigned: &[usize],
         pending: &[bool],
     ) -> Vec<usize> {
-        let mut per_worker: Vec<Vec<Job>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
+        let mut per_worker: Vec<Vec<Job>> = (0..self.health.len()).map(|_| Vec::new()).collect();
         for (shard, &w) in assigned.iter().enumerate() {
             if pending[shard] {
                 let buf = self.spare.pop().unwrap_or_default();
@@ -802,13 +1356,12 @@ impl DpCoordinator {
         let gen = self.gen;
         let mut closed = Vec::new();
         for (id, jobs) in per_worker.into_iter().enumerate() {
-            if self.workers[id].state != WorkerHealth::Alive {
+            if self.health[id] != WorkerHealth::Alive {
                 continue;
             }
             let msg = ToWorker::Step { gen, step: t, params: params.clone(), jobs };
-            let tx = self.workers[id].tx.as_ref().expect("alive worker has a channel");
-            if let Err(e) = tx.send(msg) {
-                if let ToWorker::Step { jobs, .. } = e.0 {
+            if let Err(e) = self.link.send(id, msg) {
+                if let ToWorker::Step { jobs, .. } = e {
                     self.spare.extend(jobs.into_iter().map(|j| j.buf));
                 }
                 closed.push(id);
@@ -818,15 +1371,15 @@ impl DpCoordinator {
     }
 
     fn mark_crashed(&mut self, id: usize) {
-        self.workers[id].state = WorkerHealth::Dead;
-        self.workers[id].tx = None;
+        self.health[id] = WorkerHealth::Dead;
+        self.link.disconnect(id);
         self.counters.workers_crashed += 1;
         eprintln!("dp: worker {id} crashed (step {})", self.step + 1);
     }
 
     fn mark_dropped(&mut self, id: usize) {
-        self.workers[id].state = WorkerHealth::Dropped;
-        self.workers[id].tx = None;
+        self.health[id] = WorkerHealth::Dropped;
+        self.link.disconnect(id);
         self.counters.straggler_timeouts += 1;
         self.counters.workers_dropped += 1;
         eprintln!("dp: worker {id} dropped as straggler (step {})", self.step + 1);
@@ -880,12 +1433,26 @@ impl DpCoordinator {
         let mut shard_gnorm = vec![0f64; s_count];
         while n_pending > 0 {
             let left = deadline.saturating_duration_since(Instant::now());
-            match self.rx.recv_timeout(left) {
-                Ok(FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf }) => {
+            match self.link.recv_timeout(left) {
+                Ok(Event::Msg(FromWorker::ShardDone {
+                    worker,
+                    gen,
+                    step,
+                    shard,
+                    loss,
+                    gnorm,
+                    buf,
+                })) => {
                     self.counters.heartbeats += 1;
-                    let fresh = gen == self.gen
+                    // generation fencing + full distrust of wire-sourced
+                    // indices: every field is validated before any of them
+                    // is used to index coordinator state
+                    let fresh = worker < self.health.len()
+                        && gen == self.gen
                         && step == t
-                        && self.workers[worker].state == WorkerHealth::Alive
+                        && shard < s_count
+                        && buf.len() == self.fs.len()
+                        && self.health[worker] == WorkerHealth::Alive
                         && assigned[shard] == worker
                         && pending[shard];
                     if !fresh {
@@ -898,15 +1465,29 @@ impl DpCoordinator {
                     pending[shard] = false;
                     n_pending -= 1;
                 }
-                Ok(FromWorker::Ready { .. }) => {}
-                Ok(FromWorker::Fatal { worker, msg }) => {
+                Ok(Event::Msg(FromWorker::Ready { .. })) => {}
+                Ok(Event::Msg(FromWorker::Fatal { worker, msg })) => {
                     eprintln!("dp: worker {worker} fatal: {msg}");
-                    self.mark_crashed(worker);
-                    return Err(StepError::MembersLost);
+                    if worker < self.health.len() && self.health[worker] == WorkerHealth::Alive {
+                        self.mark_crashed(worker);
+                        return Err(StepError::MembersLost);
+                    }
+                }
+                // a (re)connecting worker mid-gather: greet it now, admit
+                // it at the next boundary — membership never changes
+                // mid-step
+                Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
+                Ok(Event::Closed { worker }) => {
+                    if worker < self.health.len() && self.health[worker] == WorkerHealth::Alive {
+                        self.mark_crashed(worker);
+                        return Err(StepError::MembersLost);
+                    }
+                    self.on_closed(worker);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    // classify every worker still owed a shard: thread
-                    // exited → crash; still running → straggler
+                    // classify every worker still owed a shard: backing
+                    // (thread/connection) gone → crash; intact but silent
+                    // → straggler
                     let mut laggards: Vec<usize> = (0..s_count)
                         .filter(|&s| pending[s])
                         .map(|s| assigned[s])
@@ -915,12 +1496,7 @@ impl DpCoordinator {
                     laggards.dedup();
                     let mut crashed = false;
                     for id in laggards {
-                        let finished = self.workers[id]
-                            .handle
-                            .as_ref()
-                            .map(|h| h.is_finished())
-                            .unwrap_or(true);
-                        if finished {
+                        if self.link.is_finished(id) {
                             self.mark_crashed(id);
                             crashed = true;
                         } else {
@@ -1063,14 +1639,24 @@ impl DpCoordinator {
         self.lifecycle.set(self.step, RunPhase::Recovering);
         self.counters.recoveries += 1;
         self.gen += 1;
-        while self.rx.try_recv().is_ok() {}
-        if self.alive_ids().is_empty() {
+        // drain stale events; joins are re-greeted after the restore so
+        // their Welcome carries the recovered state under the new gen
+        let mut pending_joins: Vec<(usize, usize)> = Vec::new();
+        while let Ok(ev) = self.link.recv_timeout(Duration::ZERO) {
+            match ev {
+                Event::Msg(FromWorker::ShardDone { buf, .. }) => self.spare.push(buf),
+                Event::Joined { worker, retries } => pending_joins.push((worker, retries)),
+                Event::Closed { worker } => self.on_closed(worker),
+                Event::Msg(_) => {}
+            }
+        }
+        if self.alive_ids().is_empty() && !self.link.supports_rejoin() {
             bail!(
                 "dp: no alive workers left to recover with \
                  ({} crashed, {} dropped of {})",
                 self.dead_count(),
-                self.workers.iter().filter(|w| w.state == WorkerHealth::Dropped).count(),
-                self.workers.len()
+                self.dropped_count(),
+                self.health.len()
             );
         }
         let before = self.step;
@@ -1116,7 +1702,64 @@ impl DpCoordinator {
         self.counters.steps_replayed += before - self.step;
         self.records.truncate(self.step);
         self.clipped_per_step.truncate(self.step);
+        // every Welcome sent before the gen bump is stale now: re-greet
+        // standby workers with the restored state, then the joiners that
+        // arrived mid-drain
+        for w in 0..self.health.len() {
+            if self.health[w] == WorkerHealth::Standby {
+                self.send_welcome(w);
+            }
+        }
+        for (worker, retries) in pending_joins {
+            self.greet_joiner(worker, retries);
+        }
+        if self.alive_ids().is_empty() && !self.health.contains(&WorkerHealth::Standby) {
+            self.await_rejoin()?;
+        }
         Ok(())
+    }
+
+    /// Every member is gone but the transport supports rejoin: hold the
+    /// run and wait (up to the join timeout) for a worker to reconnect.
+    /// Standby workers found here are promoted immediately — the run is
+    /// stalled without them, and we are between steps by construction.
+    fn await_rejoin(&mut self) -> Result<()> {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms.max(1));
+        eprintln!(
+            "dp: all workers lost; awaiting reconnect (gen {}, step {})",
+            self.gen, self.step
+        );
+        loop {
+            let t = self.step + 1;
+            let standby: Vec<usize> = (0..self.health.len())
+                .filter(|&w| self.health[w] == WorkerHealth::Standby)
+                .collect();
+            for w in standby {
+                self.promote(w, t);
+            }
+            if !self.alive_ids().is_empty() {
+                return Ok(());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match self.link.recv_timeout(left) {
+                Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
+                Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                Ok(Event::Closed { worker }) => self.on_closed(worker),
+                Ok(Event::Msg(_)) => {}
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        bail!(
+            "dp: no alive workers left to recover with \
+             ({} crashed, {} dropped of {})",
+            self.dead_count(),
+            self.dropped_count(),
+            self.health.len()
+        )
     }
 
     /// Run the full lifecycle to completion.
@@ -1125,6 +1768,9 @@ impl DpCoordinator {
         let mut recoveries_left = self.cfg.max_recoveries;
         while self.step < self.cfg.steps && !self.diverged {
             let t = self.step + 1;
+            // membership changes (joins, rejoins, planned late entries)
+            // land here, at the step boundary, never mid-gather
+            self.admit_standby(t)?;
             let phase = if t <= self.cfg.warmup.max(1) {
                 RunPhase::Warmup
             } else {
@@ -1158,6 +1804,10 @@ impl DpCoordinator {
         }
         self.lifecycle.set(self.step, RunPhase::Done);
         self.shutdown();
+        let net = self.link.stats();
+        self.counters.bytes_sent = net.bytes_sent;
+        self.counters.bytes_received = net.bytes_received;
+        self.counters.frames_rejected = net.frames_rejected;
         Ok(DpOutcome {
             steps_done: self.step,
             final_loss: self.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
@@ -1192,16 +1842,7 @@ impl DpCoordinator {
             return;
         }
         self.stopped = true;
-        for w in &mut self.workers {
-            if let Some(tx) = w.tx.take() {
-                let _ = tx.send(ToWorker::Stop);
-            }
-        }
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
-        }
+        self.link.shutdown();
     }
 }
 
@@ -1211,11 +1852,10 @@ impl Drop for DpCoordinator {
     }
 }
 
-/// Build the data-parallel coordinator from a [`TrainConfig`] (the
-/// `--workers N` path of `cmd_train`): per-worker [`SessionGrad`] sources
-/// over the preset's `grad_step` artifact plus the rule's estimator
-/// artifact for the coordinator.
-pub fn build_dp(train: &TrainConfig) -> Result<DpCoordinator> {
+/// Resolve a [`TrainConfig`] into the pieces both DP entry points share:
+/// the [`DpConfig`], arena layout, initial parameters, and the per-worker
+/// [`SessionGrad`] factory over the preset's artifacts.
+fn dp_parts_from(train: &TrainConfig) -> Result<(DpConfig, Vec<usize>, Vec<f32>, SourceFactory)> {
     let model = ModelConfig::load(&train.artifacts_root, &train.preset)?;
     let rule = rules::rule_for(train.optimizer);
     if !rule.engine_resident() {
@@ -1248,6 +1888,7 @@ pub fn build_dp(train: &TrainConfig) -> Result<DpCoordinator> {
         straggler_timeout_ms: train.straggler_timeout_ms,
         // per-worker XLA compilation can take a while on first load
         join_timeout_ms: 120_000,
+        io_timeout_ms: train.dp_io_timeout_ms,
         max_recoveries: 8,
         run_tag: train.preset.clone(),
         fault: FaultPlan::resolve(train.fault_plan.as_deref())?,
@@ -1258,7 +1899,27 @@ pub fn build_dp(train: &TrainConfig) -> Result<DpCoordinator> {
     let factory: SourceFactory = Arc::new(move |_id| {
         Ok(Box::new(SessionGrad::new(&model, seed, data_seed, ghat)?) as Box<dyn GradSource>)
     });
+    Ok((cfg, leaf_lens, init_p, factory))
+}
+
+/// Build the in-process data-parallel coordinator from a [`TrainConfig`]
+/// (the `--workers N` path of `cmd_train`): per-worker [`SessionGrad`]
+/// sources over the preset's `grad_step` artifact plus the rule's
+/// estimator artifact for the coordinator.
+pub fn build_dp(train: &TrainConfig) -> Result<DpCoordinator> {
+    let (cfg, leaf_lens, init_p, factory) = dp_parts_from(train)?;
     DpCoordinator::new(cfg, &leaf_lens, init_p, factory)
+}
+
+/// Build the socket-tier coordinator from a [`TrainConfig`] (the
+/// `dp-serve` path): same run parameters, but workers are external
+/// `sophia dp-worker` processes connecting to `listen`.
+pub fn build_dp_serve(
+    train: &TrainConfig,
+    listen: &str,
+) -> Result<(DpCoordinator, std::net::SocketAddr)> {
+    let (cfg, leaf_lens, init_p, factory) = dp_parts_from(train)?;
+    DpCoordinator::over_tcp(cfg, &leaf_lens, init_p, factory, listen)
 }
 
 #[cfg(test)]
@@ -1278,6 +1939,53 @@ mod tests {
         assert!(FaultPlan::parse("").unwrap().is_empty());
         for bad in ["boom:1@2", "kill:1", "delay:1@2", "kill:x@2", "tear:x"] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn fault_plan_network_verbs_round_trip() {
+        let p = FaultPlan::parse("drop:1@4, stall:0@2:150 ,garble:2@3,join:1@5").unwrap();
+        assert!(p.drop_at(1, 4) && !p.drop_at(1, 3) && !p.drop_at(0, 4));
+        assert_eq!(p.stall_ms(0, 2), Some(150));
+        assert_eq!(p.stall_ms(0, 3), None);
+        assert!(p.garble_at(2, 3) && !p.garble_at(0, 3));
+        assert_eq!(p.join_step(1), Some(5));
+        assert_eq!(p.join_step(0), None);
+        assert!(!p.is_empty());
+        for bad in ["drop:1", "stall:1@2", "garble:x@2", "join:1@", "drop:@2"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn fault_plan_errors_name_the_offending_input() {
+        for bad in ["boom:1@2", "drop:x@2", "stall:1@2", "join:1", "tear:zz"] {
+            let msg = format!("{:#}", FaultPlan::parse(bad).unwrap_err());
+            assert!(msg.contains(bad), "{msg:?} should name {bad:?}");
+        }
+    }
+
+    #[test]
+    fn fault_plan_parse_never_panics_on_garbage() {
+        // adversarial sweep: every case must return (Ok or Err), never
+        // panic, overflow, or allocate absurdly
+        let cases = [
+            ",",
+            "::::",
+            "kill:@",
+            "delay:0@0:",
+            "tear:",
+            "tear:-1",
+            "join:18446744073709551616@2",
+            "stall:1@2:notanumber",
+            "k\u{0}ill:1@2",
+            "drop:1@2@3",
+            "🦀:1@2",
+            "kill:1@2,,,drop:",
+            "@@@:@@@",
+        ];
+        for c in cases {
+            let _ = FaultPlan::parse(c);
         }
     }
 
@@ -1456,6 +2164,108 @@ mod tests {
         assert!(bits_eq(&m0, &m1));
         assert!(bits_eq(&h0, &h1));
         assert_eq!(c0, c1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn mid_run_join_rebalances_and_stays_bit_identical() {
+        let mk = |fault: FaultPlan| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 6,
+            hess_interval: 2,
+            fault,
+            ..DpConfig::default()
+        };
+        let (clean, p0, m0, h0, c0) = run_synthetic(mk(FaultPlan::default()), &LENS);
+        assert_eq!(clean.counters.workers_joined, 2);
+        let (joined, p1, m1, h1, c1) =
+            run_synthetic(mk(FaultPlan::parse("join:1@3").unwrap()), &LENS);
+        assert_eq!(joined.counters.workers_joined, 2, "the late worker still joins");
+        assert_eq!(joined.counters.workers_dropped, 0);
+        assert_eq!(joined.counters.recoveries, 0, "a planned join is not a fault");
+        assert_eq!(joined.steps_done, 6);
+        assert!(bits_eq(&p0, &p1), "a planned late join must not change results");
+        assert!(bits_eq(&m0, &m1));
+        assert!(bits_eq(&h0, &h1));
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn welcome_delivers_checkpoint_state_to_late_joiner() {
+        use std::sync::Mutex;
+
+        struct Capturing {
+            inner: SyntheticGrad,
+            sink: Arc<Mutex<Vec<StateSync>>>,
+        }
+        impl GradSource for Capturing {
+            fn grad(
+                &mut self,
+                step: usize,
+                shard: usize,
+                params: &[f32],
+                out: &mut [f32],
+            ) -> Result<GradOut> {
+                self.inner.grad(step, shard, params, out)
+            }
+            fn estimator(
+                &mut self,
+                step: usize,
+                seed: i32,
+                params: &[f32],
+                out: &mut [f32],
+            ) -> Result<()> {
+                self.inner.estimator(step, seed, params, out)
+            }
+            fn restore(&mut self, sync: &StateSync) -> Result<()> {
+                self.sink.lock().unwrap().push(sync.clone());
+                Ok(())
+            }
+        }
+
+        let root = std::env::temp_dir()
+            .join(format!("sophia_dp_join_sync_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let cfg = DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            ckpt_dir: Some(root.clone()),
+            ckpt_every: 3,
+            fault: FaultPlan::parse("join:1@4").unwrap(),
+            ..DpConfig::default()
+        };
+        let captured: Arc<Mutex<Vec<StateSync>>> = Arc::new(Mutex::new(Vec::new()));
+        let cap = captured.clone();
+        let data_seed = synthetic_data_seed(cfg.seed);
+        let n: usize = LENS.iter().sum();
+        let mut rng = Rng::new(7).fold(0xD0);
+        let init_p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+        let factory: SourceFactory = Arc::new(move |_id| {
+            Ok(Box::new(Capturing {
+                inner: SyntheticGrad { data_seed },
+                sink: cap.clone(),
+            }) as Box<dyn GradSource>)
+        });
+        let mut dp = DpCoordinator::new(cfg, &LENS, init_p, factory).unwrap();
+        dp.train().unwrap();
+        drop(dp);
+        let syncs = captured.lock().unwrap();
+        // worker 0 is welcomed at startup (step 0), the planned joiner at
+        // its boundary (after step 3 committed)
+        assert_eq!(syncs.len(), 2);
+        let late = syncs.iter().find(|s| s.step == 3).expect("joiner welcomed at step 3");
+        assert_eq!(late.run_tag, "dp");
+        // checkpoint-over-protocol: the wire-delivered snapshot must be
+        // bit-identical to the filesystem epoch committed at that step
+        let (meta, p, m, h) =
+            checkpoint::load_state(&DpCoordinator::epoch_dir(&root, 3)).unwrap();
+        assert_eq!(meta.step, 3);
+        assert!(bits_eq(&late.p, &p));
+        assert!(bits_eq(&late.m, &m));
+        assert!(bits_eq(&late.h, &h));
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -10,8 +10,14 @@
 pub mod checkpoint;
 pub mod dp;
 pub mod flops;
+pub mod net;
 pub mod sweep;
 pub mod trainer;
 
-pub use dp::{build_dp, DpConfig, DpCoordinator, DpOutcome, FaultPlan, RunPhase};
+pub use dp::{
+    build_dp, build_dp_serve, synthetic_data_seed, ChannelTransport, DpConfig, DpCoordinator,
+    DpOutcome, Event, FaultPlan, FromWorker, GradOut, GradSource, Job, NetStats, RunPhase,
+    SourceFactory, StateSync, SyntheticGrad, ToWorker, Transport, WorkerHealth,
+};
+pub use net::{run_worker, TcpTransport, WorkerCfg};
 pub use trainer::{TrainOutcome, Trainer};

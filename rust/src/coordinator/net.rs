@@ -1,0 +1,1416 @@
+//! TCP transport tier: the `dp-serve` / `dp-worker` wire.
+//!
+//! This module gives the transport-agnostic coordinator in [`super::dp`] a
+//! real network: [`TcpTransport`] implements [`Transport`] over localhost or
+//! LAN sockets, and [`run_worker`] is the client loop behind
+//! `sophia dp-worker --connect host:port`. The coordinator state machine is
+//! untouched — the in-process channel tier and this socket tier run the
+//! exact same membership, straggler, and recovery logic, which is what lets
+//! the fault-matrix tests assert socket runs bit-identical to in-process
+//! runs.
+//!
+//! # Frame layout
+//!
+//! Every message travels in one length-prefixed binary frame. No serde —
+//! the encoding is hand-rolled little-endian, like the checkpoint format:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "SDP1"
+//! 4       2     version (currently 1, u16 LE)
+//! 6       2     flags (0; reserved)
+//! 8       8     generation (u64 LE; informational — authoritative fencing
+//!               is the `gen` field inside Step/ShardDone payloads)
+//! 16      4     payload length (u32 LE, hard-capped at MAX_FRAME_LEN and
+//!               validated BEFORE any allocation)
+//! 20      8     FNV-1a 64 checksum of the payload (u64 LE, same function
+//!               as checkpoint meta.json checksums)
+//! 28      …     payload (first byte = message tag)
+//! ```
+//!
+//! A frame that fails magic, version, length, or checksum validation is
+//! rejected with an error naming what was wrong, counted in
+//! `frames_rejected`, and the connection is severed — a corrupt frame can
+//! never become a protocol message.
+//!
+//! # Messages
+//!
+//! Client → server: `Hello` (tag 0x01: claimed worker id or "any", backoff
+//! retries burned), `ShardDone` (0x02), `Fatal` (0x03). Server → client:
+//! `Welcome` (0x10: assigned worker id, generation, committed step, and a
+//! full [`StateSync`] — checkpoint distribution over the protocol, each
+//! state blob carrying the same FNV-1a checksum `meta.json` would record),
+//! `Step` (0x11: generation, step, params, assigned shard ids), `Stop`
+//! (0x12).
+//!
+//! # Handshake, generations, reconnect
+//!
+//! A connecting worker sends `Hello` and waits for `Welcome`; the
+//! coordinator assigns the slot (a claimed id is granted only if that slot
+//! is free — the transport stamps every subsequent message with the slot
+//! id, so a lying client cannot impersonate another worker). Admission into
+//! the step rotation happens only at a step boundary. Every recovery bumps
+//! the generation; a stale worker's results carry the old generation and
+//! are discarded by the coordinator's freshness check.
+//!
+//! A worker that loses its connection reconnects with capped exponential
+//! backoff plus deterministic jitter (`backoff_base_ms << attempt`, capped
+//! at `backoff_cap_ms`; defaults 50ms/2s, at most `max_reconnects`
+//! attempts) and re-enters through the same Hello/Welcome handshake — the
+//! fresh `Welcome` re-delivers current state, so no shared filesystem is
+//! needed. Read/write timeouts (`DpConfig::io_timeout_ms`, default 10s)
+//! bound every socket operation; an idle wait (no bytes at all) is not an
+//! error, but a timeout mid-frame severs the connection.
+//!
+//! # Fault injection
+//!
+//! The client honors the network verbs of [`FaultPlan`] deterministically,
+//! each firing at most once per client process: `drop:w@step` severs the
+//! socket on receipt of that step (then reconnects), `stall:w@step:ms`
+//! sleeps with the socket open (the coordinator sees a silent-but-connected
+//! straggler), `garble:w@step` sends one deliberately corrupt frame in
+//! place of its first shard result (the server must reject it by checksum
+//! and sever), and `kill:w@step` vanishes without reconnecting.
+
+use super::dp::{
+    Event, FaultPlan, FromWorker, GradSource, NetStats, SourceFactory, StateSync, ToWorker,
+    Transport,
+};
+use crate::coordinator::checkpoint::fnv1a64;
+use crate::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashSet;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Framing
+
+pub const MAGIC: [u8; 4] = *b"SDP1";
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 28;
+/// Hard cap on a declared payload length, enforced before allocation. Big
+/// enough for a full `StateSync` of a 80M-param model; small enough that a
+/// hostile length field cannot OOM the process.
+pub const MAX_FRAME_LEN: u32 = 1 << 30;
+/// Cap on strings inside payloads (run tags, optimizer names, error text).
+const MAX_STR_LEN: usize = 1 << 16;
+/// Cap on worker slots a server will ever track, however ids are claimed.
+const MAX_SLOTS: usize = 1024;
+
+const TAG_HELLO: u8 = 0x01;
+const TAG_SHARD_DONE: u8 = 0x02;
+const TAG_FATAL: u8 = 0x03;
+const TAG_WELCOME: u8 = 0x10;
+const TAG_STEP: u8 = 0x11;
+const TAG_STOP: u8 = 0x12;
+
+/// Sentinel for "assign me any slot" in `Hello`.
+const ANY_WORKER: u64 = u64::MAX;
+
+fn header_bytes(gen: u64, payload: &[u8], sum: u64) -> [u8; HEADER_LEN] {
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    // flags (6..8) stay zero
+    hdr[8..16].copy_from_slice(&gen.to_le_bytes());
+    hdr[16..20].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[20..28].copy_from_slice(&sum.to_le_bytes());
+    hdr
+}
+
+/// Write one frame; returns total bytes written.
+pub fn write_frame(mut w: impl Write, gen: u64, payload: &[u8]) -> std::io::Result<usize> {
+    debug_assert!(payload.len() <= MAX_FRAME_LEN as usize);
+    let hdr = header_bytes(gen, payload, fnv1a64(payload));
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(HEADER_LEN + payload.len())
+}
+
+/// Fault-injection helper: a frame whose declared checksum is wrong, so the
+/// receiver must reject it (`garble` verb).
+fn write_corrupt_frame(mut w: impl Write, gen: u64, payload: &[u8]) -> std::io::Result<usize> {
+    let hdr = header_bytes(gen, payload, fnv1a64(payload) ^ 0xDEAD_BEEF);
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(HEADER_LEN + payload.len())
+}
+
+/// Validate a frame header; returns (generation, payload length). Pure so
+/// the adversarial tests can hammer it without sockets.
+pub fn parse_header(hdr: &[u8; HEADER_LEN]) -> Result<(u64, u32, u64)> {
+    if hdr[0..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x}{:02x}{:02x}{:02x} (want \"SDP1\")",
+            hdr[0],
+            hdr[1],
+            hdr[2],
+            hdr[3]
+        );
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != VERSION {
+        bail!("unsupported frame version {version} (want {VERSION})");
+    }
+    let gen = u64::from_le_bytes(hdr[8..16].try_into().expect("8 bytes"));
+    let len = u32::from_le_bytes(hdr[16..20].try_into().expect("4 bytes"));
+    if len > MAX_FRAME_LEN {
+        bail!("declared frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap");
+    }
+    let sum = u64::from_le_bytes(hdr[20..28].try_into().expect("8 bytes"));
+    Ok((gen, len, sum))
+}
+
+/// One attempt to read a frame from a socket with a read timeout set.
+enum FrameIn {
+    /// Read timed out before the first byte: the peer is alive but quiet.
+    Idle,
+    /// Orderly close before the first byte of a frame.
+    Eof,
+    /// The connection failed (mid-frame timeout, reset, …).
+    Gone(std::io::Error),
+    /// A frame failed validation — never delivered upward.
+    Corrupt(String),
+    Frame { gen: u64, payload: Vec<u8> },
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+fn read_frame(mut stream: &TcpStream) -> FrameIn {
+    let mut first = [0u8; 1];
+    loop {
+        match stream.read(&mut first) {
+            Ok(0) => return FrameIn::Eof,
+            Ok(_) => break,
+            Err(e) if is_timeout(&e) => return FrameIn::Idle,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return FrameIn::Gone(e),
+        }
+    }
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0] = first[0];
+    if let Err(e) = stream.read_exact(&mut hdr[1..]) {
+        return FrameIn::Gone(e);
+    }
+    let (gen, len, want) = match parse_header(&hdr) {
+        Ok(v) => v,
+        Err(e) => return FrameIn::Corrupt(format!("{e:#}")),
+    };
+    let mut payload = vec![0u8; len as usize];
+    if let Err(e) = stream.read_exact(&mut payload) {
+        return FrameIn::Gone(e);
+    }
+    let got = fnv1a64(&payload);
+    if got != want {
+        return FrameIn::Corrupt(format!(
+            "frame checksum mismatch: payload hashes to {got:016x}, header declares {want:016x}"
+        ));
+    }
+    FrameIn::Frame { gen, payload }
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec (hand-rolled, little-endian)
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Enc { buf: vec![tag] }
+    }
+    fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    fn str(&mut self, s: &str) -> &mut Self {
+        let b = s.as_bytes();
+        debug_assert!(b.len() <= MAX_STR_LEN);
+        self.buf.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(b);
+        self
+    }
+    /// Raw f32 vector: count + bits. Integrity comes from the frame
+    /// checksum.
+    fn f32s(&mut self, v: &[f32]) -> &mut Self {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+    /// Checksummed f32 blob: count + FNV-1a of the bits + bits. Used for
+    /// `StateSync` so wire delivery mirrors checkpoint meta.json.
+    fn blob(&mut self, v: &[f32]) -> &mut Self {
+        self.u64(v.len() as u64);
+        let start = self.buf.len() + 8;
+        self.u64(0); // checksum placeholder
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let sum = fnv1a64(&self.buf[start..]);
+        self.buf[start - 8..start].copy_from_slice(&sum.to_le_bytes());
+        self
+    }
+    fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked payload reader: every read names the message kind, the
+/// field, and the offset on failure, and every declared count is validated
+/// against the bytes actually present before any allocation.
+struct Dec<'a> {
+    buf: &'a [u8],
+    off: usize,
+    what: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8], what: &'static str) -> Self {
+        Dec { buf, off: 0, what }
+    }
+    fn take(&mut self, n: usize, field: &str) -> Result<&'a [u8]> {
+        let left = self.buf.len() - self.off;
+        if left < n {
+            bail!(
+                "{} payload truncated at byte {} reading {field}: {n} bytes declared, {left} left",
+                self.what,
+                self.off
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self, field: &str) -> Result<u8> {
+        Ok(self.take(1, field)?[0])
+    }
+    fn u64(&mut self, field: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+    fn f64(&mut self, field: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+    fn usize(&mut self, field: &str) -> Result<usize> {
+        let v = self.u64(field)?;
+        usize::try_from(v).map_err(|_| {
+            anyhow!("{} field {field} value {v} does not fit in usize", self.what)
+        })
+    }
+    fn str(&mut self, field: &str) -> Result<String> {
+        let len =
+            u32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")) as usize;
+        if len > MAX_STR_LEN {
+            bail!(
+                "{} field {field} declares a {len}-byte string (cap {MAX_STR_LEN})",
+                self.what
+            );
+        }
+        let bytes = self.take(len, field)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("{} field {field} is not valid UTF-8", self.what))
+    }
+    fn f32s(&mut self, field: &str) -> Result<Vec<f32>> {
+        let count = self.usize(field)?;
+        let n_bytes = count.checked_mul(4).ok_or_else(|| {
+            anyhow!("{} field {field} declares an absurd element count {count}", self.what)
+        })?;
+        let bytes = self.take(n_bytes, field)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    /// Checksummed counterpart of [`Enc::blob`].
+    fn blob(&mut self, field: &str) -> Result<Vec<f32>> {
+        let count = self.usize(field)?;
+        let n_bytes = count.checked_mul(4).ok_or_else(|| {
+            anyhow!("{} field {field} declares an absurd element count {count}", self.what)
+        })?;
+        let want = self.u64(field)?;
+        let bytes = self.take(n_bytes, field)?;
+        let got = fnv1a64(bytes);
+        if got != want {
+            bail!(
+                "{} state blob {field} is corrupt: checksum {got:016x} != declared {want:016x}",
+                self.what
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn done(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!(
+                "{} payload has {} trailing bytes after the message",
+                self.what,
+                self.buf.len() - self.off
+            );
+        }
+        Ok(())
+    }
+}
+
+fn encode_hello(want: Option<usize>, retries: usize) -> Vec<u8> {
+    let mut e = Enc::new(TAG_HELLO);
+    e.u64(want.map(|w| w as u64).unwrap_or(ANY_WORKER)).u64(retries as u64);
+    e.finish()
+}
+
+fn decode_hello(payload: &[u8]) -> Result<(Option<usize>, usize)> {
+    let mut d = Dec::new(payload, "hello");
+    let tag = d.u8("tag")?;
+    if tag != TAG_HELLO {
+        bail!("expected a hello frame, got message tag {tag:#04x}");
+    }
+    let want = d.u64("worker id")?;
+    let retries = d.usize("retries")?;
+    d.done()?;
+    let want = if want == ANY_WORKER {
+        None
+    } else {
+        let w = usize::try_from(want)
+            .map_err(|_| anyhow!("hello claims worker id {want}, which does not fit"))?;
+        if w >= MAX_SLOTS {
+            bail!("hello claims worker id {w} (cap {MAX_SLOTS})");
+        }
+        Some(w)
+    };
+    Ok((want, retries))
+}
+
+/// Server → client message as the client decodes it (buffers owned, jobs
+/// reduced to shard ids — gradient buffers are an in-process optimization
+/// that does not travel).
+pub enum WorkerCmd {
+    Welcome { worker: usize, gen: u64, step: usize, sync: StateSync },
+    Step { gen: u64, step: usize, params: Vec<f32>, shards: Vec<usize> },
+    Stop,
+}
+
+/// Encode a [`ToWorker`] for the wire; `slot` is the authoritative worker
+/// id the `Welcome` hands to the client.
+fn encode_to_worker(slot: usize, msg: &ToWorker) -> (u64, Vec<u8>) {
+    match msg {
+        ToWorker::Welcome { gen, step, sync } => {
+            let mut e = Enc::new(TAG_WELCOME);
+            e.u64(slot as u64).u64(*gen).u64(*step as u64).u64(sync.step as u64);
+            e.str(&sync.run_tag).str(&sync.optimizer);
+            e.blob(&sync.p).blob(&sync.m).blob(&sync.h);
+            (*gen, e.finish())
+        }
+        ToWorker::Step { gen, step, params, jobs } => {
+            let mut e = Enc::new(TAG_STEP);
+            e.u64(*gen).u64(*step as u64).f32s(params);
+            e.u64(jobs.len() as u64);
+            for j in jobs {
+                e.u64(j.shard as u64);
+            }
+            (*gen, e.finish())
+        }
+        ToWorker::Stop => (0, Enc::new(TAG_STOP).finish()),
+    }
+}
+
+/// Client-side decode of a server frame.
+pub fn decode_to_worker(payload: &[u8]) -> Result<WorkerCmd> {
+    let mut d = Dec::new(payload, "server");
+    match d.u8("tag")? {
+        TAG_WELCOME => {
+            let worker = d.usize("worker id")?;
+            let gen = d.u64("generation")?;
+            let step = d.usize("step")?;
+            let sync_step = d.usize("state step")?;
+            let run_tag = d.str("run tag")?;
+            let optimizer = d.str("optimizer")?;
+            let p = d.blob("p")?;
+            let m = d.blob("m")?;
+            let h = d.blob("h")?;
+            d.done()?;
+            if m.len() != p.len() || h.len() != p.len() {
+                bail!(
+                    "welcome state blobs disagree on length: p={}, m={}, h={}",
+                    p.len(),
+                    m.len(),
+                    h.len()
+                );
+            }
+            Ok(WorkerCmd::Welcome {
+                worker,
+                gen,
+                step,
+                sync: StateSync { step: sync_step, run_tag, optimizer, p, m, h },
+            })
+        }
+        TAG_STEP => {
+            let gen = d.u64("generation")?;
+            let step = d.usize("step")?;
+            let params = d.f32s("params")?;
+            let n_shards = d.usize("shard count")?;
+            if n_shards > MAX_FRAME_LEN as usize / 8 {
+                bail!("step declares an absurd shard count {n_shards}");
+            }
+            let mut shards = Vec::with_capacity(n_shards.min(1 << 16));
+            for _ in 0..n_shards {
+                shards.push(d.usize("shard id")?);
+            }
+            d.done()?;
+            Ok(WorkerCmd::Step { gen, step, params, shards })
+        }
+        TAG_STOP => {
+            d.done()?;
+            Ok(WorkerCmd::Stop)
+        }
+        tag => bail!("unknown server message tag {tag:#04x}"),
+    }
+}
+
+fn encode_shard_done(
+    worker: usize,
+    gen: u64,
+    step: usize,
+    shard: usize,
+    loss: f64,
+    gnorm: f64,
+    grad: &[f32],
+) -> Vec<u8> {
+    let mut e = Enc::new(TAG_SHARD_DONE);
+    e.u64(worker as u64).u64(gen).u64(step as u64).u64(shard as u64);
+    e.f64(loss).f64(gnorm).f32s(grad);
+    e.finish()
+}
+
+fn encode_fatal(worker: usize, msg: &str) -> Vec<u8> {
+    let mut e = Enc::new(TAG_FATAL);
+    // truncate to the cap on a char boundary (String::truncate panics
+    // mid-char, and error text is arbitrary)
+    let mut end = MAX_STR_LEN.min(msg.len());
+    while end > 0 && !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    e.u64(worker as u64).str(&msg[..end]);
+    e.finish()
+}
+
+/// Server-side decode of a client frame. The `worker` fields inside are
+/// untrusted and overwritten with the connection's slot id by the
+/// transport before the coordinator ever sees them.
+pub fn decode_from_worker(payload: &[u8]) -> Result<FromWorker> {
+    let mut d = Dec::new(payload, "worker");
+    match d.u8("tag")? {
+        TAG_SHARD_DONE => {
+            let worker = d.usize("worker id")?;
+            let gen = d.u64("generation")?;
+            let step = d.usize("step")?;
+            let shard = d.usize("shard id")?;
+            let loss = d.f64("loss")?;
+            let gnorm = d.f64("gnorm")?;
+            let buf = d.f32s("gradient")?;
+            d.done()?;
+            Ok(FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf })
+        }
+        TAG_FATAL => {
+            let worker = d.usize("worker id")?;
+            let msg = d.str("message")?;
+            d.done()?;
+            Ok(FromWorker::Fatal { worker, msg })
+        }
+        tag => bail!("unknown worker message tag {tag:#04x}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server transport
+
+enum Internal {
+    Hello { stream: TcpStream, want: Option<usize>, retries: usize },
+    Msg { slot: usize, serial: u64, msg: FromWorker },
+    Closed { slot: usize, serial: u64 },
+}
+
+#[derive(Default)]
+struct Shared {
+    stop: AtomicBool,
+    bytes_sent: AtomicUsize,
+    bytes_received: AtomicUsize,
+    frames_rejected: AtomicUsize,
+}
+
+struct TcpConn {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+}
+
+#[derive(Default)]
+struct TcpSlot {
+    conn: Option<TcpConn>,
+    /// Bumped on every (re)connect and disconnect; events from a previous
+    /// connection's reader thread carry the old serial and are discarded —
+    /// a dead connection cannot speak for its successor.
+    serial: u64,
+}
+
+/// The socket-tier [`Transport`]: an accept thread admits connections (one
+/// handshake thread each, reading the `Hello`), a reader thread per live
+/// connection turns frames into events, and the coordinator thread owns all
+/// writes. Slot assignment and the worker-id stamp both live here, so the
+/// coordinator's state machine never sees an unauthenticated worker id.
+pub struct TcpTransport {
+    local_addr: SocketAddr,
+    slots: Vec<TcpSlot>,
+    events: Receiver<Internal>,
+    events_tx: Sender<Internal>,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and start accepting workers.
+    /// `workers` pre-sizes the slot table; `io_timeout` bounds every socket
+    /// read/write.
+    pub fn bind(listen: &str, workers: usize, io_timeout: Duration) -> Result<Self> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding dp-serve to {listen}"))?;
+        let local_addr = listener.local_addr()?;
+        let (tx, rx) = channel();
+        let shared = Arc::new(Shared::default());
+        let acceptor = {
+            let tx = tx.clone();
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("dp-accept".to_string())
+                .spawn(move || accept_main(listener, tx, shared, io_timeout))
+                .expect("spawn dp accept thread")
+        };
+        Ok(TcpTransport {
+            local_addr,
+            slots: (0..workers).map(|_| TcpSlot::default()).collect(),
+            events: rx,
+            events_tx: tx,
+            shared,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Bind a handshaken connection to a slot and start its reader.
+    /// Returns the slot id, or None if the connection was refused.
+    fn admit(&mut self, stream: TcpStream, want: Option<usize>) -> Option<usize> {
+        let slot = match want {
+            Some(w) => {
+                while self.slots.len() <= w {
+                    self.slots.push(TcpSlot::default());
+                }
+                if self.slots[w].conn.is_some() {
+                    eprintln!("dp-serve: refusing duplicate connection for worker {w}");
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return None;
+                }
+                w
+            }
+            None => match self.slots.iter().position(|s| s.conn.is_none()) {
+                Some(i) => i,
+                None if self.slots.len() < MAX_SLOTS => {
+                    self.slots.push(TcpSlot::default());
+                    self.slots.len() - 1
+                }
+                None => {
+                    eprintln!("dp-serve: refusing connection, slot table full");
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return None;
+                }
+            },
+        };
+        self.slots[slot].serial += 1;
+        let serial = self.slots[slot].serial;
+        let rstream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("dp-serve: cannot clone stream for worker {slot}: {e}");
+                return None;
+            }
+        };
+        let tx = self.events_tx.clone();
+        let shared = self.shared.clone();
+        let reader = match std::thread::Builder::new()
+            .name(format!("dp-net-{slot}"))
+            .spawn(move || reader_main(rstream, slot, serial, tx, shared))
+        {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("dp-serve: cannot spawn reader for worker {slot}: {e}");
+                return None;
+            }
+        };
+        self.slots[slot].conn = Some(TcpConn { stream, reader });
+        Some(slot)
+    }
+
+    fn stop_acceptor(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if self.acceptor.is_some() {
+            // unblock accept() so the thread can observe the stop flag
+            let _ = TcpStream::connect(self.local_addr);
+        }
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Restamp a decoded message with the authenticated slot id — what the
+/// wire claimed is discarded.
+fn stamp(slot: usize, msg: FromWorker) -> FromWorker {
+    match msg {
+        FromWorker::Ready { .. } => FromWorker::Ready { worker: slot },
+        FromWorker::ShardDone { gen, step, shard, loss, gnorm, buf, .. } => {
+            FromWorker::ShardDone { worker: slot, gen, step, shard, loss, gnorm, buf }
+        }
+        FromWorker::Fatal { msg, .. } => FromWorker::Fatal { worker: slot, msg },
+    }
+}
+
+fn accept_main(
+    listener: TcpListener,
+    tx: Sender<Internal>,
+    shared: Arc<Shared>,
+    io_timeout: Duration,
+) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(a) => a,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // one short-lived thread per handshake so a silent connector can't
+        // block the accept loop
+        let tx = tx.clone();
+        let shared = shared.clone();
+        let _ = std::thread::Builder::new().name("dp-handshake".to_string()).spawn(move || {
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_read_timeout(Some(io_timeout));
+            let _ = stream.set_write_timeout(Some(io_timeout));
+            match read_frame(&stream) {
+                FrameIn::Frame { payload, .. } => {
+                    shared
+                        .bytes_received
+                        .fetch_add(HEADER_LEN + payload.len(), Ordering::Relaxed);
+                    match decode_hello(&payload) {
+                        Ok((want, retries)) => {
+                            let _ = tx.send(Internal::Hello { stream, want, retries });
+                        }
+                        Err(e) => {
+                            eprintln!("dp-serve: rejecting connection: {e:#}");
+                            shared.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ = stream.shutdown(Shutdown::Both);
+                        }
+                    }
+                }
+                FrameIn::Corrupt(msg) => {
+                    eprintln!("dp-serve: rejecting connection: {msg}");
+                    shared.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+                // silent, closed, or broken before a full Hello: drop it
+                FrameIn::Idle | FrameIn::Eof | FrameIn::Gone(_) => {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+        });
+    }
+}
+
+fn reader_main(
+    stream: TcpStream,
+    slot: usize,
+    serial: u64,
+    tx: Sender<Internal>,
+    shared: Arc<Shared>,
+) {
+    loop {
+        match read_frame(&stream) {
+            // a quiet worker (standby, or computing a long step) is fine;
+            // liveness policing is the coordinator's straggler deadline
+            FrameIn::Idle => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            FrameIn::Frame { payload, .. } => {
+                shared.bytes_received.fetch_add(HEADER_LEN + payload.len(), Ordering::Relaxed);
+                match decode_from_worker(&payload) {
+                    Ok(msg) => {
+                        if tx.send(Internal::Msg { slot, serial, msg }).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("dp-serve: rejecting frame from worker {slot}: {e:#}");
+                        shared.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = stream.shutdown(Shutdown::Both);
+                        let _ = tx.send(Internal::Closed { slot, serial });
+                        return;
+                    }
+                }
+            }
+            FrameIn::Corrupt(msg) => {
+                eprintln!("dp-serve: rejecting frame from worker {slot}: {msg}");
+                shared.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = stream.shutdown(Shutdown::Both);
+                let _ = tx.send(Internal::Closed { slot, serial });
+                return;
+            }
+            FrameIn::Eof | FrameIn::Gone(_) => {
+                let _ = tx.send(Internal::Closed { slot, serial });
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, w: usize, msg: ToWorker) -> std::result::Result<(), ToWorker> {
+        let Some(conn) = self.slots.get_mut(w).and_then(|s| s.conn.as_mut()) else {
+            return Err(msg);
+        };
+        let (gen, payload) = encode_to_worker(w, &msg);
+        match write_frame(&conn.stream, gen, &payload) {
+            Ok(n) => {
+                self.shared.bytes_sent.fetch_add(n, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(_) => Err(msg),
+        }
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> std::result::Result<Event, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.events.recv_timeout(left)? {
+                Internal::Hello { stream, want, retries } => {
+                    if let Some(worker) = self.admit(stream, want) {
+                        return Ok(Event::Joined { worker, retries });
+                    }
+                }
+                Internal::Msg { slot, serial, msg } => {
+                    if slot < self.slots.len() && self.slots[slot].serial == serial {
+                        return Ok(Event::Msg(stamp(slot, msg)));
+                    }
+                }
+                Internal::Closed { slot, serial } => {
+                    if slot < self.slots.len() && self.slots[slot].serial == serial {
+                        self.slots[slot].serial += 1;
+                        self.slots[slot].conn = None;
+                        return Ok(Event::Closed { worker: slot });
+                    }
+                }
+            }
+        }
+    }
+
+    fn is_finished(&self, w: usize) -> bool {
+        match self.slots.get(w).and_then(|s| s.conn.as_ref()) {
+            Some(conn) => conn.reader.is_finished(),
+            None => true,
+        }
+    }
+
+    fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn ensure_slot(&mut self, w: usize) {
+        while self.slots.len() <= w {
+            self.slots.push(TcpSlot::default());
+        }
+    }
+
+    fn activate(&mut self, w: usize) -> Result<()> {
+        // workers are external processes connecting on their own schedule;
+        // the coordinator just holds the boundary for them
+        self.ensure_slot(w);
+        Ok(())
+    }
+
+    fn disconnect(&mut self, w: usize) {
+        if let Some(slot) = self.slots.get_mut(w) {
+            slot.serial += 1;
+            if let Some(conn) = slot.conn.take() {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn supports_rejoin(&self) -> bool {
+        true
+    }
+
+    fn stats(&self) -> NetStats {
+        NetStats {
+            bytes_sent: self.shared.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: self.shared.bytes_received.load(Ordering::Relaxed),
+            frames_rejected: self.shared.frames_rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for w in 0..self.slots.len() {
+            if self.slots[w].conn.is_some() {
+                let _ = self.send(w, ToWorker::Stop);
+            }
+        }
+        for slot in &mut self.slots {
+            slot.serial += 1;
+            // dropping the stream closes it after queued writes (the Stop
+            // frame) flush — no hard shutdown that could race the client
+            slot.conn = None;
+        }
+        self.stop_acceptor();
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.stop_acceptor();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker client
+
+/// Everything `sophia dp-worker` needs. Defaults give 50ms → 2s capped
+/// exponential backoff with up to 40 reconnect attempts and 10s I/O
+/// timeouts.
+#[derive(Clone, Debug)]
+pub struct WorkerCfg {
+    pub addr: String,
+    /// Claim a specific slot (a rejoining or fault-matrix worker); None
+    /// lets the coordinator assign one.
+    pub worker_id: Option<usize>,
+    pub fault: FaultPlan,
+    pub io_timeout_ms: u64,
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    pub max_reconnects: usize,
+    /// Seed for deterministic backoff jitter.
+    pub jitter_seed: u64,
+}
+
+impl Default for WorkerCfg {
+    fn default() -> Self {
+        WorkerCfg {
+            addr: "127.0.0.1:0".to_string(),
+            worker_id: None,
+            fault: FaultPlan::default(),
+            io_timeout_ms: 10_000,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            max_reconnects: 40,
+            jitter_seed: 0,
+        }
+    }
+}
+
+/// Deterministic capped exponential backoff with jitter for reconnect
+/// attempt `attempt` (1-based).
+fn backoff_ms(cfg: &WorkerCfg, attempt: usize) -> u64 {
+    let shift = attempt.saturating_sub(1).min(6) as u32;
+    let exp = cfg.backoff_base_ms.saturating_mul(1u64 << shift);
+    let capped = exp.min(cfg.backoff_cap_ms.max(1));
+    let span = (cfg.backoff_base_ms / 2).max(1);
+    let mut r = Rng::new(cfg.jitter_seed ^ 0xB0FF).fold(attempt as u64);
+    capped + r.next_u64() % span
+}
+
+enum ServeEnd {
+    /// Orderly end: `Stop` received, or the `kill` verb fired.
+    Stopped,
+    /// Connection lost (or deliberately severed): reconnect.
+    Severed,
+}
+
+fn send_fatal(stream: &TcpStream, gen: u64, worker: usize, msg: &str) {
+    let _ = write_frame(stream, gen, &encode_fatal(worker, msg));
+}
+
+/// The `sophia dp-worker` client loop: connect with backoff, handshake,
+/// serve steps, reconnect on any severance until `Stop` arrives or the
+/// reconnect budget runs out. The gradient source is built once (on first
+/// `Welcome`, when the assigned worker id is known) and reused across
+/// reconnects — its purity contract makes that safe.
+pub fn run_worker(cfg: &WorkerCfg, factory: SourceFactory) -> Result<()> {
+    let io_timeout = Duration::from_millis(cfg.io_timeout_ms.max(1));
+    let mut src: Option<Box<dyn GradSource>> = None;
+    let mut my_id = cfg.worker_id;
+    let mut fired: HashSet<(u8, usize)> = HashSet::new();
+    let mut attempt = 0usize;
+    let mut retries = 0usize;
+    loop {
+        attempt += 1;
+        if attempt > cfg.max_reconnects.max(1) {
+            bail!(
+                "dp-worker: gave up on coordinator {} after {} connection attempts",
+                cfg.addr,
+                attempt - 1
+            );
+        }
+        if attempt > 1 {
+            retries += 1;
+            std::thread::sleep(Duration::from_millis(backoff_ms(cfg, attempt - 1)));
+        }
+        let stream = match TcpStream::connect(&cfg.addr) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(io_timeout));
+        let _ = stream.set_write_timeout(Some(io_timeout));
+        if write_frame(&stream, 0, &encode_hello(my_id, retries)).is_err() {
+            continue;
+        }
+        match serve(cfg, &stream, &factory, &mut src, &mut my_id, &mut fired, &mut attempt, &mut retries)?
+        {
+            ServeEnd::Stopped => return Ok(()),
+            ServeEnd::Severed => continue,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve(
+    cfg: &WorkerCfg,
+    stream: &TcpStream,
+    factory: &SourceFactory,
+    src: &mut Option<Box<dyn GradSource>>,
+    my_id: &mut Option<usize>,
+    fired: &mut HashSet<(u8, usize)>,
+    attempt: &mut usize,
+    retries: &mut usize,
+) -> Result<ServeEnd> {
+    let fault = &cfg.fault;
+    let mut gen = 0u64;
+    // quiet is normal (standby before a boundary, other workers' shards
+    // in flight) — but unbounded silence means the coordinator is gone
+    // without a goodbye, and waiting forever would strand the process.
+    // Treat prolonged silence as a severance and let the reconnect loop
+    // (whose budget is bounded) discover whether the coordinator is alive.
+    const IDLE_CAP: usize = 10;
+    let mut idles = 0usize;
+    loop {
+        let cmd = match read_frame(stream) {
+            FrameIn::Idle => {
+                idles += 1;
+                if idles >= IDLE_CAP {
+                    eprintln!(
+                        "dp-worker: no traffic for {} io-timeout windows; severing to probe \
+                         the coordinator",
+                        IDLE_CAP
+                    );
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return Ok(ServeEnd::Severed);
+                }
+                continue;
+            }
+            FrameIn::Eof | FrameIn::Gone(_) => return Ok(ServeEnd::Severed),
+            FrameIn::Corrupt(msg) => {
+                eprintln!("dp-worker: severing on bad frame: {msg}");
+                let _ = stream.shutdown(Shutdown::Both);
+                return Ok(ServeEnd::Severed);
+            }
+            FrameIn::Frame { payload, .. } => decode_to_worker(&payload)?,
+        };
+        idles = 0;
+        match cmd {
+            WorkerCmd::Welcome { worker, gen: g, step, sync } => {
+                gen = g;
+                *my_id = Some(worker);
+                if src.is_none() {
+                    match factory(worker) {
+                        Ok(s) => *src = Some(s),
+                        Err(e) => {
+                            send_fatal(stream, gen, worker, &format!("{e:#}"));
+                            return Err(e);
+                        }
+                    }
+                }
+                if let Err(e) = src.as_mut().expect("source built above").restore(&sync) {
+                    send_fatal(stream, gen, worker, &format!("{e:#}"));
+                    return Err(e);
+                }
+                eprintln!(
+                    "dp-worker {worker}: admitted to run {:?} at step {step} (gen {gen})",
+                    sync.run_tag
+                );
+                *attempt = 0;
+                *retries = 0;
+            }
+            WorkerCmd::Step { gen: g, step, params, shards } => {
+                // a Step is only meaningful once some Welcome has assigned
+                // this process an id and state (not necessarily on this
+                // connection — a re-admitted slot may see Steps before a
+                // fresh Welcome); a coordinator that skips the handshake
+                // entirely is severed
+                let (Some(id), Some(s)) = (*my_id, src.as_mut()) else {
+                    eprintln!("dp-worker: got a step before any welcome; severing");
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return Ok(ServeEnd::Severed);
+                };
+                gen = g;
+                // a flowing step is as good as a fresh welcome: the
+                // coordinator is alive and this slot is current, so the
+                // reconnect budget starts over
+                *attempt = 0;
+                *retries = 0;
+                if fault.kill_at(id, step) && fired.insert((b'k', step)) {
+                    // simulated hard crash: vanish and never come back
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return Ok(ServeEnd::Stopped);
+                }
+                if fault.drop_at(id, step) && fired.insert((b'd', step)) {
+                    eprintln!("dp-worker {id}: fault injection severing at step {step}");
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return Ok(ServeEnd::Severed);
+                }
+                if let Some(ms) = fault.delay_ms(id, step).or(fault.stall_ms(id, step)) {
+                    if fired.insert((b's', step)) {
+                        // socket stays open: the coordinator sees a silent
+                        // straggler, not a dead connection
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                let garble = fault.garble_at(id, step) && fired.insert((b'g', step));
+                let mut out = vec![0.0f32; params.len()];
+                for (i, &shard) in shards.iter().enumerate() {
+                    match s.grad(step, shard, &params, &mut out) {
+                        Ok(o) => {
+                            let payload =
+                                encode_shard_done(id, g, step, shard, o.loss, o.gnorm, &out);
+                            let wrote = if garble && i == 0 {
+                                eprintln!(
+                                    "dp-worker {id}: fault injection garbling a frame at step {step}"
+                                );
+                                write_corrupt_frame(stream, g, &payload)
+                            } else {
+                                write_frame(stream, g, &payload)
+                            };
+                            if wrote.is_err() {
+                                return Ok(ServeEnd::Severed);
+                            }
+                        }
+                        Err(e) => {
+                            send_fatal(stream, g, id, &format!("{e:#}"));
+                            return Err(e);
+                        }
+                    }
+                }
+                // a garbled frame gets this connection severed server-side;
+                // if we sent nothing else, force the reconnect now rather
+                // than waiting for the next read to fail
+                if garble && shards.is_empty() {
+                    return Ok(ServeEnd::Severed);
+                }
+            }
+            WorkerCmd::Stop => return Ok(ServeEnd::Stopped),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_from_worker(msg: FromWorker) -> FromWorker {
+        let payload = match &msg {
+            FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf } => {
+                encode_shard_done(*worker, *gen, *step, *shard, *loss, *gnorm, buf)
+            }
+            FromWorker::Fatal { worker, msg } => encode_fatal(*worker, msg),
+            FromWorker::Ready { .. } => unreachable!("ready does not travel"),
+        };
+        decode_from_worker(&payload).unwrap()
+    }
+
+    #[test]
+    fn frame_header_round_trips() {
+        let payload = b"hello world".to_vec();
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, 42, &payload).unwrap();
+        assert_eq!(n, wire.len());
+        assert_eq!(n, HEADER_LEN + payload.len());
+        let hdr: [u8; HEADER_LEN] = wire[..HEADER_LEN].try_into().unwrap();
+        let (gen, len, sum) = parse_header(&hdr).unwrap();
+        assert_eq!(gen, 42);
+        assert_eq!(len as usize, payload.len());
+        assert_eq!(sum, fnv1a64(&payload));
+    }
+
+    #[test]
+    fn frame_header_rejects_bad_magic_version_and_length() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 7, b"x").unwrap();
+        let good: [u8; HEADER_LEN] = wire[..HEADER_LEN].try_into().unwrap();
+
+        let mut bad_magic = good;
+        bad_magic[0] = b'X';
+        let err = format!("{:#}", parse_header(&bad_magic).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+
+        let mut bad_version = good;
+        bad_version[4] = 99;
+        let err = format!("{:#}", parse_header(&bad_version).unwrap_err());
+        assert!(err.contains("version 99"), "{err}");
+
+        let mut bad_len = good;
+        bad_len[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = format!("{:#}", parse_header(&bad_len).unwrap_err());
+        assert!(err.contains("cap"), "{err}");
+        // the cap check happens on the header alone — before any
+        // payload-sized allocation could occur
+    }
+
+    #[test]
+    fn corrupt_frame_helper_breaks_only_the_checksum() {
+        let mut wire = Vec::new();
+        write_corrupt_frame(&mut wire, 3, b"payload").unwrap();
+        let hdr: [u8; HEADER_LEN] = wire[..HEADER_LEN].try_into().unwrap();
+        let (_, _, declared) = parse_header(&hdr).unwrap();
+        assert_ne!(declared, fnv1a64(b"payload"));
+    }
+
+    #[test]
+    fn hello_round_trips_and_validates() {
+        let (want, retries) = decode_hello(&encode_hello(Some(3), 7)).unwrap();
+        assert_eq!(want, Some(3));
+        assert_eq!(retries, 7);
+        let (want, _) = decode_hello(&encode_hello(None, 0)).unwrap();
+        assert_eq!(want, None);
+        // absurd claimed id is refused with a named cap
+        let mut e = Enc::new(TAG_HELLO);
+        e.u64(9999).u64(0);
+        let err = format!("{:#}", decode_hello(&e.finish()).unwrap_err());
+        assert!(err.contains("9999"), "{err}");
+        // wrong tag
+        let err = format!("{:#}", decode_hello(&[0x55]).unwrap_err());
+        assert!(err.contains("tag"), "{err}");
+    }
+
+    #[test]
+    fn shard_done_and_fatal_round_trip_bit_exact() {
+        let buf: Vec<f32> = (0..37).map(|i| (i as f32).sin() * 1e-3).collect();
+        let msg = FromWorker::ShardDone {
+            worker: 2,
+            gen: 5,
+            step: 9,
+            shard: 3,
+            loss: 1.25e-7,
+            gnorm: f64::MIN_POSITIVE,
+            buf: buf.clone(),
+        };
+        match roundtrip_from_worker(msg) {
+            FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf: b } => {
+                assert_eq!((worker, gen, step, shard), (2, 5, 9, 3));
+                assert_eq!(loss.to_bits(), 1.25e-7f64.to_bits());
+                assert_eq!(gnorm.to_bits(), f64::MIN_POSITIVE.to_bits());
+                assert!(b.iter().zip(&buf).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_from_worker(FromWorker::Fatal { worker: 1, msg: "boom: 💥".into() }) {
+            FromWorker::Fatal { worker, msg } => {
+                assert_eq!(worker, 1);
+                assert_eq!(msg, "boom: 💥");
+            }
+            _ => panic!("wrong variant"),
+        }
+        // over-long error text is truncated on a char boundary, not
+        // panicked on: a 4-byte emoji straddles the cap here
+        let long = format!("{}💥💥", "x".repeat(MAX_STR_LEN - 6));
+        match decode_from_worker(&encode_fatal(0, &long)).unwrap() {
+            FromWorker::Fatal { msg, .. } => {
+                assert!(msg.len() <= MAX_STR_LEN);
+                assert!(msg.ends_with('💥'), "first emoji fits, second is cut");
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn welcome_round_trips_with_blob_checksums() {
+        let sync = StateSync {
+            step: 4,
+            run_tag: "nano".into(),
+            optimizer: "sophia_g".into(),
+            p: vec![1.0, -2.5, 3.25],
+            m: vec![0.5, 0.25, -0.125],
+            h: vec![1e-3, 2e-3, 3e-3],
+        };
+        let msg = ToWorker::Welcome { gen: 2, step: 4, sync: Arc::new(sync.clone()) };
+        let (gen, payload) = encode_to_worker(1, &msg);
+        assert_eq!(gen, 2);
+        match decode_to_worker(&payload).unwrap() {
+            WorkerCmd::Welcome { worker, gen, step, sync: got } => {
+                assert_eq!((worker, gen, step), (1, 2, 4));
+                assert_eq!(got, sync);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // flip one byte inside the m blob: the decoder must reject it and
+        // name the blob
+        let mut bad = payload.clone();
+        let pos = bad.len() - 14; // inside the h blob bits
+        bad[pos] ^= 0x40;
+        let err = format!("{:#}", decode_to_worker(&bad).unwrap_err());
+        assert!(err.contains("blob h") && err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn step_round_trips_and_job_buffers_do_not_travel() {
+        use super::super::dp::Job;
+        let params: Vec<f32> = (0..19).map(|i| i as f32 * 0.5).collect();
+        let msg = ToWorker::Step {
+            gen: 7,
+            step: 3,
+            params: Arc::new(params.clone()),
+            jobs: vec![
+                Job { shard: 2, buf: vec![9.0; 1000] },
+                Job { shard: 5, buf: Vec::new() },
+            ],
+        };
+        let (_, payload) = encode_to_worker(0, &msg);
+        // the 1000-element recycled buffer must not be on the wire
+        assert!(payload.len() < 200, "{} bytes", payload.len());
+        match decode_to_worker(&payload).unwrap() {
+            WorkerCmd::Step { gen, step, params: p, shards } => {
+                assert_eq!((gen, step), (7, 3));
+                assert_eq!(shards, vec![2, 5]);
+                assert!(p.iter().zip(&params).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decoders_reject_truncated_oversized_and_garbage_payloads() {
+        // truncations of a real message: every prefix must error (with a
+        // message naming the field), never panic
+        let payload = encode_shard_done(1, 2, 3, 4, 0.5, 0.25, &[1.0, 2.0]);
+        for cut in 0..payload.len() {
+            let err = decode_from_worker(&payload[..cut]);
+            assert!(err.is_err(), "prefix of len {cut} must fail");
+        }
+        // trailing garbage is also rejected
+        let mut padded = payload.clone();
+        padded.push(0);
+        let err = format!("{:#}", decode_from_worker(&padded).unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+
+        // a declared element count far beyond the actual bytes must be
+        // rejected before allocation
+        let mut e = Enc::new(TAG_SHARD_DONE);
+        e.u64(0).u64(0).u64(0).u64(0).f64(0.0).f64(0.0);
+        e.u64(u64::MAX); // gradient length field: absurd
+        let err = format!("{:#}", decode_from_worker(&e.finish()).unwrap_err());
+        assert!(err.contains("gradient"), "{err}");
+
+        let mut e = Enc::new(TAG_SHARD_DONE);
+        e.u64(0).u64(0).u64(0).u64(0).f64(0.0).f64(0.0);
+        e.u64(1 << 40); // fits in usize but not in any real frame
+        let err = format!("{:#}", decode_from_worker(&e.finish()).unwrap_err());
+        assert!(err.contains("declared"), "{err}");
+
+        // unknown tags on both sides
+        let err = format!("{:#}", decode_from_worker(&[0xEE]).unwrap_err());
+        assert!(err.contains("0xee"), "{err}");
+        let err = format!("{:#}", decode_to_worker(&[0xEE]).unwrap_err());
+        assert!(err.contains("0xee"), "{err}");
+
+        // empty payloads
+        assert!(decode_from_worker(&[]).is_err());
+        assert!(decode_to_worker(&[]).is_err());
+        assert!(decode_hello(&[]).is_err());
+
+        // fuzz-ish sweep: random byte soup must never panic
+        let mut r = Rng::new(0xF422);
+        for len in 0..64 {
+            let junk: Vec<u8> = (0..len).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+            let _ = decode_from_worker(&junk);
+            let _ = decode_to_worker(&junk);
+            let _ = decode_hello(&junk);
+        }
+        // and with valid tags but junk bodies
+        for tag in [TAG_HELLO, TAG_SHARD_DONE, TAG_FATAL, TAG_WELCOME, TAG_STEP, TAG_STOP] {
+            for len in 0..48 {
+                let mut junk: Vec<u8> = vec![tag];
+                junk.extend((0..len).map(|_| (r.next_u64() & 0xFF) as u8));
+                let _ = decode_from_worker(&junk);
+                let _ = decode_to_worker(&junk);
+                let _ = decode_hello(&junk);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_string_is_rejected_by_cap() {
+        let mut e = Enc::new(TAG_FATAL);
+        e.u64(0);
+        // declare a string far past the cap without providing the bytes
+        e.buf.extend_from_slice(&(10_000_000u32).to_le_bytes());
+        let err = format!("{:#}", decode_from_worker(&e.finish()).unwrap_err());
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_grows() {
+        let cfg = WorkerCfg {
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            jitter_seed: 9,
+            ..WorkerCfg::default()
+        };
+        let a: Vec<u64> = (1..=10).map(|k| backoff_ms(&cfg, k)).collect();
+        let b: Vec<u64> = (1..=10).map(|k| backoff_ms(&cfg, k)).collect();
+        assert_eq!(a, b, "jitter must be deterministic");
+        assert!(a[0] >= 50 && a[0] < 50 + 25);
+        assert!(a[1] >= a[0], "backoff grows");
+        for &ms in &a {
+            assert!(ms <= 2_000 + 25, "capped: {ms}");
+        }
+        let other = WorkerCfg { jitter_seed: 10, ..cfg };
+        let c: Vec<u64> = (1..=10).map(|k| backoff_ms(&other, k)).collect();
+        assert_ne!(a, c, "different seeds de-synchronize reconnect storms");
+    }
+}

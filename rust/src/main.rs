@@ -2,8 +2,12 @@
 
 use anyhow::{anyhow, Result};
 use sophia::cli::{build_train_config, Args, USAGE};
-use sophia::config::{ModelConfig, Optimizer, OutRole};
-use sophia::coordinator::{sweep, Trainer};
+use sophia::config::{ModelConfig, Optimizer, OutRole, TrainConfig};
+use sophia::coordinator::{
+    sweep, synthetic_data_seed, DpConfig, DpCoordinator, FaultPlan, GradSource, SourceFactory,
+    SyntheticGrad, Trainer, WorkerCfg,
+};
+use std::sync::Arc;
 use sophia::metrics::LogHistogram;
 use sophia::optim::toy::{self, ToyOpt};
 use sophia::runtime;
@@ -21,6 +25,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "dp-serve" => cmd_dp_serve(&args),
+        "dp-worker" => cmd_dp_worker(&args),
         "eval" => cmd_eval(&args),
         "toy" => cmd_toy(&args),
         "hist" => cmd_hist(&args),
@@ -44,8 +50,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.effective_lr(),
         cfg.hess_interval
     );
-    if cfg.workers > 1 {
-        return cmd_train_dp(cfg);
+    // --synthetic always means the artifact-free DP harness, even at one
+    // worker: the single-worker point of the TCP bit-identity matrix
+    // needs a single-process oracle, and the Trainer path would demand
+    // XLA artifacts the synthetic mode exists to avoid
+    if cfg.workers > 1 || args.bool("synthetic") {
+        return cmd_train_dp(args, cfg);
     }
     let mut trainer = Trainer::new(cfg)?;
     let out = trainer.train()?;
@@ -63,7 +73,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 /// Fault-tolerant data-parallel training (`--workers N`, N > 1): the
 /// in-process coordinator/worker split with deterministic recovery.
-fn cmd_train_dp(cfg: sophia::config::TrainConfig) -> Result<()> {
+/// `--synthetic` swaps the XLA artifacts for the closed-form synthetic
+/// gradient source (`--params P` parameters) — the artifact-free harness
+/// the TCP bit-identity tests compare against.
+fn cmd_train_dp(args: &Args, cfg: TrainConfig) -> Result<()> {
     let ckpt_dir = cfg.ckpt_dir.clone();
     eprintln!(
         "data-parallel: {} workers over {} shards (straggler timeout {}ms)",
@@ -71,20 +84,135 @@ fn cmd_train_dp(cfg: sophia::config::TrainConfig) -> Result<()> {
         if cfg.dp_shards == 0 { cfg.workers } else { cfg.dp_shards },
         cfg.straggler_timeout_ms
     );
-    let mut dp = sophia::coordinator::build_dp(&cfg)?;
+    let mut dp = if args.bool("synthetic") {
+        let leaves = synthetic_leaves(args.usize_or("params", 64)?);
+        DpCoordinator::synthetic(synthetic_dp_config(&cfg)?, &leaves, cfg.seed)?
+    } else {
+        sophia::coordinator::build_dp(&cfg)?
+    };
     let out = dp.train()?;
+    finish_dp(&mut dp, &out, ckpt_dir.as_deref())
+}
+
+/// TCP data-parallel coordinator: bind, wait for `dp-worker` processes,
+/// run the same state machine as `train --workers N`, report the same
+/// machine-readable health banner.
+fn cmd_dp_serve(args: &Args) -> Result<()> {
+    let cfg = build_train_config(args)?;
+    let listen = cfg.dp_listen.clone().unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let ckpt_dir = cfg.ckpt_dir.clone();
+    let (mut dp, addr) = if args.bool("synthetic") {
+        let leaves = synthetic_leaves(args.usize_or("params", 64)?);
+        DpCoordinator::synthetic_over_tcp(synthetic_dp_config(&cfg)?, &leaves, cfg.seed, &listen)?
+    } else {
+        sophia::coordinator::build_dp_serve(&cfg, &listen)?
+    };
+    eprintln!("dp-serve: listening on {addr} for {} workers", cfg.workers);
+    if let Some(pf) = args.flags.get("port-file") {
+        // write-then-rename so a polling worker launcher never reads a
+        // partially written address
+        let tmp = format!("{pf}.tmp");
+        std::fs::write(&tmp, addr.to_string())?;
+        std::fs::rename(&tmp, pf)?;
+    }
+    let out = dp.train()?;
+    finish_dp(&mut dp, &out, ckpt_dir.as_deref())
+}
+
+/// TCP data-parallel worker: connect (with capped-backoff reconnect),
+/// handshake for a slot, serve gradient shards until `Stop`.
+fn cmd_dp_worker(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let worker_id = match args.flags.get("worker-id") {
+        Some(_) => Some(args.usize_or("worker-id", 0)?),
+        None => None,
+    };
+    let seed = args.u64_or("seed", 0)?;
+    let wcfg = WorkerCfg {
+        addr: addr.clone(),
+        worker_id,
+        fault: FaultPlan::resolve(args.flags.get("fault-plan").map(|s| s.as_str()))?,
+        io_timeout_ms: args.u64_or("io-timeout-ms", 10_000)?,
+        backoff_base_ms: args.u64_or("backoff-base-ms", 50)?,
+        backoff_cap_ms: args.u64_or("backoff-cap-ms", 2_000)?,
+        max_reconnects: args.usize_or("max-reconnects", 40)?,
+        jitter_seed: seed.wrapping_add(worker_id.unwrap_or(0) as u64),
+    };
+    let factory: SourceFactory = if args.bool("synthetic") {
+        let data_seed = synthetic_data_seed(seed);
+        Arc::new(move |_id| Ok(Box::new(SyntheticGrad { data_seed }) as Box<dyn GradSource>))
+    } else {
+        let preset = args.str_or("preset", "b1");
+        let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let model = ModelConfig::load(&root, &preset)?;
+        let data_seed = args.u64_or("data-seed", 1)?;
+        Arc::new(move |_id| {
+            Ok(Box::new(sophia::coordinator::dp::SessionGrad::new(
+                &model, seed, data_seed, None,
+            )?) as Box<dyn GradSource>)
+        })
+    };
+    eprintln!("dp-worker: connecting to {addr}");
+    sophia::coordinator::run_worker(&wcfg, factory)
+}
+
+/// Shared end-of-run reporting for both DP tiers: outcome line, the
+/// machine-readable health-counter banner, final checkpoint.
+fn finish_dp(
+    dp: &mut DpCoordinator,
+    out: &sophia::coordinator::DpOutcome,
+    ckpt_dir: Option<&std::path::Path>,
+) -> Result<()> {
     println!(
         "done: steps={} train_loss={:.4} diverged={} clipped={}",
         out.steps_done, out.final_loss, out.diverged, out.total_clipped
     );
-    println!("health: {}", out.counters.to_json().to_string());
+    println!("health: {}", out.counters.snapshot_json());
     if let Some(dir) = ckpt_dir {
         // Trainer-compatible final checkpoint at the root, alongside any
         // step-<n> recovery epochs, so eval/hist work on DP runs unchanged
-        dp.save_checkpoint(&dir)?;
+        dp.save_checkpoint(dir)?;
         eprintln!("checkpoint saved to {dir:?}");
     }
     Ok(())
+}
+
+/// Map a [`TrainConfig`] onto the synthetic DP harness (no artifacts, no
+/// model manifest). Shared by `train --workers N --synthetic` and
+/// `dp-serve --synthetic` so both tiers run bit-identical configurations.
+fn synthetic_dp_config(t: &TrainConfig) -> Result<DpConfig> {
+    Ok(DpConfig {
+        workers: t.workers,
+        n_shards: t.dp_shards,
+        steps: t.steps,
+        optimizer: t.optimizer,
+        hypers: Vec::new(), // rule defaults
+        est_scale: 1.0,
+        hess_interval: t.hess_interval,
+        peak_lr: t.effective_lr(),
+        warmup: t.effective_warmup(),
+        final_lr_frac: t.final_lr_frac,
+        seed: t.seed,
+        ckpt_dir: t.ckpt_dir.clone(),
+        ckpt_every: t.ckpt_every,
+        straggler_timeout_ms: t.straggler_timeout_ms,
+        join_timeout_ms: 30_000,
+        io_timeout_ms: t.dp_io_timeout_ms,
+        max_recoveries: 8,
+        run_tag: format!("synthetic-{}", t.preset),
+        fault: FaultPlan::resolve(t.fault_plan.as_deref())?,
+    })
+}
+
+/// Leaf layout for the synthetic arena: two uneven leaves when there is
+/// room, so multi-leaf code paths are exercised.
+fn synthetic_leaves(params: usize) -> Vec<usize> {
+    let p = params.max(2);
+    if p >= 8 {
+        vec![p - p / 4, p / 4]
+    } else {
+        vec![p]
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -122,6 +122,20 @@ pub struct HealthCounters {
     pub checkpoints_saved: usize,
     /// Checkpoints rejected at load (truncated/corrupt blobs).
     pub torn_checkpoints_detected: usize,
+    /// Workers admitted after the run started (mid-run join).
+    pub workers_joined: usize,
+    /// Previously-seen workers re-admitted after losing their connection.
+    pub reconnects: usize,
+    /// Connection attempts workers reported burning in backoff before a
+    /// successful (re)connect.
+    pub backoff_retries: usize,
+    /// Wire frames rejected by the framing layer (bad magic/version/
+    /// length/checksum) — always 0 on the in-process tier.
+    pub frames_rejected: usize,
+    /// Frame bytes written to worker sockets (0 in-process).
+    pub bytes_sent: usize,
+    /// Frame bytes read from worker sockets (0 in-process).
+    pub bytes_received: usize,
 }
 
 impl HealthCounters {
@@ -148,7 +162,20 @@ impl HealthCounters {
             "torn_checkpoints_detected".into(),
             Json::Num(self.torn_checkpoints_detected as f64),
         );
+        m.insert("workers_joined".into(), Json::Num(self.workers_joined as f64));
+        m.insert("reconnects".into(), Json::Num(self.reconnects as f64));
+        m.insert("backoff_retries".into(), Json::Num(self.backoff_retries as f64));
+        m.insert("frames_rejected".into(), Json::Num(self.frames_rejected as f64));
+        m.insert("bytes_sent".into(), Json::Num(self.bytes_sent as f64));
+        m.insert("bytes_received".into(), Json::Num(self.bytes_received as f64));
         Json::Obj(m)
+    }
+
+    /// One-line machine-readable snapshot for the end-of-run DP banner:
+    /// exactly the [`Self::to_json`] object, serialized. Fault-matrix CI
+    /// greps this out of the run log instead of scraping prose.
+    pub fn snapshot_json(&self) -> String {
+        self.to_json().to_string()
     }
 }
 
@@ -279,12 +306,27 @@ mod tests {
             steps_replayed: 5,
             checkpoints_saved: 4,
             torn_checkpoints_detected: 1,
+            workers_joined: 1,
+            reconnects: 2,
+            backoff_retries: 6,
+            frames_rejected: 1,
+            bytes_sent: 4096,
+            bytes_received: 2048,
         };
         let j = c.to_json();
         assert_eq!(j.get("heartbeats").unwrap().as_usize(), Some(12));
         assert_eq!(j.get("recoveries").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("torn_checkpoints_detected").unwrap().as_usize(), Some(1));
-        assert_eq!(j.as_obj().unwrap().len(), 9);
+        assert_eq!(j.get("workers_joined").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("reconnects").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("backoff_retries").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("frames_rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("bytes_sent").unwrap().as_usize(), Some(4096));
+        assert_eq!(j.get("bytes_received").unwrap().as_usize(), Some(2048));
+        assert_eq!(j.as_obj().unwrap().len(), 15);
+        // the snapshot banner is the same object, round-trippable
+        let snap = Json::parse(&c.snapshot_json()).unwrap();
+        assert_eq!(snap.get("bytes_sent").unwrap().as_usize(), Some(4096));
         assert_eq!(HealthCounters::default(), HealthCounters::default());
     }
 

@@ -1,0 +1,394 @@
+//! Socket-tier integration tests: the TCP transport ([`sophia::coordinator::net`])
+//! must run the exact same coordinator state machine as the in-process
+//! channel tier, over real localhost sockets, and stay bit-identical to it
+//! through the whole network-fault matrix (sever/reconnect, stall,
+//! garbled frames, mid-run joins).
+//!
+//! Worker count is taken from `SOPHIA_DP_WORKERS` (the CI
+//! `tcp-fault-matrix` lane runs 1/2/4; default 2). Every test compares
+//! final params/m/h bits, per-step clip counts, and per-step loss bits
+//! against a clean channel-tier oracle at the same shard count.
+//!
+//! The last test is the end-to-end acceptance check: `sophia dp-serve` +
+//! N `sophia dp-worker` *processes* on localhost, with a fault plan
+//! severing and reconnecting a worker mid-run, must write a final
+//! checkpoint byte-identical to a single-process `sophia train
+//! --workers N --synthetic` run.
+
+use sophia::coordinator::{
+    run_worker, synthetic_data_seed, DpConfig, DpCoordinator, DpOutcome, FaultPlan, GradSource,
+    SourceFactory, SyntheticGrad, WorkerCfg,
+};
+use sophia::optim::engine::StateKind;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const LENS: [usize; 2] = [48, 17];
+const INIT_SEED: u64 = 11;
+const SEED: u64 = 7;
+const STEPS: usize = 6;
+const SHARDS: usize = 4;
+
+fn n_workers() -> usize {
+    std::env::var("SOPHIA_DP_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(2)
+}
+
+fn base_cfg(workers: usize) -> DpConfig {
+    DpConfig {
+        workers,
+        n_shards: SHARDS,
+        steps: STEPS,
+        hess_interval: 2,
+        seed: SEED,
+        straggler_timeout_ms: 5_000,
+        join_timeout_ms: 20_000,
+        io_timeout_ms: 2_000,
+        ..DpConfig::default()
+    }
+}
+
+/// Everything the bit-exactness contract covers: final P/M/H state,
+/// per-step clip counts, per-step loss bits.
+type Fixed = (Vec<f32>, Vec<f32>, Vec<f32>, Vec<usize>, Vec<u64>);
+
+fn capture(dp: &DpCoordinator) -> Fixed {
+    (
+        dp.flat().buf(StateKind::P).to_vec(),
+        dp.flat().buf(StateKind::M).to_vec(),
+        dp.flat().buf(StateKind::H).to_vec(),
+        dp.clip_counts().to_vec(),
+        dp.records.iter().map(|r| r.loss.to_bits()).collect(),
+    )
+}
+
+/// Clean in-process channel-tier run: the oracle every socket-tier run
+/// must match bit-for-bit.
+fn channel_oracle(workers: usize) -> Fixed {
+    let mut dp = DpCoordinator::synthetic(base_cfg(workers), &LENS, INIT_SEED).expect("oracle");
+    let out = dp.train().expect("oracle train");
+    assert_eq!(out.steps_done, STEPS, "oracle must finish");
+    capture(&dp)
+}
+
+fn assert_bits_eq(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: bit divergence at element {i}: {x} vs {y}");
+    }
+}
+
+fn assert_matches_oracle(tag: &str, got: &Fixed, want: &Fixed) {
+    assert_bits_eq(&format!("{tag} p"), &got.0, &want.0);
+    assert_bits_eq(&format!("{tag} m"), &got.1, &want.1);
+    assert_bits_eq(&format!("{tag} h"), &got.2, &want.2);
+    assert_eq!(got.3, want.3, "{tag}: clip counts diverged");
+    assert_eq!(got.4, want.4, "{tag}: per-step loss bits diverged");
+}
+
+struct TcpRun {
+    out: DpOutcome,
+    fixed: Fixed,
+    client_results: Vec<anyhow::Result<()>>,
+}
+
+/// Run the socket tier end to end inside this process: coordinator on the
+/// test thread, one real TCP client thread per worker (each claiming its
+/// slot id so fault plans target deterministically), with per-client
+/// fault plans and (optionally) a coordinator-side plan for join verbs.
+fn tcp_run(cfg: DpConfig, client_faults: &[(usize, &str)]) -> TcpRun {
+    let workers = cfg.workers;
+    let seed = cfg.seed;
+    let (mut dp, addr) =
+        DpCoordinator::synthetic_over_tcp(cfg, &LENS, INIT_SEED, "127.0.0.1:0").expect("bind");
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let fault = client_faults
+            .iter()
+            .find(|(id, _)| *id == w)
+            .map(|(_, spec)| FaultPlan::parse(spec).expect("test fault plan"))
+            .unwrap_or_default();
+        let addr = addr.to_string();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("tcp-client-{w}"))
+                .spawn(move || {
+                    let wcfg = WorkerCfg {
+                        addr,
+                        worker_id: Some(w),
+                        fault,
+                        io_timeout_ms: 2_000,
+                        backoff_base_ms: 10,
+                        backoff_cap_ms: 100,
+                        max_reconnects: 200,
+                        jitter_seed: w as u64,
+                    };
+                    let data_seed = synthetic_data_seed(seed);
+                    let factory: SourceFactory = Arc::new(move |_id| {
+                        Ok(Box::new(SyntheticGrad { data_seed }) as Box<dyn GradSource>)
+                    });
+                    run_worker(&wcfg, factory)
+                })
+                .expect("spawn tcp client"),
+        );
+    }
+    let out = dp.train().expect("tcp train");
+    let client_results: Vec<anyhow::Result<()>> =
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect();
+    TcpRun { out, fixed: capture(&dp), client_results }
+}
+
+fn assert_clients_ok(run: &TcpRun) {
+    for (w, r) in run.client_results.iter().enumerate() {
+        assert!(r.is_ok(), "client {w} did not exit cleanly: {:?}", r.as_ref().err());
+    }
+}
+
+/// The worker a fault verb targets: the highest slot, so the plan is valid
+/// at every `SOPHIA_DP_WORKERS` matrix point including 1.
+fn victim(workers: usize) -> usize {
+    workers - 1
+}
+
+#[test]
+fn tcp_clean_run_bit_identical_to_channel_tier() {
+    let n = n_workers();
+    let want = channel_oracle(n);
+    let run = tcp_run(base_cfg(n), &[]);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp clean", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert_eq!(c.workers_joined, n, "every worker admitted exactly once");
+    assert_eq!(c.reconnects, 0, "clean run must not reconnect");
+    assert_eq!(c.frames_rejected, 0, "clean run must not reject frames");
+    assert!(c.bytes_sent > 0 && c.bytes_received > 0, "socket traffic must be counted");
+}
+
+#[test]
+fn tcp_severed_worker_reconnects_bit_identical() {
+    let n = n_workers();
+    let v = victim(n);
+    let want = channel_oracle(n);
+    let sever = format!("drop:{v}@3");
+    let slow_tail = "delay:0@5:300,delay:0@6:300".to_string();
+    let faults: Vec<(usize, &str)> = if n > 1 {
+        vec![(v, sever.as_str()), (0, slow_tail.as_str())]
+    } else {
+        vec![(v, sever.as_str())]
+    };
+    let run = tcp_run(base_cfg(n), &faults);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp drop", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert!(c.workers_crashed >= 1, "sever must be observed as a crash");
+    assert!(c.reconnects >= 1, "severed worker must be re-admitted");
+    assert!(c.recoveries >= 1, "losing a member forces a recovery");
+    assert_eq!(c.workers_joined, n, "rejoin must not recount as a first join");
+}
+
+#[test]
+fn tcp_stalled_worker_dropped_then_rejoins_bit_identical() {
+    let n = n_workers();
+    let v = victim(n);
+    let want = channel_oracle(n);
+    let mut cfg = base_cfg(n);
+    cfg.straggler_timeout_ms = 150;
+    // worker 0 delays the post-stall steps (bits unaffected, only wall
+    // clock) so the run outlives the victim's 600ms sleep and its
+    // reconnect is observed rather than racing the shutdown
+    let stall = format!("stall:{v}@3:600");
+    let slow_tail = "delay:0@4:300,delay:0@5:300,delay:0@6:300".to_string();
+    let faults: Vec<(usize, &str)> = if n > 1 {
+        vec![(v, stall.as_str()), (0, slow_tail.as_str())]
+    } else {
+        vec![(v, stall.as_str())]
+    };
+    let run = tcp_run(cfg, &faults);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp stall", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert!(c.workers_dropped >= 1, "stalled worker must be dropped as a straggler");
+    assert!(c.reconnects >= 1, "dropped worker must be re-admitted after the stall");
+    if n > 1 {
+        assert!(c.shards_rebalanced >= 1, "survivors must absorb the straggler's shards");
+    }
+}
+
+#[test]
+fn tcp_garbled_frame_rejected_and_sender_recovers_bit_identical() {
+    let n = n_workers();
+    let v = victim(n);
+    let want = channel_oracle(n);
+    let garble = format!("garble:{v}@2");
+    let slow_tail = "delay:0@4:300,delay:0@5:300".to_string();
+    let faults: Vec<(usize, &str)> = if n > 1 {
+        vec![(v, garble.as_str()), (0, slow_tail.as_str())]
+    } else {
+        vec![(v, garble.as_str())]
+    };
+    let run = tcp_run(base_cfg(n), &faults);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp garble", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert!(c.frames_rejected >= 1, "corrupt frame must be rejected by checksum");
+    assert!(c.reconnects >= 1, "garbling worker is severed and must reconnect");
+}
+
+#[test]
+fn tcp_mid_run_join_at_boundary_bit_identical() {
+    let n = n_workers();
+    if n < 2 {
+        eprintln!("skipping: a join plan needs at least one non-deferred worker");
+        return;
+    }
+    let v = victim(n);
+    let want = channel_oracle(n);
+    let mut cfg = base_cfg(n);
+    cfg.fault = FaultPlan::parse(&format!("join:{v}@3")).expect("join plan");
+    // the deferred worker's client connects immediately and stands by;
+    // the coordinator holds it until boundary 3
+    let run = tcp_run(cfg, &[]);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp join", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert_eq!(c.workers_joined, n, "late joiner must still be counted exactly once");
+    assert_eq!(c.reconnects, 0, "a planned join is not a reconnect");
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: real processes, real checkpoint bytes.
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_sophia")
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sophia_tcp_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn run_ok(mut cmd: std::process::Command, what: &str) {
+    let out = cmd.output().unwrap_or_else(|e| panic!("{what}: spawn failed: {e}"));
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+fn wait_for_port_file(path: &Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if let Ok(addr) = std::fs::read_to_string(path) {
+            let addr = addr.trim().to_string();
+            if !addr.is_empty() {
+                return addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "dp-serve never wrote its port file");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn assert_same_bytes(a_dir: &Path, b_dir: &Path, file: &str) {
+    let a = std::fs::read(a_dir.join(file)).unwrap_or_else(|e| panic!("{file} in {a_dir:?}: {e}"));
+    let b = std::fs::read(b_dir.join(file)).unwrap_or_else(|e| panic!("{file} in {b_dir:?}: {e}"));
+    assert_eq!(a, b, "checkpoint file {file} differs between tiers");
+}
+
+/// The ISSUE acceptance criterion, asserted by machine: `dp-serve` + N
+/// `dp-worker` processes on localhost, one of them severed and
+/// reconnecting mid-run, finish with a final checkpoint byte-identical to
+/// a single-process `train --workers N --synthetic` run at the same shard
+/// count.
+#[test]
+fn e2e_processes_with_sever_match_single_process_checkpoint_bytes() {
+    let n = n_workers();
+    let v = victim(n);
+    let dir = scratch("e2e");
+    let train_ckpt = dir.join("train_ckpt");
+    let serve_ckpt = dir.join("serve_ckpt");
+    let port_file = dir.join("port");
+
+    let common = [
+        "--synthetic",
+        "--params",
+        "64",
+        "--shards",
+        "4",
+        "--steps",
+        "6",
+        "--k",
+        "2",
+        "--seed",
+        "7",
+        "--preset",
+        "nano",
+    ];
+
+    // single-process oracle
+    let mut train = std::process::Command::new(bin());
+    train
+        .arg("train")
+        .args(["--workers", &n.to_string()])
+        .args(common)
+        .args(["--ckpt-dir", train_ckpt.to_str().unwrap()]);
+    run_ok(train, "single-process train");
+
+    // socket-tier coordinator
+    let mut serve = std::process::Command::new(bin());
+    serve
+        .arg("dp-serve")
+        .args(["--workers", &n.to_string()])
+        .args(common)
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--ckpt-dir", serve_ckpt.to_str().unwrap()]);
+    let mut serve = serve.spawn().expect("spawn dp-serve");
+    let addr = wait_for_port_file(&port_file);
+
+    // worker processes; the victim severs its connection at step 3 and
+    // reconnects with backoff
+    let mut workers = Vec::new();
+    for w in 0..n {
+        let mut cmd = std::process::Command::new(bin());
+        cmd.arg("dp-worker")
+            .args(["--connect", &addr])
+            .args(["--worker-id", &w.to_string()])
+            .args(["--synthetic", "--seed", "7"])
+            .args(["--backoff-base-ms", "20", "--backoff-cap-ms", "200"]);
+        if w == v {
+            cmd.args(["--fault-plan", &format!("drop:{v}@3")]);
+        } else if w == 0 {
+            // slow the post-sever steps (wall clock only, bits unchanged)
+            // so the run outlives the victim's reconnect
+            cmd.args(["--fault-plan", "delay:0@4:300,delay:0@5:300"]);
+        }
+        workers.push((w, cmd.spawn().expect("spawn dp-worker")));
+    }
+
+    for (w, mut child) in workers {
+        let status = child.wait().expect("wait dp-worker");
+        assert!(status.success(), "dp-worker {w} exited with {status}");
+    }
+    let status = serve.wait().expect("wait dp-serve");
+    assert!(status.success(), "dp-serve exited with {status}");
+
+    for file in ["params.bin", "m.bin", "h.bin", "meta.json"] {
+        assert_same_bytes(&train_ckpt, &serve_ckpt, file);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -783,6 +783,151 @@ fn prop_dp_fault_recovery_bit_identical() {
 }
 
 #[test]
+fn prop_dp_join_after_recovery_state_over_protocol_matches_filesystem() {
+    // Mid-run join, stacked on a crash recovery: a worker deferred by
+    // `join:w@step` enters at its boundary and trains from the
+    // protocol-delivered `StateSync` in its Welcome. That snapshot must be
+    // bit-identical to the filesystem epoch for the same step (wire
+    // delivery and checkpoint restore are mutually verifiable), the whole
+    // run must stay bit-identical to the clean run at the same shard
+    // count, and the join must be counted exactly once.
+    use sophia::coordinator::{
+        synthetic_data_seed, DpConfig, DpCoordinator, FaultPlan, GradOut, GradSource,
+        SourceFactory, StateSync, SyntheticGrad,
+    };
+    use sophia::optim::engine::StateKind;
+    use std::sync::{Arc, Mutex};
+
+    // Delegates to SyntheticGrad, recording every protocol-delivered
+    // snapshot so the test can compare wire state with filesystem state.
+    struct CaptureSync {
+        inner: SyntheticGrad,
+        worker: usize,
+        sink: Arc<Mutex<Vec<(usize, StateSync)>>>,
+    }
+    impl GradSource for CaptureSync {
+        fn grad(
+            &mut self,
+            step: usize,
+            shard: usize,
+            params: &[f32],
+            out: &mut [f32],
+        ) -> anyhow::Result<GradOut> {
+            self.inner.grad(step, shard, params, out)
+        }
+        fn estimator(
+            &mut self,
+            step: usize,
+            seed: i32,
+            params: &[f32],
+            out: &mut [f32],
+        ) -> anyhow::Result<()> {
+            self.inner.estimator(step, seed, params, out)
+        }
+        fn restore(&mut self, sync: &StateSync) -> anyhow::Result<()> {
+            self.sink.lock().unwrap().push((self.worker, sync.clone()));
+            Ok(())
+        }
+    }
+
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(seed ^ 0x301D);
+        let lens = [1 + rng.below(40) as usize, 80 + rng.below(200) as usize];
+        let steps = 7;
+        let kill_step = 2;
+        let join_step = 4 + rng.below(3) as usize; // 4..=6: strictly after the recovery
+        let joiner = 2usize;
+        let root = std::env::temp_dir()
+            .join(format!("sophia_prop_join_{}_{seed}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mk = |fault: FaultPlan, ckpt: bool| DpConfig {
+            workers: 3,
+            n_shards: 4,
+            steps,
+            hess_interval: 2,
+            seed,
+            ckpt_dir: if ckpt { Some(root.clone()) } else { None },
+            ckpt_every: 1,
+            straggler_timeout_ms: 10_000,
+            fault,
+            ..DpConfig::default()
+        };
+        let (p0, m0, h0, c0, l0) = run_dp(mk(FaultPlan::default(), false), &lens);
+
+        let spec = format!("kill:0@{kill_step},join:{joiner}@{join_step}");
+        let tag = format!("seed {seed} {spec}");
+        let sink: Arc<Mutex<Vec<(usize, StateSync)>>> = Arc::new(Mutex::new(Vec::new()));
+        let data_seed = synthetic_data_seed(seed);
+        let sink_f = sink.clone();
+        let factory: SourceFactory = Arc::new(move |id| {
+            Ok(Box::new(CaptureSync {
+                inner: SyntheticGrad { data_seed },
+                worker: id,
+                sink: sink_f.clone(),
+            }) as Box<dyn GradSource>)
+        });
+        // init params exactly as DpCoordinator::synthetic derives them
+        let n: usize = lens.iter().sum();
+        let mut prng = Rng::new(11).fold(0xD0);
+        let init_p: Vec<f32> = (0..n).map(|_| prng.normal_f32(0.3)).collect();
+        let mut dp = DpCoordinator::new(
+            mk(FaultPlan::parse(&spec).unwrap(), true),
+            &lens,
+            init_p,
+            factory,
+        )
+        .unwrap();
+        let out = dp.train().unwrap();
+        assert!(!out.diverged, "{tag}");
+        assert!(out.counters.recoveries >= 1, "{tag}: kill must trigger recovery");
+        assert_eq!(out.counters.workers_crashed, 1, "{tag}: one crash");
+        assert_eq!(
+            out.counters.workers_joined, 3,
+            "{tag}: initial members + late joiner, each counted once"
+        );
+
+        // the whole faulted run stays bit-identical to the clean one
+        assert_bits_eq(&format!("{tag} p"), &p0, dp.flat().buf(StateKind::P));
+        assert_bits_eq(&format!("{tag} m"), &m0, dp.flat().buf(StateKind::M));
+        assert_bits_eq(&format!("{tag} h"), &h0, dp.flat().buf(StateKind::H));
+        assert_eq!(c0, dp.clip_counts(), "{tag} clip counts");
+        let l: Vec<u64> = dp.records.iter().map(|r| r.loss.to_bits()).collect();
+        assert_eq!(l0, l, "{tag} per-step losses");
+
+        // the joiner got exactly one Welcome, at its planned boundary
+        let syncs = sink.lock().unwrap();
+        let joiner_syncs: Vec<&StateSync> =
+            syncs.iter().filter(|(w, _)| *w == joiner).map(|(_, s)| s).collect();
+        assert_eq!(joiner_syncs.len(), 1, "{tag}: joiner welcomed exactly once");
+        assert_eq!(
+            joiner_syncs[0].step,
+            join_step - 1,
+            "{tag}: joiner enters on the state committed at its boundary"
+        );
+
+        // every protocol-delivered snapshot past step 0 must bit-match the
+        // filesystem epoch of the same step (ckpt_every = 1 guarantees the
+        // epoch exists)
+        for (w, sync) in syncs.iter() {
+            if sync.step == 0 {
+                continue;
+            }
+            let dir = root.join(format!("step-{:06}", sync.step));
+            let (meta, ep, em, eh) = sophia::coordinator::checkpoint::load_state(&dir)
+                .unwrap_or_else(|e| panic!("{tag}: worker {w} sync step {}: {e:#}", sync.step));
+            assert_eq!(meta.step, sync.step, "{tag}: epoch meta step");
+            assert_eq!(meta.optimizer, sync.optimizer, "{tag}: epoch meta optimizer");
+            assert_eq!(meta.preset, sync.run_tag, "{tag}: epoch meta run tag");
+            let stag = format!("{tag} worker {w} sync@{}", sync.step);
+            assert_bits_eq(&format!("{stag} p"), &sync.p, &ep);
+            assert_bits_eq(&format!("{stag} m"), &sync.m, &em);
+            assert_bits_eq(&format!("{stag} h"), &sync.h, &eh);
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
 fn prop_adamw_step_norm_bounded_by_lr_over_eps_regime() {
     // AdamW's per-coordinate update magnitude is ~lr after bias
     // correction; verify it never exceeds lr * 10 for sane inputs.
