@@ -100,7 +100,7 @@ USAGE: sophia <subcommand> [--flags]
           SOPHIA_ENGINE=scalar|blocked|threads:<n>|pool:<n>, default
           pool:<ncpu>.)
          [--workers N] [--shards S] [--straggler-ms T] [--fault-plan SPEC]
-         [--synthetic] [--params P]
+         [--synthetic] [--params P] [--compress none|topk16|topk64]
          (--workers > 1 — or --synthetic at any worker count — runs
           fault-tolerant data-parallel training: a
           coordinator drives N in-process workers over S fixed data shards
@@ -113,13 +113,20 @@ USAGE: sophia <subcommand> [--flags]
           faults: kill:w@step, delay:w@step:ms, tear:step, and the network
           verbs drop:w@step (sever a TCP connection), stall:w@step:ms
           (freeze a socket mid-step), garble:w@step (send one corrupt
-          frame), join:w@step (defer a worker to a mid-run step boundary).
+          frame), join:w@step (defer a worker to a mid-run step boundary);
+          comma-separate clauses, and see `FaultPlan::parse` rustdoc for
+          the normative grammar.
           --synthetic swaps the XLA artifacts for the closed-form quadratic
           gradient source with --params parameters — artifact-free, and
-          byte-comparable with a dp-serve run at the same flags.)
+          byte-comparable with a dp-serve run at the same flags.
+          --compress topk16|topk64 turns on error-feedback sign-top-k
+          gradient compression (~16x / ~64x smaller shard payloads; lossy
+          but deterministic — bit-identical for any worker count). The
+          default none keeps the exact uncompressed f32 stream.)
   dp-serve  --preset b1 --steps 1000 --workers N [--listen 127.0.0.1:0]
          [--shards S] [--straggler-ms T] [--io-timeout-ms 10000]
          [--port-file path] [--synthetic] [--params P] [--ckpt-dir D]
+         [--compress none|topk16|topk64]
          (TCP coordinator: binds --listen (port 0 = OS-assigned; the bound
           address is printed and, with --port-file, written to a file),
           waits for --workers dp-worker processes, then runs the same
@@ -134,12 +141,15 @@ USAGE: sophia <subcommand> [--flags]
   dp-worker --connect host:port [--worker-id W] [--synthetic] [--params P]
          [--preset b1] [--io-timeout-ms 10000] [--backoff-base-ms 50]
          [--backoff-cap-ms 2000] [--max-reconnects 40] [--fault-plan SPEC]
-         [--seed 0] [--data-seed 1]
+         [--seed 0] [--data-seed 1] [--compress none|topk16|topk64]
          (TCP worker: connects to a dp-serve coordinator with capped
           exponential backoff + deterministic jitter, handshakes for a slot
           (--worker-id claims a specific one), receives optimizer state
           over the protocol, and serves gradient shards until Stop.
-          --fault-plan network verbs are executed worker-side.)
+          --fault-plan network verbs are executed worker-side; the grammar
+          is the same comma-separated kill/delay/tear/drop/stall/garble/
+          join clause list documented on FaultPlan::parse. --compress must
+          match the coordinator's mode — mismatched frames are rejected.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]
@@ -196,6 +206,9 @@ pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
         cfg.dp_listen = Some(l.clone());
     }
     cfg.dp_io_timeout_ms = args.u64_or("io-timeout-ms", cfg.dp_io_timeout_ms)?;
+    if let Some(c) = args.flags.get("compress") {
+        cfg.compress = crate::optim::engine::Compression::parse(c)?;
+    }
     if cfg.steps == 0 {
         bail!("--steps must be > 0");
     }
@@ -254,7 +267,7 @@ mod tests {
     fn dp_flags_wire_into_train_config() {
         let a = Args::parse(&argv(
             "train --preset nano --workers 4 --shards 8 --straggler-ms 500 \
-             --fault-plan kill:1@5,tear:4",
+             --fault-plan kill:1@5,tear:4 --compress topk16",
         ))
         .unwrap();
         let c = build_train_config(&a).unwrap();
@@ -262,10 +275,15 @@ mod tests {
         assert_eq!(c.dp_shards, 8);
         assert_eq!(c.straggler_timeout_ms, 500);
         assert_eq!(c.fault_plan.as_deref(), Some("kill:1@5,tear:4"));
+        assert_eq!(c.compress, crate::optim::engine::Compression::TopK16);
         let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
         assert_eq!(d.workers, 1);
         assert_eq!(d.dp_shards, 0);
         assert!(d.fault_plan.is_none());
+        assert_eq!(d.compress, crate::optim::engine::Compression::None);
+        let bad = Args::parse(&argv("train --preset nano --compress gzip")).unwrap();
+        let err = build_train_config(&bad).unwrap_err().to_string();
+        assert!(err.contains("gzip"), "{err}");
         let z = Args::parse(&argv("train --preset nano --workers 0")).unwrap();
         assert!(build_train_config(&z).is_err());
     }
@@ -274,13 +292,14 @@ mod tests {
     fn tcp_flags_wire_into_train_config() {
         let a = Args::parse(&argv(
             "dp-serve --preset nano --workers 2 --listen 127.0.0.1:0 \
-             --io-timeout-ms 750 --fault-plan drop:1@4,garble:0@2",
+             --io-timeout-ms 750 --fault-plan drop:1@4,garble:0@2 --compress topk64",
         ))
         .unwrap();
         let c = build_train_config(&a).unwrap();
         assert_eq!(c.dp_listen.as_deref(), Some("127.0.0.1:0"));
         assert_eq!(c.dp_io_timeout_ms, 750);
         assert_eq!(c.fault_plan.as_deref(), Some("drop:1@4,garble:0@2"));
+        assert_eq!(c.compress, crate::optim::engine::Compression::TopK64);
         let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
         assert!(d.dp_listen.is_none());
         assert_eq!(d.dp_io_timeout_ms, 10_000);

@@ -610,6 +610,10 @@ pub struct TrainConfig {
     pub dp_listen: Option<String>,
     /// TCP tier: per-connection socket read/write timeout (ms).
     pub dp_io_timeout_ms: u64,
+    /// Gradient compression for DP shard results (`--compress
+    /// {none,topk16,topk64}`): error-feedback top-k + sign quantization,
+    /// see `docs/PROTOCOL.md` § CompressedGrad.
+    pub compress: crate::optim::engine::Compression,
 }
 
 impl Default for TrainConfig {
@@ -639,6 +643,7 @@ impl Default for TrainConfig {
             fault_plan: None,
             dp_listen: None,
             dp_io_timeout_ms: 10_000,
+            compress: crate::optim::engine::Compression::None,
         }
     }
 }
@@ -725,6 +730,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("dp", "io_timeout_ms").and_then(|v| v.as_i64()) {
             self.dp_io_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get("dp", "compress").and_then(|v| v.as_str()) {
+            self.compress = crate::optim::engine::Compression::parse(v)?;
         }
         Ok(())
     }
@@ -846,7 +854,8 @@ mod tests {
         let doc = toml::Toml::parse(
             "[dp]\nworkers = 4\nshards = 8\nstraggler_timeout_ms = 250\n\
              fault_plan = \"kill:1@5,tear:4\"\n\
-             listen = \"127.0.0.1:7700\"\nio_timeout_ms = 1500\n",
+             listen = \"127.0.0.1:7700\"\nio_timeout_ms = 1500\n\
+             compress = \"topk16\"\n",
         )
         .unwrap();
         let mut c = TrainConfig::default();
@@ -857,11 +866,17 @@ mod tests {
         assert_eq!(c.fault_plan.as_deref(), Some("kill:1@5,tear:4"));
         assert_eq!(c.dp_listen.as_deref(), Some("127.0.0.1:7700"));
         assert_eq!(c.dp_io_timeout_ms, 1500);
-        // defaults stay single-process with no plan, channel tier
+        assert_eq!(c.compress, crate::optim::engine::Compression::TopK16);
+        // unknown compression modes are named errors
+        let bad = toml::Toml::parse("[dp]\ncompress = \"gzip\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::default().apply_toml(&bad).unwrap_err());
+        assert!(err.contains("gzip"), "{err}");
+        // defaults stay single-process with no plan, channel tier, exact
         let d = TrainConfig::default();
         assert_eq!((d.workers, d.dp_shards), (1, 0));
         assert!(d.fault_plan.is_none());
         assert!(d.dp_listen.is_none());
         assert_eq!(d.dp_io_timeout_ms, 10_000);
+        assert_eq!(d.compress, crate::optim::engine::Compression::None);
     }
 }

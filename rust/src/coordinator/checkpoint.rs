@@ -12,6 +12,10 @@
 //! are shared by the single-process [`Trainer`] and the data-parallel
 //! coordinator in [`super::dp`], which keeps a rolling window of epoch
 //! directories (`step-<n>/`) for crash recovery.
+//!
+//! Blobs may optionally be quantized ([`CkptDtype`]: bf16 or int8 with a
+//! per-block shared scale) via [`save_state_dtype`]; the byte layouts are
+//! specified in `docs/PROTOCOL.md` § Quantized checkpoint blobs.
 
 use super::trainer::Trainer;
 use crate::optim::engine::StateKind;
@@ -22,6 +26,147 @@ use std::path::Path;
 
 /// The state blobs every checkpoint directory carries, in layout order.
 pub const CKPT_BLOBS: [&str; 3] = ["params.bin", "m.bin", "h.bin"];
+
+/// Elements per shared-scale block in the `I8` blob encoding.
+pub const QUANT_BLOCK: usize = 64;
+
+/// On-disk element encoding for the state blobs (see `docs/PROTOCOL.md`
+/// § Quantized checkpoint blobs). `F32` is the historical format — and what
+/// `meta.json` means when it carries no `dtype` key, so f32-era checkpoints
+/// load unchanged. `Bf16` truncates mantissas with round-to-nearest-even;
+/// `I8` stores one shared power-of-two scale per [`QUANT_BLOCK`]-element
+/// block plus one signed byte per element. Both lossy encodings are
+/// idempotent — re-saving a loaded quantized checkpoint reproduces the
+/// identical blob bytes — which is the byte-exact round-trip contract the
+/// tests pin down.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CkptDtype {
+    #[default]
+    F32,
+    Bf16,
+    I8,
+}
+
+impl CkptDtype {
+    /// Inverse of [`Self::name`]; the error names the unknown dtype so a
+    /// checkpoint from a future writer fails loudly instead of panicking.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => CkptDtype::F32,
+            "bf16" => CkptDtype::Bf16,
+            "i8" => CkptDtype::I8,
+            other => bail!("unknown state dtype {other:?} (f32|bf16|i8)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CkptDtype::F32 => "f32",
+            CkptDtype::Bf16 => "bf16",
+            CkptDtype::I8 => "i8",
+        }
+    }
+
+    /// On-disk byte length of one `n`-element blob. Checked: `None` on
+    /// overflow, so an absurd `n_params` from untrusted meta is rejected
+    /// before any allocation.
+    fn blob_len(self, n: usize) -> Option<usize> {
+        match self {
+            CkptDtype::F32 => n.checked_mul(4),
+            CkptDtype::Bf16 => n.checked_mul(2),
+            CkptDtype::I8 => n.div_ceil(QUANT_BLOCK).checked_mul(4)?.checked_add(n),
+        }
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even on the dropped mantissa half.
+/// Values already representable in bf16 (low 16 bits zero) pass through
+/// unchanged, which makes the encoding idempotent.
+fn bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let round = ((b >> 16) & 1).wrapping_add(0x7FFF);
+    (b.wrapping_add(round) >> 16) as u16
+}
+
+fn bf16_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Smallest power of two `s` with `amax / s <= 127` (0 for an all-zero
+/// block). A power-of-two scale makes `q·s` and `(q·s)/s` exact, so
+/// re-quantizing a dequantized block is a fixed point — the property the
+/// byte-exact round-trip contract rests on.
+fn pow2_scale(amax: f32) -> f32 {
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let t = amax / 127.0;
+    let mut s = 1.0f32;
+    while s < t {
+        s *= 2.0;
+    }
+    while s * 0.5 >= t && s * 0.5 > 0.0 {
+        s *= 0.5;
+    }
+    s
+}
+
+/// Encode one state blob in the given dtype (layouts in `docs/PROTOCOL.md`).
+fn encode_blob(data: &[f32], dtype: CkptDtype) -> Vec<u8> {
+    match dtype {
+        CkptDtype::F32 => f32_bytes(data),
+        CkptDtype::Bf16 => {
+            let mut bytes = Vec::with_capacity(data.len() * 2);
+            for v in data {
+                bytes.extend(bf16_bits(*v).to_le_bytes());
+            }
+            bytes
+        }
+        CkptDtype::I8 => {
+            let n = data.len();
+            let mut bytes = Vec::with_capacity(n.div_ceil(QUANT_BLOCK) * 4 + n);
+            for block in data.chunks(QUANT_BLOCK) {
+                let amax = block.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let s = pow2_scale(amax);
+                bytes.extend(s.to_le_bytes());
+                for &x in block {
+                    let q = if s == 0.0 { 0.0 } else { (x / s).round().clamp(-127.0, 127.0) };
+                    bytes.push(q as i8 as u8);
+                }
+            }
+            bytes
+        }
+    }
+}
+
+/// Decode one state blob; `bytes.len()` was already validated against
+/// `dtype.blob_len(n)` by the caller.
+fn decode_blob(bytes: &[u8], n: usize, dtype: CkptDtype) -> Vec<f32> {
+    match dtype {
+        CkptDtype::F32 => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        CkptDtype::Bf16 => bytes
+            .chunks_exact(2)
+            .map(|c| bf16_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        CkptDtype::I8 => {
+            let mut out = Vec::with_capacity(n);
+            let mut off = 0usize;
+            while out.len() < n {
+                let s = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+                let blk = (n - out.len()).min(QUANT_BLOCK);
+                for &b in &bytes[off..off + blk] {
+                    out.push(b as i8 as f32 * s);
+                }
+                off += blk;
+            }
+            out
+        }
+    }
+}
 
 /// Checkpoint identity: enough to refuse restoring into the wrong run.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -61,13 +206,29 @@ fn write_blob_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<u64> {
     Ok(fnv1a64(bytes))
 }
 
-/// Save one checkpoint into `dir` (created if missing). Blobs land first via
-/// per-file atomic renames; `meta.json` (with the checksums) commits last.
+/// Save one checkpoint into `dir` (created if missing) in the historical
+/// full-precision f32 blob format. Blobs land first via per-file atomic
+/// renames; `meta.json` (with the checksums) commits last.
 pub fn save_state(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &[f32]) -> Result<()> {
+    save_state_dtype(dir, meta, p, m, h, CkptDtype::F32)
+}
+
+/// [`save_state`] with an explicit blob dtype. For [`CkptDtype::F32`] the
+/// output is byte-identical to the historical format (the `dtype` meta key
+/// is written only for quantized blobs, so pre-quantization readers and
+/// byte-compare tests see no change on the f32 path).
+pub fn save_state_dtype(
+    dir: &Path,
+    meta: &CkptMeta,
+    p: &[f32],
+    m: &[f32],
+    h: &[f32],
+    dtype: CkptDtype,
+) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let mut sums = BTreeMap::new();
     for (name, data) in CKPT_BLOBS.iter().zip([p, m, h]) {
-        let sum = write_blob_atomic(dir, name, &f32_bytes(data))?;
+        let sum = write_blob_atomic(dir, name, &encode_blob(data, dtype))?;
         sums.insert(name.to_string(), Json::Str(format!("{sum:016x}")));
     }
     let mut obj = BTreeMap::new();
@@ -76,6 +237,9 @@ pub fn save_state(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &[f32]) 
     obj.insert("preset".to_string(), Json::Str(meta.preset.clone()));
     obj.insert("optimizer".to_string(), Json::Str(meta.optimizer.clone()));
     obj.insert("n_params".to_string(), Json::Num(meta.n_params as f64));
+    if dtype != CkptDtype::F32 {
+        obj.insert("dtype".to_string(), Json::Str(dtype.name().to_string()));
+    }
     obj.insert("checksums".to_string(), Json::Obj(sums));
     write_blob_atomic(dir, "meta.json", Json::Obj(obj).to_string().as_bytes())?;
     Ok(())
@@ -108,18 +272,25 @@ pub fn save_state_atomic(dir: &Path, meta: &CkptMeta, p: &[f32], m: &[f32], h: &
     Ok(())
 }
 
-fn read_blob(dir: &Path, name: &str, n_params: usize, sums: &Json) -> Result<Vec<f32>> {
+fn read_blob(
+    dir: &Path,
+    name: &str,
+    n_params: usize,
+    dtype: CkptDtype,
+    sums: &Json,
+) -> Result<Vec<f32>> {
     let path = dir.join(name);
     // n_params comes from untrusted meta.json: checked arithmetic, and the
     // actual file length is the allocation bound, never the declared count
-    let expect = n_params
-        .checked_mul(4)
+    let expect = dtype
+        .blob_len(n_params)
         .ok_or_else(|| anyhow!("meta.json in {dir:?}: absurd n_params {n_params} (overflows)"))?;
     let bytes = std::fs::read(&path).with_context(|| format!("reading checkpoint blob {path:?}"))?;
     if bytes.len() != expect {
         bail!(
-            "checkpoint blob {path:?} is truncated: {} bytes on disk, expected {expect} ({n_params} f32s)",
+            "checkpoint blob {path:?} is truncated: {} bytes on disk, expected {expect} ({n_params} {} elements)",
             bytes.len(),
+            dtype.name(),
         );
     }
     let want = sums
@@ -134,11 +305,7 @@ fn read_blob(dir: &Path, name: &str, n_params: usize, sums: &Json) -> Result<Vec
             "checkpoint blob {path:?} is corrupt: checksum {got:016x} != recorded {want:016x}"
         );
     }
-    let mut out = Vec::with_capacity(n_params);
-    for c in bytes.chunks_exact(4) {
-        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
-    Ok(out)
+    Ok(decode_blob(&bytes, n_params, dtype))
 }
 
 /// Load and verify one checkpoint directory. Errors name the offending file
@@ -155,6 +322,18 @@ pub fn load_state(dir: &Path) -> Result<(CkptMeta, Vec<f32>, Vec<f32>, Vec<f32>)
     let sums = meta.get("checksums").ok_or_else(|| {
         anyhow!("{meta_path:?} has no checksums table — pre-crash-consistent checkpoint; re-save it")
     })?;
+    // Absent key = the historical f32 format (forward compat both ways: old
+    // checkpoints load here, and an unknown future dtype is a named error,
+    // never a panic or a misparse).
+    let dtype = match meta.get("dtype") {
+        None => CkptDtype::F32,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("{meta_path:?}: dtype must be a string"))?;
+            CkptDtype::parse(s).map_err(|e| anyhow!("{meta_path:?}: {e}"))?
+        }
+    };
     let ck = CkptMeta {
         step: meta.get("step").and_then(Json::as_usize).unwrap_or(0),
         preset: meta
@@ -169,9 +348,9 @@ pub fn load_state(dir: &Path) -> Result<(CkptMeta, Vec<f32>, Vec<f32>, Vec<f32>)
             .to_string(),
         n_params,
     };
-    let p = read_blob(dir, "params.bin", n_params, sums)?;
-    let m = read_blob(dir, "m.bin", n_params, sums)?;
-    let h = read_blob(dir, "h.bin", n_params, sums)?;
+    let p = read_blob(dir, "params.bin", n_params, dtype, sums)?;
+    let m = read_blob(dir, "m.bin", n_params, dtype, sums)?;
+    let h = read_blob(dir, "h.bin", n_params, dtype, sums)?;
     Ok((ck, p, m, h))
 }
 
@@ -358,6 +537,95 @@ mod tests {
             );
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn quantized_save_load_resave_is_byte_exact() {
+        for dtype in [CkptDtype::Bf16, CkptDtype::I8] {
+            let dir = tdir(&format!("quant_{}", dtype.name()));
+            let (p, m, h) = blobs(131); // 2 full 64-blocks + a 3-element tail
+            save_state_dtype(&dir, &meta(131), &p, &m, &h, dtype).unwrap();
+            let (ck, p2, m2, h2) = load_state(&dir).unwrap();
+            assert_eq!(ck, meta(131));
+            // lossy but bounded: per-block int8 error <= scale/2, and the
+            // bf16 relative error <= 2^-8
+            for (a, b) in [(&p, &p2), (&m, &m2), (&h, &h2)] {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert!((x - y).abs() <= x.abs() * 0.02 + 0.6, "{dtype:?}: {x} vs {y}");
+                }
+            }
+            // the round-trip contract: re-saving the loaded state reproduces
+            // every file byte-for-byte (quantization is idempotent)
+            let dir2 = tdir(&format!("quant_{}_resave", dtype.name()));
+            save_state_dtype(&dir2, &meta(131), &p2, &m2, &h2, dtype).unwrap();
+            for name in CKPT_BLOBS.iter().chain(["meta.json"].iter()) {
+                let a = std::fs::read(dir.join(name)).unwrap();
+                let b = std::fs::read(dir2.join(name)).unwrap();
+                assert_eq!(a, b, "{dtype:?}: {name} must round-trip byte-exactly");
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+            std::fs::remove_dir_all(&dir2).unwrap();
+        }
+    }
+
+    #[test]
+    fn quantized_blob_sizes_and_f32_meta_stay_compatible() {
+        // f32 saves must not grow a dtype key (byte-compat with the PR-6/7
+        // format and its byte-compare e2e tests) ...
+        let dir = tdir("f32_compat");
+        let (p, m, h) = blobs(16);
+        save_state(&dir, &meta(16), &p, &m, &h).unwrap();
+        let text = std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        assert!(!text.contains("dtype"), "f32 meta must stay dtype-free: {text}");
+        // ... and f32-era checkpoints (no dtype key) load bit-exactly
+        let (_, p2, _, _) = load_state(&dir).unwrap();
+        assert!(p.iter().zip(p2.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        std::fs::remove_dir_all(&dir).unwrap();
+        // declared blob lengths match what encode_blob produces
+        for n in [0usize, 1, 63, 64, 65, 131] {
+            let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            for dtype in [CkptDtype::F32, CkptDtype::Bf16, CkptDtype::I8] {
+                assert_eq!(
+                    encode_blob(&data, dtype).len(),
+                    dtype.blob_len(n).unwrap(),
+                    "{dtype:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_dtype_is_a_named_error_not_a_panic() {
+        let dir = tdir("unknown_dtype");
+        let (p, m, h) = blobs(8);
+        save_state_dtype(&dir, &meta(8), &p, &m, &h, CkptDtype::Bf16).unwrap();
+        // doctor the meta the way a future writer with a new dtype would
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).unwrap();
+        std::fs::write(&meta_path, text.replace("\"bf16\"", "\"fp4\"")).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("unknown state dtype"), "{err}");
+        assert!(err.contains("fp4"), "error should name the dtype: {err}");
+        // a non-string dtype is also an error, not a panic
+        std::fs::write(&meta_path, text.replace("\"bf16\"", "7")).unwrap();
+        let err = format!("{:#}", load_state(&dir).unwrap_err());
+        assert!(err.contains("dtype must be a string"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pow2_scale_brackets_amax_and_quantization_saturates_at_127() {
+        for amax in [1e-30f32, 0.5, 1.0, 3.7, 126.9, 127.0, 128.0, 1e30] {
+            let s = pow2_scale(amax);
+            assert!(s > 0.0);
+            assert!(amax / s <= 127.0, "amax={amax} s={s}");
+            assert!(amax / (s * 0.5) > 127.0 || s * 0.5 == 0.0, "s not minimal: amax={amax} s={s}");
+        }
+        assert_eq!(pow2_scale(0.0), 0.0);
+        // one block whose max quantizes to exactly +-127
+        let data: Vec<f32> = (0..64).map(|i| if i == 5 { -3.7 } else { 0.01 }).collect();
+        let bytes = encode_blob(&data, CkptDtype::I8);
+        assert_eq!(bytes[4 + 5] as i8, -((3.7f32 / pow2_scale(3.7)).round() as i8));
     }
 
     #[test]

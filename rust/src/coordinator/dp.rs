@@ -44,13 +44,15 @@ use crate::config::{ModelConfig, Optimizer, OutRole, TrainConfig};
 use crate::data::{self, Loader, Split};
 use crate::metrics::{HealthCounters, StepRecord};
 use crate::optim::engine::{
-    default_threads, reduce_fixed_order, AlignedBuf, Backend, FlatState, StateKind, UpdateKernel,
+    default_threads, ef_compress_into, reduce_fixed_order, AlignedBuf, Backend, Compression,
+    FlatState, ScalarOracle, StateKind, UpdateKernel,
 };
 use crate::optim::rules::{self, l2_norm, StepCtx, UpdateRule, GRAD_ARTIFACT};
 use crate::rng::Rng;
 use crate::runtime::{Binds, ModelState, Program, Runtime, Session};
 use crate::schedule::Schedule;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
 use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -99,7 +101,41 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
-    /// Parse a comma-separated spec. Empty string = empty plan.
+    /// Parse a comma-separated fault spec. The empty string is the empty
+    /// plan; whitespace around items is ignored.
+    ///
+    /// Grammar (one verb per item, `w` = worker id, `step` = 1-based
+    /// training step, `ms` = milliseconds):
+    ///
+    /// | item | fires |
+    /// |---|---|
+    /// | `kill:w@step` | worker `w` exits silently at `step` (crash) |
+    /// | `delay:w@step:ms` | worker sleeps `ms` before computing (straggler) |
+    /// | `tear:step` | the epoch checkpoint at `step` is truncated mid-blob |
+    /// | `drop:w@step` | worker severs its connection, then reconnects (TCP) |
+    /// | `stall:w@step:ms` | worker freezes `ms` with its socket open (TCP) |
+    /// | `garble:w@step` | worker sends one checksum-corrupt frame (TCP) |
+    /// | `join:w@step` | worker enters at the boundary before `step` |
+    ///
+    /// ```
+    /// use sophia::coordinator::FaultPlan;
+    ///
+    /// let plan = FaultPlan::parse("kill:1@5, delay:0@3:250, tear:4").unwrap();
+    /// assert!(plan.kill_at(1, 5) && !plan.kill_at(1, 4));
+    /// assert_eq!(plan.delay_ms(0, 3), Some(250));
+    /// assert_eq!(plan.tears, vec![4]);
+    ///
+    /// let net = FaultPlan::parse("drop:1@4, stall:0@2:150, garble:2@3, join:1@5").unwrap();
+    /// assert!(net.drop_at(1, 4));
+    /// assert_eq!(net.stall_ms(0, 2), Some(150));
+    /// assert!(net.garble_at(2, 3));
+    /// assert_eq!(net.join_step(1), Some(5));
+    ///
+    /// assert!(FaultPlan::parse("").unwrap().is_empty());
+    /// // unknown verbs and malformed coordinates are named errors
+    /// assert!(FaultPlan::parse("boom:1@2").is_err());
+    /// assert!(FaultPlan::parse("kill:1").is_err());
+    /// ```
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::default();
         for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -547,6 +583,21 @@ pub enum FromWorker {
         gnorm: f64,
         buf: Vec<f32>,
     },
+    /// A shard result in the error-feedback compressed encoding (see
+    /// `docs/PROTOCOL.md`): `bytes` is a self-describing top-k stream over
+    /// `n` elements. Sent instead of `ShardDone` when the run's
+    /// [`Compression`] mode is lossy; the coordinator validates the header
+    /// against its own configured mode before decoding.
+    CompressedDone {
+        worker: usize,
+        gen: u64,
+        step: usize,
+        shard: usize,
+        loss: f64,
+        gnorm: f64,
+        n: usize,
+        bytes: Vec<u8>,
+    },
     Fatal {
         worker: usize,
         msg: String,
@@ -557,6 +608,7 @@ fn worker_main(
     id: usize,
     factory: SourceFactory,
     fault: FaultPlan,
+    compress: Compression,
     rx: Receiver<ToWorker>,
     tx: Sender<FromWorker>,
 ) {
@@ -567,10 +619,19 @@ fn worker_main(
             return;
         }
     };
+    // Error-feedback residuals, one per shard this worker has computed.
+    // Keyed by shard (not worker) so the residual stream is a pure function
+    // of (shard, step) and the run stays bit-identical across worker
+    // counts. Cleared on every Welcome: a (re)admission resets the stream
+    // to the coordinator's snapshot, and replayed steps must not see
+    // residual state from the aborted timeline.
+    let mut residuals: HashMap<usize, Vec<f32>> = HashMap::new();
+    let oracle = ScalarOracle;
     let _ = tx.send(FromWorker::Ready { worker: id });
     while let Ok(cmd) = rx.recv() {
         match cmd {
             ToWorker::Welcome { sync, .. } => {
+                residuals.clear();
                 if let Err(e) = src.restore(&sync) {
                     let _ = tx.send(FromWorker::Fatal { worker: id, msg: format!("{e:#}") });
                     return;
@@ -593,14 +654,33 @@ fn worker_main(
                     buf.resize(params.len(), 0.0);
                     match src.grad(step, shard, &params, &mut buf) {
                         Ok(o) => {
-                            let msg = FromWorker::ShardDone {
-                                worker: id,
-                                gen,
-                                step,
-                                shard,
-                                loss: o.loss,
-                                gnorm: o.gnorm,
-                                buf,
+                            let msg = if compress.keep().is_some() {
+                                let r = residuals
+                                    .entry(shard)
+                                    .or_insert_with(|| vec![0.0; params.len()]);
+                                r.resize(params.len(), 0.0);
+                                let mut bytes = Vec::new();
+                                ef_compress_into(&oracle, &buf, r, compress, &mut bytes);
+                                FromWorker::CompressedDone {
+                                    worker: id,
+                                    gen,
+                                    step,
+                                    shard,
+                                    loss: o.loss,
+                                    gnorm: o.gnorm,
+                                    n: params.len(),
+                                    bytes,
+                                }
+                            } else {
+                                FromWorker::ShardDone {
+                                    worker: id,
+                                    gen,
+                                    step,
+                                    shard,
+                                    loss: o.loss,
+                                    gnorm: o.gnorm,
+                                    buf,
+                                }
                             };
                             if tx.send(msg).is_err() {
                                 return;
@@ -692,6 +772,7 @@ pub trait Transport {
 pub struct ChannelTransport {
     factory: SourceFactory,
     fault: FaultPlan,
+    compress: Compression,
     slots: Vec<ChannelSlot>,
     rx: Receiver<FromWorker>,
     /// Keeps the result channel open even if every worker is gone, so
@@ -708,9 +789,14 @@ impl ChannelTransport {
     /// Spawn every worker whose entry is not deferred by a `join:w@step`
     /// plan entry; deferred workers get an empty slot until
     /// [`Transport::activate`] fires at their boundary.
-    pub fn new(workers: usize, factory: SourceFactory, fault: FaultPlan) -> Self {
+    pub fn new(
+        workers: usize,
+        factory: SourceFactory,
+        fault: FaultPlan,
+        compress: Compression,
+    ) -> Self {
         let (tx, rx) = channel();
-        let mut t = ChannelTransport { factory, fault, slots: Vec::new(), rx, tx };
+        let mut t = ChannelTransport { factory, fault, compress, slots: Vec::new(), rx, tx };
         for id in 0..workers {
             t.slots.push(ChannelSlot { tx: None, handle: None });
             if t.fault.join_step(id).is_none() {
@@ -724,10 +810,11 @@ impl ChannelTransport {
         let (wtx, wrx) = channel();
         let f = self.factory.clone();
         let fault = self.fault.clone();
+        let compress = self.compress;
         let out = self.tx.clone();
         let handle = std::thread::Builder::new()
             .name(format!("dp-worker-{id}"))
-            .spawn(move || worker_main(id, f, fault, wrx, out))
+            .spawn(move || worker_main(id, f, fault, compress, wrx, out))
             .expect("spawn dp worker");
         self.slots[id] = ChannelSlot { tx: Some(wtx), handle: Some(handle) };
     }
@@ -847,6 +934,11 @@ pub struct DpConfig {
     /// runs); recovery refuses epochs from a different run.
     pub run_tag: String,
     pub fault: FaultPlan,
+    /// Gradient compression for worker→coordinator shard results:
+    /// error-feedback top-k (`topk16` ≈ 16×, `topk64` ≈ 64×) or
+    /// [`Compression::None`] for the exact f32 path, which stays
+    /// byte-identical to the uncompressed protocol.
+    pub compress: Compression,
 }
 
 impl Default for DpConfig {
@@ -871,6 +963,7 @@ impl Default for DpConfig {
             max_recoveries: 8,
             run_tag: "dp".to_string(),
             fault: FaultPlan::default(),
+            compress: Compression::None,
         }
     }
 }
@@ -948,6 +1041,10 @@ pub struct DpCoordinator {
     gen: u64,
     grads: Vec<Option<Vec<f32>>>,
     spare: Vec<Vec<f32>>,
+    /// Raw/encoded byte totals of every accepted compressed shard result,
+    /// folded into `counters.compression_ratio` at the end of the run.
+    comp_raw: usize,
+    comp_enc: usize,
     pub step: usize,
     pub lifecycle: Lifecycle,
     pub counters: HealthCounters,
@@ -979,7 +1076,8 @@ impl DpCoordinator {
         if cfg.workers == 0 {
             bail!("data-parallel run needs at least one worker");
         }
-        let link = ChannelTransport::new(cfg.workers, factory.clone(), cfg.fault.clone());
+        let link =
+            ChannelTransport::new(cfg.workers, factory.clone(), cfg.fault.clone(), cfg.compress);
         Self::build(cfg, leaf_lens, init_p, factory, Box::new(link))
     }
 
@@ -1059,6 +1157,8 @@ impl DpCoordinator {
             gen: 0,
             grads: (0..n_shards).map(|_| None).collect(),
             spare: Vec::new(),
+            comp_raw: 0,
+            comp_enc: 0,
             step: 0,
             lifecycle: Lifecycle::default(),
             counters: HealthCounters::default(),
@@ -1254,6 +1354,9 @@ impl DpCoordinator {
                     first_fatal.get_or_insert(msg);
                 }
                 Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                // stale compressed results between steps carry no reusable
+                // buffer; drop them
+                Ok(Event::Msg(FromWorker::CompressedDone { .. })) => {}
                 Ok(Event::Msg(FromWorker::Ready { .. })) => {}
                 Ok(Event::Closed { worker }) => self.on_closed(worker),
                 Err(RecvTimeoutError::Timeout) => break,
@@ -1301,6 +1404,9 @@ impl DpCoordinator {
             match self.link.recv_timeout(left) {
                 Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
                 Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                // stale compressed results between steps carry no reusable
+                // buffer; drop them
+                Ok(Event::Msg(FromWorker::CompressedDone { .. })) => {}
                 Ok(Event::Msg(FromWorker::Fatal { worker, msg })) => {
                     eprintln!("dp: worker {worker} fatal between steps: {msg}");
                     if worker < self.health.len() && self.health[worker] == WorkerHealth::Alive {
@@ -1459,6 +1565,46 @@ impl DpCoordinator {
                         self.spare.push(buf);
                         continue;
                     }
+                    shard_loss[shard] = loss;
+                    shard_gnorm[shard] = gnorm;
+                    self.grads[shard] = Some(buf);
+                    pending[shard] = false;
+                    n_pending -= 1;
+                }
+                Ok(Event::Msg(FromWorker::CompressedDone {
+                    worker,
+                    gen,
+                    step,
+                    shard,
+                    loss,
+                    gnorm,
+                    n,
+                    bytes,
+                })) => {
+                    self.counters.heartbeats += 1;
+                    // same full-distrust discipline as ShardDone, plus the
+                    // encoded stream must validate and its self-described
+                    // (mode, n) must match the run's configuration
+                    let decoded = Compression::validate(&bytes).ok();
+                    let fresh = worker < self.health.len()
+                        && gen == self.gen
+                        && step == t
+                        && shard < s_count
+                        && n == self.fs.len()
+                        && decoded == Some((self.cfg.compress, n))
+                        && self.health[worker] == WorkerHealth::Alive
+                        && assigned[shard] == worker
+                        && pending[shard];
+                    if !fresh {
+                        continue;
+                    }
+                    let mut buf = self.spare.pop().unwrap_or_default();
+                    buf.clear();
+                    buf.resize(n, 0.0);
+                    self.kernel.decompress_accumulate(&bytes, 1.0, &mut buf);
+                    self.comp_raw += n * 4;
+                    self.comp_enc += bytes.len();
+                    self.counters.bytes_saved += (n * 4).saturating_sub(bytes.len());
                     shard_loss[shard] = loss;
                     shard_gnorm[shard] = gnorm;
                     self.grads[shard] = Some(buf);
@@ -1747,6 +1893,9 @@ impl DpCoordinator {
             match self.link.recv_timeout(left) {
                 Ok(Event::Joined { worker, retries }) => self.greet_joiner(worker, retries),
                 Ok(Event::Msg(FromWorker::ShardDone { buf, .. })) => self.spare.push(buf),
+                // stale compressed results between steps carry no reusable
+                // buffer; drop them
+                Ok(Event::Msg(FromWorker::CompressedDone { .. })) => {}
                 Ok(Event::Closed { worker }) => self.on_closed(worker),
                 Ok(Event::Msg(_)) => {}
                 Err(RecvTimeoutError::Timeout) => break,
@@ -1808,6 +1957,9 @@ impl DpCoordinator {
         self.counters.bytes_sent = net.bytes_sent;
         self.counters.bytes_received = net.bytes_received;
         self.counters.frames_rejected = net.frames_rejected;
+        if self.comp_enc > 0 {
+            self.counters.compression_ratio = self.comp_raw as f64 / self.comp_enc as f64;
+        }
         Ok(DpOutcome {
             steps_done: self.step,
             final_loss: self.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
@@ -1892,6 +2044,7 @@ fn dp_parts_from(train: &TrainConfig) -> Result<(DpConfig, Vec<usize>, Vec<f32>,
         max_recoveries: 8,
         run_tag: train.preset.clone(),
         fault: FaultPlan::resolve(train.fault_plan.as_deref())?,
+        compress: train.compress,
     };
     let ghat = rule.estimator().artifact();
     let seed = train.seed;
@@ -2267,6 +2420,40 @@ mod tests {
         assert!(bits_eq(&late.m, &m));
         assert!(bits_eq(&late.h, &h));
         std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn compressed_run_is_deterministic_and_counts_savings() {
+        let mk = |compress| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            compress,
+            ..DpConfig::default()
+        };
+        let (a, p0, m0, h0, c0) = run_synthetic(mk(Compression::TopK16), &LENS);
+        let (b, p1, m1, h1, c1) = run_synthetic(mk(Compression::TopK16), &LENS);
+        assert_eq!(a.steps_done, 5);
+        assert!(!a.diverged);
+        assert!(bits_eq(&p0, &p1), "compressed runs must be deterministic");
+        assert!(bits_eq(&m0, &m1));
+        assert!(bits_eq(&h0, &h1));
+        assert_eq!(c0, c1);
+        // 5 steps x 4 shards, every compressed completion heartbeats
+        assert_eq!(a.counters.heartbeats, 20);
+        assert!(a.counters.bytes_saved > 0, "lossy mode must save bytes");
+        assert!(
+            a.counters.compression_ratio > 8.0,
+            "topk16 should compress ~16x, got {}",
+            a.counters.compression_ratio
+        );
+        assert_eq!(b.counters.bytes_saved, a.counters.bytes_saved);
+        // the exact path reports no savings and different (exact) params
+        let (exact, pe, _, _, _) = run_synthetic(mk(Compression::None), &LENS);
+        assert_eq!(exact.counters.bytes_saved, 0);
+        assert_eq!(exact.counters.compression_ratio, 0.0);
+        assert!(!bits_eq(&p0, &pe), "lossy compression must actually be lossy");
     }
 
     #[test]

@@ -9,77 +9,30 @@
 //! the fault-matrix tests assert socket runs bit-identical to in-process
 //! runs.
 //!
-//! # Frame layout
-//!
-//! Every message travels in one length-prefixed binary frame. No serde —
-//! the encoding is hand-rolled little-endian, like the checkpoint format:
-//!
-//! ```text
-//! offset  size  field
-//! 0       4     magic "SDP1"
-//! 4       2     version (currently 1, u16 LE)
-//! 6       2     flags (0; reserved)
-//! 8       8     generation (u64 LE; informational — authoritative fencing
-//!               is the `gen` field inside Step/ShardDone payloads)
-//! 16      4     payload length (u32 LE, hard-capped at MAX_FRAME_LEN and
-//!               validated BEFORE any allocation)
-//! 20      8     FNV-1a 64 checksum of the payload (u64 LE, same function
-//!               as checkpoint meta.json checksums)
-//! 28      …     payload (first byte = message tag)
-//! ```
+//! **The wire specification lives in `docs/PROTOCOL.md`** — the normative
+//! reference for the SDP1 frame layout (magic/version/length/checksum
+//! header), the message grammar (`Hello` 0x01, `ShardDone` 0x02, `Fatal`
+//! 0x03, `CompressedGrad` 0x04, `Welcome` 0x10, `Step` 0x11, `Stop` 0x12),
+//! generation fencing, the Hello/Welcome handshake and reconnect backoff,
+//! checksummed `StateSync` blobs, the compressed-gradient stream, and the
+//! deterministic fault verbs. This module is its implementation; the
+//! constants below (`MAGIC`, `VERSION`, `HEADER_LEN`, `MAX_FRAME_LEN`, the
+//! tag bytes) are the single source the spec documents.
 //!
 //! A frame that fails magic, version, length, or checksum validation is
 //! rejected with an error naming what was wrong, counted in
 //! `frames_rejected`, and the connection is severed — a corrupt frame can
 //! never become a protocol message.
-//!
-//! # Messages
-//!
-//! Client → server: `Hello` (tag 0x01: claimed worker id or "any", backoff
-//! retries burned), `ShardDone` (0x02), `Fatal` (0x03). Server → client:
-//! `Welcome` (0x10: assigned worker id, generation, committed step, and a
-//! full [`StateSync`] — checkpoint distribution over the protocol, each
-//! state blob carrying the same FNV-1a checksum `meta.json` would record),
-//! `Step` (0x11: generation, step, params, assigned shard ids), `Stop`
-//! (0x12).
-//!
-//! # Handshake, generations, reconnect
-//!
-//! A connecting worker sends `Hello` and waits for `Welcome`; the
-//! coordinator assigns the slot (a claimed id is granted only if that slot
-//! is free — the transport stamps every subsequent message with the slot
-//! id, so a lying client cannot impersonate another worker). Admission into
-//! the step rotation happens only at a step boundary. Every recovery bumps
-//! the generation; a stale worker's results carry the old generation and
-//! are discarded by the coordinator's freshness check.
-//!
-//! A worker that loses its connection reconnects with capped exponential
-//! backoff plus deterministic jitter (`backoff_base_ms << attempt`, capped
-//! at `backoff_cap_ms`; defaults 50ms/2s, at most `max_reconnects`
-//! attempts) and re-enters through the same Hello/Welcome handshake — the
-//! fresh `Welcome` re-delivers current state, so no shared filesystem is
-//! needed. Read/write timeouts (`DpConfig::io_timeout_ms`, default 10s)
-//! bound every socket operation; an idle wait (no bytes at all) is not an
-//! error, but a timeout mid-frame severs the connection.
-//!
-//! # Fault injection
-//!
-//! The client honors the network verbs of [`FaultPlan`] deterministically,
-//! each firing at most once per client process: `drop:w@step` severs the
-//! socket on receipt of that step (then reconnects), `stall:w@step:ms`
-//! sleeps with the socket open (the coordinator sees a silent-but-connected
-//! straggler), `garble:w@step` sends one deliberately corrupt frame in
-//! place of its first shard result (the server must reject it by checksum
-//! and sever), and `kill:w@step` vanishes without reconnecting.
 
 use super::dp::{
     Event, FaultPlan, FromWorker, GradSource, NetStats, SourceFactory, StateSync, ToWorker,
     Transport,
 };
 use crate::coordinator::checkpoint::fnv1a64;
+use crate::optim::engine::{ef_compress_into, Compression, ScalarOracle};
 use crate::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -106,6 +59,7 @@ const MAX_SLOTS: usize = 1024;
 const TAG_HELLO: u8 = 0x01;
 const TAG_SHARD_DONE: u8 = 0x02;
 const TAG_FATAL: u8 = 0x03;
+const TAG_COMPRESSED_GRAD: u8 = 0x04;
 const TAG_WELCOME: u8 = 0x10;
 const TAG_STEP: u8 = 0x11;
 const TAG_STOP: u8 = 0x12;
@@ -269,6 +223,15 @@ impl Enc {
         self.buf[start - 8..start].copy_from_slice(&sum.to_le_bytes());
         self
     }
+    /// Checksummed raw byte blob: count + FNV-1a of the bytes + bytes.
+    /// Used for the compressed-gradient stream, so corruption is named at
+    /// the field rather than only at the frame.
+    fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.u64(b.len() as u64);
+        self.u64(fnv1a64(b));
+        self.buf.extend_from_slice(b);
+        self
+    }
     fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -358,6 +321,21 @@ impl<'a> Dec<'a> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+    /// Checksummed counterpart of [`Enc::bytes`]. The declared count is
+    /// bounds-checked by `take` before any allocation.
+    fn bytes(&mut self, field: &str) -> Result<Vec<u8>> {
+        let count = self.usize(field)?;
+        let want = self.u64(field)?;
+        let b = self.take(count, field)?;
+        let got = fnv1a64(b);
+        if got != want {
+            bail!(
+                "{} byte blob {field} is corrupt: checksum {got:016x} != declared {want:016x}",
+                self.what
+            );
+        }
+        Ok(b.to_vec())
     }
     fn done(self) -> Result<()> {
         if self.off != self.buf.len() {
@@ -500,6 +478,28 @@ fn encode_shard_done(
     e.finish()
 }
 
+/// `CompressedGrad` (tag 0x04): a shard result whose gradient travels as
+/// the self-describing error-feedback top-k stream instead of raw f32.
+/// `n` is the uncompressed element count; the stream is additionally
+/// checksummed as a field (see `docs/PROTOCOL.md` § CompressedGrad).
+#[allow(clippy::too_many_arguments)]
+fn encode_compressed_done(
+    worker: usize,
+    gen: u64,
+    step: usize,
+    shard: usize,
+    loss: f64,
+    gnorm: f64,
+    n: usize,
+    bytes: &[u8],
+) -> Vec<u8> {
+    let mut e = Enc::new(TAG_COMPRESSED_GRAD);
+    e.u64(worker as u64).u64(gen).u64(step as u64).u64(shard as u64);
+    e.f64(loss).f64(gnorm).u64(n as u64);
+    e.bytes(bytes);
+    e.finish()
+}
+
 fn encode_fatal(worker: usize, msg: &str) -> Vec<u8> {
     let mut e = Enc::new(TAG_FATAL);
     // truncate to the cap on a char boundary (String::truncate panics
@@ -528,6 +528,21 @@ pub fn decode_from_worker(payload: &[u8]) -> Result<FromWorker> {
             let buf = d.f32s("gradient")?;
             d.done()?;
             Ok(FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf })
+        }
+        TAG_COMPRESSED_GRAD => {
+            let worker = d.usize("worker id")?;
+            let gen = d.u64("generation")?;
+            let step = d.usize("step")?;
+            let shard = d.usize("shard id")?;
+            let loss = d.f64("loss")?;
+            let gnorm = d.f64("gnorm")?;
+            let n = d.usize("element count")?;
+            let bytes = d.bytes("compressed gradient")?;
+            d.done()?;
+            // the stream's own header (mode, element count) is validated
+            // by the coordinator against its configured mode; this layer
+            // only guarantees integrity
+            Ok(FromWorker::CompressedDone { worker, gen, step, shard, loss, gnorm, n, bytes })
         }
         TAG_FATAL => {
             let worker = d.usize("worker id")?;
@@ -688,6 +703,9 @@ fn stamp(slot: usize, msg: FromWorker) -> FromWorker {
         FromWorker::Ready { .. } => FromWorker::Ready { worker: slot },
         FromWorker::ShardDone { gen, step, shard, loss, gnorm, buf, .. } => {
             FromWorker::ShardDone { worker: slot, gen, step, shard, loss, gnorm, buf }
+        }
+        FromWorker::CompressedDone { gen, step, shard, loss, gnorm, n, bytes, .. } => {
+            FromWorker::CompressedDone { worker: slot, gen, step, shard, loss, gnorm, n, bytes }
         }
         FromWorker::Fatal { msg, .. } => FromWorker::Fatal { worker: slot, msg },
     }
@@ -928,6 +946,11 @@ pub struct WorkerCfg {
     pub max_reconnects: usize,
     /// Seed for deterministic backoff jitter.
     pub jitter_seed: u64,
+    /// Gradient compression mode; must match the coordinator's
+    /// `--compress` flag (the server validates every stream's
+    /// self-described mode against its own configuration and discards
+    /// mismatches).
+    pub compress: Compression,
 }
 
 impl Default for WorkerCfg {
@@ -941,6 +964,7 @@ impl Default for WorkerCfg {
             backoff_cap_ms: 2_000,
             max_reconnects: 40,
             jitter_seed: 0,
+            compress: Compression::None,
         }
     }
 }
@@ -977,6 +1001,11 @@ pub fn run_worker(cfg: &WorkerCfg, factory: SourceFactory) -> Result<()> {
     let mut src: Option<Box<dyn GradSource>> = None;
     let mut my_id = cfg.worker_id;
     let mut fired: HashSet<(u8, usize)> = HashSet::new();
+    // Error-feedback residuals, keyed by shard; cleared on every Welcome
+    // (see the channel-tier worker in `super::dp` for the determinism
+    // argument). Owned here so they survive within a connection but are
+    // reset by the re-admission handshake after any severance.
+    let mut residuals: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut attempt = 0usize;
     let mut retries = 0usize;
     loop {
@@ -1002,8 +1031,17 @@ pub fn run_worker(cfg: &WorkerCfg, factory: SourceFactory) -> Result<()> {
         if write_frame(&stream, 0, &encode_hello(my_id, retries)).is_err() {
             continue;
         }
-        match serve(cfg, &stream, &factory, &mut src, &mut my_id, &mut fired, &mut attempt, &mut retries)?
-        {
+        match serve(
+            cfg,
+            &stream,
+            &factory,
+            &mut src,
+            &mut my_id,
+            &mut fired,
+            &mut residuals,
+            &mut attempt,
+            &mut retries,
+        )? {
             ServeEnd::Stopped => return Ok(()),
             ServeEnd::Severed => continue,
         }
@@ -1018,6 +1056,7 @@ fn serve(
     src: &mut Option<Box<dyn GradSource>>,
     my_id: &mut Option<usize>,
     fired: &mut HashSet<(u8, usize)>,
+    residuals: &mut HashMap<usize, Vec<f32>>,
     attempt: &mut usize,
     retries: &mut usize,
 ) -> Result<ServeEnd> {
@@ -1058,6 +1097,10 @@ fn serve(
             WorkerCmd::Welcome { worker, gen: g, step, sync } => {
                 gen = g;
                 *my_id = Some(worker);
+                // re-admission resets the error-feedback stream to the
+                // delivered snapshot; replayed steps must not see residual
+                // state from the aborted timeline
+                residuals.clear();
                 if src.is_none() {
                     match factory(worker) {
                         Ok(s) => *src = Some(s),
@@ -1117,8 +1160,26 @@ fn serve(
                 for (i, &shard) in shards.iter().enumerate() {
                     match s.grad(step, shard, &params, &mut out) {
                         Ok(o) => {
-                            let payload =
-                                encode_shard_done(id, g, step, shard, o.loss, o.gnorm, &out);
+                            let payload = if cfg.compress.keep().is_some() {
+                                let r = residuals
+                                    .entry(shard)
+                                    .or_insert_with(|| vec![0.0; params.len()]);
+                                r.resize(params.len(), 0.0);
+                                let mut enc = Vec::new();
+                                ef_compress_into(&ScalarOracle, &out, r, cfg.compress, &mut enc);
+                                encode_compressed_done(
+                                    id,
+                                    g,
+                                    step,
+                                    shard,
+                                    o.loss,
+                                    o.gnorm,
+                                    params.len(),
+                                    &enc,
+                                )
+                            } else {
+                                encode_shard_done(id, g, step, shard, o.loss, o.gnorm, &out)
+                            };
                             let wrote = if garble && i == 0 {
                                 eprintln!(
                                     "dp-worker {id}: fault injection garbling a frame at step {step}"
@@ -1157,6 +1218,9 @@ mod tests {
         let payload = match &msg {
             FromWorker::ShardDone { worker, gen, step, shard, loss, gnorm, buf } => {
                 encode_shard_done(*worker, *gen, *step, *shard, *loss, *gnorm, buf)
+            }
+            FromWorker::CompressedDone { worker, gen, step, shard, loss, gnorm, n, bytes } => {
+                encode_compressed_done(*worker, *gen, *step, *shard, *loss, *gnorm, *n, bytes)
             }
             FromWorker::Fatal { worker, msg } => encode_fatal(*worker, msg),
             FromWorker::Ready { .. } => unreachable!("ready does not travel"),
@@ -1269,6 +1333,51 @@ mod tests {
     }
 
     #[test]
+    fn compressed_done_round_trips_and_rejects_corruption() {
+        let g: Vec<f32> = (0..130).map(|i| ((i * 37 % 101) as f32 - 50.0) * 1e-3).collect();
+        let mut r = vec![0.0f32; g.len()];
+        let mut enc = Vec::new();
+        ef_compress_into(&ScalarOracle, &g, &mut r, Compression::TopK16, &mut enc);
+        assert_eq!(enc.len(), Compression::TopK16.encoded_len(g.len()));
+        let msg = FromWorker::CompressedDone {
+            worker: 1,
+            gen: 2,
+            step: 3,
+            shard: 4,
+            loss: 0.5,
+            gnorm: 0.25,
+            n: g.len(),
+            bytes: enc.clone(),
+        };
+        match roundtrip_from_worker(msg) {
+            FromWorker::CompressedDone { worker, gen, step, shard, loss, gnorm, n, bytes } => {
+                assert_eq!((worker, gen, step, shard, n), (1, 2, 3, 4, g.len()));
+                assert_eq!(loss.to_bits(), 0.5f64.to_bits());
+                assert_eq!(gnorm.to_bits(), 0.25f64.to_bits());
+                assert_eq!(bytes, enc, "stream must travel byte-exact");
+                // the delivered stream still validates as what was sent
+                assert_eq!(
+                    Compression::validate(&bytes).unwrap(),
+                    (Compression::TopK16, g.len())
+                );
+            }
+            _ => panic!("wrong variant"),
+        }
+        // flip one bit inside the stream: the field checksum must reject
+        // it and name the field
+        let payload = encode_compressed_done(1, 2, 3, 4, 0.5, 0.25, g.len(), &enc);
+        let mut bad = payload.clone();
+        let pos = payload.len() - 3;
+        bad[pos] ^= 0x01;
+        let err = format!("{:#}", decode_from_worker(&bad).unwrap_err());
+        assert!(err.contains("compressed gradient") && err.contains("corrupt"), "{err}");
+        // every truncation errors, never panics
+        for cut in 0..payload.len() {
+            assert!(decode_from_worker(&payload[..cut]).is_err(), "prefix {cut} must fail");
+        }
+    }
+
+    #[test]
     fn welcome_round_trips_with_blob_checksums() {
         let sync = StateSync {
             step: 4,
@@ -1372,7 +1481,15 @@ mod tests {
             let _ = decode_hello(&junk);
         }
         // and with valid tags but junk bodies
-        for tag in [TAG_HELLO, TAG_SHARD_DONE, TAG_FATAL, TAG_WELCOME, TAG_STEP, TAG_STOP] {
+        for tag in [
+            TAG_HELLO,
+            TAG_SHARD_DONE,
+            TAG_FATAL,
+            TAG_COMPRESSED_GRAD,
+            TAG_WELCOME,
+            TAG_STEP,
+            TAG_STOP,
+        ] {
             for len in 0..48 {
                 let mut junk: Vec<u8> = vec![tag];
                 junk.extend((0..len).map(|_| (r.next_u64() & 0xFF) as u8));

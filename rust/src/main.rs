@@ -137,6 +137,7 @@ fn cmd_dp_worker(args: &Args) -> Result<()> {
         backoff_cap_ms: args.u64_or("backoff-cap-ms", 2_000)?,
         max_reconnects: args.usize_or("max-reconnects", 40)?,
         jitter_seed: seed.wrapping_add(worker_id.unwrap_or(0) as u64),
+        compress: sophia::optim::engine::Compression::parse(&args.str_or("compress", "none"))?,
     };
     let factory: SourceFactory = if args.bool("synthetic") {
         let data_seed = synthetic_data_seed(seed);
@@ -201,6 +202,7 @@ fn synthetic_dp_config(t: &TrainConfig) -> Result<DpConfig> {
         max_recoveries: 8,
         run_tag: format!("synthetic-{}", t.preset),
         fault: FaultPlan::resolve(t.fault_plan.as_deref())?,
+        compress: t.compress,
     })
 }
 

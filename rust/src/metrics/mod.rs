@@ -102,7 +102,7 @@ impl RunLog {
 /// degraded-path event (straggler drop, crash, checkpoint rejection,
 /// replayed step) is counted here so tests can assert that a recovery
 /// actually happened and operators can see run health at a glance.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct HealthCounters {
     /// Shard-completion messages received (the heartbeat signal).
     pub heartbeats: usize,
@@ -136,6 +136,12 @@ pub struct HealthCounters {
     pub bytes_sent: usize,
     /// Frame bytes read from worker sockets (0 in-process).
     pub bytes_received: usize,
+    /// Gradient bytes NOT exchanged thanks to compression: raw f32 payload
+    /// size minus the encoded `CompressedGrad` size, summed over gathers.
+    pub bytes_saved: usize,
+    /// Raw / encoded gradient-byte ratio over the whole run (1.0 when
+    /// `--compress none`; ≈16/≈64 for topk16/topk64).
+    pub compression_ratio: f64,
 }
 
 impl HealthCounters {
@@ -168,6 +174,8 @@ impl HealthCounters {
         m.insert("frames_rejected".into(), Json::Num(self.frames_rejected as f64));
         m.insert("bytes_sent".into(), Json::Num(self.bytes_sent as f64));
         m.insert("bytes_received".into(), Json::Num(self.bytes_received as f64));
+        m.insert("bytes_saved".into(), Json::Num(self.bytes_saved as f64));
+        m.insert("compression_ratio".into(), Json::Num(self.compression_ratio));
         Json::Obj(m)
     }
 
@@ -312,6 +320,8 @@ mod tests {
             frames_rejected: 1,
             bytes_sent: 4096,
             bytes_received: 2048,
+            bytes_saved: 1024,
+            compression_ratio: 16.0,
         };
         let j = c.to_json();
         assert_eq!(j.get("heartbeats").unwrap().as_usize(), Some(12));
@@ -323,7 +333,9 @@ mod tests {
         assert_eq!(j.get("frames_rejected").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("bytes_sent").unwrap().as_usize(), Some(4096));
         assert_eq!(j.get("bytes_received").unwrap().as_usize(), Some(2048));
-        assert_eq!(j.as_obj().unwrap().len(), 15);
+        assert_eq!(j.get("bytes_saved").unwrap().as_usize(), Some(1024));
+        assert_eq!(j.get("compression_ratio").unwrap().as_f64(), Some(16.0));
+        assert_eq!(j.as_obj().unwrap().len(), 17);
         // the snapshot banner is the same object, round-trippable
         let snap = Json::parse(&c.snapshot_json()).unwrap();
         assert_eq!(snap.get("bytes_sent").unwrap().as_usize(), Some(4096));

@@ -101,6 +101,10 @@ pub struct FlatState {
     pub p: AlignedBuf,
     pub m: AlignedBuf,
     pub h: AlignedBuf,
+    /// Error-feedback residual for lossy gradient compression (what the
+    /// top-k compressor dropped, carried into the next step). Allocated
+    /// lazily by [`Self::residual_mut`] so uncompressed runs pay nothing.
+    residual: Option<AlignedBuf>,
 }
 
 impl FlatState {
@@ -118,7 +122,16 @@ impl FlatState {
             p: AlignedBuf::zeroed(off),
             m: AlignedBuf::zeroed(off),
             h: AlignedBuf::zeroed(off),
+            residual: None,
         }
+    }
+
+    /// The error-feedback residual buffer (same length as the arena),
+    /// zero-allocated on first use. See
+    /// [`super::ef_compress_into`](crate::optim::engine::ef_compress_into).
+    pub fn residual_mut(&mut self) -> &mut [f32] {
+        let len = self.p.len();
+        self.residual.get_or_insert_with(|| AlignedBuf::zeroed(len))
     }
 
     /// Total element count across all leaves.

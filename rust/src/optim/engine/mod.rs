@@ -33,6 +33,7 @@ pub use self::parallel::{
     partition, partition_leaves, reduce_fixed_order, run_sharded, SendPtr, DEFAULT_SHARD_LEN,
 };
 pub use self::pool::{PoolEngine, WorkerPool};
+pub use crate::optim::kernels::{Compression, COMPRESS_BLOCK, COMPRESS_HDR};
 
 use self::parallel::shard_mut;
 use crate::optim::kernels;
@@ -136,6 +137,86 @@ pub trait UpdateKernel: Send + Sync {
     /// Hutchinson EMA over the precomputed `uhvp = u ⊙ Hu` product (the
     /// single buffer the raw `uhvp` artifact returns).
     fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32);
+
+    /// Top-k + sign-quantized compression of one gradient shard into the
+    /// wire format documented in `docs/PROTOCOL.md` § CompressedGrad.
+    ///
+    /// `out` must be pre-sized to `mode.encoded_len(src.len())`; the call
+    /// writes the 12-byte header plus one fixed-size record per 64-element
+    /// block and returns the kept-coordinate count. [`Compression::None`]
+    /// writes nothing and returns 0. Records are per-block independent, so
+    /// any block-aligned partition of the input produces bit-identical
+    /// bytes — the property the threaded/pool backends rely on.
+    fn compress_shard(&self, src: &[f32], mode: Compression, out: &mut [u8]) -> usize;
+
+    /// Decode a [`compress_shard`](UpdateKernel::compress_shard) frame and
+    /// accumulate `gain ·` (signed per-block scale) into `out` at each kept
+    /// coordinate. Lenient on malformed input: a bad header, a length
+    /// mismatch, or `n != out.len()` returns 0 and leaves `out` untouched.
+    /// Returns the applied-coordinate count. Decoding with `gain = -1.0`
+    /// exactly inverts a `gain = 1.0` application (same f32 products), which
+    /// is what the error-feedback residual update builds on.
+    fn decompress_accumulate(&self, bytes: &[u8], gain: f32, out: &mut [f32]) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// Compression: whole-buffer reference path + error-feedback driver
+// ---------------------------------------------------------------------
+
+/// Single-threaded reference path for `compress_shard`: header + one
+/// `kernels::compress_blocks` pass over the full input.
+fn compress_whole(src: &[f32], mode: Compression, out: &mut [u8]) -> usize {
+    let Some(k) = mode.keep() else {
+        return 0;
+    };
+    assert_eq!(out.len(), mode.encoded_len(src.len()), "compress output must be pre-sized");
+    out[..COMPRESS_HDR].copy_from_slice(&kernels::compress_header(mode, src.len()));
+    kernels::compress_blocks(src, k, &mut out[COMPRESS_HDR..])
+}
+
+/// Single-threaded reference path for `decompress_accumulate`.
+fn decompress_whole(bytes: &[u8], gain: f32, out: &mut [f32]) -> usize {
+    let Some((mode, n)) = kernels::parse_compressed_header(bytes) else {
+        return 0;
+    };
+    let Some(k) = mode.keep() else {
+        return 0;
+    };
+    if n != out.len() || bytes.len() != mode.encoded_len(n) {
+        return 0;
+    }
+    kernels::decompress_blocks(&bytes[COMPRESS_HDR..], k, gain, out)
+}
+
+/// Error-feedback compression step: fold the fresh gradient into the
+/// residual, compress the residual, then subtract what was transmitted so
+/// the residual carries exactly the mass the compressor dropped (the EF /
+/// EF21 scheme — see PAPERS.md). `r` must have `g.len()` elements; `out` is
+/// resized to the encoded frame (cleared for [`Compression::None`], with
+/// the residual left untouched). Returns the kept-coordinate count.
+///
+/// The subtraction uses `decompress_accumulate` with `gain = -1.0`, which
+/// removes bit-for-bit what a receiver applying the frame with `gain = 1.0`
+/// adds — so sender residual and receiver state stay exactly complementary.
+pub fn ef_compress_into(
+    k: &dyn UpdateKernel,
+    g: &[f32],
+    r: &mut [f32],
+    mode: Compression,
+    out: &mut Vec<u8>,
+) -> usize {
+    if mode.keep().is_none() {
+        out.clear();
+        return 0;
+    }
+    assert_eq!(g.len(), r.len(), "residual must match gradient length");
+    for (ri, gi) in r.iter_mut().zip(g) {
+        *ri += *gi;
+    }
+    out.resize(mode.encoded_len(g.len()), 0);
+    let kept = k.compress_shard(r, mode, out);
+    k.decompress_accumulate(out, -1.0, r);
+    kept
 }
 
 // ---------------------------------------------------------------------
@@ -253,6 +334,14 @@ impl UpdateKernel for ScalarOracle {
     fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
         kernels::uhvp_ema(h, uhvp, beta2)
     }
+
+    fn compress_shard(&self, src: &[f32], mode: Compression, out: &mut [u8]) -> usize {
+        compress_whole(src, mode, out)
+    }
+
+    fn decompress_accumulate(&self, bytes: &[u8], gain: f32, out: &mut [f32]) -> usize {
+        decompress_whole(bytes, gain, out)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -369,6 +458,16 @@ impl UpdateKernel for BlockedEngine {
 
     fn uhvp_ema(&self, h: &mut [f32], uhvp: &[f32], beta2: f32) {
         blocked::uhvp_ema(h, uhvp, beta2)
+    }
+
+    // The compression codec has no blocked/unrolled variant (it is already
+    // branchy and byte-oriented); the oracle path is the fast path too.
+    fn compress_shard(&self, src: &[f32], mode: Compression, out: &mut [u8]) -> usize {
+        compress_whole(src, mode, out)
+    }
+
+    fn decompress_accumulate(&self, bytes: &[u8], gain: f32, out: &mut [f32]) -> usize {
+        decompress_whole(bytes, gain, out)
     }
 }
 
@@ -601,6 +700,64 @@ impl UpdateKernel for ThreadedEngine {
             0
         });
     }
+
+    fn compress_shard(&self, src: &[f32], mode: Compression, out: &mut [u8]) -> usize {
+        let Some(k) = mode.keep() else {
+            return 0;
+        };
+        let n = src.len();
+        assert_eq!(out.len(), mode.encoded_len(n), "compress output must be pre-sized");
+        out[..COMPRESS_HDR].copy_from_slice(&kernels::compress_header(mode, n));
+        // Partition *block* space, not element space: per-block records are
+        // independent, so block-aligned shards write disjoint fixed-offset
+        // record ranges and the bytes match the oracle for any thread count.
+        let rec = 4 + k;
+        let n_blocks = n.div_ceil(COMPRESS_BLOCK);
+        let block_shard = (self.shard_len / COMPRESS_BLOCK).max(1);
+        let shards = partition(n_blocks, block_shard);
+        let op = SendPtr(out.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, br| {
+            // SAFETY: block shards are disjoint, so the record byte ranges
+            // they map to are disjoint and in-bounds of `out`.
+            let os = unsafe {
+                shard_mut(op, &(COMPRESS_HDR + br.start * rec..COMPRESS_HDR + br.end * rec))
+            };
+            kernels::compress_blocks(
+                &src[br.start * COMPRESS_BLOCK..n.min(br.end * COMPRESS_BLOCK)],
+                k,
+                os,
+            )
+        })
+    }
+
+    fn decompress_accumulate(&self, bytes: &[u8], gain: f32, out: &mut [f32]) -> usize {
+        let Some((mode, n)) = kernels::parse_compressed_header(bytes) else {
+            return 0;
+        };
+        let Some(k) = mode.keep() else {
+            return 0;
+        };
+        if n != out.len() || bytes.len() != mode.encoded_len(n) {
+            return 0;
+        }
+        let rec = 4 + k;
+        let n_blocks = n.div_ceil(COMPRESS_BLOCK);
+        let block_shard = (self.shard_len / COMPRESS_BLOCK).max(1);
+        let shards = partition(n_blocks, block_shard);
+        let op = SendPtr(out.as_mut_ptr());
+        run_sharded(self.threads, &shards, |_, br| {
+            // SAFETY: block shards are disjoint, so the element ranges they
+            // map to are disjoint and in-bounds of `out`.
+            let os =
+                unsafe { shard_mut(op, &(br.start * COMPRESS_BLOCK..n.min(br.end * COMPRESS_BLOCK))) };
+            kernels::decompress_blocks(
+                &bytes[COMPRESS_HDR + br.start * rec..COMPRESS_HDR + br.end * rec],
+                k,
+                gain,
+                os,
+            )
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -738,6 +895,34 @@ mod tests {
             assert_eq!(*c, outs[0].0);
             assert_eq!(p, &outs[0].1);
         }
+    }
+
+    #[test]
+    fn error_feedback_residual_tracks_exactly_what_was_not_sent() {
+        let mut rng = Rng::new(9);
+        let n = 200; // 3 full blocks + an 8-element tail
+        let g = rand_vec(&mut rng, n, 1.0);
+        let mut fs = FlatState::new(&[n]);
+        let mut out = Vec::new();
+        let kept = ef_compress_into(&ScalarOracle, &g, fs.residual_mut(), Compression::TopK16, &mut out);
+        assert_eq!(kept, 16);
+        assert_eq!(out.len(), Compression::TopK16.encoded_len(n));
+        // residual == gradient − transmitted, bitwise, at every coordinate
+        let mut dec = vec![0.0f32; n];
+        assert_eq!(ScalarOracle.decompress_accumulate(&out, 1.0, &mut dec), 16);
+        for i in 0..n {
+            assert_eq!(
+                fs.residual_mut()[i].to_bits(),
+                (g[i] - dec[i]).to_bits(),
+                "residual[{i}]"
+            );
+        }
+        // Compression::None is a no-op: frame cleared, residual untouched
+        let before: Vec<u32> = fs.residual_mut().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ef_compress_into(&ScalarOracle, &g, fs.residual_mut(), Compression::None, &mut out), 0);
+        assert!(out.is_empty());
+        let after: Vec<u32> = fs.residual_mut().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

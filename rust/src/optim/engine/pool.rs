@@ -27,7 +27,8 @@
 #![allow(clippy::too_many_arguments)]
 
 use super::parallel::{partition, shard_mut, SendPtr, DEFAULT_SHARD_LEN};
-use super::{blocked, UpdateKernel};
+use super::{blocked, Compression, UpdateKernel, COMPRESS_BLOCK, COMPRESS_HDR};
+use crate::optim::kernels;
 use std::cell::UnsafeCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -651,6 +652,63 @@ impl UpdateKernel for PoolEngine {
                 0
             })
         });
+    }
+
+    fn compress_shard(&self, src: &[f32], mode: Compression, out: &mut [u8]) -> usize {
+        let Some(k) = mode.keep() else {
+            return 0;
+        };
+        let n = src.len();
+        assert_eq!(out.len(), mode.encoded_len(n), "compress output must be pre-sized");
+        out[..COMPRESS_HDR].copy_from_slice(&kernels::compress_header(mode, n));
+        // Compression shards live in *block* space (records are per-block
+        // independent), so the element-space shard cache does not apply —
+        // partition inline like `ThreadedEngine` does.
+        let rec = 4 + k;
+        let block_shard = (self.shard_len / COMPRESS_BLOCK).max(1);
+        let shards = partition(n.div_ceil(COMPRESS_BLOCK), block_shard);
+        let op = SendPtr(out.as_mut_ptr());
+        self.pool.run(&shards, &|_, br: Range<usize>| {
+            // SAFETY: block shards are disjoint, so the record byte ranges
+            // they map to are disjoint and in-bounds of `out`.
+            let os = unsafe {
+                shard_mut(op, &(COMPRESS_HDR + br.start * rec..COMPRESS_HDR + br.end * rec))
+            };
+            kernels::compress_blocks(
+                &src[br.start * COMPRESS_BLOCK..n.min(br.end * COMPRESS_BLOCK)],
+                k,
+                os,
+            )
+        })
+    }
+
+    fn decompress_accumulate(&self, bytes: &[u8], gain: f32, out: &mut [f32]) -> usize {
+        let Some((mode, n)) = kernels::parse_compressed_header(bytes) else {
+            return 0;
+        };
+        let Some(k) = mode.keep() else {
+            return 0;
+        };
+        if n != out.len() || bytes.len() != mode.encoded_len(n) {
+            return 0;
+        }
+        let rec = 4 + k;
+        let block_shard = (self.shard_len / COMPRESS_BLOCK).max(1);
+        let shards = partition(n.div_ceil(COMPRESS_BLOCK), block_shard);
+        let op = SendPtr(out.as_mut_ptr());
+        self.pool.run(&shards, &|_, br: Range<usize>| {
+            // SAFETY: block shards are disjoint, so the element ranges they
+            // map to are disjoint and in-bounds of `out`.
+            let os = unsafe {
+                shard_mut(op, &(br.start * COMPRESS_BLOCK..n.min(br.end * COMPRESS_BLOCK)))
+            };
+            kernels::decompress_blocks(
+                &bytes[COMPRESS_HDR + br.start * rec..COMPRESS_HDR + br.end * rec],
+                k,
+                gain,
+                os,
+            )
+        })
     }
 }
 

@@ -157,6 +157,232 @@ pub fn sophia_update_with_hutchinson_refresh(
     sophia_update(p, m, h, g, lr, beta1, gamma, eps, wd)
 }
 
+// ---------------------------------------------------------------------
+// Error-feedback gradient compression (top-k + sign quantization)
+// ---------------------------------------------------------------------
+
+use anyhow::{bail, Result};
+
+/// Compression block size: top-k selection, the shared scale, and the
+/// 6-bit entry indices all live within one 64-element block, so blocks are
+/// fully independent — any block-aligned partition of the work produces
+/// bit-identical bytes (the property the threaded/pool backends rely on).
+pub const COMPRESS_BLOCK: usize = 64;
+
+/// Encoded-stream header length: version u8, mode u8, two reserved zero
+/// bytes, then the element count as a u64 LE.
+pub const COMPRESS_HDR: usize = 12;
+
+/// Wire/stream format version of the compressed-gradient encoding.
+pub const COMPRESS_VERSION: u8 = 1;
+
+/// Gradient compression mode (the `--compress` flag vocabulary). Ratios
+/// name the ideal f32-elimination factor: `topk16` keeps 4 of every 64
+/// coordinates (16× fewer values), `topk64` keeps 1 of 64. Kept values are
+/// sign-quantized against one shared per-block scale (the mean |v| of the
+/// kept set), so a 64-element block encodes to 4 scale bytes + k entry
+/// bytes. See `docs/PROTOCOL.md` § CompressedGrad for the byte layout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Compression {
+    /// No compression: gradients travel as raw f32 (the PR-7 wire path,
+    /// byte-identical to it).
+    #[default]
+    None,
+    /// Keep the top 4 of every 64 coordinates (~16× fewer values).
+    TopK16,
+    /// Keep the top 1 of every 64 coordinates (~64× fewer values).
+    TopK64,
+}
+
+impl Compression {
+    /// Parse the `--compress` flag vocabulary.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Self::None,
+            "topk16" => Self::TopK16,
+            "topk64" => Self::TopK64,
+            other => bail!("unknown compression mode {other:?} (none|topk16|topk64)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::TopK16 => "topk16",
+            Self::TopK64 => "topk64",
+        }
+    }
+
+    /// Coordinates kept per 64-element block; `None` for the uncompressed
+    /// mode (which never encodes).
+    pub fn keep(self) -> Option<usize> {
+        match self {
+            Self::None => None,
+            Self::TopK16 => Some(4),
+            Self::TopK64 => Some(1),
+        }
+    }
+
+    fn mode_byte(self) -> u8 {
+        match self {
+            Self::None => 0,
+            Self::TopK16 => 1,
+            Self::TopK64 => 2,
+        }
+    }
+
+    /// Exact encoded byte length for an `n`-element input: the header plus
+    /// one fixed-size record (4-byte scale + k entry bytes) per block.
+    /// Zero for the uncompressed mode.
+    pub fn encoded_len(self, n: usize) -> usize {
+        match self.keep() {
+            Option::None => 0,
+            Some(k) => COMPRESS_HDR + n.div_ceil(COMPRESS_BLOCK) * (4 + k),
+        }
+    }
+
+    /// Defensive header check for bytes that arrived over a wire: verifies
+    /// version, mode, reserved bytes, and that the byte length is exactly
+    /// what the declared element count demands. Returns the mode and the
+    /// element count. The kernel-side decoder assumes this already ran.
+    pub fn validate(bytes: &[u8]) -> Result<(Compression, usize)> {
+        let Some((mode, n)) = parse_compressed_header(bytes) else {
+            bail!(
+                "compressed gradient: bad header ({} bytes, version/mode {:?})",
+                bytes.len(),
+                bytes.get(..2)
+            );
+        };
+        if bytes[2] != 0 || bytes[3] != 0 {
+            bail!("compressed gradient: reserved header bytes must be zero");
+        }
+        if bytes.len() != mode.encoded_len(n) {
+            bail!(
+                "compressed gradient: {} bytes for {n} elements, expected {}",
+                bytes.len(),
+                mode.encoded_len(n)
+            );
+        }
+        Ok((mode, n))
+    }
+}
+
+/// Build the 12-byte compressed-stream header for an `n`-element input.
+pub fn compress_header(mode: Compression, n: usize) -> [u8; COMPRESS_HDR] {
+    let mut hdr = [0u8; COMPRESS_HDR];
+    hdr[0] = COMPRESS_VERSION;
+    hdr[1] = mode.mode_byte();
+    hdr[4..12].copy_from_slice(&(n as u64).to_le_bytes());
+    hdr
+}
+
+/// Parse a compressed-stream header leniently (kernel-side twin of
+/// [`Compression::validate`]): `None` when the bytes cannot be a valid
+/// stream. Does not check the total length against the element count.
+pub fn parse_compressed_header(bytes: &[u8]) -> Option<(Compression, usize)> {
+    if bytes.len() < COMPRESS_HDR || bytes[0] != COMPRESS_VERSION {
+        return None;
+    }
+    let mode = match bytes[1] {
+        1 => Compression::TopK16,
+        2 => Compression::TopK64,
+        _ => return None,
+    };
+    let n = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    usize::try_from(n).ok().map(|n| (mode, n))
+}
+
+/// Scalar compressor over whole blocks: encode `src` (whose 64-element
+/// blocks start at offset 0; only the final block may be partial) into
+/// `records`, one fixed-size record of `4 + k` bytes per block. Returns
+/// the number of coordinates kept.
+///
+/// Per block: the `k` largest-|v| coordinates are selected (ties go to the
+/// lower index), their shared scale is the mean of their |v| accumulated
+/// in ascending index order in f32, and each is encoded as one entry byte
+/// — low 6 bits the in-block index, bit 0x40 the sign, with `0xFF` pad
+/// entries trailing when the block has fewer than `k` elements. Blocks are
+/// independent, so any block-aligned partition reproduces these bytes.
+pub fn compress_blocks(src: &[f32], k: usize, records: &mut [u8]) -> usize {
+    assert!(k >= 1 && k <= COMPRESS_BLOCK, "keep count {k} out of range");
+    let rec = 4 + k;
+    let n_blocks = src.len().div_ceil(COMPRESS_BLOCK);
+    assert_eq!(records.len(), n_blocks * rec, "record buffer length");
+    let mut kept_total = 0usize;
+    for b in 0..n_blocks {
+        let base = b * COMPRESS_BLOCK;
+        let block = &src[base..src.len().min(base + COMPRESS_BLOCK)];
+        let out = &mut records[b * rec..(b + 1) * rec];
+        let keep = k.min(block.len());
+        // top-k by |v| bits: a strictly-greater scan in ascending index
+        // order makes ties land on the lower index, deterministically
+        let mut sel = [usize::MAX; COMPRESS_BLOCK];
+        for s in 0..keep {
+            let mut best = usize::MAX;
+            let mut best_bits = 0u32;
+            for (i, &v) in block.iter().enumerate() {
+                if sel[..s].contains(&i) {
+                    continue;
+                }
+                let bits = v.abs().to_bits();
+                if best == usize::MAX || bits > best_bits {
+                    best = i;
+                    best_bits = bits;
+                }
+            }
+            sel[s] = best;
+        }
+        sel[..keep].sort_unstable();
+        let mut sum = 0.0f32;
+        for &i in &sel[..keep] {
+            sum += block[i].abs();
+        }
+        let scale = if keep == 0 { 0.0 } else { sum / keep as f32 };
+        out[..4].copy_from_slice(&scale.to_le_bytes());
+        for (slot, e) in out[4..].iter_mut().enumerate() {
+            *e = if slot < keep {
+                let i = sel[slot];
+                (i as u8) | if block[i].is_sign_negative() { 0x40 } else { 0 }
+            } else {
+                0xFF
+            };
+        }
+        kept_total += keep;
+    }
+    kept_total
+}
+
+/// Scalar decompressor twin of [`compress_blocks`]: for every non-pad
+/// entry, `out[base + idx] += gain * (±scale)`. `gain = 1.0` accumulates
+/// the decoded gradient; `gain = -1.0` subtracts it (the error-feedback
+/// residual update). Entries whose index falls outside a partial final
+/// block are ignored. Returns the number of coordinates applied.
+pub fn decompress_blocks(records: &[u8], k: usize, gain: f32, out: &mut [f32]) -> usize {
+    assert!(k >= 1 && k <= COMPRESS_BLOCK, "keep count {k} out of range");
+    let rec = 4 + k;
+    let n_blocks = out.len().div_ceil(COMPRESS_BLOCK);
+    assert_eq!(records.len(), n_blocks * rec, "record buffer length");
+    let mut applied = 0usize;
+    for b in 0..n_blocks {
+        let base = b * COMPRESS_BLOCK;
+        let block_len = out.len().min(base + COMPRESS_BLOCK) - base;
+        let r = &records[b * rec..(b + 1) * rec];
+        let scale = f32::from_le_bytes([r[0], r[1], r[2], r[3]]);
+        for &e in &r[4..] {
+            if e == 0xFF {
+                continue;
+            }
+            let i = (e & 0x3F) as usize;
+            if i >= block_len {
+                continue;
+            }
+            out[base + i] += gain * if e & 0x40 != 0 { -scale } else { scale };
+            applied += 1;
+        }
+    }
+    applied
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +483,116 @@ mod tests {
         for &x in &h {
             assert!((x - 2.0).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn compression_parse_round_trips_and_rejects_unknown() {
+        for mode in [Compression::None, Compression::TopK16, Compression::TopK64] {
+            assert_eq!(Compression::parse(mode.name()).unwrap(), mode);
+        }
+        let err = Compression::parse("gzip").unwrap_err().to_string();
+        assert!(err.contains("gzip") && err.contains("topk16"), "{err}");
+    }
+
+    #[test]
+    fn compress_encoded_len_and_header_are_consistent() {
+        for (mode, rec) in [(Compression::TopK16, 8usize), (Compression::TopK64, 5)] {
+            for n in [0usize, 1, 63, 64, 65, 128, 20_011] {
+                let want = COMPRESS_HDR + n.div_ceil(COMPRESS_BLOCK) * rec;
+                assert_eq!(mode.encoded_len(n), want, "{mode:?} n={n}");
+                let hdr = compress_header(mode, n);
+                let (m2, n2) = parse_compressed_header(&hdr).unwrap();
+                assert_eq!((m2, n2), (mode, n));
+            }
+        }
+        assert_eq!(Compression::None.encoded_len(1234), 0);
+        assert!(parse_compressed_header(&[0u8; COMPRESS_HDR]).is_none());
+    }
+
+    #[test]
+    fn compress_picks_topk_with_ties_to_lower_index_and_sign() {
+        // one full block: 4 clear winners at known spots, one negative
+        let mut v = vec![0.01f32; COMPRESS_BLOCK];
+        v[3] = 5.0;
+        v[10] = -5.0; // same |v| as index 3: both kept, order by index
+        v[40] = 7.0;
+        v[63] = 6.0;
+        let k = 4;
+        let mut rec = vec![0u8; 4 + k];
+        let kept = compress_blocks(&v, k, &mut rec);
+        assert_eq!(kept, 4);
+        let scale = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+        assert_eq!(scale, (5.0 + 5.0 + 7.0 + 6.0) / 4.0);
+        // entries sorted by in-block index; 0x40 marks the negative one
+        assert_eq!(&rec[4..], &[3, 10 | 0x40, 40, 63]);
+        let mut out = vec![0.0f32; COMPRESS_BLOCK];
+        let applied = decompress_blocks(&rec, k, 1.0, &mut out);
+        assert_eq!(applied, 4);
+        assert_eq!(out[3], scale);
+        assert_eq!(out[10], -scale);
+        assert_eq!(out[40], scale);
+        assert_eq!(out[63], scale);
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn compress_partial_final_block_pads_and_round_trips() {
+        // 70 elements = one full block + a 6-element tail
+        let mut rng = Rng::new(0xC0);
+        let v: Vec<f32> = (0..70).map(|_| rng.normal_f32(1.0)).collect();
+        let k = 4;
+        let mut rec = vec![0u8; 2 * (4 + k)];
+        let kept = compress_blocks(&v, k, &mut rec);
+        assert_eq!(kept, 4 + 4); // tail has 6 >= k elements
+        // a 2-element tail forces pads
+        let short = &v[..66];
+        let mut rec2 = vec![0u8; 2 * (4 + k)];
+        let kept2 = compress_blocks(short, k, &mut rec2);
+        assert_eq!(kept2, 4 + 2);
+        assert_eq!(rec2[4 + k + 4 + 2], 0xFF, "tail record must pad");
+        assert_eq!(rec2[4 + k + 4 + 3], 0xFF);
+        let mut out = vec![0.0f32; 66];
+        assert_eq!(decompress_blocks(&rec2, k, 1.0, &mut out), 6);
+    }
+
+    #[test]
+    fn decompress_with_negative_gain_inverts_positive_gain() {
+        let mut rng = Rng::new(0xD1);
+        let v: Vec<f32> = (0..200).map(|_| rng.normal_f32(2.0)).collect();
+        let k = 1;
+        let mut rec = vec![0u8; v.len().div_ceil(COMPRESS_BLOCK) * (4 + k)];
+        compress_blocks(&v, k, &mut rec);
+        let mut out = vec![0.0f32; v.len()];
+        decompress_blocks(&rec, k, 1.0, &mut out);
+        decompress_blocks(&rec, k, -1.0, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "gain -1 must cancel gain +1 exactly");
+    }
+
+    #[test]
+    fn compression_validate_rejects_tampered_streams() {
+        let n = 100usize;
+        let mode = Compression::TopK16;
+        let mut bytes = vec![0u8; mode.encoded_len(n)];
+        bytes[..COMPRESS_HDR].copy_from_slice(&compress_header(mode, n));
+        assert_eq!(Compression::validate(&bytes).unwrap(), (mode, n));
+        // wrong version
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        assert!(Compression::validate(&bad).is_err());
+        // unknown mode byte
+        let mut bad = bytes.clone();
+        bad[1] = 7;
+        assert!(Compression::validate(&bad).is_err());
+        // non-zero reserved byte
+        let mut bad = bytes.clone();
+        bad[2] = 1;
+        assert!(Compression::validate(&bad).is_err());
+        // truncated body
+        let bad = &bytes[..bytes.len() - 1];
+        assert!(Compression::validate(bad).is_err());
+        // declared element count inconsistent with the byte length
+        let mut bad = bytes.clone();
+        bad[4..12].copy_from_slice(&(64u64).to_le_bytes());
+        assert!(Compression::validate(&bad).is_err());
     }
 }

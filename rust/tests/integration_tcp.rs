@@ -103,6 +103,7 @@ struct TcpRun {
 fn tcp_run(cfg: DpConfig, client_faults: &[(usize, &str)]) -> TcpRun {
     let workers = cfg.workers;
     let seed = cfg.seed;
+    let compress = cfg.compress;
     let (mut dp, addr) =
         DpCoordinator::synthetic_over_tcp(cfg, &LENS, INIT_SEED, "127.0.0.1:0").expect("bind");
     let mut handles = Vec::new();
@@ -126,6 +127,7 @@ fn tcp_run(cfg: DpConfig, client_faults: &[(usize, &str)]) -> TcpRun {
                         backoff_cap_ms: 100,
                         max_reconnects: 200,
                         jitter_seed: w as u64,
+                        compress,
                     };
                     let data_seed = synthetic_data_seed(seed);
                     let factory: SourceFactory = Arc::new(move |_id| {
@@ -240,6 +242,42 @@ fn tcp_garbled_frame_rejected_and_sender_recovers_bit_identical() {
     let c = &run.out.counters;
     assert!(c.frames_rejected >= 1, "corrupt frame must be rejected by checksum");
     assert!(c.reconnects >= 1, "garbling worker is severed and must reconnect");
+}
+
+#[test]
+fn tcp_compressed_run_bit_identical_to_compressed_channel_tier() {
+    // `--compress topk16` over real sockets: CompressedGrad frames replace
+    // ShardDone, and the whole run must stay bit-identical to the
+    // compressed channel tier at the same shard count — with both tiers
+    // counting the exact same byte savings. (The `--compress none`
+    // byte-identity to the uncompressed PR-7 wire path is what every other
+    // test in this file asserts, since none is the default.)
+    use sophia::optim::engine::Compression;
+    let n = n_workers();
+    let mut cfg = base_cfg(n);
+    cfg.compress = Compression::TopK16;
+    let mut dp = DpCoordinator::synthetic(cfg.clone(), &LENS, INIT_SEED).expect("oracle");
+    let oracle_out = dp.train().expect("oracle train");
+    assert_eq!(oracle_out.steps_done, STEPS, "oracle must finish");
+    assert!(oracle_out.counters.bytes_saved > 0, "oracle must actually compress");
+    let want = capture(&dp);
+
+    let run = tcp_run(cfg, &[]);
+    assert_clients_ok(&run);
+    assert_eq!(run.out.steps_done, STEPS);
+    assert_matches_oracle("tcp compressed", &run.fixed, &want);
+    let c = &run.out.counters;
+    assert_eq!(c.frames_rejected, 0, "matching modes must not reject frames");
+    assert_eq!(
+        c.bytes_saved, oracle_out.counters.bytes_saved,
+        "socket and channel tiers must count identical savings"
+    );
+    assert!(
+        c.compression_ratio > 8.0,
+        "topk16 should compress well past 8x, got {}",
+        c.compression_ratio
+    );
+    assert!(c.bytes_sent > 0 && c.bytes_received > 0, "socket traffic must be counted");
 }
 
 #[test]

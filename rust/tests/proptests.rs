@@ -928,6 +928,123 @@ fn prop_dp_join_after_recovery_state_over_protocol_matches_filesystem() {
 }
 
 #[test]
+fn prop_engine_compress_decompress_bitwise_equals_oracle() {
+    // The top-k + sign compressor is per-block independent, so every
+    // backend — blocked, threaded and pool at 1/2/4 workers with ragged
+    // shard lengths — must produce byte-identical frames, identical kept
+    // counts, bit-identical decompressed accumulations, and bit-identical
+    // error-feedback residuals versus the scalar oracle.
+    use sophia::optim::engine::{ef_compress_into, Compression, ScalarOracle};
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        // lengths hit sub-block tails, exact block multiples, ragged
+        // mid-sizes, and a multi-shard size past the largest shard split
+        let n = match seed % 4 {
+            0 => 1 + rng.below(63) as usize,
+            1 => 64 * (1 + rng.below(8) as usize),
+            2 => 1 + rng.below(5000) as usize,
+            _ => (1 << 16) + 1 + rng.below(5000) as usize,
+        };
+        let g = rand_vec(&mut rng, n, 1.0);
+        let g2 = rand_vec(&mut rng, n, 1.0);
+        for mode in [Compression::TopK16, Compression::TopK64] {
+            let mut want = vec![0u8; mode.encoded_len(n)];
+            let kept0 = ScalarOracle.compress_shard(&g, mode, &mut want);
+            assert!(kept0 > 0, "mode {} seed {seed} n {n}", mode.name());
+            assert_eq!(Compression::validate(&want).unwrap(), (mode, n), "seed {seed}");
+            let mut dec0 = vec![0.0f32; n];
+            let applied0 = ScalarOracle.decompress_accumulate(&want, 1.0, &mut dec0);
+            assert_eq!(applied0, kept0, "mode {} seed {seed}", mode.name());
+            // EF oracle: two rounds so the residual carry is exercised
+            let mut r0 = vec![0.0f32; n];
+            let (mut ef0a, mut ef0b) = (Vec::new(), Vec::new());
+            ef_compress_into(&ScalarOracle, &g, &mut r0, mode, &mut ef0a);
+            ef_compress_into(&ScalarOracle, &g2, &mut r0, mode, &mut ef0b);
+            for k in engine_backends() {
+                let tag = || format!("{} mode {} seed {seed} n {n}", k.name(), mode.name());
+                let mut got = vec![0u8; mode.encoded_len(n)];
+                let kept = k.compress_shard(&g, mode, &mut got);
+                assert_eq!(kept, kept0, "kept count: {}", tag());
+                assert_eq!(got, want, "encoded bytes: {}", tag());
+                let mut dec = vec![0.0f32; n];
+                let applied = k.decompress_accumulate(&want, 1.0, &mut dec);
+                assert_eq!(applied, applied0, "applied count: {}", tag());
+                for i in 0..n {
+                    assert_eq!(dec0[i].to_bits(), dec[i].to_bits(), "dec[{i}] {}", tag());
+                }
+                let mut r = vec![0.0f32; n];
+                let (mut ea, mut eb) = (Vec::new(), Vec::new());
+                ef_compress_into(&**k, &g, &mut r, mode, &mut ea);
+                ef_compress_into(&**k, &g2, &mut r, mode, &mut eb);
+                assert_eq!(ea, ef0a, "EF round 1 bytes: {}", tag());
+                assert_eq!(eb, ef0b, "EF round 2 bytes: {}", tag());
+                for i in 0..n {
+                    assert_eq!(r0[i].to_bits(), r[i].to_bits(), "residual[{i}] {}", tag());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dp_compressed_run_bit_identical_across_worker_counts() {
+    // Error-feedback compressed runs keep the uncompressed tier's
+    // worker-count invariance: residuals live per shard and are cleared on
+    // every Welcome, so at a fixed shard count the whole run — params,
+    // momentum, Hessian EMA, clip counts, per-step losses, even the saved
+    // byte count — is bit-identical for 1, 2 and 4 workers. The 1-worker
+    // run is the serial oracle.
+    use sophia::coordinator::DpConfig;
+    use sophia::optim::engine::{Compression, StateKind};
+    for (seed, mode) in [(0u64, Compression::TopK16), (1, Compression::TopK64)] {
+        let mut rng = Rng::new(seed ^ 0x3C0DE);
+        let lens = [1 + rng.below(50) as usize, 100 + rng.below(400) as usize];
+        let mk = |workers: usize| DpConfig {
+            workers,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            seed,
+            straggler_timeout_ms: 10_000,
+            compress: mode,
+            ..DpConfig::default()
+        };
+        let run = |workers: usize| {
+            let mut dp =
+                sophia::coordinator::DpCoordinator::synthetic(mk(workers), &lens, 11).unwrap();
+            let out = dp.train().unwrap();
+            assert!(!out.diverged);
+            assert!(out.counters.bytes_saved > 0, "mode {} workers {workers}", mode.name());
+            assert!(
+                out.counters.compression_ratio > 4.0,
+                "mode {} workers {workers}: ratio {}",
+                mode.name(),
+                out.counters.compression_ratio
+            );
+            (
+                dp.flat().buf(StateKind::P).to_vec(),
+                dp.flat().buf(StateKind::M).to_vec(),
+                dp.flat().buf(StateKind::H).to_vec(),
+                dp.clip_counts().to_vec(),
+                dp.records.iter().map(|r| r.loss.to_bits()).collect::<Vec<u64>>(),
+                out.counters.bytes_saved,
+            )
+        };
+        let (p1, m1, h1, c1, l1, saved1) = run(1);
+        for workers in [2usize, 4] {
+            let (p, m, h, c, l, saved) = run(workers);
+            let tag = format!("mode {} workers {workers}", mode.name());
+            assert_bits_eq(&format!("{tag} p"), &p1, &p);
+            assert_bits_eq(&format!("{tag} m"), &m1, &m);
+            assert_bits_eq(&format!("{tag} h"), &h1, &h);
+            assert_eq!(c1, c, "{tag} clip counts");
+            assert_eq!(l1, l, "{tag} per-step losses");
+            assert_eq!(saved1, saved, "{tag} bytes_saved");
+        }
+    }
+}
+
+#[test]
 fn prop_adamw_step_norm_bounded_by_lr_over_eps_regime() {
     // AdamW's per-coordinate update magnitude is ~lr after bias
     // correction; verify it never exceeds lr * 10 for sane inputs.
