@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut vals: Vec<f64> = Vec::new();
     let mut sess = Session::new(Program::load(&mut rt, &model, "hess_diag")?, 0);
     for seed in 0..4 {
-        let b = loader.next_batch();
+        let b = loader.next_batch()?;
         let mut out = sess.run(
             &mut rt,
             &Binds::new()

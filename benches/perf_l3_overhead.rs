@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let state = ModelState::init(&model, 0)?;
     let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
     let mut loader = data::Loader::new(tok, 1, Split::Train, model.batch, model.ctx);
-    let batch = loader.next_batch();
+    let batch = loader.next_batch()?;
 
     // (1) raw execute with pre-built inputs (the floor)
     let tokens = lit_i32(&batch.tokens, &[batch.batch, batch.width])?;
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
 
     // (3) data pipeline alone
     let data_t = bench(3, 15, || {
-        let _ = loader.next_batch();
+        let _ = loader.next_batch().unwrap();
     });
 
     let mut table = Table::new(&["component", "median ms", "min ms", "max ms"]);

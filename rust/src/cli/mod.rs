@@ -101,6 +101,17 @@ USAGE: sophia <subcommand> [--flags]
           pool:<ncpu>.)
          [--workers N] [--shards S] [--straggler-ms T] [--fault-plan SPEC]
          [--synthetic] [--params P] [--compress none|topk16|topk64]
+         [--data SPEC]
+         (--data selects the document source behind the token pipeline:
+          synthetic (default — the seeded generator, byte-identical to
+          earlier releases), synthetic:SEED (pin a corpus seed),
+          file:PATH (newline-delimited local corpus; a validated
+          PATH.sidx index sidecar is used when present — see
+          docs/PROTOCOL.md § SIDX), or a weighted mixture of those as
+          comma-separated W*SPEC terms, e.g.
+          --data \"0.7*synthetic,0.3*file:domain.txt\". Mixtures draw the
+          domain per document index from --data-seed, so the interleave
+          is reproducible and bit-identical for any worker count.)
          (--workers > 1 — or --synthetic at any worker count — runs
           fault-tolerant data-parallel training: a
           coordinator drives N in-process workers over S fixed data shards
@@ -142,6 +153,10 @@ USAGE: sophia <subcommand> [--flags]
          [--preset b1] [--io-timeout-ms 10000] [--backoff-base-ms 50]
          [--backoff-cap-ms 2000] [--max-reconnects 40] [--fault-plan SPEC]
          [--seed 0] [--data-seed 1] [--compress none|topk16|topk64]
+         [--data SPEC]
+         (--data must match the coordinator's spec — each worker rebuilds
+          the same provider tree from (spec, data-seed), which is what
+          keeps shard streams identical across worker counts.)
          (TCP worker: connects to a dp-serve coordinator with capped
           exponential backoff + deterministic jitter, handshakes for a slot
           (--worker-id claims a specific one), receives optimizer state
@@ -208,6 +223,9 @@ pub fn build_train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     cfg.dp_io_timeout_ms = args.u64_or("io-timeout-ms", cfg.dp_io_timeout_ms)?;
     if let Some(c) = args.flags.get("compress") {
         cfg.compress = crate::optim::engine::Compression::parse(c)?;
+    }
+    if let Some(d) = args.flags.get("data") {
+        cfg.data = crate::data::DataSpec::parse(d)?;
     }
     if cfg.steps == 0 {
         bail!("--steps must be > 0");
@@ -303,6 +321,28 @@ mod tests {
         let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
         assert!(d.dp_listen.is_none());
         assert_eq!(d.dp_io_timeout_ms, 10_000);
+    }
+
+    #[test]
+    fn data_flag_wires_into_train_config() {
+        use crate::data::DataSpec;
+        let d = build_train_config(&Args::parse(&argv("train --preset nano")).unwrap()).unwrap();
+        assert_eq!(d.data, DataSpec::default());
+        let a = Args::parse(&argv(
+            "train --preset nano --data 0.7*synthetic,0.3*synthetic:99 --data-seed 5",
+        ))
+        .unwrap();
+        let c = build_train_config(&a).unwrap();
+        assert_eq!(c.data.to_string(), "0.7*synthetic,0.3*synthetic:99");
+        assert_eq!(c.data_seed, 5);
+        let f = build_train_config(
+            &Args::parse(&argv("train --preset nano --data file:corpus.txt")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.data, DataSpec::File("corpus.txt".into()));
+        let bad = Args::parse(&argv("train --preset nano --data gcs://bucket")).unwrap();
+        let err = build_train_config(&bad).unwrap_err().to_string();
+        assert!(err.contains("expected synthetic"), "{err}");
     }
 
     #[test]

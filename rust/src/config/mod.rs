@@ -614,6 +614,12 @@ pub struct TrainConfig {
     /// {none,topk16,topk64}`): error-feedback top-k + sign quantization,
     /// see `docs/PROTOCOL.md` § CompressedGrad.
     pub compress: crate::optim::engine::Compression,
+    /// Data source (`--data`, `[data]` TOML): the synthetic corpus
+    /// (default, byte-identical to the pre-provider pipeline), a local
+    /// newline-delimited file corpus, or a weighted multi-domain mixture.
+    /// Providers are built from this spec + `data_seed` at trainer /
+    /// coordinator construction, so every worker derives the same stream.
+    pub data: crate::data::DataSpec,
 }
 
 impl Default for TrainConfig {
@@ -644,6 +650,7 @@ impl Default for TrainConfig {
             dp_listen: None,
             dp_io_timeout_ms: 10_000,
             compress: crate::optim::engine::Compression::None,
+            data: crate::data::DataSpec::default(),
         }
     }
 }
@@ -733,6 +740,35 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("dp", "compress").and_then(|v| v.as_str()) {
             self.compress = crate::optim::engine::Compression::parse(v)?;
+        }
+        if let Some(v) = doc.get("data", "provider").and_then(|v| v.as_str()) {
+            self.data = match v {
+                "synthetic" => crate::data::DataSpec::Synthetic { seed: None },
+                "file" => {
+                    let p = doc
+                        .get("data", "path")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("[data] provider = \"file\" needs path = \"...\""))?;
+                    crate::data::DataSpec::File(PathBuf::from(p))
+                }
+                "mixture" => {
+                    let m = doc.get("data", "mixture").and_then(|v| v.as_str()).ok_or_else(|| {
+                        anyhow!(
+                            "[data] provider = \"mixture\" needs mixture = \"W*SPEC,W*SPEC,...\""
+                        )
+                    })?;
+                    let spec = crate::data::DataSpec::parse(m)
+                        .with_context(|| format!("[data] mixture = {m:?}"))?;
+                    if !matches!(spec, crate::data::DataSpec::Mixture(_)) {
+                        bail!("[data] mixture = {m:?}: expected weighted W*SPEC terms");
+                    }
+                    spec
+                }
+                // anything else must be a full inline spec (e.g.
+                // "synthetic:99" or "0.7*synthetic,0.3*file:d.txt")
+                other => crate::data::DataSpec::parse(other)
+                    .with_context(|| format!("[data] provider = {other:?}"))?,
+            };
         }
         Ok(())
     }
@@ -878,5 +914,46 @@ mod tests {
         assert!(d.dp_listen.is_none());
         assert_eq!(d.dp_io_timeout_ms, 10_000);
         assert_eq!(d.compress, crate::optim::engine::Compression::None);
+    }
+
+    #[test]
+    fn toml_data_section_wires_provider_specs() {
+        use crate::data::DataSpec;
+        // default: synthetic, byte-identical to the pre-provider pipeline
+        assert_eq!(TrainConfig::default().data, DataSpec::default());
+
+        let doc = toml::Toml::parse("[data]\nprovider = \"synthetic\"\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.data, DataSpec::Synthetic { seed: None });
+
+        let doc =
+            toml::Toml::parse("[data]\nprovider = \"file\"\npath = \"corpus.txt\"\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.data, DataSpec::File(PathBuf::from("corpus.txt")));
+
+        let doc = toml::Toml::parse(
+            "[data]\nprovider = \"mixture\"\nmixture = \"0.7*synthetic,0.3*synthetic:99\"\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.data.to_string(), "0.7*synthetic,0.3*synthetic:99");
+
+        // inline full specs ride through the provider key too
+        let doc = toml::Toml::parse("[data]\nprovider = \"synthetic:42\"\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.data, DataSpec::Synthetic { seed: Some(42) });
+
+        // named errors: file without a path, mixture that isn't one
+        let bad = toml::Toml::parse("[data]\nprovider = \"file\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::default().apply_toml(&bad).unwrap_err());
+        assert!(err.contains("needs path"), "{err}");
+        let bad =
+            toml::Toml::parse("[data]\nprovider = \"mixture\"\nmixture = \"synthetic\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::default().apply_toml(&bad).unwrap_err());
+        assert!(err.contains("W*SPEC"), "{err}");
     }
 }

@@ -428,16 +428,17 @@ impl GradSource for SyntheticGrad {
 /// The real gradient source: one `Runtime` + `Session` per worker over the
 /// shared [`GRAD_ARTIFACT`] (and the rule's raw estimator artifact for the
 /// coordinator's copy). Purity in (step, shard, params) comes from giving
-/// every (shard, step) its own document offset in the corpus stream — the
-/// batch depends only on those coordinates, never on call history — and
-/// re-uploading `params` per call.
+/// every (shard, step) its own document offset in the provider's stream —
+/// the batch depends only on those coordinates (providers are pure in
+/// `(spec, data_seed, index)`), never on call history — and re-uploading
+/// `params` per call.
 pub struct SessionGrad {
     rt: Runtime,
     state: ModelState,
     grad_sess: Session,
     est_sess: Option<Session>,
+    provider: Arc<dyn data::DataProvider>,
     tok: Arc<dyn data::Tokenizer>,
-    data_seed: u64,
     batch: usize,
     ctx: usize,
     leaf_ranges: Vec<Range<usize>>,
@@ -454,7 +455,17 @@ fn stream_offset(stream: u64, step: usize) -> u64 {
 const EST_STREAM: u64 = 0xFF_FFFF;
 
 impl SessionGrad {
-    pub fn new(model: &ModelConfig, seed: u64, data_seed: u64, ghat_artifact: Option<&str>) -> Result<Self> {
+    /// `provider`: the document source every (shard, step) batch derives
+    /// from — workers rebuild it from the same `(DataSpec, data_seed)`,
+    /// which is what keeps their streams identical (see
+    /// [`crate::data::DataSpec::build`]).
+    pub fn new(
+        model: &ModelConfig,
+        seed: u64,
+        data_seed: u64,
+        ghat_artifact: Option<&str>,
+        provider: Arc<dyn data::DataProvider>,
+    ) -> Result<Self> {
         let mut rt = Runtime::cpu()?;
         let grad = Program::load(&mut rt, model, GRAD_ARTIFACT)
             .with_context(|| format!("grad artifact for preset {}", model.name))?;
@@ -480,16 +491,17 @@ impl SessionGrad {
             grad_sess: Session::new(grad, sess_seed),
             est_sess: est.map(|p| Session::new(p, sess_seed)),
             tok: data::tokenizer_for_vocab(model.vocab, data_seed)?,
-            data_seed,
+            provider,
             batch: model.batch,
             ctx: model.ctx,
             leaf_ranges,
         })
     }
 
-    fn batch_at(&self, stream: u64, step: usize) -> data::Batch {
-        let mut loader = Loader::new(self.tok.clone(), self.data_seed, Split::Train, self.batch, self.ctx)
-            .with_doc_offset(stream_offset(stream, step));
+    fn batch_at(&self, stream: u64, step: usize) -> Result<data::Batch> {
+        let mut loader =
+            Loader::over(self.provider.clone(), self.tok.clone(), Split::Train, self.batch, self.ctx)
+                .with_doc_offset(stream_offset(stream, step));
         loader.next_batch()
     }
 }
@@ -503,7 +515,7 @@ impl GradSource for SessionGrad {
         out: &mut [f32],
     ) -> Result<GradOut> {
         self.state.set_params_flat(params)?;
-        let batch = self.batch_at(shard as u64, step);
+        let batch = self.batch_at(shard as u64, step)?;
         let r = self.grad_sess.run(
             &mut self.rt,
             &Binds::new()
@@ -517,17 +529,12 @@ impl GradSource for SessionGrad {
     }
 
     fn estimator(&mut self, step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()> {
-        let sess = self
-            .est_sess
-            .as_mut()
-            .ok_or_else(|| anyhow!("no estimator artifact loaded"))?;
+        if self.est_sess.is_none() {
+            return Err(anyhow!("no estimator artifact loaded"));
+        }
         self.state.set_params_flat(params)?;
-        let batch = {
-            let mut loader =
-                Loader::new(self.tok.clone(), self.data_seed, Split::Train, self.batch, self.ctx)
-                    .with_doc_offset(stream_offset(EST_STREAM, step));
-            loader.next_batch()
-        };
+        let batch = self.batch_at(EST_STREAM, step)?;
+        let sess = self.est_sess.as_mut().expect("checked above");
         let r = sess.run(
             &mut self.rt,
             &Binds::new()
@@ -536,6 +543,73 @@ impl GradSource for SessionGrad {
                 .seed(seed),
         )?;
         r.gather_into(OutRole::Ghat, &self.leaf_ranges, out)?;
+        Ok(())
+    }
+}
+
+/// Artifact-free gradient source that *consumes real provider data*: the
+/// synthetic quadratic pull of [`SyntheticGrad`], but with the noise RNG
+/// keyed by an FNV-1a digest of the token batch the provider serves at
+/// the same `(stream, step)` offsets [`SessionGrad`] uses. Any
+/// divergence in any worker's document stream — a mixture drawing a
+/// different domain, a file corpus byte off — lands in the gradient bits,
+/// so the DP bit-exactness proptests (`prop_dp_data_*`) make data-stream
+/// purity part of the all-reduce oracle without needing XLA artifacts.
+pub struct ProviderGrad {
+    provider: Arc<dyn data::DataProvider>,
+    tok: Arc<dyn data::Tokenizer>,
+    data_seed: u64,
+    batch: usize,
+    ctx: usize,
+}
+
+impl ProviderGrad {
+    pub fn new(provider: Arc<dyn data::DataProvider>, data_seed: u64) -> Self {
+        // byte tokenizer + a small window: the digest cares about bytes,
+        // not model scale
+        ProviderGrad { provider, tok: Arc::new(data::ByteTokenizer), data_seed, batch: 2, ctx: 16 }
+    }
+
+    /// FNV-1a 64 over the token batch at `(stream, step)` — pure in those
+    /// coordinates because providers are pure in `(spec, seed, index)`.
+    fn stream_digest(&self, stream: u64, step: usize) -> Result<u64> {
+        let mut loader =
+            Loader::over(self.provider.clone(), self.tok.clone(), Split::Train, self.batch, self.ctx)
+                .with_doc_offset(stream_offset(stream, step));
+        let b = loader.next_batch()?;
+        let mut bytes = Vec::with_capacity(b.tokens.len() * 4);
+        for t in &b.tokens {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        Ok(checkpoint::fnv1a64(&bytes))
+    }
+}
+
+impl GradSource for ProviderGrad {
+    fn grad(
+        &mut self,
+        step: usize,
+        shard: usize,
+        params: &[f32],
+        out: &mut [f32],
+    ) -> Result<GradOut> {
+        let digest = self.stream_digest(shard as u64, step)?;
+        let mut rng =
+            Rng::new(self.data_seed ^ digest).fold(shard as u64 + 1).fold(step as u64 + 1);
+        for (o, &p) in out.iter_mut().zip(params) {
+            *o = 0.05 * p + 0.02 * rng.normal_f32(1.0);
+        }
+        let n = params.len().max(1) as f64;
+        let loss = l2_norm(params).powi(2) / (2.0 * n) + 1.0;
+        Ok(GradOut { loss, gnorm: l2_norm(out) })
+    }
+
+    fn estimator(&mut self, step: usize, seed: i32, params: &[f32], out: &mut [f32]) -> Result<()> {
+        let digest = self.stream_digest(EST_STREAM, step)?;
+        let mut rng = Rng::new(self.data_seed ^ digest ^ 0x5EED).fold(seed as u64);
+        for (o, &p) in out.iter_mut().zip(params) {
+            *o = 0.05 + 0.5 * rng.normal_f32(1.0).abs() + 1e-3 * p.abs();
+        }
         Ok(())
     }
 }
@@ -2049,8 +2123,13 @@ fn dp_parts_from(train: &TrainConfig) -> Result<(DpConfig, Vec<usize>, Vec<f32>,
     let ghat = rule.estimator().artifact();
     let seed = train.seed;
     let data_seed = train.data_seed;
+    // built once up front so a bad --data spec (missing file, corrupt
+    // sidecar) fails at launch, not on a worker thread mid-run; workers
+    // share the Arc — providers are immutable after construction
+    let provider = train.data.build(data_seed).context("building --data provider")?;
     let factory: SourceFactory = Arc::new(move |_id| {
-        Ok(Box::new(SessionGrad::new(&model, seed, data_seed, ghat)?) as Box<dyn GradSource>)
+        Ok(Box::new(SessionGrad::new(&model, seed, data_seed, ghat, provider.clone())?)
+            as Box<dyn GradSource>)
     });
     Ok((cfg, leaf_lens, init_p, factory))
 }

@@ -16,8 +16,8 @@ pub mod trainer;
 
 pub use dp::{
     build_dp, build_dp_serve, synthetic_data_seed, ChannelTransport, DpConfig, DpCoordinator,
-    DpOutcome, Event, FaultPlan, FromWorker, GradOut, GradSource, Job, NetStats, RunPhase,
-    SourceFactory, StateSync, SyntheticGrad, ToWorker, Transport, WorkerHealth,
+    DpOutcome, Event, FaultPlan, FromWorker, GradOut, GradSource, Job, NetStats, ProviderGrad,
+    RunPhase, SourceFactory, StateSync, SyntheticGrad, ToWorker, Transport, WorkerHealth,
 };
 pub use net::{run_worker, TcpTransport, WorkerCfg};
 pub use trainer::{TrainOutcome, Trainer};

@@ -28,7 +28,7 @@
 
 use crate::config::{ModelConfig, OutRole, TrainConfig};
 use crate::data::{self, Loader, Prefetcher, Split};
-use crate::metrics::{RunLog, StepRecord};
+use crate::metrics::{HealthCounters, RunLog, StepRecord};
 use crate::optim::engine::{default_threads, AlignedBuf, Backend, FlatState, UpdateKernel};
 use crate::optim::rules::{self, l2_norm, StepCtx, UpdateRule};
 use crate::runtime::{Binds, ModelState, Program, Runtime, Session};
@@ -118,6 +118,9 @@ pub struct Trainer {
     pub total_step_ms: f64,
     pub n_hess: usize,
     pub diverged: bool,
+    /// Run-health counters; the single-process path fills the data-
+    /// prefetch fields (depth/produced/stalls) at end of `train_steps`.
+    pub health: HealthCounters,
 }
 
 /// Summary returned by `train()` for the bench harness.
@@ -178,10 +181,11 @@ impl Trainer {
         let eval_sess = Session::new(Program::load(&mut rt, &model, "eval_step")?, sess_seed);
 
         let tok = data::tokenizer_for_vocab(model.vocab, cfg.data_seed)?;
-        let train_loader = Loader::new(
-            tok.clone(), cfg.data_seed, Split::Train, model.batch, model.ctx);
-        let val_data = Loader::new(
-            tok, cfg.data_seed, Split::Val, model.batch, model.ctx);
+        let provider = cfg.data.build(cfg.data_seed).context("building --data provider")?;
+        let train_loader = Loader::over(
+            provider.clone(), tok.clone(), Split::Train, model.batch, model.ctx);
+        let val_data = Loader::over(
+            provider, tok, Split::Val, model.batch, model.ctx);
 
         let state = ModelState::init(&model, cfg.seed)?;
         let schedule = Schedule::cosine(
@@ -202,7 +206,7 @@ impl Trainer {
             schedule,
             log,
             step: 0,
-            train_data: Prefetcher::spawn(train_loader, 4),
+            train_data: Prefetcher::spawn(train_loader, data::DOUBLE_BUFFER),
             val_data,
             train_sess,
             hess_sess,
@@ -212,6 +216,7 @@ impl Trainer {
             total_step_ms: 0.0,
             n_hess: 0,
             diverged: false,
+            health: HealthCounters::default(),
         })
     }
 
@@ -258,7 +263,7 @@ impl Trainer {
         let Some(sess) = self.hess_sess.as_mut() else {
             return Ok(0.0);
         };
-        let batch = self.train_data.next_batch();
+        let batch = self.train_data.next_batch()?;
         let out = sess.run(
             &mut self.rt,
             &Binds::new()
@@ -317,7 +322,7 @@ impl Trainer {
             hess_ms = t0.elapsed().as_secs_f64() * 1e3;
         }
 
-        let batch = self.train_data.next_batch();
+        let batch = self.train_data.next_batch()?;
         let t0 = Instant::now();
         let out = self.train_sess.run(
             &mut self.rt,
@@ -366,7 +371,7 @@ impl Trainer {
         let mut hnorm = 0.0;
         if refresh {
             let t0 = Instant::now();
-            let batch = train_data.next_batch();
+            let batch = train_data.next_batch()?;
             state.upload_params(&eng.fs)?;
             let sess = hess_sess.as_mut().unwrap();
             let out = sess.run(
@@ -382,7 +387,7 @@ impl Trainer {
 
         // gradient-only artifact: loss + globally-clipped grads, gathered
         // straight into the engine's scratch arena by role
-        let batch = train_data.next_batch();
+        let batch = train_data.next_batch()?;
         let t0 = Instant::now();
         if !refresh {
             state.upload_params(&eng.fs)?;
@@ -435,7 +440,7 @@ impl Trainer {
         }
         let mut total = 0.0;
         for _ in 0..n_batches.max(1) {
-            let batch = self.val_data.next_batch();
+            let batch = self.val_data.next_batch()?;
             let out = self.eval_sess.run(
                 &mut self.rt,
                 &Binds::new()
@@ -496,6 +501,9 @@ impl Trainer {
             Some(v) => v,
             None => self.eval(self.cfg.eval_batches)?,
         };
+        self.health.prefetch_depth = self.train_data.depth();
+        self.health.batches_prefetched = self.train_data.batches_prefetched();
+        self.health.prefetch_stalls = self.train_data.stalls();
         let steps_done = self.step;
         Ok(TrainOutcome {
             final_train_loss: last_loss,

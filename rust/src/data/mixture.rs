@@ -1,0 +1,142 @@
+//! Deterministic weighted mixing of [`DataProvider`]s.
+//!
+//! The mixture determinism rule: which domain serves document `index` is
+//! a pure function of `(mixture seed, index)` — an independent weighted
+//! draw per index, never a stateful round-robin. That makes the
+//! interleaving reproducible from the seed alone and independent of
+//! worker count, batch size, or visit order: DP workers reading disjoint
+//! index ranges see exactly the slices of the one global interleaved
+//! stream they would see single-process (`prop_dp_data_*` enforces this
+//! end to end, crash/recovery replays included).
+
+use super::provider::DataProvider;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Salt folded into the mixture's domain-draw RNG stream so it can never
+/// collide with the corpus generator's own use of the same seed
+/// (ASCII "MIXT").
+const MIX_SALT: u64 = 0x4D49_5854;
+
+/// N child providers mixed by weight via a deterministic per-index draw.
+///
+/// The child receives the *global* document index, not a per-domain
+/// counter — so a degenerate mixture (one child at weight 1.0)
+/// reproduces that child's stream exactly, by construction, and adding a
+/// domain never renumbers another domain's documents.
+pub struct WeightedMixture {
+    seed: u64,
+    weights: Vec<f64>,
+    children: Vec<Arc<dyn DataProvider>>,
+}
+
+impl WeightedMixture {
+    /// `parts` are (weight, child) pairs; weights must be finite and
+    /// positive but need not sum to 1 (the draw normalizes).
+    pub fn new(seed: u64, parts: Vec<(f64, Arc<dyn DataProvider>)>) -> Result<Self> {
+        if parts.is_empty() {
+            bail!("mixture: needs at least one (weight, provider) component");
+        }
+        for (i, (w, _)) in parts.iter().enumerate() {
+            if !w.is_finite() || *w <= 0.0 {
+                bail!("mixture: component {i}: weight {w} must be finite and > 0");
+            }
+        }
+        let (weights, children) = parts.into_iter().unzip();
+        Ok(WeightedMixture { seed, weights, children })
+    }
+
+    /// Which child serves document `index`. Pure in `(seed, index)`.
+    pub fn pick(&self, index: u64) -> usize {
+        let mut rng = Rng::new(self.seed ^ MIX_SALT).fold(index);
+        rng.categorical(&self.weights)
+    }
+}
+
+impl DataProvider for WeightedMixture {
+    fn kind(&self) -> &'static str {
+        "mixture"
+    }
+
+    /// Unbounded when any child is; otherwise the max child count (each
+    /// child wraps its own finite range independently).
+    fn doc_count(&self) -> Option<u64> {
+        let mut most = 0u64;
+        for c in &self.children {
+            most = most.max(c.doc_count()?);
+        }
+        Some(most)
+    }
+
+    fn document(&self, index: u64) -> Result<String> {
+        self.children[self.pick(index)].document(index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::corpus;
+    use super::super::provider::SyntheticProvider;
+    use super::*;
+
+    fn mix(seed: u64, parts: Vec<(f64, u64)>) -> WeightedMixture {
+        let parts = parts
+            .into_iter()
+            .map(|(w, s)| (w, Arc::new(SyntheticProvider::new(s)) as Arc<dyn DataProvider>))
+            .collect();
+        WeightedMixture::new(seed, parts).unwrap()
+    }
+
+    #[test]
+    fn degenerate_single_domain_reproduces_child_stream_exactly() {
+        let m = mix(7, vec![(1.0, 42)]);
+        for i in 0..200u64 {
+            assert_eq!(m.document(i).unwrap(), corpus::document(42, i).text);
+        }
+    }
+
+    #[test]
+    fn pick_is_pure_in_seed_and_index() {
+        let a = mix(7, vec![(0.6, 1), (0.4, 2)]);
+        let b = mix(7, vec![(0.6, 1), (0.4, 2)]);
+        // same (seed, index) -> same pick, any visit order
+        for i in (0..100u64).rev() {
+            assert_eq!(a.pick(i), b.pick(i));
+        }
+        let c = mix(8, vec![(0.6, 1), (0.4, 2)]);
+        assert!((0..100).any(|i| a.pick(i) != c.pick(i)), "seed must matter");
+    }
+
+    #[test]
+    fn every_document_comes_from_the_picked_child() {
+        let m = mix(3, vec![(0.5, 10), (0.3, 20), (0.2, 30)]);
+        let seeds = [10u64, 20, 30];
+        let mut seen = [false; 3];
+        for i in 0..300u64 {
+            let k = m.pick(i);
+            seen[k] = true;
+            assert_eq!(m.document(i).unwrap(), corpus::document(seeds[k], i).text);
+        }
+        assert!(seen.iter().all(|&s| s), "300 draws should hit all three domains");
+    }
+
+    #[test]
+    fn draw_frequencies_track_weights() {
+        let m = mix(11, vec![(0.8, 1), (0.2, 2)]);
+        let n = 2000u64;
+        let hits = (0..n).filter(|&i| m.pick(i) == 0).count() as f64;
+        let frac = hits / n as f64;
+        assert!((frac - 0.8).abs() < 0.05, "got {frac}, want ~0.8");
+    }
+
+    #[test]
+    fn rejects_empty_and_bad_weights() {
+        assert!(WeightedMixture::new(1, vec![]).is_err());
+        let child = || Arc::new(SyntheticProvider::new(1)) as Arc<dyn DataProvider>;
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = WeightedMixture::new(1, vec![(w, child())]).unwrap_err().to_string();
+            assert!(err.contains("finite and > 0"), "{err}");
+        }
+    }
+}

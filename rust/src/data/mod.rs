@@ -1,13 +1,20 @@
-//! Data substrate: synthetic corpus generator, tokenizers (byte / BPE),
-//! and the packing/batching/prefetch pipeline. See DESIGN.md §4 for why
-//! this substitution preserves the paper's experimental behaviour.
+//! Data substrate: the `DataProvider` seam (synthetic corpus, local file
+//! corpora, weighted multi-domain mixtures), tokenizers (byte / BPE), and
+//! the packing/batching/prefetch pipeline. See DESIGN.md §4 for why the
+//! synthetic substitution preserves the paper's experimental behaviour,
+//! and docs/ARCHITECTURE.md §Data subsystem for the provider/mixture
+//! determinism rules.
 
 pub mod corpus;
+pub mod mixture;
 pub mod pipeline;
+pub mod provider;
 pub mod tokenizer;
 
 pub use corpus::Split;
-pub use pipeline::{Batch, Loader, Prefetcher};
+pub use mixture::WeightedMixture;
+pub use pipeline::{Batch, Loader, Prefetcher, DOUBLE_BUFFER};
+pub use provider::{DataProvider, DataSpec, FileProvider, SyntheticProvider};
 pub use tokenizer::{Bpe, ByteTokenizer, Tokenizer};
 
 use anyhow::Result;

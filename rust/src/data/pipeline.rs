@@ -1,15 +1,30 @@
-//! Data pipeline: document generation -> tokenization -> packing into
-//! fixed-length training windows -> shuffled batching, with a background
-//! prefetch thread so tokenization never sits on the training hot path.
+//! Data pipeline: documents (via any [`DataProvider`]) -> tokenization ->
+//! packing into fixed-length training windows -> double-buffered prefetch,
+//! so tokenization overlaps the train step instead of sitting on the hot
+//! path that feeds the pinned `TokenSlot`s.
 //!
 //! Windows are (ctx + 1) tokens: the train step slices x = w[:-1],
 //! y = w[1:] inside the artifact. Documents are packed contiguously and
 //! separated by EOT, exactly like GPT-2 pre-training.
+//!
+//! The `Loader` still maps `(split, i)` through `corpus::doc_index`
+//! before asking the provider — so the train/val interleave contract is
+//! provider-independent, and the default [`SyntheticProvider`] path is
+//! byte-identical to the pre-provider pipeline by construction
+//! (`default_provider_stream_matches_legacy_loader` pins this).
 
 use super::corpus::{self, Split};
+use super::provider::{DataProvider, SyntheticProvider};
 use super::tokenizer::Tokenizer;
-use std::sync::mpsc::{sync_channel, Receiver};
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
 use std::sync::Arc;
+
+/// Prefetch queue depth: one batch being consumed, one being built —
+/// classic double buffering. Deeper queues only add memory and latency
+/// to config changes; the stall counter says when depth is the bottleneck.
+pub const DOUBLE_BUFFER: usize = 2;
 
 /// A batch of token windows, row-major (batch, ctx + 1) i32.
 #[derive(Clone, Debug)]
@@ -19,10 +34,10 @@ pub struct Batch {
     pub width: usize,
 }
 
-/// Streaming loader over the infinite synthetic corpus.
+/// Streaming loader: packs provider documents into training windows.
 pub struct Loader {
+    provider: Arc<dyn DataProvider>,
     tok: Arc<dyn Tokenizer>,
-    seed: u64,
     split: Split,
     batch: usize,
     width: usize, // ctx + 1
@@ -31,6 +46,8 @@ pub struct Loader {
 }
 
 impl Loader {
+    /// The historical constructor: the synthetic corpus at `seed`.
+    /// Equivalent to `Loader::over(Arc::new(SyntheticProvider::new(seed)), ..)`.
     pub fn new(
         tok: Arc<dyn Tokenizer>,
         seed: u64,
@@ -38,59 +55,141 @@ impl Loader {
         batch: usize,
         ctx: usize,
     ) -> Self {
-        Loader { tok, seed, split, batch, width: ctx + 1, next_doc: 0, buf: Vec::new() }
+        Self::over(Arc::new(SyntheticProvider::new(seed)), tok, split, batch, ctx)
     }
 
-    /// Start from a given document offset (used to resume and for val
-    /// streams decorrelated from training order).
+    /// A loader over any document provider.
+    pub fn over(
+        provider: Arc<dyn DataProvider>,
+        tok: Arc<dyn Tokenizer>,
+        split: Split,
+        batch: usize,
+        ctx: usize,
+    ) -> Self {
+        Loader { provider, tok, split, batch, width: ctx + 1, next_doc: 0, buf: Vec::new() }
+    }
+
+    /// Start from a given document offset (used by the DP tiers' per-
+    /// stream offsets, resume, and val streams decorrelated from training
+    /// order).
     pub fn with_doc_offset(mut self, off: u64) -> Self {
         self.next_doc = off;
         self
     }
 
-    fn refill(&mut self, need: usize) {
+    fn refill(&mut self, need: usize) -> Result<()> {
         while self.buf.len() < need {
             let idx = corpus::doc_index(self.split, self.next_doc);
             self.next_doc += 1;
-            let doc = corpus::document(self.seed, idx);
-            let mut ids = self.tok.encode(&doc.text);
+            let text = self.provider.document(idx)?;
+            let mut ids = self.tok.encode(&text);
             self.buf.push(self.tok.eot());
             self.buf.append(&mut ids);
         }
+        Ok(())
     }
 
     /// Produce the next batch (deterministic sequence of sequential
-    /// windows over the packed stream).
-    pub fn next_batch(&mut self) -> Batch {
+    /// windows over the packed stream). Errs only when the provider does
+    /// (the synthetic corpus never does; a validated `FileProvider`
+    /// doesn't either — the `Result` exists for the trait seam).
+    pub fn next_batch(&mut self) -> Result<Batch> {
         let need = self.batch * self.width;
-        self.refill(need);
+        self.refill(need)?;
         let tokens: Vec<i32> = self.buf.drain(..need).collect();
-        Batch { tokens, batch: self.batch, width: self.width }
+        Ok(Batch { tokens, batch: self.batch, width: self.width })
     }
 }
 
 /// Background prefetcher: runs a Loader on a worker thread, keeps up to
-/// `depth` batches queued. Keeps tokenization off the training loop
-/// (measured in the L3 perf pass, EXPERIMENTS.md §Perf).
+/// `depth` batches queued so tokenization of batch t+1 overlaps step t
+/// (measured in `benches/data_throughput.rs`; BENCH_data.json).
+///
+/// Lifecycle contract: a provider error is delivered in-band as the
+/// terminal `Err` of [`Prefetcher::next_batch`] (never a panic), and
+/// dropping the consumer deterministically terminates the worker thread —
+/// `Drop` raises a stop flag, drains the queue to unpark a blocked
+/// `send`, and joins the thread.
 pub struct Prefetcher {
-    rx: Receiver<Batch>,
-    _handle: std::thread::JoinHandle<()>,
+    rx: Receiver<Result<Batch>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    depth: usize,
+    produced: Arc<AtomicUsize>,
+    stalls: AtomicUsize,
 }
 
 impl Prefetcher {
     pub fn spawn(mut loader: Loader, depth: usize) -> Self {
         let (tx, rx) = sync_channel(depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let produced = Arc::new(AtomicUsize::new(0));
+        let (stop_w, produced_w) = (stop.clone(), produced.clone());
         let handle = std::thread::spawn(move || loop {
-            let b = loader.next_batch();
-            if tx.send(b).is_err() {
+            if stop_w.load(Ordering::Acquire) {
                 return; // consumer dropped
             }
+            let b = loader.next_batch();
+            let died = b.is_err();
+            if tx.send(b).is_err() {
+                return; // consumer dropped mid-send
+            }
+            if died {
+                return; // error delivered; nothing more to produce
+            }
+            produced_w.fetch_add(1, Ordering::Relaxed);
         });
-        Prefetcher { rx, _handle: handle }
+        Prefetcher { rx, stop, handle: Some(handle), depth, produced, stalls: AtomicUsize::new(0) }
     }
 
-    pub fn next_batch(&self) -> Batch {
-        self.rx.recv().expect("prefetch thread died")
+    /// Next prefetched batch. An `Err` means the worker thread hit a
+    /// provider error (delivered once, in order) or already terminated —
+    /// both are named errors, never a panic.
+    pub fn next_batch(&self) -> Result<Batch> {
+        let slot = match self.rx.try_recv() {
+            Ok(slot) => slot,
+            Err(TryRecvError::Empty) => {
+                // consumer outran the producer: the train step waited
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+                self.rx.recv().map_err(|_| {
+                    anyhow!("data prefetch thread terminated before delivering a batch")
+                })?
+            }
+            Err(TryRecvError::Disconnected) => {
+                return Err(anyhow!(
+                    "data prefetch thread terminated before delivering a batch"
+                ));
+            }
+        };
+        slot.context("data prefetch worker")
+    }
+
+    /// Configured queue depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Batches the worker has produced ahead of consumption so far.
+    pub fn batches_prefetched(&self) -> usize {
+        self.produced.load(Ordering::Relaxed)
+    }
+
+    /// Times `next_batch` found the queue empty and had to wait.
+    pub fn stalls(&self) -> usize {
+        self.stalls.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // unpark a producer blocked in `send` on the full queue: after the
+        // drain it completes at most one more send into free capacity,
+        // then observes `stop` and exits — deterministic termination
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -106,7 +205,7 @@ mod tests {
     #[test]
     fn batch_shape_and_range() {
         let mut l = mk(Split::Train);
-        let b = l.next_batch();
+        let b = l.next_batch().unwrap();
         assert_eq!(b.tokens.len(), 4 * 65);
         assert_eq!((b.batch, b.width), (4, 65));
         assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
@@ -117,7 +216,7 @@ mod tests {
         let mut a = mk(Split::Train);
         let mut b = mk(Split::Train);
         for _ in 0..3 {
-            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+            assert_eq!(a.next_batch().unwrap().tokens, b.next_batch().unwrap().tokens);
         }
     }
 
@@ -125,7 +224,7 @@ mod tests {
     fn train_and_val_differ() {
         let mut a = mk(Split::Train);
         let mut b = mk(Split::Val);
-        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+        assert_ne!(a.next_batch().unwrap().tokens, b.next_batch().unwrap().tokens);
     }
 
     #[test]
@@ -134,28 +233,121 @@ mod tests {
         // and check no tokens were dropped (first batch tokens + second
         // batch tokens == refilled stream prefix).
         let mut l = mk(Split::Train);
-        let b1 = l.next_batch();
-        let b2 = l.next_batch();
+        let b1 = l.next_batch().unwrap();
+        let b2 = l.next_batch().unwrap();
         let mut l2 = mk(Split::Train);
-        l2.refill(2 * 4 * 65);
+        l2.refill(2 * 4 * 65).unwrap();
         let expect: Vec<i32> = l2.buf[..2 * 4 * 65].to_vec();
         let got: Vec<i32> = b1.tokens.iter().chain(b2.tokens.iter()).copied().collect();
         assert_eq!(got, expect);
     }
 
+    /// The acceptance-criteria regression: the default provider path must
+    /// be byte-identical to the pre-provider `Loader`, whose packing
+    /// algorithm is restated here inline against the raw corpus.
+    #[test]
+    fn default_provider_stream_matches_legacy_loader() {
+        let tok = Arc::new(ByteTokenizer);
+        let (seed, batch, width) = (7u64, 4usize, 65usize);
+        for split in [Split::Train, Split::Val] {
+            let mut legacy: Vec<i32> = Vec::new();
+            let mut next_doc = 0u64;
+            while legacy.len() < 3 * batch * width {
+                let idx = corpus::doc_index(split, next_doc);
+                next_doc += 1;
+                let doc = corpus::document(seed, idx);
+                legacy.push(tok.eot());
+                legacy.append(&mut tok.encode(&doc.text));
+            }
+            let mut l = Loader::new(tok.clone(), seed, split, batch, width - 1);
+            let mut got: Vec<i32> = Vec::new();
+            for _ in 0..3 {
+                got.extend(l.next_batch().unwrap().tokens);
+            }
+            assert_eq!(got, legacy[..3 * batch * width].to_vec());
+        }
+    }
+
     #[test]
     fn prefetcher_matches_direct_loader() {
-        let p = Prefetcher::spawn(mk(Split::Train), 2);
+        let p = Prefetcher::spawn(mk(Split::Train), DOUBLE_BUFFER);
         let mut l = mk(Split::Train);
         for _ in 0..4 {
-            assert_eq!(p.next_batch().tokens, l.next_batch().tokens);
+            assert_eq!(p.next_batch().unwrap().tokens, l.next_batch().unwrap().tokens);
         }
+        assert_eq!(p.depth(), DOUBLE_BUFFER);
+        assert!(p.batches_prefetched() >= 4);
     }
 
     #[test]
     fn doc_offset_changes_stream() {
         let mut a = mk(Split::Train);
         let mut b = mk(Split::Train).with_doc_offset(100);
-        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+        assert_ne!(a.next_batch().unwrap().tokens, b.next_batch().unwrap().tokens);
+    }
+
+    /// Provider that serves `ok` documents then errors: exercises the
+    /// in-band error path of the prefetcher.
+    struct FailAfter {
+        ok: std::sync::atomic::AtomicU64,
+    }
+
+    impl DataProvider for FailAfter {
+        fn kind(&self) -> &'static str {
+            "fail-after"
+        }
+        fn doc_count(&self) -> Option<u64> {
+            None
+        }
+        fn document(&self, index: u64) -> Result<String> {
+            if self.ok.fetch_sub(1, Ordering::Relaxed) == 0 {
+                anyhow::bail!("provider exhausted at doc {index}")
+            }
+            // short docs so the error lands within a few batches
+            Ok(format!("short document {index}"))
+        }
+    }
+
+    #[test]
+    fn prefetcher_delivers_provider_error_then_terminates() {
+        let provider = Arc::new(FailAfter { ok: std::sync::atomic::AtomicU64::new(4) });
+        let loader = Loader::over(provider, Arc::new(ByteTokenizer), Split::Train, 2, 32);
+        let p = Prefetcher::spawn(loader, DOUBLE_BUFFER);
+        let mut saw_err = None;
+        for _ in 0..16 {
+            match p.next_batch() {
+                Ok(b) => assert_eq!(b.tokens.len(), 2 * 33),
+                Err(e) => {
+                    saw_err = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+        }
+        let err = saw_err.expect("provider error must surface as Err, not panic");
+        assert!(err.contains("data prefetch worker"), "{err}");
+        assert!(err.contains("provider exhausted"), "{err}");
+        // after the terminal Err the thread is gone: named error, again
+        let err2 = p.next_batch().unwrap_err().to_string();
+        assert!(err2.contains("prefetch thread terminated"), "{err2}");
+    }
+
+    #[test]
+    fn dropping_consumer_joins_worker_thread() {
+        // the worker parks in `send` once the queue fills; Drop must
+        // reliably unblock and join it (would hang the test if not)
+        for _ in 0..8 {
+            let p = Prefetcher::spawn(mk(Split::Train), DOUBLE_BUFFER);
+            let _ = p.next_batch().unwrap();
+            drop(p);
+        }
+    }
+
+    #[test]
+    fn stall_counter_tracks_empty_queue_waits() {
+        let p = Prefetcher::spawn(mk(Split::Train), DOUBLE_BUFFER);
+        // first call races thread startup; it may or may not stall, but
+        // the counter only moves when try_recv came up empty
+        let _ = p.next_batch().unwrap();
+        assert!(p.stalls() <= 1);
     }
 }

@@ -1,0 +1,612 @@
+//! The `DataProvider` seam: deterministic random access to documents by
+//! index, behind one trait — so the packed-stream `Loader` (pipeline.rs)
+//! is corpus-agnostic and the DP tiers can derive every (shard, step)
+//! batch from a shared provider.
+//!
+//! The contract, inherited from `corpus::document` and load-bearing for
+//! the whole determinism story (docs/ARCHITECTURE.md): `document(index)`
+//! is a **pure function of (provider, index)** — and provider
+//! construction is a pure function of (spec, seed) — so a token stream is
+//! a pure function of `(spec, seed, index)` no matter which worker, step,
+//! or recovery replay asks for it.
+//!
+//! Three implementations:
+//! * [`SyntheticProvider`] — the existing synthetic corpus; the default
+//!   spec produces a stream byte-identical to the pre-provider `Loader`
+//!   by construction (it calls the same `corpus::document`).
+//! * [`FileProvider`] — a newline-delimited local corpus with a validated
+//!   `.sidx` index sidecar. The sidecar is **untrusted input** and is
+//!   validated with the same discipline as the net.rs frame decoder:
+//!   declared sizes are checked *before* allocation, and every rejection
+//!   names the file, field, and offset. Layout: docs/PROTOCOL.md § SIDX.
+//! * [`super::mixture::WeightedMixture`] — N child providers mixed by a
+//!   deterministic per-index weighted draw.
+
+use super::corpus;
+use super::mixture::WeightedMixture;
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Deterministic random access to a corpus of documents.
+///
+/// `document(index)` must be pure in `(self, index)`: same provider, same
+/// index, same text — regardless of call order, thread, or process. The
+/// DP proptests (`prop_dp_data_*`) enforce this transitively by asserting
+/// whole training runs bit-identical across worker counts and
+/// crash/recovery replays.
+pub trait DataProvider: Send + Sync {
+    /// Provider kind for logs and error messages ("synthetic", "file",
+    /// "mixture").
+    fn kind(&self) -> &'static str;
+
+    /// Number of *distinct* documents, or `None` when unbounded. Every
+    /// `u64` index is valid either way: finite providers wrap modulo
+    /// their document count.
+    fn doc_count(&self) -> Option<u64>;
+
+    /// The text of document `index`. Pure in `(self, index)`.
+    fn document(&self, index: u64) -> Result<String>;
+}
+
+// ---------------------------------------------------------------------------
+// SyntheticProvider
+
+/// The infinite synthetic corpus (`corpus::document`) behind the trait.
+/// Byte-identical to the pre-provider pipeline by construction: the
+/// `Loader` still maps `(split, i)` through `corpus::doc_index` and this
+/// provider calls the same pure generator.
+pub struct SyntheticProvider {
+    seed: u64,
+}
+
+impl SyntheticProvider {
+    pub fn new(seed: u64) -> Self {
+        SyntheticProvider { seed }
+    }
+}
+
+impl DataProvider for SyntheticProvider {
+    fn kind(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn doc_count(&self) -> Option<u64> {
+        None
+    }
+
+    fn document(&self, index: u64) -> Result<String> {
+        Ok(corpus::document(self.seed, index).text)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FileProvider + the SIDX sidecar
+
+/// Sidecar magic: "SIDX".
+pub const SIDECAR_MAGIC: [u8; 4] = *b"SIDX";
+pub const SIDECAR_VERSION: u32 = 1;
+/// magic(4) + version(4) + data file length(8) + data file FNV-1a(8) +
+/// document count(8).
+pub const SIDECAR_HEADER_LEN: usize = 32;
+/// Per-document entry: offset(8) + length(8).
+pub const SIDECAR_ENTRY_LEN: usize = 16;
+/// Hard cap on one document's declared byte length — anything above is a
+/// corrupt or hostile sidecar, rejected before any per-document work.
+pub const MAX_DOC_BYTES: u64 = 1 << 24; // 16 MiB
+
+/// FNV-1a 64 over raw bytes. Restated from `coordinator::checkpoint`
+/// (same constants, same stream) so `data/` keeps sitting *below*
+/// `coordinator/` in the layering.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// `corpus.txt` -> `corpus.txt.sidx`.
+pub fn sidecar_path(data_path: &Path) -> PathBuf {
+    let mut os = data_path.as_os_str().to_os_string();
+    os.push(".sidx");
+    PathBuf::from(os)
+}
+
+/// A newline-delimited local corpus, fully resident in memory. Finite:
+/// document indices wrap modulo the line count, so the infinite-index
+/// contract of the trait (and the DP per-stream document offsets) holds
+/// unchanged.
+pub struct FileProvider {
+    path: PathBuf,
+    data: Vec<u8>,
+    /// (byte offset, byte length) of each non-empty line.
+    entries: Vec<(u64, u64)>,
+}
+
+impl FileProvider {
+    /// Open `path`, using `<path>.sidx` when present (validated as
+    /// untrusted input — see [`parse_sidecar`]) and an in-memory line
+    /// scan otherwise. Every document is checked to be UTF-8 here, so
+    /// [`DataProvider::document`] never fails on a validated provider.
+    pub fn open(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("file corpus {}: read failed", path.display()))?;
+        let sc = sidecar_path(path);
+        let entries = match std::fs::read(&sc) {
+            Ok(bytes) => parse_sidecar(&sc, &bytes, &data)?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => scan_lines(&data),
+            Err(e) => return Err(e).with_context(|| format!("sidecar {}: read failed", sc.display())),
+        };
+        if entries.is_empty() {
+            bail!("file corpus {}: no documents (empty or all-blank file)", path.display());
+        }
+        for (i, &(off, len)) in entries.iter().enumerate() {
+            let doc = &data[off as usize..(off + len) as usize];
+            if let Err(e) = std::str::from_utf8(doc) {
+                bail!(
+                    "file corpus {}: doc {i}: invalid utf-8 at byte offset {}",
+                    path.display(),
+                    off as usize + e.valid_up_to()
+                );
+            }
+        }
+        Ok(FileProvider { path: path.to_path_buf(), data, entries })
+    }
+
+    /// Build and write `<path>.sidx` from the current contents of `path`.
+    /// Returns the sidecar path.
+    pub fn write_sidecar(path: &Path) -> Result<PathBuf> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("file corpus {}: read failed", path.display()))?;
+        let entries = scan_lines(&data);
+        let mut out = Vec::with_capacity(SIDECAR_HEADER_LEN + entries.len() * SIDECAR_ENTRY_LEN);
+        out.extend_from_slice(&SIDECAR_MAGIC);
+        out.extend_from_slice(&SIDECAR_VERSION.to_le_bytes());
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&data).to_le_bytes());
+        out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for &(off, len) in &entries {
+            out.extend_from_slice(&off.to_le_bytes());
+            out.extend_from_slice(&len.to_le_bytes());
+        }
+        let sc = sidecar_path(path);
+        std::fs::write(&sc, out)
+            .with_context(|| format!("sidecar {}: write failed", sc.display()))?;
+        Ok(sc)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl DataProvider for FileProvider {
+    fn kind(&self) -> &'static str {
+        "file"
+    }
+
+    fn doc_count(&self) -> Option<u64> {
+        Some(self.entries.len() as u64)
+    }
+
+    fn document(&self, index: u64) -> Result<String> {
+        let (off, len) = self.entries[(index % self.entries.len() as u64) as usize];
+        let doc = &self.data[off as usize..(off + len) as usize];
+        // validated at open; the named error stays for defense in depth
+        let s = std::str::from_utf8(doc).with_context(|| {
+            format!("file corpus {}: doc {index}: invalid utf-8", self.path.display())
+        })?;
+        Ok(s.to_string())
+    }
+}
+
+/// (offset, length) of every non-empty line of `data`.
+fn scan_lines(data: &[u8]) -> Vec<(u64, u64)> {
+    let mut entries = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in data.iter().enumerate() {
+        if b == b'\n' {
+            if i > start {
+                entries.push((start as u64, (i - start) as u64));
+            }
+            start = i + 1;
+        }
+    }
+    if data.len() > start {
+        entries.push((start as u64, (data.len() - start) as u64));
+    }
+    entries
+}
+
+fn read_u64_le(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+/// Parse + validate a SIDX sidecar against the data file it claims to
+/// index. Untrusted-input discipline (docs/ARCHITECTURE.md): sizes are
+/// validated before any allocation they would govern, and every error
+/// names the sidecar, the field, and — for per-document entries — the
+/// document index and offending values.
+fn parse_sidecar(sc: &Path, bytes: &[u8], data: &[u8]) -> Result<Vec<(u64, u64)>> {
+    let p = sc.display();
+    if bytes.len() < SIDECAR_HEADER_LEN {
+        bail!("sidecar {p}: truncated header: {} bytes, need {SIDECAR_HEADER_LEN}", bytes.len());
+    }
+    if bytes[..4] != SIDECAR_MAGIC {
+        bail!("sidecar {p}: bad magic {:02x?} (want {SIDECAR_MAGIC:02x?})", &bytes[..4]);
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SIDECAR_VERSION {
+        bail!("sidecar {p}: unknown version {version} (this build reads {SIDECAR_VERSION})");
+    }
+    let file_len = read_u64_le(bytes, 8);
+    if file_len != data.len() as u64 {
+        bail!(
+            "sidecar {p}: data-file length mismatch: sidecar declares {file_len} bytes, \
+             file is {} bytes (stale sidecar?)",
+            data.len()
+        );
+    }
+    let file_sum = read_u64_le(bytes, 16);
+    let got_sum = fnv1a64(data);
+    if file_sum != got_sum {
+        bail!(
+            "sidecar {p}: data-file checksum mismatch: sidecar declares {file_sum:#018x}, \
+             file hashes to {got_sum:#018x} (stale sidecar?)"
+        );
+    }
+    let count = read_u64_le(bytes, 24);
+    // declared count is validated against the sidecar's own byte length
+    // BEFORE the entry table is allocated — an absurd count costs nothing
+    let need = (count as usize)
+        .checked_mul(SIDECAR_ENTRY_LEN)
+        .and_then(|n| n.checked_add(SIDECAR_HEADER_LEN))
+        .ok_or_else(|| anyhow!("sidecar {p}: declared doc count {count} overflows"))?;
+    if bytes.len() != need {
+        bail!(
+            "sidecar {p}: declared doc count {count} needs {need} bytes, \
+             sidecar is {} bytes",
+            bytes.len()
+        );
+    }
+    let mut entries = Vec::with_capacity(count as usize);
+    for i in 0..count as usize {
+        let at = SIDECAR_HEADER_LEN + i * SIDECAR_ENTRY_LEN;
+        let off = read_u64_le(bytes, at);
+        let len = read_u64_le(bytes, at + 8);
+        if len > MAX_DOC_BYTES {
+            bail!(
+                "sidecar {p}: doc {i}: declared length {len} exceeds the \
+                 {MAX_DOC_BYTES}-byte document cap"
+            );
+        }
+        let end = off
+            .checked_add(len)
+            .ok_or_else(|| anyhow!("sidecar {p}: doc {i}: offset {off} + length {len} overflows"))?;
+        if end > data.len() as u64 {
+            bail!(
+                "sidecar {p}: doc {i}: offset {off} + length {len} out of range \
+                 (data file is {} bytes)",
+                data.len()
+            );
+        }
+        entries.push((off, len));
+    }
+    Ok(entries)
+}
+
+// ---------------------------------------------------------------------------
+// DataSpec — the config/CLI grammar
+
+/// Parsed form of `--data` / `[data]` (config layer holds this; providers
+/// are built at trainer/coordinator construction via [`DataSpec::build`]).
+///
+/// Grammar (commas and `*` are structural, so paths containing them are
+/// not expressible):
+///
+/// ```text
+/// spec      := component | mixture
+/// mixture   := weighted ("," weighted)+   |   weighted
+/// weighted  := WEIGHT "*" component        (WEIGHT: finite float > 0)
+/// component := "synthetic" | "synthetic:" SEED | "file:" PATH
+/// ```
+///
+/// `synthetic` draws from the run's `data_seed`; `synthetic:SEED` pins an
+/// explicit corpus seed so a mixture can blend distinct synthetic domains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    Synthetic { seed: Option<u64> },
+    File(PathBuf),
+    /// Non-empty; children are never themselves mixtures.
+    Mixture(Vec<(f64, DataSpec)>),
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        DataSpec::Synthetic { seed: None }
+    }
+}
+
+impl fmt::Display for DataSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataSpec::Synthetic { seed: None } => write!(f, "synthetic"),
+            DataSpec::Synthetic { seed: Some(s) } => write!(f, "synthetic:{s}"),
+            DataSpec::File(p) => write!(f, "file:{}", p.display()),
+            DataSpec::Mixture(parts) => {
+                for (i, (w, c)) in parts.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{w}*{c}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl DataSpec {
+    pub fn parse(s: &str) -> Result<DataSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("--data: empty spec");
+        }
+        if s.contains(',') || s.contains('*') {
+            let mut parts = Vec::new();
+            for (i, term) in s.split(',').enumerate() {
+                let term = term.trim();
+                let (w, comp) = term.split_once('*').ok_or_else(|| {
+                    anyhow!("--data: mixture term {i} {term:?}: expected WEIGHT*COMPONENT")
+                })?;
+                let w: f64 = w.trim().parse().map_err(|_| {
+                    anyhow!("--data: mixture term {i}: weight {:?} is not a number", w.trim())
+                })?;
+                if !w.is_finite() || w <= 0.0 {
+                    bail!("--data: mixture term {i}: weight {w} must be finite and > 0");
+                }
+                parts.push((w, Self::parse_component(comp.trim(), i)?));
+            }
+            Ok(DataSpec::Mixture(parts))
+        } else {
+            Self::parse_component(s, 0)
+        }
+    }
+
+    fn parse_component(s: &str, i: usize) -> Result<DataSpec> {
+        if s == "synthetic" {
+            Ok(DataSpec::Synthetic { seed: None })
+        } else if let Some(rest) = s.strip_prefix("synthetic:") {
+            let seed: u64 = rest.parse().map_err(|_| {
+                anyhow!("--data: component {i}: synthetic seed {rest:?} is not an integer")
+            })?;
+            Ok(DataSpec::Synthetic { seed: Some(seed) })
+        } else if let Some(p) = s.strip_prefix("file:") {
+            if p.is_empty() {
+                bail!("--data: component {i}: file: needs a path");
+            }
+            Ok(DataSpec::File(PathBuf::from(p)))
+        } else {
+            bail!(
+                "--data: component {i} {s:?}: expected synthetic, synthetic:SEED, \
+                 or file:PATH"
+            )
+        }
+    }
+
+    /// Build the provider tree. `data_seed` seeds the default synthetic
+    /// corpus and the mixture's per-index domain draw; construction is
+    /// pure in `(self, data_seed)`, which is what makes per-worker
+    /// rebuilds of the same spec stream-equivalent to a shared instance.
+    pub fn build(&self, data_seed: u64) -> Result<Arc<dyn DataProvider>> {
+        Ok(match self {
+            DataSpec::Synthetic { seed } => {
+                Arc::new(SyntheticProvider::new(seed.unwrap_or(data_seed)))
+            }
+            DataSpec::File(p) => Arc::new(FileProvider::open(p)?),
+            DataSpec::Mixture(parts) => {
+                let mut children = Vec::with_capacity(parts.len());
+                for (w, c) in parts {
+                    if matches!(c, DataSpec::Mixture(_)) {
+                        bail!("--data: nested mixtures are not supported");
+                    }
+                    children.push((*w, c.build(data_seed)?));
+                }
+                Arc::new(WeightedMixture::new(data_seed, children)?)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sophia_provider_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_corpus(name: &str, text: &[u8]) -> PathBuf {
+        let p = tmp(name);
+        std::fs::write(&p, text).unwrap();
+        let _ = std::fs::remove_file(sidecar_path(&p));
+        p
+    }
+
+    #[test]
+    fn synthetic_provider_matches_corpus_generator() {
+        let p = SyntheticProvider::new(7);
+        for i in [0u64, 1, 2, 99, 1 << 41] {
+            assert_eq!(p.document(i).unwrap(), corpus::document(7, i).text);
+        }
+        assert_eq!(p.kind(), "synthetic");
+        assert_eq!(p.doc_count(), None);
+    }
+
+    #[test]
+    fn file_provider_scans_lines_and_wraps_indices() {
+        let path = write_corpus("scan.txt", b"alpha beta\ngamma\n\ndelta");
+        let p = FileProvider::open(&path).unwrap();
+        assert_eq!(p.doc_count(), Some(3)); // blank line skipped
+        assert_eq!(p.document(0).unwrap(), "alpha beta");
+        assert_eq!(p.document(1).unwrap(), "gamma");
+        assert_eq!(p.document(2).unwrap(), "delta");
+        // wrap modulo doc count: every u64 index is valid
+        assert_eq!(p.document(3).unwrap(), "alpha beta");
+        assert_eq!(p.document(7 * 3 + 1).unwrap(), "gamma");
+    }
+
+    #[test]
+    fn file_provider_sidecar_round_trip_matches_scan() {
+        let path = write_corpus("sidecar.txt", b"one\ntwo\nthree\n");
+        let scanned: Vec<String> =
+            (0..3).map(|i| FileProvider::open(&path).unwrap().document(i).unwrap()).collect();
+        let sc = FileProvider::write_sidecar(&path).unwrap();
+        assert!(sc.ends_with("sidecar.txt.sidx"));
+        let p = FileProvider::open(&path).unwrap(); // now via sidecar
+        for (i, want) in scanned.iter().enumerate() {
+            assert_eq!(&p.document(i as u64).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn file_provider_rejects_empty_corpus() {
+        let path = write_corpus("empty.txt", b"\n\n");
+        let err = FileProvider::open(&path).unwrap_err().to_string();
+        assert!(err.contains("no documents"), "{err}");
+    }
+
+    // -- adversarial sidecar cases: every rejection is a named error and
+    //    happens before the declared sizes drive any allocation --
+
+    /// Build a valid sidecar, then hand `f` its bytes to corrupt.
+    fn corrupted(name: &str, f: impl FnOnce(&mut Vec<u8>)) -> String {
+        let path = write_corpus(name, b"first doc\nsecond doc\nthird doc\n");
+        let sc = FileProvider::write_sidecar(&path).unwrap();
+        let mut bytes = std::fs::read(&sc).unwrap();
+        f(&mut bytes);
+        std::fs::write(&sc, bytes).unwrap();
+        FileProvider::open(&path).unwrap_err().to_string()
+    }
+
+    #[test]
+    fn sidecar_truncated_header_is_named_error() {
+        let err = corrupted("trunc_hdr.txt", |b| b.truncate(10));
+        assert!(err.contains("truncated header") && err.contains("10 bytes"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_bad_magic_is_named_error() {
+        let err = corrupted("magic.txt", |b| b[0] = b'X');
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_unknown_version_is_named_error() {
+        let err = corrupted("version.txt", |b| b[4] = 9);
+        assert!(err.contains("unknown version 9"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_oversized_declared_count_rejected_before_allocation() {
+        // declare ~2^60 entries: must be rejected by the byte-length check
+        // (and the overflow check), never allocated
+        let err = corrupted("count.txt", |b| {
+            b[24..32].copy_from_slice(&(1u64 << 60).to_le_bytes());
+        });
+        assert!(err.contains("declared doc count"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_truncated_entry_table_is_named_error() {
+        let err = corrupted("trunc_tab.txt", |b| {
+            let n = b.len();
+            b.truncate(n - 8);
+        });
+        assert!(err.contains("declared doc count 3"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_out_of_range_offset_is_named_error() {
+        let err = corrupted("range.txt", |b| {
+            // entry 1's offset -> far past the data file
+            b[SIDECAR_HEADER_LEN + SIDECAR_ENTRY_LEN..SIDECAR_HEADER_LEN + SIDECAR_ENTRY_LEN + 8]
+                .copy_from_slice(&10_000u64.to_le_bytes());
+        });
+        assert!(err.contains("doc 1") && err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_oversized_declared_length_rejected_before_allocation() {
+        let err = corrupted("biglen.txt", |b| {
+            b[SIDECAR_HEADER_LEN + 8..SIDECAR_HEADER_LEN + 16]
+                .copy_from_slice(&(MAX_DOC_BYTES + 1).to_le_bytes());
+        });
+        assert!(err.contains("doc 0") && err.contains("document cap"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_stale_after_data_edit_is_named_error() {
+        let path = write_corpus("stale.txt", b"aaa\nbbb\n");
+        FileProvider::write_sidecar(&path).unwrap();
+        std::fs::write(&path, b"aaa\nxbb\n").unwrap(); // same length, new bytes
+        let err = FileProvider::open(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        std::fs::write(&path, b"aaa\nbbb\nccc\n").unwrap(); // new length
+        let err = FileProvider::open(&path).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_document_bytes_are_a_named_error() {
+        let path = write_corpus("utf8.txt", b"good doc\nbad \xff doc\n");
+        let err = FileProvider::open(&path).unwrap_err().to_string();
+        assert!(err.contains("doc 1") && err.contains("invalid utf-8"), "{err}");
+    }
+
+    // -- DataSpec grammar --
+
+    #[test]
+    fn data_spec_parse_and_display_round_trip() {
+        for s in ["synthetic", "synthetic:99", "file:docs.txt", "0.7*synthetic,0.3*file:d.txt"] {
+            let spec = DataSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(DataSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+        assert_eq!(DataSpec::parse("synthetic").unwrap(), DataSpec::default());
+    }
+
+    #[test]
+    fn data_spec_rejects_malformed_inputs() {
+        for (s, want) in [
+            ("", "empty"),
+            ("gcs://bucket", "expected synthetic"),
+            ("file:", "needs a path"),
+            ("synthetic:abc", "not an integer"),
+            ("0.5*synthetic,synthetic", "WEIGHT*COMPONENT"),
+            ("x*synthetic", "not a number"),
+            ("-1*synthetic", "must be finite and > 0"),
+            ("0*synthetic", "must be finite and > 0"),
+        ] {
+            let err = DataSpec::parse(s).unwrap_err().to_string();
+            assert!(err.contains(want), "{s:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn data_spec_build_wires_seeds() {
+        // default synthetic takes data_seed; pinned synthetic keeps its own
+        let a = DataSpec::parse("synthetic").unwrap().build(7).unwrap();
+        assert_eq!(a.document(3).unwrap(), corpus::document(7, 3).text);
+        let b = DataSpec::parse("synthetic:99").unwrap().build(7).unwrap();
+        assert_eq!(b.document(3).unwrap(), corpus::document(99, 3).text);
+        let m = DataSpec::parse("1.0*synthetic:99").unwrap().build(7).unwrap();
+        assert_eq!(m.kind(), "mixture");
+        assert_eq!(m.document(3).unwrap(), corpus::document(99, 3).text);
+    }
+}

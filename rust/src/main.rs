@@ -64,6 +64,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         out.steps, out.final_train_loss, out.final_val_loss, out.diverged,
         out.avg_step_ms, out.avg_hess_ms, out.clip_trigger_frac
     );
+    // same machine-readable banner the DP tiers print (prefetch
+    // depth/produced/stall counters live here on the single-process path)
+    println!("health: {}", trainer.health.snapshot_json());
     if let Some(dir) = trainer.cfg.ckpt_dir.clone() {
         trainer.save_checkpoint(&dir)?;
         eprintln!("checkpoint saved to {dir:?}");
@@ -147,9 +150,18 @@ fn cmd_dp_worker(args: &Args) -> Result<()> {
         let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
         let model = ModelConfig::load(&root, &preset)?;
         let data_seed = args.u64_or("data-seed", 1)?;
+        // must match the coordinator's --data spec: each side rebuilds the
+        // provider tree from (spec, data_seed), which keeps shard streams
+        // identical without shipping documents over the wire
+        let provider =
+            data::DataSpec::parse(&args.str_or("data", "synthetic"))?.build(data_seed)?;
         Arc::new(move |_id| {
             Ok(Box::new(sophia::coordinator::dp::SessionGrad::new(
-                &model, seed, data_seed, None,
+                &model,
+                seed,
+                data_seed,
+                None,
+                provider.clone(),
             )?) as Box<dyn GradSource>)
         })
     };
@@ -284,7 +296,7 @@ fn cmd_hist(args: &Args) -> Result<()> {
     }
     let tok = data::tokenizer_for_vocab(model.vocab, 1)?;
     let mut loader = data::Loader::new(tok, 1, data::Split::Val, model.batch, model.ctx);
-    let b = loader.next_batch();
+    let b = loader.next_batch()?;
     let mut sess = runtime::Session::new(runtime::Program::load(&mut rt, &model, "hess_diag")?, 0);
     let mut out = sess.run(
         &mut rt,

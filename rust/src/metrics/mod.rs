@@ -142,6 +142,14 @@ pub struct HealthCounters {
     /// Raw / encoded gradient-byte ratio over the whole run (1.0 when
     /// `--compress none`; ≈16/≈64 for topk16/topk64).
     pub compression_ratio: f64,
+    /// Configured data-prefetch queue depth (`data::DOUBLE_BUFFER` unless
+    /// overridden; 0 when the run never built a prefetcher).
+    pub prefetch_depth: usize,
+    /// Batches the data-prefetch thread produced ahead of consumption.
+    pub batches_prefetched: usize,
+    /// Times the train loop found the prefetch queue empty and waited —
+    /// nonzero means tokenization, not the engine, was the bottleneck.
+    pub prefetch_stalls: usize,
 }
 
 impl HealthCounters {
@@ -176,6 +184,12 @@ impl HealthCounters {
         m.insert("bytes_received".into(), Json::Num(self.bytes_received as f64));
         m.insert("bytes_saved".into(), Json::Num(self.bytes_saved as f64));
         m.insert("compression_ratio".into(), Json::Num(self.compression_ratio));
+        m.insert("prefetch_depth".into(), Json::Num(self.prefetch_depth as f64));
+        m.insert(
+            "batches_prefetched".into(),
+            Json::Num(self.batches_prefetched as f64),
+        );
+        m.insert("prefetch_stalls".into(), Json::Num(self.prefetch_stalls as f64));
         Json::Obj(m)
     }
 
@@ -322,6 +336,9 @@ mod tests {
             bytes_received: 2048,
             bytes_saved: 1024,
             compression_ratio: 16.0,
+            prefetch_depth: 2,
+            batches_prefetched: 64,
+            prefetch_stalls: 3,
         };
         let j = c.to_json();
         assert_eq!(j.get("heartbeats").unwrap().as_usize(), Some(12));
@@ -335,7 +352,10 @@ mod tests {
         assert_eq!(j.get("bytes_received").unwrap().as_usize(), Some(2048));
         assert_eq!(j.get("bytes_saved").unwrap().as_usize(), Some(1024));
         assert_eq!(j.get("compression_ratio").unwrap().as_f64(), Some(16.0));
-        assert_eq!(j.as_obj().unwrap().len(), 17);
+        assert_eq!(j.get("prefetch_depth").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("batches_prefetched").unwrap().as_usize(), Some(64));
+        assert_eq!(j.get("prefetch_stalls").unwrap().as_usize(), Some(3));
+        assert_eq!(j.as_obj().unwrap().len(), 20);
         // the snapshot banner is the same object, round-trippable
         let snap = Json::parse(&c.snapshot_json()).unwrap();
         assert_eq!(snap.get("bytes_sent").unwrap().as_usize(), Some(4096));

@@ -117,7 +117,7 @@ fn prop_loader_emits_exact_stream_coverage() {
         let mut l = Loader::new(tok.clone(), 9, Split::Train, b, ctx);
         let mut collected = Vec::new();
         for _ in 0..5 {
-            collected.extend(l.next_batch().tokens);
+            collected.extend(l.next_batch().unwrap().tokens);
         }
         // rebuild the reference stream directly from documents
         let mut reference = Vec::new();
@@ -780,6 +780,176 @@ fn prop_dp_fault_recovery_bit_identical() {
         assert_eq!(l0, l, "{tag} per-step losses");
         let _ = std::fs::remove_dir_all(&root);
     }
+}
+
+/// [`run_dp`] over a `ProviderGrad` source built from a `--data` spec:
+/// the same oracle tuple, but every gradient's noise RNG is keyed by an
+/// FNV digest of the token batch the provider serves at that (shard,
+/// step) — so document-stream purity (mixture domain draws included) is
+/// part of the bit-exactness contract these tests assert.
+fn run_dp_provider(
+    cfg: sophia::coordinator::DpConfig,
+    lens: &[usize],
+    spec: &str,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<usize>, Vec<u64>, sophia::metrics::HealthCounters) {
+    use sophia::coordinator::{DpCoordinator, GradSource, ProviderGrad, SourceFactory};
+    use sophia::optim::engine::StateKind;
+    // same init-parameter derivation as DpCoordinator::synthetic(_, _, 11)
+    let n: usize = lens.iter().sum();
+    let mut rng = Rng::new(11).fold(0xD0);
+    let init_p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.3)).collect();
+    let data_seed = sophia::coordinator::synthetic_data_seed(cfg.seed);
+    let provider = sophia::data::DataSpec::parse(spec).unwrap().build(data_seed).unwrap();
+    let factory: SourceFactory = Arc::new(move |_id| {
+        Ok(Box::new(ProviderGrad::new(provider.clone(), data_seed)) as Box<dyn GradSource>)
+    });
+    let mut dp = DpCoordinator::new(cfg, lens, init_p, factory).unwrap();
+    let out = dp.train().unwrap();
+    assert!(!out.diverged);
+    (
+        dp.flat().buf(StateKind::P).to_vec(),
+        dp.flat().buf(StateKind::M).to_vec(),
+        dp.flat().buf(StateKind::H).to_vec(),
+        dp.clip_counts().to_vec(),
+        dp.records.iter().map(|r| r.loss.to_bits()).collect(),
+        out.counters,
+    )
+}
+
+#[test]
+fn prop_dp_data_mixture_bit_identical_across_worker_counts() {
+    // A weighted multi-domain mixture feeding the run must keep the whole
+    // bit-exactness contract across 1/2/4 workers at a fixed shard count:
+    // the mixture's domain draw is pure in (data_seed, doc index), so
+    // which worker reads a shard's stream can't change a single token —
+    // and through ProviderGrad, not a single gradient bit.
+    use sophia::coordinator::DpConfig;
+    let spec = "0.6*synthetic,0.4*synthetic:99";
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        let lens = [1 + rng.below(40) as usize, 60 + rng.below(200) as usize];
+        let mk = |workers: usize| DpConfig {
+            workers,
+            n_shards: 4,
+            steps: 5,
+            hess_interval: 2,
+            seed,
+            straggler_timeout_ms: 10_000,
+            ..DpConfig::default()
+        };
+        let (p1, m1, h1, c1, l1, _) = run_dp_provider(mk(1), &lens, spec);
+        for workers in [2usize, 4] {
+            let (p, m, h, c, l, _) = run_dp_provider(mk(workers), &lens, spec);
+            let tag = format!("seed {seed} workers {workers}");
+            assert_bits_eq(&format!("{tag} p"), &p1, &p);
+            assert_bits_eq(&format!("{tag} m"), &m1, &m);
+            assert_bits_eq(&format!("{tag} h"), &h1, &h);
+            assert_eq!(c1, c, "{tag} clip counts");
+            assert_eq!(l1, l, "{tag} per-step losses");
+        }
+    }
+}
+
+#[test]
+fn prop_dp_data_mixture_fault_recovery_bit_identical() {
+    // Crash/recovery replays re-derive every (shard, step) batch from the
+    // mixture — a replayed step must re-draw the same domains and tokens,
+    // leaving the run bit-identical to the uninterrupted one.
+    use sophia::coordinator::{DpConfig, FaultPlan};
+    let spec = "0.5*synthetic,0.5*synthetic:7";
+    for seed in 0..3u64 {
+        let root = std::env::temp_dir()
+            .join(format!("sophia_prop_dp_data_{}_{seed}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mk = |fault: FaultPlan, ckpt: bool| DpConfig {
+            workers: 2,
+            n_shards: 4,
+            steps: 6,
+            hess_interval: 2,
+            seed,
+            ckpt_dir: if ckpt { Some(root.clone()) } else { None },
+            ckpt_every: 1,
+            straggler_timeout_ms: 300,
+            fault,
+            ..DpConfig::default()
+        };
+        let (p0, m0, h0, c0, l0, _) = run_dp_provider(mk(FaultPlan::default(), false), &lens_for(seed), spec);
+        let kill_step = 3 + (seed % 3) as usize;
+        let fault = FaultPlan::parse(&format!("kill:{}@{kill_step}", seed % 2)).unwrap();
+        let (p, m, h, c, l, counters) = run_dp_provider(mk(fault, true), &lens_for(seed), spec);
+        let tag = format!("seed {seed} kill@{kill_step}");
+        assert!(counters.recoveries >= 1, "{tag}: kill must trigger recovery");
+        assert_bits_eq(&format!("{tag} p"), &p0, &p);
+        assert_bits_eq(&format!("{tag} m"), &m0, &m);
+        assert_bits_eq(&format!("{tag} h"), &h0, &h);
+        assert_eq!(c0, c, "{tag} clip counts");
+        assert_eq!(l0, l, "{tag} per-step losses");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// Shared leaf layout for the data proptests (pure in seed).
+fn lens_for(seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed ^ 0x1E45);
+    vec![1 + rng.below(30) as usize, 50 + rng.below(150) as usize]
+}
+
+#[test]
+fn prop_data_degenerate_mixture_matches_child_stream() {
+    // A single-domain mixture at weight 1.0 is the child provider: the
+    // packed token stream must be byte-identical, for any weight value
+    // and across batch/ctx shapes.
+    use sophia::data::DataSpec;
+    for (w, child_spec) in [("1.0", "synthetic:42"), ("2.5", "synthetic"), ("0.1", "synthetic:9")]
+    {
+        let mixture = DataSpec::parse(&format!("{w}*{child_spec}")).unwrap().build(5).unwrap();
+        let child = DataSpec::parse(child_spec).unwrap().build(5).unwrap();
+        for (b, ctx) in [(1usize, 16usize), (3, 33)] {
+            let tok: Arc<dyn Tokenizer> = Arc::new(ByteTokenizer);
+            let mut lm = sophia::data::Loader::over(mixture.clone(), tok.clone(), Split::Train, b, ctx);
+            let mut lc = sophia::data::Loader::over(child.clone(), tok, Split::Train, b, ctx);
+            for _ in 0..4 {
+                assert_eq!(lm.next_batch().unwrap().tokens, lc.next_batch().unwrap().tokens);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_data_file_provider_roundtrip_with_sidecar() {
+    // A file corpus written from synthetic documents, indexed by a SIDX
+    // sidecar, must reproduce the same packed stream as the scan path —
+    // and serve documents identically under index wraparound.
+    use sophia::data::{DataProvider, FileProvider};
+    let dir = std::env::temp_dir().join(format!("sophia_prop_file_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..3u64 {
+        let path = dir.join(format!("corpus_{seed}.txt"));
+        let mut text = String::new();
+        for i in 0..12u64 {
+            text.push_str(corpus::document(seed, i).text.replace('\n', " ").trim());
+            text.push('\n');
+        }
+        std::fs::write(&path, &text).unwrap();
+        let scanned = FileProvider::open(&path).unwrap();
+        FileProvider::write_sidecar(&path).unwrap();
+        let indexed = FileProvider::open(&path).unwrap();
+        assert_eq!(scanned.doc_count(), indexed.doc_count());
+        assert_eq!(scanned.doc_count(), Some(12));
+        for i in 0..40u64 {
+            // past doc_count: both wrap modulo 12 identically
+            assert_eq!(scanned.document(i).unwrap(), indexed.document(i).unwrap());
+        }
+        let tok: Arc<dyn Tokenizer> = Arc::new(ByteTokenizer);
+        let mut ls =
+            sophia::data::Loader::over(Arc::new(FileProvider::open(&path).unwrap()), tok.clone(), Split::Train, 2, 32);
+        let spec = sophia::data::DataSpec::parse(&format!("file:{}", path.display())).unwrap();
+        let mut li = sophia::data::Loader::over(spec.build(1).unwrap(), tok, Split::Train, 2, 32);
+        for _ in 0..3 {
+            assert_eq!(ls.next_batch().unwrap().tokens, li.next_batch().unwrap().tokens);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -4,7 +4,8 @@
 # BENCH_kernels.json, including the scalar/blocked/threads:<n>/pool:<n>
 # columns and the scope-spawn-vs-parked-pool dispatch row at 1M params)
 # and the coordinator-overhead probe (skips cleanly when artifacts/ is
-# absent).
+# absent), plus the data-pipeline throughput probe (writes BENCH_data.json
+# with direct-vs-prefetch tokens/sec per provider kind).
 #
 # Knobs:
 #   SOPHIA_BENCH_SCALE=0.05   shrink every workload (default here; 1.0 =
@@ -28,3 +29,4 @@ export SOPHIA_BENCH_SCALE="${SOPHIA_BENCH_SCALE:-0.05}"
 echo "== bench smoke (SOPHIA_BENCH_SCALE=$SOPHIA_BENCH_SCALE) =="
 cargo bench --bench perf_kernels
 cargo bench --bench perf_l3_overhead
+cargo bench --bench data_throughput
