@@ -29,6 +29,12 @@ from .configs import HESS_VARIANTS, HYPERS, PRESETS, TRAIN_VARIANTS
 F32 = jnp.float32
 I32 = jnp.int32
 
+# Serving: fixed-width batched decode widths. `serve::DecoderPool` packs the
+# active request rows into the smallest member >= n_active, so the family
+# must be dense enough that padding waste stays small but short enough that
+# `make artifacts` stays fast.
+SERVE_BATCHES = (1, 2, 4, 8)
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -80,6 +86,15 @@ def artifact_plan(cfg):
     plan["eval_step"] = (optim.make_eval_step(cfg), (p, tok))
     plan["logits_last"] = (optim.make_logits_last(cfg), (p, toks_ctx))
     plan["hess_diag"] = (optim.make_hess_diag(cfg), (p, tok, i))
+
+    # Serving: the batched decode family. Same forward as logits_last but
+    # lowered at fixed request-batch widths instead of the training batch —
+    # the transformer forward has no cross-row ops, so row i of any member
+    # is bit-identical to a single-sequence call (guarded by the Rust
+    # `batched_logits_match_decoder_bitwise` regression test).
+    for b in SERVE_BATCHES:
+        toks_b = jax.ShapeDtypeStruct((b, cfg.ctx), I32)
+        plan[f"logits_last_b{b}"] = (optim.make_logits_last(cfg), (p, toks_b))
 
     if cfg.name == "b1":
         # Figure 7(b): the attention-temperature stability trick variants.
@@ -204,7 +219,10 @@ def signature_for(name):
             "inputs": [_leaves("params"), _one("tokens")],
             "outputs": [_one("loss")],
         }
-    if name == "logits_last":
+    if name == "logits_last" or name.startswith("logits_last_b"):
+        # the serving family logits_last_b{B} shares the base signature:
+        # tokens is one [B, ctx] literal whatever B is — arity counts
+        # literals, not rows (the Rust side checks rows at bind time).
         return {
             "inputs": [_leaves("params"), _one("tokens")],
             "outputs": [_one("logits")],

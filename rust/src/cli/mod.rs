@@ -4,6 +4,7 @@
 //!   train     -- run a training job (the launcher)
 //!   dp-serve  -- TCP data-parallel coordinator (listens for dp-worker)
 //!   dp-worker -- TCP data-parallel worker (connects to dp-serve)
+//!   serve     -- continuous-batching decode server over a checkpoint
 //!   eval      -- few-shot evaluation of a checkpoint (Figure 6)
 //!   toy       -- the Figure 2 toy-landscape trajectories
 //!   hist      -- diagonal-Hessian histogram of a checkpoint (Figure 3)
@@ -165,6 +166,21 @@ USAGE: sophia <subcommand> [--flags]
           is the same comma-separated kill/delay/tear/drop/stall/garble/
           join clause list documented on FaultPlan::parse. --compress must
           match the coordinator's mode — mismatched frames are rejected.)
+  serve  --preset nano --ckpt runs/ckpt [--listen 127.0.0.1:0 | --port P]
+         [--slots 4] [--max-requests 0] [--max-new-cap 256]
+         [--no-stop-on-eot] [--port-file path] [--io-timeout-ms 10000]
+         [--seed 0] [--data-seed 1] [--artifacts artifacts]
+         (Continuous-batching decode server over the preset's
+          logits_last_b{B} artifact family (emitted by `make artifacts`).
+          One SSV1 connection = one request: the client sends a prompt +
+          max_new + sampling config (temperature 0 = greedy; sampled
+          requests carry a per-request seed, so output is deterministic),
+          the server streams Token frames as rows decode and closes with
+          Done. Freed batch slots are backfilled mid-flight from the queue
+          — `slot_refills` in the end-of-run health banner counts them.
+          --max-requests N serves exactly N requests then exits (0 = run
+          until killed); --port-file writes the bound address for test
+          harnesses. Wire format: docs/PROTOCOL.md § SSV1.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]
   hist   --preset b1 [--ckpt dir] [--bins 40]

@@ -83,6 +83,13 @@ impl<'a> Decoder<'a> {
         Ok(logits)
     }
 
+    /// Raw row-0 logits for the next token after `ids` — the serial
+    /// oracle the serving subsystem's determinism tests compare batched
+    /// decode against bit-for-bit (`serve::decode_serial` drives this).
+    pub fn next_logits(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
+        self.logits_row0(ids)
+    }
+
     /// Log-softmax row-0 logits for the next token after `ids`.
     pub fn next_logprobs(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
         let mut row0 = self.logits_row0(ids)?;

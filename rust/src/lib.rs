@@ -30,6 +30,7 @@ pub mod optim;
 pub mod rng;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod util;
 
 pub use config::{ModelConfig, Optimizer, TrainConfig};

@@ -27,6 +27,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "dp-serve" => cmd_dp_serve(&args),
         "dp-worker" => cmd_dp_worker(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "toy" => cmd_toy(&args),
         "hist" => cmd_hist(&args),
@@ -227,6 +228,52 @@ fn synthetic_leaves(params: usize) -> Vec<usize> {
     } else {
         vec![p]
     }
+}
+
+/// Continuous-batching decode server over the preset's `logits_last_b{B}`
+/// artifact family. One connection = one SSV1 request; tokens stream back
+/// as they are sampled; the end-of-run health banner is machine-readable.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "nano");
+    let root = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = ModelConfig::load(&root, &preset)?;
+    let rt = runtime::Runtime::cpu()?;
+    let tok = data::tokenizer_for_vocab(model.vocab, args.u64_or("data-seed", 1)?)?;
+    let mut state = runtime::ModelState::init(&model, args.u64_or("seed", 0)?)?;
+    if let Some(ckpt) = args.flags.get("ckpt") {
+        let params = runtime::read_f32_file(&std::path::Path::new(ckpt).join("params.bin"))?;
+        state = runtime::ModelState::from_flat_params(&model, &params)?;
+    }
+    let backend = sophia::serve::SessionBackend::new(rt, &model, state.params)?;
+    let listen = match args.flags.get("port") {
+        Some(_) => format!("127.0.0.1:{}", args.usize_or("port", 0)?),
+        None => args.str_or("listen", "127.0.0.1:0"),
+    };
+    let cfg = sophia::serve::ServeConfig {
+        listen,
+        slots: args.usize_or("slots", 4)?,
+        max_requests: args.usize_or("max-requests", 0)?,
+        max_new_cap: args.usize_or("max-new-cap", 256)?,
+        stop_on_eot: !args.bool("no-stop-on-eot"),
+        io_timeout_ms: args.u64_or("io-timeout-ms", 10_000)?,
+    };
+    let slots = cfg.slots;
+    let server = sophia::serve::Server::bind(cfg)?;
+    let addr = server.local_addr();
+    eprintln!("serve: listening on {addr} (preset {preset}, {slots} slots)");
+    if let Some(pf) = args.flags.get("port-file") {
+        // write-then-rename so a polling client never reads a partial address
+        let tmp = format!("{pf}.tmp");
+        std::fs::write(&tmp, addr.to_string())?;
+        std::fs::rename(&tmp, pf)?;
+    }
+    let counters = server.run(Box::new(backend), tok)?;
+    println!(
+        "done: requests={} refills={} decode_steps={}",
+        counters.requests_served, counters.slot_refills, counters.decode_steps
+    );
+    println!("health: {}", counters.snapshot_json());
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -150,6 +150,18 @@ pub struct HealthCounters {
     /// Times the train loop found the prefetch queue empty and waited —
     /// nonzero means tokenization, not the engine, was the bottleneck.
     pub prefetch_stalls: usize,
+    /// Serve: requests completed (Done frame sent or pool drained).
+    pub requests_served: usize,
+    /// Serve: admissions into a batch slot while other rows were
+    /// mid-flight — the backfills that make batching "continuous".
+    pub slot_refills: usize,
+    /// Serve: batched decode steps (`Session::run` calls) executed.
+    pub decode_steps: usize,
+    /// Serve: sum of active rows over decode steps; mean occupancy is
+    /// `slot_steps_active / (decode_steps * slots)`.
+    pub slot_steps_active: usize,
+    /// Serve: total milliseconds requests spent queued before admission.
+    pub queue_wait_ms: usize,
 }
 
 impl HealthCounters {
@@ -190,6 +202,14 @@ impl HealthCounters {
             Json::Num(self.batches_prefetched as f64),
         );
         m.insert("prefetch_stalls".into(), Json::Num(self.prefetch_stalls as f64));
+        m.insert("requests_served".into(), Json::Num(self.requests_served as f64));
+        m.insert("slot_refills".into(), Json::Num(self.slot_refills as f64));
+        m.insert("decode_steps".into(), Json::Num(self.decode_steps as f64));
+        m.insert(
+            "slot_steps_active".into(),
+            Json::Num(self.slot_steps_active as f64),
+        );
+        m.insert("queue_wait_ms".into(), Json::Num(self.queue_wait_ms as f64));
         Json::Obj(m)
     }
 
@@ -339,6 +359,11 @@ mod tests {
             prefetch_depth: 2,
             batches_prefetched: 64,
             prefetch_stalls: 3,
+            requests_served: 9,
+            slot_refills: 5,
+            decode_steps: 40,
+            slot_steps_active: 70,
+            queue_wait_ms: 120,
         };
         let j = c.to_json();
         assert_eq!(j.get("heartbeats").unwrap().as_usize(), Some(12));
@@ -355,7 +380,12 @@ mod tests {
         assert_eq!(j.get("prefetch_depth").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("batches_prefetched").unwrap().as_usize(), Some(64));
         assert_eq!(j.get("prefetch_stalls").unwrap().as_usize(), Some(3));
-        assert_eq!(j.as_obj().unwrap().len(), 20);
+        assert_eq!(j.get("requests_served").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("slot_refills").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("decode_steps").unwrap().as_usize(), Some(40));
+        assert_eq!(j.get("slot_steps_active").unwrap().as_usize(), Some(70));
+        assert_eq!(j.get("queue_wait_ms").unwrap().as_usize(), Some(120));
+        assert_eq!(j.as_obj().unwrap().len(), 25);
         // the snapshot banner is the same object, round-trippable
         let snap = Json::parse(&c.snapshot_json()).unwrap();
         assert_eq!(snap.get("bytes_sent").unwrap().as_usize(), Some(4096));

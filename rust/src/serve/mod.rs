@@ -1,0 +1,128 @@
+//! The serving subsystem: a continuous-batching decode server over
+//! `runtime::Session` (ROADMAP item 4 — the inference tier).
+//!
+//! Four layers, bottom-up:
+//!
+//! * [`sampler`] — deterministic next-token selection: greedy argmax by
+//!   default, seeded temperature / top-k sampling through the repo RNG.
+//!   Every request carries its own seed, so sampled output is a pure
+//!   function of (checkpoint, prompt, sampling config).
+//! * [`pool`] — [`DecoderPool`]: the continuous-batching slot scheduler.
+//!   It owns a [`LogitsBackend`] (a few resident `logits_last_b{B}`
+//!   programs behind one `Runtime`), packs the active rows into the
+//!   smallest resident width each step, and backfills a freed slot the
+//!   moment any row finishes (EOS or `max_new`).
+//! * [`wire`] — SSV1, the length-prefixed request/response protocol
+//!   (magic, version, checksum, length caps before allocation, errors
+//!   naming message/field/offset — the `net.rs` framing discipline).
+//! * [`server`] — `sophia serve`: the TCP accept loop, one connection per
+//!   request, tokens streamed as they are sampled so time-to-first-token
+//!   is one decode step.
+//!
+//! **Determinism contract.** Decode through the pool is bit-identical to
+//! serial decode through `eval::Decoder` at the same checkpoint, prompt,
+//! seed and stop rule: the transformer forward has no cross-row ops, so a
+//! row's logits do not depend on what shares its batch (guarded by the
+//! `batched_logits_match_decoder_bitwise` regression test), and per-slot
+//! sampler state means pooling never perturbs a request's RNG stream.
+
+pub mod pool;
+pub mod sampler;
+pub mod server;
+pub mod wire;
+
+pub use pool::{
+    BatchMode, DecoderPool, LogitsBackend, PoolEvent, ServeRequest, SessionBackend,
+    SyntheticBackend,
+};
+pub use sampler::{argmax, SampleCfg, Sampler};
+pub use server::{client_request, Completion, ServeConfig, Server};
+
+use anyhow::Result;
+
+/// The window pad token — same as `eval::Decoder` (a space, so padded
+/// prefixes look like leading whitespace to the byte tokenizer).
+pub const PAD: i32 = b' ' as i32;
+
+/// Append one `ctx`-wide window to `dst`: the last `ctx` tokens of `ids`,
+/// left-padded with [`PAD`]. Shared by the pool's batch assembly and the
+/// serial oracles so both sides window identically.
+pub fn fill_window(dst: &mut Vec<i32>, ids: &[i32], ctx: usize) {
+    let tail = if ids.len() > ctx { &ids[ids.len() - ctx..] } else { ids };
+    dst.resize(dst.len() + (ctx - tail.len()), PAD);
+    dst.extend_from_slice(tail);
+}
+
+/// Serial reference decode: one row at a time through `next_logits`
+/// (e.g. `|ids| decoder.next_logits(ids)`), with exactly the stop rule
+/// and sampler the pool applies. Returns the generated tail (prompt and
+/// stop token excluded). The e2e test drives this against a live server
+/// to assert byte-identity.
+pub fn decode_serial<F>(
+    mut next_logits: F,
+    prompt_ids: &[i32],
+    max_new: usize,
+    sample: &SampleCfg,
+    stop_token: Option<i32>,
+) -> Result<Vec<i32>>
+where
+    F: FnMut(&[i32]) -> Result<Vec<f32>>,
+{
+    let mut ids = prompt_ids.to_vec();
+    let start = ids.len();
+    let mut sampler = Sampler::new(sample.clone());
+    for _ in 0..max_new {
+        let logits = next_logits(&ids)?;
+        let t = sampler.next(&logits);
+        if Some(t) == stop_token {
+            break;
+        }
+        ids.push(t);
+    }
+    Ok(ids.split_off(start))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_window_pads_and_truncates() {
+        let mut w = Vec::new();
+        fill_window(&mut w, &[1, 2, 3], 8);
+        assert_eq!(w.len(), 8);
+        assert!(w[..5].iter().all(|&x| x == PAD));
+        assert_eq!(&w[5..], &[1, 2, 3]);
+        w.clear();
+        fill_window(&mut w, &(0..20).collect::<Vec<i32>>(), 8);
+        assert_eq!(w, (12..20).collect::<Vec<i32>>());
+        // appending a second window leaves the first intact
+        fill_window(&mut w, &[9], 4);
+        assert_eq!(w.len(), 12);
+        assert_eq!(&w[8..], &[PAD, PAD, PAD, 9]);
+    }
+
+    #[test]
+    fn decode_serial_applies_stop_rule() {
+        // constant logits: argmax is always the last index
+        let logits = vec![0.0f32, 1.0, 2.0];
+        let out = decode_serial(
+            |_| Ok(logits.clone()),
+            &[0],
+            5,
+            &SampleCfg::Greedy,
+            None,
+        )
+        .unwrap();
+        assert_eq!(out, vec![2, 2, 2, 2, 2]);
+        let out = decode_serial(
+            |_| Ok(logits.clone()),
+            &[0],
+            5,
+            &SampleCfg::Greedy,
+            Some(2),
+        )
+        .unwrap();
+        assert!(out.is_empty(), "stop token ends decode without emitting it");
+    }
+}

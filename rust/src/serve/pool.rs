@@ -1,0 +1,557 @@
+//! [`DecoderPool`] — the continuous-batching slot scheduler.
+//!
+//! Slot lifecycle (see docs/ARCHITECTURE.md for the full diagram):
+//!
+//! ```text
+//! queue ──admit──▶ slot(active) ──step──▶ +1 token ──EOS/max_new──▶ Done
+//!    ▲                 │  ▲                                          │
+//!    └── submit()      └──┴── stays active across steps      slot freed
+//!                                             (backfilled next admit)
+//! ```
+//!
+//! One [`DecoderPool::step`] advances *all* active rows by one token: the
+//! scheduler packs the active slots (in slot order) into the smallest
+//! resident batch width `>= n_active`, pads the remaining rows, and runs
+//! one `Session::run`. A slot freed this step is refilled from the queue
+//! at the top of the *next* step — `slot_refills` counts every admission
+//! that happened while other rows were mid-flight, i.e. the backfills
+//! static batching would have left idle.
+
+use crate::config::{ModelConfig, OutRole};
+use crate::coordinator::checkpoint::fnv1a64;
+use crate::rng::Rng;
+use crate::runtime::{Binds, Program, Runtime, Session};
+use crate::serve::sampler::{SampleCfg, Sampler};
+use crate::serve::{fill_window, PAD};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A source of next-token logits for batches of token windows. The pool
+/// is written against this seam so the scheduler is testable (and
+/// benchable) without XLA artifacts.
+///
+/// Contract: `logits(tokens, rows)` consumes `rows * ctx()` tokens
+/// (row-major windows) with `rows` equal to one of `batches()`, returns
+/// `rows * vocab()` logits, and row *i* of the output depends only on row
+/// *i* of the input — the row-independence property the whole subsystem's
+/// determinism story rests on.
+pub trait LogitsBackend {
+    fn vocab(&self) -> usize;
+    fn ctx(&self) -> usize;
+    /// Resident batch widths, ascending and deduplicated.
+    fn batches(&self) -> &[usize];
+    fn logits(&mut self, tokens: &[i32], rows: usize) -> Result<Vec<f32>>;
+}
+
+/// The production backend: one `Runtime` plus a resident `Session` per
+/// `logits_last_b{B}` artifact the preset ships. Loading every width up
+/// front keeps the decode loop allocation- and compile-free; the pool
+/// picks the cheapest width per step.
+pub struct SessionBackend {
+    rt: Runtime,
+    params: Vec<xla::Literal>,
+    vocab: usize,
+    ctx: usize,
+    sessions: Vec<(usize, Session)>,
+    batches: Vec<usize>,
+}
+
+impl SessionBackend {
+    pub fn new(mut rt: Runtime, model: &ModelConfig, params: Vec<xla::Literal>) -> Result<Self> {
+        let mut sessions: Vec<(usize, Session)> = Vec::new();
+        for name in &model.artifacts {
+            let Some(suffix) = name.strip_prefix("logits_last_b") else { continue };
+            let Ok(b) = suffix.parse::<usize>() else { continue };
+            if b == 0 {
+                bail!("artifact {name} declares a zero-row batch width");
+            }
+            // signature + HLO arity are validated here, before serving
+            let program = Program::load(&mut rt, model, name)?;
+            sessions.push((b, Session::new(program, 0)));
+        }
+        sessions.sort_by_key(|&(b, _)| b);
+        if sessions.is_empty() {
+            bail!(
+                "no logits_last_b{{B}} artifacts in this preset — \
+                 re-run `make artifacts` (the serving family is emitted by aot.py)"
+            );
+        }
+        let batches: Vec<usize> = sessions.iter().map(|&(b, _)| b).collect();
+        Ok(SessionBackend { rt, params, vocab: model.vocab, ctx: model.ctx, sessions, batches })
+    }
+}
+
+impl LogitsBackend for SessionBackend {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn ctx(&self) -> usize {
+        self.ctx
+    }
+    fn batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn logits(&mut self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+        if tokens.len() != rows * self.ctx {
+            bail!(
+                "backend fed {} tokens for {rows} rows of ctx {}",
+                tokens.len(),
+                self.ctx
+            );
+        }
+        let (_, sess) = self
+            .sessions
+            .iter_mut()
+            .find(|&&mut (b, _)| b == rows)
+            .ok_or_else(|| {
+                anyhow!("no resident logits_last_b{rows} program (widths {:?})", self.batches)
+            })?;
+        let out = sess.run(
+            &mut self.rt,
+            &Binds::new().params(&self.params).tokens(tokens, [rows, self.ctx]),
+        )?;
+        let logits = out.vec_f32(OutRole::Logits)?;
+        if logits.len() != rows * self.vocab {
+            bail!(
+                "logits_last_b{rows} returned {} values, expected {}",
+                logits.len(),
+                rows * self.vocab
+            );
+        }
+        Ok(logits)
+    }
+}
+
+/// Artifact-free backend for tests and benches: row logits are a pure
+/// hash of the row's window (FNV → RNG stream), honouring the same
+/// row-independence contract as the XLA family, so pooled decode must
+/// match serial decode bit-for-bit here too. `work` adds RNG draws per
+/// row, standing in for per-row model compute in throughput benches.
+pub struct SyntheticBackend {
+    vocab: usize,
+    ctx: usize,
+    batches: Vec<usize>,
+    pub work: usize,
+}
+
+impl SyntheticBackend {
+    pub fn new(vocab: usize, ctx: usize, batches: &[usize]) -> SyntheticBackend {
+        let mut b = batches.to_vec();
+        b.sort_unstable();
+        b.dedup();
+        SyntheticBackend { vocab, ctx, batches: b, work: 0 }
+    }
+
+    /// One row's logits — also the serial oracle for pool tests.
+    pub fn row_logits(&self, window: &[i32]) -> Vec<f32> {
+        let mut bytes = Vec::with_capacity(window.len() * 4);
+        for t in window {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        let mut rg = Rng::new(fnv1a64(&bytes));
+        for _ in 0..self.work {
+            std::hint::black_box(rg.next_u64());
+        }
+        (0..self.vocab).map(|_| rg.next_f32() * 8.0 - 4.0).collect()
+    }
+}
+
+impl LogitsBackend for SyntheticBackend {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn ctx(&self) -> usize {
+        self.ctx
+    }
+    fn batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn logits(&mut self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+        if tokens.len() != rows * self.ctx {
+            bail!(
+                "synthetic backend fed {} tokens for {rows} rows of ctx {}",
+                tokens.len(),
+                self.ctx
+            );
+        }
+        if !self.batches.contains(&rows) {
+            bail!("no synthetic program for {rows} rows (widths {:?})", self.batches);
+        }
+        let mut out = Vec::with_capacity(rows * self.vocab);
+        for r in 0..rows {
+            out.extend(self.row_logits(&tokens[r * self.ctx..(r + 1) * self.ctx]));
+        }
+        Ok(out)
+    }
+}
+
+/// One decode request as the pool sees it (already tokenized).
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    pub max_new: usize,
+    pub sample: SampleCfg,
+}
+
+/// What a [`DecoderPool::step`] reports back, in emission order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PoolEvent {
+    /// One sampled token on a live row (`index` counts from 0 per request).
+    Token { id: u64, index: usize, token: i32 },
+    /// The request finished (EOS or `max_new`); `tokens` is the generated
+    /// tail — prompt excluded, stop token excluded.
+    Done { id: u64, tokens: Vec<i32> },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Backfill freed slots the moment any row finishes (the serving mode).
+    Continuous,
+    /// Admit a full wave, drain it completely, then admit the next — the
+    /// baseline continuous batching is measured against in the benches.
+    Static,
+}
+
+/// Scheduler counters, folded into `metrics::HealthCounters` by the
+/// server for the end-of-run health banner.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolCounters {
+    pub requests_served: usize,
+    /// Admissions into a slot while other rows were mid-flight — the
+    /// backfills that distinguish continuous from static batching.
+    pub slot_refills: usize,
+    /// Batched `Session::run` calls executed.
+    pub decode_steps: usize,
+    /// Sum of active rows over decode steps; occupancy is
+    /// `slot_steps_active / (decode_steps * n_slots)`.
+    pub slot_steps_active: usize,
+    /// Total milliseconds requests spent queued before admission.
+    pub queue_wait_ms: usize,
+    pub tokens_generated: usize,
+}
+
+struct Slot {
+    id: u64,
+    ids: Vec<i32>,
+    prompt_len: usize,
+    emitted: usize,
+    max_new: usize,
+    sampler: Sampler,
+}
+
+pub struct DecoderPool {
+    backend: Box<dyn LogitsBackend>,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(ServeRequest, Instant)>,
+    mode: BatchMode,
+    stop_token: Option<i32>,
+    pub counters: PoolCounters,
+    /// reusable step-assembly buffer (rows * ctx)
+    tok_buf: Vec<i32>,
+}
+
+impl DecoderPool {
+    pub fn new(
+        backend: Box<dyn LogitsBackend>,
+        slots: usize,
+        mode: BatchMode,
+        stop_token: Option<i32>,
+    ) -> Result<DecoderPool> {
+        let widest = *backend
+            .batches()
+            .last()
+            .ok_or_else(|| anyhow!("backend exposes no resident batch widths"))?;
+        if slots == 0 {
+            bail!("a decoder pool needs at least one slot");
+        }
+        if slots > widest {
+            bail!("{slots} slots exceed the widest resident program ({widest} rows)");
+        }
+        Ok(DecoderPool {
+            backend,
+            slots: (0..slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            mode,
+            stop_token,
+            counters: PoolCounters::default(),
+            tok_buf: Vec::new(),
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0 && self.queue.is_empty()
+    }
+
+    /// Enqueue a request; it is admitted to a slot at the top of a
+    /// subsequent [`Self::step`].
+    pub fn submit(&mut self, req: ServeRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    fn admit(&mut self, events: &mut Vec<PoolEvent>) {
+        let busy = self.active();
+        if self.mode == BatchMode::Static && busy > 0 {
+            return;
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                continue;
+            }
+            loop {
+                let Some((req, t0)) = self.queue.pop_front() else { return };
+                self.counters.queue_wait_ms += t0.elapsed().as_millis() as usize;
+                if busy > 0 {
+                    self.counters.slot_refills += 1;
+                }
+                if req.max_new == 0 {
+                    // degenerate but legal at the pool API: nothing to decode
+                    events.push(PoolEvent::Done { id: req.id, tokens: Vec::new() });
+                    self.counters.requests_served += 1;
+                    continue; // next queued request gets this slot
+                }
+                self.slots[i] = Some(Slot {
+                    id: req.id,
+                    prompt_len: req.prompt_ids.len(),
+                    ids: req.prompt_ids,
+                    emitted: 0,
+                    max_new: req.max_new,
+                    sampler: Sampler::new(req.sample),
+                });
+                break;
+            }
+        }
+    }
+
+    /// Admit from the queue, then advance every active row by one token.
+    pub fn step(&mut self) -> Result<Vec<PoolEvent>> {
+        let mut events = Vec::new();
+        self.admit(&mut events);
+        let active: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(events);
+        }
+        let rows = self
+            .backend
+            .batches()
+            .iter()
+            .copied()
+            .find(|&b| b >= active.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "{} active rows exceed every resident width {:?} (pool invariant broken)",
+                    active.len(),
+                    self.backend.batches()
+                )
+            })?;
+        let ctx = self.backend.ctx();
+        let vocab = self.backend.vocab();
+        self.tok_buf.clear();
+        for &si in &active {
+            let slot = self.slots[si].as_ref().expect("active slot");
+            fill_window(&mut self.tok_buf, &slot.ids, ctx);
+        }
+        self.tok_buf.resize(rows * ctx, PAD); // pad rows beyond the active set
+        let logits = self.backend.logits(&self.tok_buf, rows)?;
+        self.counters.decode_steps += 1;
+        self.counters.slot_steps_active += active.len();
+        for (row, &si) in active.iter().enumerate() {
+            let slot = self.slots[si].as_mut().expect("active slot");
+            let t = slot.sampler.next(&logits[row * vocab..(row + 1) * vocab]);
+            let done = if Some(t) == self.stop_token {
+                true
+            } else {
+                slot.ids.push(t);
+                events.push(PoolEvent::Token { id: slot.id, index: slot.emitted, token: t });
+                slot.emitted += 1;
+                self.counters.tokens_generated += 1;
+                slot.emitted >= slot.max_new
+            };
+            if done {
+                let slot = self.slots[si].take().expect("active slot");
+                events.push(PoolEvent::Done {
+                    id: slot.id,
+                    tokens: slot.ids[slot.prompt_len..].to_vec(),
+                });
+                self.counters.requests_served += 1;
+            }
+        }
+        Ok(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::decode_serial;
+    use std::collections::HashMap;
+
+    fn backend() -> SyntheticBackend {
+        SyntheticBackend::new(61, 16, &[1, 2, 4])
+    }
+
+    fn reqs(n: usize) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt_ids: vec![(i * 3 + 1) as i32, 7, 9 + i as i32],
+                max_new: 3 + (i * 2) % 7,
+                sample: if i % 2 == 0 {
+                    SampleCfg::Greedy
+                } else {
+                    SampleCfg::Sampled { temperature: 0.8, top_k: 5, seed: 40 + i as u64 }
+                },
+            })
+            .collect()
+    }
+
+    fn serial(req: &ServeRequest, stop: Option<i32>) -> Vec<i32> {
+        let be = backend();
+        let mut win = Vec::new();
+        decode_serial(
+            |ids| {
+                win.clear();
+                fill_window(&mut win, ids, be.ctx());
+                Ok(be.row_logits(&win))
+            },
+            &req.prompt_ids,
+            req.max_new,
+            &req.sample,
+            stop,
+        )
+        .unwrap()
+    }
+
+    fn drain(pool: &mut DecoderPool) -> HashMap<u64, Vec<i32>> {
+        let mut done = HashMap::new();
+        let mut guard = 0;
+        while !pool.is_idle() {
+            guard += 1;
+            assert!(guard < 10_000, "pool failed to drain");
+            for ev in pool.step().unwrap() {
+                if let PoolEvent::Done { id, tokens } = ev {
+                    done.insert(id, tokens);
+                }
+            }
+        }
+        done
+    }
+
+    #[test]
+    fn pooled_decode_matches_serial_and_backfills() {
+        let mut pool =
+            DecoderPool::new(Box::new(backend()), 2, BatchMode::Continuous, None).unwrap();
+        let rs = reqs(5);
+        for r in &rs {
+            pool.submit(r.clone());
+        }
+        let done = drain(&mut pool);
+        assert_eq!(done.len(), 5);
+        for r in &rs {
+            assert_eq!(done[&r.id], serial(r, None), "request {} diverged from serial", r.id);
+        }
+        assert!(pool.counters.slot_refills > 0, "5 requests over 2 slots must backfill");
+        assert_eq!(pool.counters.requests_served, 5);
+        assert_eq!(
+            pool.counters.tokens_generated,
+            rs.iter().map(|r| r.max_new).sum::<usize>()
+        );
+        assert!(pool.counters.slot_steps_active >= pool.counters.decode_steps);
+    }
+
+    #[test]
+    fn static_mode_never_backfills_mid_flight() {
+        let mut pool = DecoderPool::new(Box::new(backend()), 2, BatchMode::Static, None).unwrap();
+        let rs = reqs(5);
+        for r in &rs {
+            pool.submit(r.clone());
+        }
+        let done = drain(&mut pool);
+        assert_eq!(done.len(), 5);
+        for r in &rs {
+            assert_eq!(done[&r.id], serial(r, None), "static request {} diverged", r.id);
+        }
+        assert_eq!(pool.counters.slot_refills, 0, "static batching admits only empty waves");
+    }
+
+    #[test]
+    fn continuous_takes_fewer_steps_than_static() {
+        // 2 slots, lengths [1, 9, 1, 9]: static drains full waves, so the
+        // short rows leave a slot idle for 8 steps per wave
+        let mk = |mode| {
+            let mut pool = DecoderPool::new(Box::new(backend()), 2, mode, None).unwrap();
+            for (i, &n) in [1usize, 9, 1, 9].iter().enumerate() {
+                pool.submit(ServeRequest {
+                    id: i as u64,
+                    prompt_ids: vec![i as i32 + 1],
+                    max_new: n,
+                    sample: SampleCfg::Greedy,
+                });
+            }
+            drain(&mut pool);
+            pool.counters.decode_steps
+        };
+        let stat = mk(BatchMode::Static);
+        let cont = mk(BatchMode::Continuous);
+        assert!(cont < stat, "continuous ({cont} steps) must beat static ({stat} steps)");
+    }
+
+    #[test]
+    fn stop_token_ends_a_row_early_without_emitting_it() {
+        let r = ServeRequest {
+            id: 0,
+            prompt_ids: vec![5, 6],
+            max_new: 8,
+            sample: SampleCfg::Greedy,
+        };
+        // use the first greedily decoded token as the stop token: the run
+        // must then finish immediately with an empty tail
+        let first = serial(&r, None)[0];
+        let mut pool =
+            DecoderPool::new(Box::new(backend()), 1, BatchMode::Continuous, Some(first)).unwrap();
+        pool.submit(r.clone());
+        let done = drain(&mut pool);
+        assert_eq!(done[&0], Vec::<i32>::new());
+        assert_eq!(done[&0], serial(&r, Some(first)));
+        assert_eq!(pool.counters.tokens_generated, 0);
+    }
+
+    #[test]
+    fn pool_construction_rejects_bad_slot_counts() {
+        let err = DecoderPool::new(Box::new(backend()), 8, BatchMode::Continuous, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("widest resident program"), "got: {err}");
+        let err = DecoderPool::new(Box::new(backend()), 0, BatchMode::Continuous, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least one slot"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_max_new_completes_without_a_decode_step() {
+        let mut pool =
+            DecoderPool::new(Box::new(backend()), 1, BatchMode::Continuous, None).unwrap();
+        pool.submit(ServeRequest {
+            id: 9,
+            prompt_ids: vec![1],
+            max_new: 0,
+            sample: SampleCfg::Greedy,
+        });
+        let done = drain(&mut pool);
+        assert_eq!(done[&9], Vec::<i32>::new());
+        assert_eq!(pool.counters.decode_steps, 0);
+        assert_eq!(pool.counters.requests_served, 1);
+    }
+}

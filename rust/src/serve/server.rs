@@ -1,0 +1,620 @@
+//! `sophia serve` — the TCP front end over the [`DecoderPool`].
+//!
+//! Threading model: the decode loop runs on the *calling* thread (the
+//! `Runtime` and its sessions never cross threads); an acceptor thread
+//! takes connections and spawns one short-lived handler thread per
+//! connection. A handler reads exactly one request frame, hands the
+//! decoded request to the decode loop over a channel, then relays the
+//! per-request event stream back over the socket — `Token` frames as
+//! rows are decoded, one terminal `Done` (or `Error`) frame.
+//!
+//! Parser rejections (bad magic/version/length/checksum, malformed
+//! request payloads) are answered with a named `Error` frame, counted in
+//! `frames_rejected`, and never panic the server; policy rejections
+//! (e.g. `max_new` over the server cap) are answered the same way but
+//! are not wire-level corruption, so they are not counted there.
+
+use crate::data::Tokenizer;
+use crate::metrics::HealthCounters;
+use crate::serve::pool::{BatchMode, DecoderPool, LogitsBackend, PoolEvent, ServeRequest};
+use crate::serve::sampler::SampleCfg;
+use crate::serve::wire::{self, FrameIn, ServerMsg, WireRequest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. "127.0.0.1:0" (port 0 = OS-assigned).
+    pub listen: String,
+    /// Batch slots (clamped to the widest resident program).
+    pub slots: usize,
+    /// Serve exactly this many requests then exit; 0 = run until killed.
+    pub max_requests: usize,
+    /// Server-side ceiling on a request's `max_new`.
+    pub max_new_cap: usize,
+    /// End a row early when it samples the tokenizer's EOT token.
+    pub stop_on_eot: bool,
+    /// Socket read timeout for request frames.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            slots: 4,
+            max_requests: 0,
+            max_new_cap: 256,
+            stop_on_eot: true,
+            io_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// Decode-loop → connection-handler events.
+enum Out {
+    Token { index: usize, token: i32 },
+    Done { tokens: Vec<i32> },
+    Err(String),
+}
+
+struct Job {
+    req: WireRequest,
+    out: Sender<Out>,
+}
+
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding serve listener on {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        Ok(Server { listener, addr, cfg })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run to completion (`max_requests` served, or forever when 0) and
+    /// return the health counters for the end-of-run banner.
+    pub fn run(
+        self,
+        backend: Box<dyn LogitsBackend>,
+        tok: Arc<dyn Tokenizer>,
+    ) -> Result<HealthCounters> {
+        let widest = match backend.batches().last() {
+            Some(&w) => w,
+            None => bail!("backend exposes no resident batch widths"),
+        };
+        let slots = self.cfg.slots.clamp(1, widest);
+        if slots != self.cfg.slots {
+            eprintln!(
+                "serve: clamping {} slots to the widest resident program ({widest} rows)",
+                self.cfg.slots
+            );
+        }
+        let stop = if self.cfg.stop_on_eot { Some(tok.eot()) } else { None };
+        let mut pool = DecoderPool::new(backend, slots, BatchMode::Continuous, stop)?;
+
+        let frames_rejected = Arc::new(AtomicUsize::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = channel::<Job>();
+        let acceptor = spawn_acceptor(
+            self.listener.try_clone()?,
+            job_tx,
+            tok.clone(),
+            frames_rejected.clone(),
+            shutdown.clone(),
+            Duration::from_millis(self.cfg.io_timeout_ms.max(1)),
+        );
+
+        let mut routes: HashMap<u64, Sender<Out>> = HashMap::new();
+        let mut next_id: u64 = 0;
+        let target = self.cfg.max_requests;
+        let mut job_rx = Some(job_rx);
+        loop {
+            if let Some(rx) = &job_rx {
+                // block briefly when idle; drain opportunistically when busy
+                if pool.is_idle() {
+                    match rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(job) => {
+                            self.enqueue(&mut pool, &mut routes, &mut next_id, &tok, job)
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                while let Ok(job) = rx.try_recv() {
+                    self.enqueue(&mut pool, &mut routes, &mut next_id, &tok, job);
+                }
+            }
+            for ev in pool.step()? {
+                match ev {
+                    PoolEvent::Token { id, index, token } => {
+                        if let Some(tx) = routes.get(&id) {
+                            let _ = tx.send(Out::Token { index, token });
+                        }
+                    }
+                    PoolEvent::Done { id, tokens } => {
+                        if let Some(tx) = routes.remove(&id) {
+                            let _ = tx.send(Out::Done { tokens });
+                        }
+                    }
+                }
+            }
+            if target > 0 && pool.counters.requests_served >= target {
+                // stop admitting; drain whatever is still mid-flight
+                job_rx = None;
+                if pool.active() == 0 && pool.queued() == 0 {
+                    break;
+                }
+            }
+        }
+        shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        let _ = acceptor.join();
+        let c = &pool.counters;
+        Ok(HealthCounters {
+            requests_served: c.requests_served,
+            slot_refills: c.slot_refills,
+            decode_steps: c.decode_steps,
+            slot_steps_active: c.slot_steps_active,
+            queue_wait_ms: c.queue_wait_ms,
+            frames_rejected: frames_rejected.load(Ordering::SeqCst),
+            ..HealthCounters::default()
+        })
+    }
+
+    fn enqueue(
+        &self,
+        pool: &mut DecoderPool,
+        routes: &mut HashMap<u64, Sender<Out>>,
+        next_id: &mut u64,
+        tok: &Arc<dyn Tokenizer>,
+        job: Job,
+    ) {
+        if job.req.max_new as usize > self.cfg.max_new_cap {
+            let _ = job.out.send(Out::Err(format!(
+                "request max_new {} exceeds this server's cap {}",
+                job.req.max_new, self.cfg.max_new_cap
+            )));
+            return;
+        }
+        let id = *next_id;
+        *next_id += 1;
+        let sample = if job.req.temperature > 0.0 {
+            SampleCfg::Sampled {
+                temperature: job.req.temperature,
+                top_k: job.req.top_k as usize,
+                seed: job.req.seed,
+            }
+        } else {
+            SampleCfg::Greedy
+        };
+        routes.insert(id, job.out);
+        pool.submit(ServeRequest {
+            id,
+            prompt_ids: tok.encode(&job.req.prompt),
+            max_new: job.req.max_new as usize,
+            sample,
+        });
+    }
+}
+
+fn spawn_acceptor(
+    listener: TcpListener,
+    job_tx: Sender<Job>,
+    tok: Arc<dyn Tokenizer>,
+    rejected: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    timeout: Duration,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let job_tx = job_tx.clone();
+            let tok = tok.clone();
+            let rejected = rejected.clone();
+            std::thread::spawn(move || handle_conn(stream, job_tx, tok, rejected, timeout));
+        }
+    })
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    job_tx: Sender<Job>,
+    tok: Arc<dyn Tokenizer>,
+    rejected: Arc<AtomicUsize>,
+    timeout: Duration,
+) {
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_nodelay(true);
+    let payload = match wire::read_frame(&mut stream) {
+        FrameIn::Frame(p) => p,
+        FrameIn::Corrupt(e) => {
+            rejected.fetch_add(1, Ordering::SeqCst);
+            let _ = wire::write_frame(&mut stream, &wire::encode_error(&e));
+            return;
+        }
+        // silent, closed, or broken peers get no frame back
+        FrameIn::Idle | FrameIn::Eof | FrameIn::Gone(_) => return,
+    };
+    let req = match wire::decode_request(&payload) {
+        Ok(r) => r,
+        Err(e) => {
+            rejected.fetch_add(1, Ordering::SeqCst);
+            let _ = wire::write_frame(&mut stream, &wire::encode_error(&format!("{e:#}")));
+            return;
+        }
+    };
+    let (out_tx, out_rx): (Sender<Out>, Receiver<Out>) = channel();
+    if job_tx.send(Job { req, out: out_tx }).is_err() {
+        let _ = wire::write_frame(&mut stream, &wire::encode_error("server is shutting down"));
+        return;
+    }
+    loop {
+        match out_rx.recv_timeout(Duration::from_secs(300)) {
+            Ok(Out::Token { index, token }) => {
+                let piece = tok.decode(&[token]);
+                if wire::write_frame(&mut stream, &wire::encode_token(index as u32, token, &piece))
+                    .is_err()
+                {
+                    // client went away; the row still decodes server-side
+                    return;
+                }
+            }
+            Ok(Out::Done { tokens }) => {
+                let text = tok.decode(&tokens);
+                let _ = wire::write_frame(&mut stream, &wire::encode_done(&tokens, &text));
+                return;
+            }
+            Ok(Out::Err(msg)) => {
+                let _ = wire::write_frame(&mut stream, &wire::encode_error(&msg));
+                return;
+            }
+            Err(_) => {
+                // decode loop gone (shutdown) or wedged past the deadline
+                let _ = wire::write_frame(
+                    &mut stream,
+                    &wire::encode_error("request dropped: server stopped before completion"),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// One streamed completion as the client saw it.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub text: String,
+    /// `Token` frames observed before `Done` (streaming actually happened).
+    pub streamed: usize,
+    /// Time from request written to the first response frame.
+    pub ttft: Duration,
+    pub total: Duration,
+}
+
+/// Blocking client for tests, benches and the README quick-start: one
+/// request over one connection, streamed frames consumed as they arrive.
+pub fn client_request(
+    addr: &SocketAddr,
+    req: &WireRequest,
+    timeout: Duration,
+) -> Result<Completion> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to serve endpoint {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    wire::write_frame(&mut stream, &wire::encode_request(req))?;
+    let t0 = Instant::now();
+    let mut ttft = None;
+    let mut streamed = 0usize;
+    loop {
+        match wire::read_frame(&mut stream) {
+            FrameIn::Idle => bail!("timed out after {timeout:?} waiting for a response frame"),
+            FrameIn::Eof => bail!("server closed the stream before a done frame"),
+            FrameIn::Gone(e) => return Err(e).context("reading response frame"),
+            FrameIn::Corrupt(e) => bail!("corrupt response frame: {e}"),
+            FrameIn::Frame(p) => {
+                if ttft.is_none() {
+                    ttft = Some(t0.elapsed());
+                }
+                match wire::decode_server_msg(&p)? {
+                    ServerMsg::Token { .. } => streamed += 1,
+                    ServerMsg::Done { tokens, text } => {
+                        return Ok(Completion {
+                            tokens,
+                            text,
+                            streamed,
+                            ttft: ttft.expect("set on first frame"),
+                            total: t0.elapsed(),
+                        })
+                    }
+                    ServerMsg::Error { message } => bail!("server error: {message}"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ByteTokenizer;
+    use crate::serve::pool::SyntheticBackend;
+    use crate::serve::wire::{HEADER_LEN, MAGIC, MAX_FRAME_LEN, VERSION};
+    use std::io::Write;
+
+    fn start(cfg: ServeConfig) -> (SocketAddr, std::thread::JoinHandle<HealthCounters>) {
+        let server = Server::bind(cfg).unwrap();
+        let addr = server.local_addr();
+        // backend built inside the thread: LogitsBackend boxes are not
+        // Send (the production one owns a Runtime), same as cmd_serve
+        let h = std::thread::spawn(move || {
+            let tok: Arc<dyn Tokenizer> = Arc::new(ByteTokenizer);
+            let backend = Box::new(SyntheticBackend::new(256, 16, &[1, 2]));
+            server.run(backend, tok).unwrap()
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn round_trip_streams_and_sampled_output_is_deterministic() {
+        let (addr, h) = start(ServeConfig {
+            slots: 2,
+            max_requests: 4,
+            stop_on_eot: false,
+            io_timeout_ms: 5_000,
+            ..ServeConfig::default()
+        });
+        let sampled = WireRequest {
+            prompt: "hello serving".into(),
+            max_new: 6,
+            temperature: 0.9,
+            top_k: 12,
+            seed: 4242,
+        };
+        let greedy = WireRequest {
+            prompt: "greedy row".into(),
+            max_new: 4,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        };
+        // two identical sampled requests + two others, all concurrent
+        let reqs = vec![sampled.clone(), sampled.clone(), greedy.clone(), greedy];
+        let handles: Vec<_> = reqs
+            .into_iter()
+            .map(|r| {
+                std::thread::spawn(move || {
+                    client_request(&addr, &r, Duration::from_secs(30)).unwrap()
+                })
+            })
+            .collect();
+        let outs: Vec<Completion> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let counters = h.join().unwrap();
+        assert_eq!(counters.requests_served, 4);
+        assert_eq!(counters.frames_rejected, 0);
+        // identical sampled requests → byte-identical completions
+        assert_eq!(outs[0].tokens, outs[1].tokens);
+        assert_eq!(outs[0].text, outs[1].text);
+        assert_eq!(outs[0].tokens.len(), 6);
+        // tokens streamed ahead of the terminal frame
+        for o in &outs {
+            assert_eq!(o.streamed, o.tokens.len());
+            assert!(o.ttft <= o.total);
+        }
+        // identical greedy requests agree too
+        assert_eq!(outs[2].tokens, outs[3].tokens);
+        assert_eq!(outs[2].tokens.len(), 4);
+    }
+
+    #[test]
+    fn adversarial_frames_named_counted_never_panic() {
+        let (addr, h) = start(ServeConfig {
+            slots: 1,
+            max_requests: 1,
+            stop_on_eot: false,
+            io_timeout_ms: 2_000,
+            ..ServeConfig::default()
+        });
+        let expect_error = |bytes: &[u8], what: &str| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(bytes).unwrap();
+            match wire::read_frame(&mut s) {
+                FrameIn::Frame(p) => match wire::decode_server_msg(&p).unwrap() {
+                    ServerMsg::Error { message } => {
+                        assert!(!message.is_empty(), "{what}: empty error")
+                    }
+                    other => panic!("{what}: expected an error frame, got {other:?}"),
+                },
+                other => panic!(
+                    "{what}: expected an error frame, got {}",
+                    match other {
+                        FrameIn::Idle => "idle",
+                        FrameIn::Eof => "eof",
+                        FrameIn::Gone(_) => "gone",
+                        FrameIn::Corrupt(_) => "corrupt",
+                        FrameIn::Frame(_) => unreachable!(),
+                    }
+                ),
+            }
+        };
+        // 1: garbage bytes (HTTP, padded past one header)
+        let mut garbage = b"GET / HTTP/1.1\r\nHost: nope\r\n\r\n".to_vec();
+        garbage.resize(HEADER_LEN.max(garbage.len()), b' ');
+        expect_error(&garbage, "garbage");
+        // 2: wrong-version frame
+        let payload = wire::encode_request(&WireRequest {
+            prompt: "x".into(),
+            max_new: 1,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        });
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &payload).unwrap();
+        let mut wrong_version = framed.clone();
+        wrong_version[4..6].copy_from_slice(&9u16.to_le_bytes());
+        expect_error(&wrong_version, "wrong version");
+        // 3: oversized declared length
+        let mut oversized = [0u8; HEADER_LEN];
+        oversized[0..4].copy_from_slice(&MAGIC);
+        oversized[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        oversized[8..12].copy_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        expect_error(&oversized, "oversized");
+        // 4: well-framed but truncated request payload
+        let cut = &payload[..payload.len() - 3];
+        let mut truncated = Vec::new();
+        wire::write_frame(&mut truncated, cut).unwrap();
+        expect_error(&truncated, "truncated payload");
+        // 5: a valid request lets the server reach max_requests and exit
+        let ok = client_request(
+            &addr,
+            &WireRequest {
+                prompt: "fine".into(),
+                max_new: 2,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        assert_eq!(ok.tokens.len(), 2);
+        let counters = h.join().unwrap();
+        assert_eq!(counters.requests_served, 1);
+        assert!(
+            counters.frames_rejected >= 4,
+            "expected >= 4 rejected frames, got {}",
+            counters.frames_rejected
+        );
+    }
+
+    #[test]
+    fn policy_rejection_is_an_error_frame_not_a_frame_reject() {
+        let (addr, h) = start(ServeConfig {
+            slots: 1,
+            max_requests: 1,
+            max_new_cap: 8,
+            stop_on_eot: false,
+            io_timeout_ms: 2_000,
+            ..ServeConfig::default()
+        });
+        let err = client_request(
+            &addr,
+            &WireRequest {
+                prompt: "too long".into(),
+                max_new: 64,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            Duration::from_secs(10),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exceeds this server's cap 8"), "got: {err}");
+        let _ = client_request(
+            &addr,
+            &WireRequest {
+                prompt: "ok".into(),
+                max_new: 1,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        let counters = h.join().unwrap();
+        assert_eq!(counters.frames_rejected, 0);
+        assert_eq!(counters.requests_served, 1);
+    }
+
+    #[test]
+    fn silent_and_half_closed_clients_do_not_wedge_the_server() {
+        let (addr, h) = start(ServeConfig {
+            slots: 1,
+            max_requests: 1,
+            stop_on_eot: false,
+            io_timeout_ms: 100, // silent clients dropped fast
+            ..ServeConfig::default()
+        });
+        // connect, say nothing: handler times out and closes
+        let silent = TcpStream::connect(addr).unwrap();
+        // connect and close immediately: handler sees EOF
+        drop(TcpStream::connect(addr).unwrap());
+        std::thread::sleep(Duration::from_millis(250));
+        let ok = client_request(
+            &addr,
+            &WireRequest {
+                prompt: "still alive".into(),
+                max_new: 3,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        assert_eq!(ok.tokens.len(), 3);
+        drop(silent);
+        let counters = h.join().unwrap();
+        assert_eq!(counters.requests_served, 1);
+        // quiet peers are not wire corruption
+        assert_eq!(counters.frames_rejected, 0);
+    }
+
+    #[test]
+    fn half_frame_then_close_is_gone_not_a_crash() {
+        let (addr, h) = start(ServeConfig {
+            slots: 1,
+            max_requests: 1,
+            stop_on_eot: false,
+            io_timeout_ms: 500,
+            ..ServeConfig::default()
+        });
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&MAGIC).unwrap(); // 4 of 20 header bytes, then RST/close
+            drop(s);
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        let ok = client_request(
+            &addr,
+            &WireRequest {
+                prompt: "after".into(),
+                max_new: 1,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        assert_eq!(ok.tokens.len(), 1);
+        let counters = h.join().unwrap();
+        assert_eq!(counters.requests_served, 1);
+        // a half-frame disconnect is a Gone peer, not wire corruption
+        assert_eq!(counters.frames_rejected, 0);
+    }
+}

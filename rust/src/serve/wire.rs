@@ -1,0 +1,525 @@
+//! SSV1 — the serving wire protocol (see docs/PROTOCOL.md § serve).
+//!
+//! Same framing discipline as the SDP1 training protocol in
+//! `coordinator::net`: a fixed header (magic, version, flags, payload
+//! length, FNV-1a checksum), a hard length cap enforced *before* any
+//! allocation, a hand-rolled little-endian payload codec, and
+//! untrusted-input errors that name the message kind, the field, and the
+//! byte offset. A connection carries exactly one request: the client
+//! writes a `Request` frame, the server streams `Token` frames as rows
+//! are decoded (time-to-first-token = one decode step) and closes with a
+//! `Done` frame, or a single `Error` frame.
+
+use crate::coordinator::checkpoint::fnv1a64;
+use anyhow::{anyhow, bail, Result};
+use std::io::{ErrorKind, Read, Write};
+
+pub const MAGIC: [u8; 4] = *b"SSV1";
+pub const VERSION: u16 = 1;
+/// magic(4) version(2) flags(2) payload-len(4) checksum(8)
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on a declared payload length, enforced before allocation:
+/// requests carry a prompt and responses at most a few thousand token
+/// ids plus decoded text — a hostile length field cannot OOM the server.
+pub const MAX_FRAME_LEN: u32 = 1 << 24;
+/// Cap on strings inside payloads (prompts, pieces, completions, errors).
+pub const MAX_STR_LEN: usize = 1 << 16;
+/// Wire-level ceiling on `max_new` and on a `Done` token count (servers
+/// usually cap far lower via `--max-new-cap`).
+pub const MAX_MAX_NEW: u32 = 1 << 16;
+/// Wire-level ceiling on `top_k` (0 = the whole vocabulary).
+pub const MAX_TOP_K: u32 = 1 << 20;
+
+pub const TAG_REQUEST: u8 = 0x01;
+pub const TAG_TOKEN: u8 = 0x10;
+pub const TAG_DONE: u8 = 0x11;
+pub const TAG_ERROR: u8 = 0x1F;
+
+fn header_bytes(payload: &[u8], sum: u64) -> [u8; HEADER_LEN] {
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    // flags (6..8) stay zero
+    hdr[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[12..20].copy_from_slice(&sum.to_le_bytes());
+    hdr
+}
+
+/// Write one frame; returns total bytes written.
+pub fn write_frame(mut w: impl Write, payload: &[u8]) -> std::io::Result<usize> {
+    debug_assert!(payload.len() <= MAX_FRAME_LEN as usize);
+    let hdr = header_bytes(payload, fnv1a64(payload));
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(HEADER_LEN + payload.len())
+}
+
+/// Validate a frame header; returns (payload length, declared checksum).
+/// Pure, so the adversarial tests can hammer it without sockets.
+pub fn parse_header(hdr: &[u8; HEADER_LEN]) -> Result<(u32, u64)> {
+    if hdr[0..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x}{:02x}{:02x}{:02x} (want \"SSV1\")",
+            hdr[0],
+            hdr[1],
+            hdr[2],
+            hdr[3]
+        );
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != VERSION {
+        bail!("unsupported frame version {version} (want {VERSION})");
+    }
+    let len = u32::from_le_bytes(hdr[8..12].try_into().expect("4 bytes"));
+    if len > MAX_FRAME_LEN {
+        bail!("declared frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap");
+    }
+    let sum = u64::from_le_bytes(hdr[12..20].try_into().expect("8 bytes"));
+    Ok((len, sum))
+}
+
+/// One attempt to read a frame (mirrors `net.rs`; generic over `Read` so
+/// tests can feed byte cursors instead of sockets).
+pub enum FrameIn {
+    /// Read timed out before the first byte: the peer is alive but quiet.
+    Idle,
+    /// Orderly close before the first byte of a frame.
+    Eof,
+    /// The connection failed (mid-frame timeout, reset, truncation, …).
+    Gone(std::io::Error),
+    /// A frame failed validation — never delivered upward.
+    Corrupt(String),
+    Frame(Vec<u8>),
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+pub fn read_frame(stream: &mut impl Read) -> FrameIn {
+    let mut first = [0u8; 1];
+    loop {
+        match stream.read(&mut first) {
+            Ok(0) => return FrameIn::Eof,
+            Ok(_) => break,
+            Err(e) if is_timeout(&e) => return FrameIn::Idle,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return FrameIn::Gone(e),
+        }
+    }
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0] = first[0];
+    if let Err(e) = stream.read_exact(&mut hdr[1..]) {
+        return FrameIn::Gone(e);
+    }
+    let (len, want) = match parse_header(&hdr) {
+        Ok(v) => v,
+        Err(e) => return FrameIn::Corrupt(format!("{e:#}")),
+    };
+    let mut payload = vec![0u8; len as usize];
+    if let Err(e) = stream.read_exact(&mut payload) {
+        return FrameIn::Gone(e);
+    }
+    let got = fnv1a64(&payload);
+    if got != want {
+        return FrameIn::Corrupt(format!(
+            "frame checksum mismatch: payload hashes to {got:016x}, header declares {want:016x}"
+        ));
+    }
+    FrameIn::Frame(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec (hand-rolled, little-endian)
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Enc { buf: vec![tag] }
+    }
+    fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    fn str(&mut self, s: &str) -> &mut Self {
+        let b = s.as_bytes();
+        debug_assert!(b.len() <= MAX_STR_LEN);
+        self.buf.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(b);
+        self
+    }
+    fn i32s(&mut self, v: &[i32]) -> &mut Self {
+        debug_assert!(v.len() <= MAX_MAX_NEW as usize);
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+    fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked payload reader: every read names the message kind, the
+/// field, and the offset on failure, and every declared count is checked
+/// against the bytes actually present before any allocation.
+struct Dec<'a> {
+    buf: &'a [u8],
+    off: usize,
+    what: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8], what: &'static str) -> Self {
+        Dec { buf, off: 0, what }
+    }
+    fn take(&mut self, n: usize, field: &str) -> Result<&'a [u8]> {
+        let left = self.buf.len() - self.off;
+        if left < n {
+            bail!(
+                "{} payload truncated at byte {} reading {field}: {n} bytes declared, {left} left",
+                self.what,
+                self.off
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self, field: &str) -> Result<u8> {
+        Ok(self.take(1, field)?[0])
+    }
+    fn u32(&mut self, field: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self, field: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+    fn f32(&mut self, field: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+    }
+    fn i32(&mut self, field: &str) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+    }
+    fn str(&mut self, field: &str) -> Result<String> {
+        let len = self.u32(field)? as usize;
+        if len > MAX_STR_LEN {
+            bail!("{} field {field} declares a {len}-byte string (cap {MAX_STR_LEN})", self.what);
+        }
+        let bytes = self.take(len, field)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("{} field {field} is not valid UTF-8", self.what))
+    }
+    fn i32s(&mut self, field: &str) -> Result<Vec<i32>> {
+        let count = self.u32(field)? as usize;
+        if count > MAX_MAX_NEW as usize {
+            bail!(
+                "{} field {field} declares {count} tokens (cap {MAX_MAX_NEW})",
+                self.what
+            );
+        }
+        let bytes = self.take(count * 4, field)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn done(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!(
+                "{} payload has {} trailing bytes after the message",
+                self.what,
+                self.buf.len() - self.off
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+
+/// Client → server: one decode request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub prompt: String,
+    pub max_new: u32,
+    /// `0.0` selects greedy decoding (`top_k`/`seed` are then ignored).
+    pub temperature: f32,
+    /// `0` = no top-k cut.
+    pub top_k: u32,
+    /// Per-request sampling seed — the determinism handle.
+    pub seed: u64,
+}
+
+pub fn encode_request(r: &WireRequest) -> Vec<u8> {
+    let mut e = Enc::new(TAG_REQUEST);
+    e.str(&r.prompt).u32(r.max_new).f32(r.temperature).u32(r.top_k).u64(r.seed);
+    e.finish()
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest> {
+    let mut d = Dec::new(payload, "request");
+    let tag = d.u8("tag")?;
+    if tag != TAG_REQUEST {
+        bail!("expected a request frame, got message tag {tag:#04x}");
+    }
+    let prompt = d.str("prompt")?;
+    let max_new = d.u32("max_new")?;
+    let temperature = d.f32("temperature")?;
+    let top_k = d.u32("top_k")?;
+    let seed = d.u64("seed")?;
+    d.done()?;
+    if max_new == 0 {
+        bail!("request field max_new must be at least 1");
+    }
+    if max_new > MAX_MAX_NEW {
+        bail!("request field max_new {max_new} exceeds the wire cap {MAX_MAX_NEW}");
+    }
+    if !temperature.is_finite() || temperature < 0.0 {
+        bail!("request field temperature {temperature} must be finite and >= 0");
+    }
+    if top_k > MAX_TOP_K {
+        bail!("request field top_k {top_k} exceeds the wire cap {MAX_TOP_K}");
+    }
+    Ok(WireRequest { prompt, max_new, temperature, top_k, seed })
+}
+
+/// Server → client stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerMsg {
+    /// One sampled token, streamed as soon as its decode step lands.
+    Token { index: u32, token: i32, piece: String },
+    /// Terminal: the full generated tail plus its decoded text.
+    Done { tokens: Vec<i32>, text: String },
+    /// Terminal: the request was rejected or the server is going away.
+    Error { message: String },
+}
+
+pub fn encode_token(index: u32, token: i32, piece: &str) -> Vec<u8> {
+    let mut e = Enc::new(TAG_TOKEN);
+    e.u32(index).u32(token as u32).str(piece);
+    e.finish()
+}
+
+pub fn encode_done(tokens: &[i32], text: &str) -> Vec<u8> {
+    let mut e = Enc::new(TAG_DONE);
+    e.i32s(tokens).str(text);
+    e.finish()
+}
+
+pub fn encode_error(message: &str) -> Vec<u8> {
+    let mut cut = message.len().min(MAX_STR_LEN);
+    while !message.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let mut e = Enc::new(TAG_ERROR);
+    e.str(&message[..cut]);
+    e.finish()
+}
+
+pub fn decode_server_msg(payload: &[u8]) -> Result<ServerMsg> {
+    let mut d = Dec::new(payload, "response");
+    let tag = d.u8("tag")?;
+    let msg = match tag {
+        TAG_TOKEN => {
+            let index = d.u32("index")?;
+            let token = d.u32("token")? as i32;
+            let piece = d.str("piece")?;
+            ServerMsg::Token { index, token, piece }
+        }
+        TAG_DONE => {
+            let tokens = d.i32s("tokens")?;
+            let text = d.str("text")?;
+            ServerMsg::Done { tokens, text }
+        }
+        TAG_ERROR => ServerMsg::Error { message: d.str("message")? },
+        other => bail!("unknown response message tag {other:#04x}"),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> WireRequest {
+        WireRequest {
+            prompt: "the capital of France is".into(),
+            max_new: 12,
+            temperature: 0.8,
+            top_k: 40,
+            seed: 0xDEAD_BEEF,
+        }
+    }
+
+    #[test]
+    fn header_round_trip() {
+        let payload = encode_request(&req());
+        let hdr = header_bytes(&payload, fnv1a64(&payload));
+        let (len, sum) = parse_header(&hdr).unwrap();
+        assert_eq!(len as usize, payload.len());
+        assert_eq!(sum, fnv1a64(&payload));
+    }
+
+    #[test]
+    fn bad_magic_named_in_error() {
+        let mut hdr = header_bytes(b"x", 0);
+        hdr[0..4].copy_from_slice(b"HTTP");
+        let err = format!("{:#}", parse_header(&hdr).unwrap_err());
+        assert!(err.contains("bad frame magic"), "got: {err}");
+        assert!(err.contains("SSV1"), "got: {err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut hdr = header_bytes(b"x", 0);
+        hdr[4..6].copy_from_slice(&9u16.to_le_bytes());
+        let err = format!("{:#}", parse_header(&hdr).unwrap_err());
+        assert!(err.contains("unsupported frame version 9"), "got: {err}");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut hdr = header_bytes(b"x", 0);
+        hdr[8..12].copy_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        let err = format!("{:#}", parse_header(&hdr).unwrap_err());
+        assert!(err.contains("exceeds the"), "got: {err}");
+        assert!(err.contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn request_round_trip() {
+        let r = req();
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn truncated_request_names_field_and_offset() {
+        let full = encode_request(&req());
+        for cut in [1usize, 5, full.len() - 3] {
+            let err = format!("{:#}", decode_request(&full[..cut]).unwrap_err());
+            assert!(
+                err.contains("request payload truncated at byte"),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn garbage_tag_rejected() {
+        let err = format!("{:#}", decode_request(&[0x77, 1, 2, 3]).unwrap_err());
+        assert!(err.contains("message tag 0x77"), "got: {err}");
+        let err = format!("{:#}", decode_server_msg(&[0x42]).unwrap_err());
+        assert!(err.contains("unknown response message tag 0x42"), "got: {err}");
+    }
+
+    #[test]
+    fn absurd_string_length_rejected() {
+        // request frame whose prompt declares 4 GiB
+        let mut p = vec![TAG_REQUEST];
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = format!("{:#}", decode_request(&p).unwrap_err());
+        assert!(err.contains("prompt"), "got: {err}");
+        assert!(err.contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut p = encode_request(&req());
+        p.push(0);
+        let err = format!("{:#}", decode_request(&p).unwrap_err());
+        assert!(err.contains("trailing bytes"), "got: {err}");
+    }
+
+    #[test]
+    fn semantic_field_validation() {
+        let mut r = req();
+        r.max_new = 0;
+        let err = format!("{:#}", decode_request(&encode_request(&r)).unwrap_err());
+        assert!(err.contains("max_new must be at least 1"), "got: {err}");
+        r.max_new = MAX_MAX_NEW + 1;
+        let err = format!("{:#}", decode_request(&encode_request(&r)).unwrap_err());
+        assert!(err.contains("exceeds the wire cap"), "got: {err}");
+        r.max_new = 4;
+        r.temperature = f32::NAN;
+        let err = format!("{:#}", decode_request(&encode_request(&r)).unwrap_err());
+        assert!(err.contains("temperature"), "got: {err}");
+        r.temperature = 1.0;
+        r.top_k = MAX_TOP_K + 1;
+        let err = format!("{:#}", decode_request(&encode_request(&r)).unwrap_err());
+        assert!(err.contains("top_k"), "got: {err}");
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let t = ServerMsg::Token { index: 3, token: -1, piece: "é".into() };
+        assert_eq!(decode_server_msg(&encode_token(3, -1, "é")).unwrap(), t);
+        let d = ServerMsg::Done { tokens: vec![1, 2, 300], text: "abc".into() };
+        assert_eq!(decode_server_msg(&encode_done(&[1, 2, 300], "abc")).unwrap(), d);
+        let e = ServerMsg::Error { message: "nope".into() };
+        assert_eq!(decode_server_msg(&encode_error("nope")).unwrap(), e);
+    }
+
+    #[test]
+    fn done_token_count_capped() {
+        let mut p = vec![TAG_DONE];
+        p.extend_from_slice(&(MAX_MAX_NEW + 1).to_le_bytes());
+        let err = format!("{:#}", decode_server_msg(&p).unwrap_err());
+        assert!(err.contains("tokens"), "got: {err}");
+        assert!(err.contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn read_frame_from_cursors() {
+        // happy path
+        let payload = encode_request(&req());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        match read_frame(&mut buf.as_slice()) {
+            FrameIn::Frame(p) => assert_eq!(p, payload),
+            _ => panic!("expected a frame"),
+        }
+        // checksum mismatch → Corrupt, never delivered
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        match read_frame(&mut bad.as_slice()) {
+            FrameIn::Corrupt(e) => assert!(e.contains("checksum mismatch"), "got: {e}"),
+            _ => panic!("expected Corrupt"),
+        }
+        // truncated stream mid-payload → Gone
+        let mut short: &[u8] = &buf[..buf.len() - 2];
+        match read_frame(&mut short) {
+            FrameIn::Gone(_) => {}
+            _ => panic!("expected Gone"),
+        }
+        // clean EOF before any byte
+        let mut empty: &[u8] = &[];
+        match read_frame(&mut empty) {
+            FrameIn::Eof => {}
+            _ => panic!("expected Eof"),
+        }
+        // garbage header → Corrupt
+        let mut garbage: &[u8] = b"GET / HTTP/1.1\r\nHost: x\r\n\r\n";
+        match read_frame(&mut garbage) {
+            FrameIn::Corrupt(e) => assert!(e.contains("bad frame magic"), "got: {e}"),
+            _ => panic!("expected Corrupt"),
+        }
+    }
+}

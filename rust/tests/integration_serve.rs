@@ -1,0 +1,243 @@
+//! Serving-tier integration tests (artifact-gated; `make artifacts` first).
+//!
+//! Two contracts:
+//!
+//! 1. **Row independence** — row *i* of any batched `logits_last_b{B}`
+//!    step is bit-identical to the single-sequence `eval::Decoder` path
+//!    for the same ids. This is the property the whole continuous-batching
+//!    design rests on: what shares your batch cannot change your logits.
+//! 2. **End-to-end determinism under load** — a real `sophia serve`
+//!    process on a trained nano checkpoint, driven by 3× more concurrent
+//!    requests than batch slots, must return every completion
+//!    byte-identical to the same request decoded serially through
+//!    `eval::Decoder` at the same seed, and its health banner must show
+//!    mid-flight backfills actually happened (`slot_refills > 0`).
+
+use sophia::config::ModelConfig;
+use sophia::data::tokenizer_for_vocab;
+use sophia::eval::Decoder;
+use sophia::runtime::{read_f32_file, ModelState, Runtime};
+use sophia::serve::pool::LogitsBackend;
+use sophia::serve::wire::WireRequest;
+use sophia::serve::{client_request, decode_serial, fill_window, SampleCfg, SessionBackend};
+use sophia::util::json::Json;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_nano() -> bool {
+    if artifacts_root().join("nano").join("manifest.json").exists() {
+        return true;
+    }
+    eprintln!("SKIP: artifacts/nano missing — run `make artifacts` first");
+    false
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_sophia")
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sophia_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn run_ok(mut cmd: std::process::Command, what: &str) {
+    let out = cmd.output().unwrap_or_else(|e| panic!("{what}: spawn failed: {e}"));
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+fn wait_for_port_file(path: &Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(addr) = std::fs::read_to_string(path) {
+            let addr = addr.trim().to_string();
+            if !addr.is_empty() {
+                return addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "serve never wrote {path:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Contract 1: every row of every `logits_last_b{B}` member matches the
+/// single-sequence decoder bitwise on the same token ids.
+#[test]
+fn batched_logits_match_decoder_bitwise() {
+    if !have_nano() {
+        return;
+    }
+    let root = artifacts_root();
+    let model = ModelConfig::load(&root, "nano").expect("nano manifest");
+    let mut rt = Runtime::cpu().expect("pjrt cpu");
+    let state = ModelState::init(&model, 3).expect("init params");
+    let tok = tokenizer_for_vocab(model.vocab, 1).expect("tokenizer");
+
+    // varied lengths, including longer than ctx (window truncation path)
+    let seqs: Vec<Vec<i32>> = (0..8usize)
+        .map(|i| {
+            let len = 1 + (i * (model.ctx / 2 + 3)) % (model.ctx + 5);
+            (0..len).map(|j| ((i * 31 + j * 7) % model.vocab) as i32).collect()
+        })
+        .collect();
+
+    // serial oracle first; the Decoder's &mut rt borrow ends with the block
+    let want: Vec<Vec<f32>> = {
+        let mut dec = Decoder::new(&mut rt, &model, tok, &state.params).expect("decoder");
+        seqs.iter().map(|ids| dec.next_logits(ids).expect("serial logits")).collect()
+    };
+
+    let mut be = SessionBackend::new(rt, &model, state.params).expect("session backend");
+    let widths = be.batches().to_vec();
+    assert!(widths.len() >= 2, "expected several logits_last_b widths, got {widths:?}");
+    for &b in &widths {
+        let mut buf = Vec::with_capacity(b * model.ctx);
+        for row in 0..b {
+            fill_window(&mut buf, &seqs[row % seqs.len()], model.ctx);
+        }
+        let logits = be.logits(&buf, b).expect("batched logits");
+        for row in 0..b {
+            let got = &logits[row * model.vocab..(row + 1) * model.vocab];
+            let exp = &want[row % seqs.len()];
+            for (v, (g, w)) in got.iter().zip(exp.iter()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "b{b} row {row} vocab {v}: batched {g} != serial {w}"
+                );
+            }
+        }
+    }
+}
+
+/// Contract 2: the process-level acceptance test from the issue — train a
+/// nano checkpoint, serve it, hammer it with 3× more concurrent requests
+/// than slots, and demand byte-identical completions plus live backfills.
+#[test]
+fn e2e_serve_process_matches_serial_decode_bytewise() {
+    if !have_nano() {
+        return;
+    }
+    let root = artifacts_root();
+    let dir = scratch("e2e");
+    let ckpt = dir.join("ckpt");
+    let port_file = dir.join("port");
+
+    let mut train = std::process::Command::new(bin());
+    train
+        .arg("train")
+        .args(["--preset", "nano"])
+        .args(["--steps", "4"])
+        .args(["--k", "2"])
+        .args(["--seed", "7"])
+        .args(["--artifacts", root.to_str().unwrap()])
+        .args(["--ckpt-dir", ckpt.to_str().unwrap()]);
+    run_ok(train, "nano training run");
+
+    let mut serve = std::process::Command::new(bin());
+    serve
+        .arg("serve")
+        .args(["--preset", "nano"])
+        .args(["--artifacts", root.to_str().unwrap()])
+        .args(["--ckpt", ckpt.to_str().unwrap()])
+        .args(["--slots", "2"])
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--max-requests", "6"])
+        .args(["--max-new-cap", "64"])
+        .args(["--data-seed", "1"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped());
+    let child = serve.spawn().expect("spawn serve");
+    let addr: SocketAddr = wait_for_port_file(&port_file).parse().expect("bound address");
+
+    // 6 concurrent requests over 2 slots: admission must backfill
+    let reqs: Vec<WireRequest> = (0..6u32)
+        .map(|i| WireRequest {
+            prompt: format!("request {i}: the quick brown fox"),
+            max_new: 8 + i * 4,
+            temperature: if i % 2 == 0 { 0.0 } else { 0.9 },
+            top_k: 8,
+            seed: 100 + u64::from(i),
+        })
+        .collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .cloned()
+        .map(|r| {
+            std::thread::spawn(move || client_request(&addr, &r, Duration::from_secs(120)))
+        })
+        .collect();
+    let completions: Vec<_> = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread").expect("completion"))
+        .collect();
+
+    let out = child.wait_with_output().expect("serve exit");
+    assert!(
+        out.status.success(),
+        "serve failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let health_line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("health: "))
+        .unwrap_or_else(|| panic!("no health banner in serve stdout:\n{stdout}"));
+    let health = Json::parse(health_line).expect("health json");
+    let counter = |k: &str| health.get(k).and_then(|j| j.as_usize()).unwrap_or(usize::MAX);
+    assert_eq!(counter("requests_served"), 6, "health: {health_line}");
+    assert!(counter("slot_refills") > 0, "no mid-flight backfills: {health_line}");
+    assert_eq!(counter("frames_rejected"), 0, "health: {health_line}");
+    assert!(counter("decode_steps") > 0, "health: {health_line}");
+
+    // serial oracle: same checkpoint, same seeds, one row at a time
+    let model = ModelConfig::load(&root, "nano").expect("nano manifest");
+    let mut rt = Runtime::cpu().expect("pjrt cpu");
+    let params = read_f32_file(&ckpt.join("params.bin")).expect("checkpoint params");
+    let state = ModelState::from_flat_params(&model, &params).expect("params layout");
+    let tok = tokenizer_for_vocab(model.vocab, 1).expect("tokenizer");
+    let mut dec = Decoder::new(&mut rt, &model, tok.clone(), &state.params).expect("decoder");
+    for (r, got) in reqs.iter().zip(&completions) {
+        let sample = if r.temperature > 0.0 {
+            SampleCfg::Sampled {
+                temperature: r.temperature,
+                top_k: r.top_k as usize,
+                seed: r.seed,
+            }
+        } else {
+            SampleCfg::Greedy
+        };
+        let want = decode_serial(
+            |ids| dec.next_logits(ids),
+            &tok.encode(&r.prompt),
+            r.max_new as usize,
+            &sample,
+            Some(tok.eot()), // the server default stop rule
+        )
+        .expect("serial decode");
+        assert_eq!(
+            got.tokens, want,
+            "completion for {:?} diverged from serial decode",
+            r.prompt
+        );
+        assert_eq!(got.text, tok.decode(&want), "decoded text diverged for {:?}", r.prompt);
+        assert_eq!(got.streamed, want.len(), "token streaming count for {:?}", r.prompt);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

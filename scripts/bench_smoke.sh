@@ -5,7 +5,9 @@
 # columns and the scope-spawn-vs-parked-pool dispatch row at 1M params)
 # and the coordinator-overhead probe (skips cleanly when artifacts/ is
 # absent), plus the data-pipeline throughput probe (writes BENCH_data.json
-# with direct-vs-prefetch tokens/sec per provider kind).
+# with direct-vs-prefetch tokens/sec per provider kind) and the serving
+# scheduler probe (writes BENCH_serving.json with continuous-vs-static
+# requests/sec, tokens/sec and TTFT at 1/4/8 slots).
 #
 # Knobs:
 #   SOPHIA_BENCH_SCALE=0.05   shrink every workload (default here; 1.0 =
@@ -30,3 +32,4 @@ echo "== bench smoke (SOPHIA_BENCH_SCALE=$SOPHIA_BENCH_SCALE) =="
 cargo bench --bench perf_kernels
 cargo bench --bench perf_l3_overhead
 cargo bench --bench data_throughput
+cargo bench --bench serve_throughput
