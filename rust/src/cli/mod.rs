@@ -178,8 +178,9 @@ USAGE: sophia <subcommand> [--flags]
           the server streams Token frames as rows decode and closes with
           Done. Freed batch slots are backfilled mid-flight from the queue
           — `slot_refills` in the end-of-run health banner counts them.
-          --max-requests N serves exactly N requests then exits (0 = run
-          until killed); --port-file writes the bound address for test
+          --max-requests N serves exactly N requests then exits, answering
+          requests still queued past the limit with an error frame (0 =
+          run until killed); --port-file writes the bound address for test
           harnesses. Wire format: docs/PROTOCOL.md § SSV1.)
   eval   --preset b1 --ckpt runs/ckpt [--tasks copy,arithmetic] [--n 20]
   toy    [--steps 50] [--out toy.csv]

@@ -299,6 +299,14 @@ impl DecoderPool {
         self.queue.push_back((req, Instant::now()));
     }
 
+    /// Drop every queued-but-unadmitted request and return their ids, in
+    /// submission order. Rows already occupying slots are untouched —
+    /// this is how the server stops at an exact `max_requests` without
+    /// abandoning work that is mid-flight.
+    pub fn cancel_queued(&mut self) -> Vec<u64> {
+        self.queue.drain(..).map(|(req, _)| req.id).collect()
+    }
+
     fn admit(&mut self, events: &mut Vec<PoolEvent>) {
         let busy = self.active();
         if self.mode == BatchMode::Static && busy > 0 {
@@ -525,6 +533,26 @@ mod tests {
         assert_eq!(done[&0], Vec::<i32>::new());
         assert_eq!(done[&0], serial(&r, Some(first)));
         assert_eq!(pool.counters.tokens_generated, 0);
+    }
+
+    #[test]
+    fn cancel_queued_drops_only_unadmitted_requests() {
+        let mut pool =
+            DecoderPool::new(Box::new(backend()), 1, BatchMode::Continuous, None).unwrap();
+        let rs = reqs(3);
+        for r in &rs {
+            pool.submit(r.clone());
+        }
+        // one step admits request 0 into the single slot
+        pool.step().unwrap();
+        assert_eq!(pool.active(), 1);
+        assert_eq!(pool.cancel_queued(), vec![1, 2]);
+        assert_eq!(pool.queued(), 0);
+        // the admitted row still runs to completion, untouched
+        let done = drain(&mut pool);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[&0], serial(&rs[0], None));
+        assert_eq!(pool.counters.requests_served, 1);
     }
 
     #[test]

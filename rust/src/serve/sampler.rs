@@ -49,13 +49,18 @@ impl Sampler {
     }
 }
 
-/// Last-max argmax with a total order, so tied logits resolve the same
-/// way `eval::Decoder::next_token` resolves them and a NaN logit cannot
-/// panic the serving loop.
+/// Last-max argmax, so tied logits resolve the same way
+/// `eval::Decoder::next_token` resolves them. NaN logits are skipped
+/// outright: a NaN can neither win nor panic the serving loop (the
+/// serial `Decoder` would panic on one, which a server cannot afford).
 pub fn argmax(logits: &[f32]) -> i32 {
     let mut best = 0usize;
     for i in 1..logits.len() {
-        if logits[i].total_cmp(&logits[best]) != std::cmp::Ordering::Less {
+        if logits[i].is_nan() {
+            continue;
+        }
+        if logits[best].is_nan() || logits[i].total_cmp(&logits[best]) != std::cmp::Ordering::Less
+        {
             best = i;
         }
     }
@@ -95,6 +100,10 @@ mod tests {
         assert_eq!(argmax(&[3.0]), 0);
         // NaN must not panic and must not win
         assert_eq!(argmax(&[f32::NAN, 1.0, 5.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NEG_INFINITY]), 1);
+        // all-NaN rows still return a valid index
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
     }
 
     #[test]

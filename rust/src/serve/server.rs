@@ -24,7 +24,7 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -34,7 +34,9 @@ pub struct ServeConfig {
     pub listen: String,
     /// Batch slots (clamped to the widest resident program).
     pub slots: usize,
-    /// Serve exactly this many requests then exit; 0 = run until killed.
+    /// Exit after exactly this many requests complete; requests still
+    /// queued behind the slots at that point are answered with an error
+    /// frame rather than served. 0 = run until killed.
     pub max_requests: usize,
     /// Server-side ceiling on a request's `max_new`.
     pub max_new_cap: usize,
@@ -110,6 +112,7 @@ impl Server {
 
         let frames_rejected = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let (job_tx, job_rx) = channel::<Job>();
         let acceptor = spawn_acceptor(
             self.listener.try_clone()?,
@@ -117,6 +120,7 @@ impl Server {
             tok.clone(),
             frames_rejected.clone(),
             shutdown.clone(),
+            handlers.clone(),
             Duration::from_millis(self.cfg.io_timeout_ms.max(1)),
         );
 
@@ -155,9 +159,18 @@ impl Server {
                 }
             }
             if target > 0 && pool.counters.requests_served >= target {
-                // stop admitting; drain whatever is still mid-flight
+                // the limit is exact: close the socket-side queue, reject
+                // anything still queued behind the slots, and let only the
+                // rows already mid-flight finish
                 job_rx = None;
-                if pool.active() == 0 && pool.queued() == 0 {
+                for id in pool.cancel_queued() {
+                    if let Some(tx) = routes.remove(&id) {
+                        let _ = tx.send(Out::Err(format!(
+                            "request dropped: server reached its {target}-request limit"
+                        )));
+                    }
+                }
+                if pool.active() == 0 {
                     break;
                 }
             }
@@ -165,6 +178,15 @@ impl Server {
         shutdown.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr); // unblock accept()
         let _ = acceptor.join();
+        // every route is answered or disconnected by now; dropping the
+        // senders unblocks any handler still waiting on its event stream,
+        // and joining the handlers keeps the process alive until the last
+        // in-flight Done/Error frames are actually flushed to their peers
+        drop(routes);
+        let joins = std::mem::take(&mut *handlers.lock().expect("handler registry"));
+        for h in joins {
+            let _ = h.join();
+        }
         let c = &pool.counters;
         Ok(HealthCounters {
             requests_served: c.requests_served,
@@ -219,6 +241,7 @@ fn spawn_acceptor(
     tok: Arc<dyn Tokenizer>,
     rejected: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     timeout: Duration,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
@@ -230,7 +253,8 @@ fn spawn_acceptor(
             let job_tx = job_tx.clone();
             let tok = tok.clone();
             let rejected = rejected.clone();
-            std::thread::spawn(move || handle_conn(stream, job_tx, tok, rejected, timeout));
+            let h = std::thread::spawn(move || handle_conn(stream, job_tx, tok, rejected, timeout));
+            handlers.lock().expect("handler registry").push(h);
         }
     })
 }
@@ -548,6 +572,43 @@ mod tests {
         let counters = h.join().unwrap();
         assert_eq!(counters.frames_rejected, 0);
         assert_eq!(counters.requests_served, 1);
+    }
+
+    #[test]
+    fn max_requests_limit_is_exact_under_oversubscription() {
+        let (addr, h) = start(ServeConfig {
+            slots: 1,
+            max_requests: 1,
+            stop_on_eot: false,
+            io_timeout_ms: 2_000,
+            ..ServeConfig::default()
+        });
+        // 3 contenders for a 1-request budget: whichever is admitted
+        // first wins; the others must get an error frame, whether they
+        // were queued behind the slot or never admitted at all
+        let handles: Vec<_> = (0..3u64)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    client_request(
+                        &addr,
+                        &WireRequest {
+                            prompt: format!("contender {i}"),
+                            max_new: 16,
+                            temperature: 0.0,
+                            top_k: 0,
+                            seed: 0,
+                        },
+                        Duration::from_secs(30),
+                    )
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|t| t.join().unwrap()).collect();
+        let counters = h.join().unwrap();
+        assert_eq!(counters.requests_served, 1);
+        let served: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
+        assert_eq!(served.len(), 1, "exactly one request may complete: {results:?}");
+        assert_eq!(served[0].tokens.len(), 16);
     }
 
     #[test]

@@ -310,25 +310,33 @@ pub enum ServerMsg {
     Error { message: String },
 }
 
+/// Clip a string to `MAX_STR_LEN` bytes at a char boundary: every
+/// encoder runs its strings through this, so the server can never emit a
+/// frame the decoder on the other side must reject, however long the
+/// decoded completion or error text grew.
+fn clip(s: &str) -> &str {
+    let mut cut = s.len().min(MAX_STR_LEN);
+    while !s.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    &s[..cut]
+}
+
 pub fn encode_token(index: u32, token: i32, piece: &str) -> Vec<u8> {
     let mut e = Enc::new(TAG_TOKEN);
-    e.u32(index).u32(token as u32).str(piece);
+    e.u32(index).u32(token as u32).str(clip(piece));
     e.finish()
 }
 
 pub fn encode_done(tokens: &[i32], text: &str) -> Vec<u8> {
     let mut e = Enc::new(TAG_DONE);
-    e.i32s(tokens).str(text);
+    e.i32s(tokens).str(clip(text));
     e.finish()
 }
 
 pub fn encode_error(message: &str) -> Vec<u8> {
-    let mut cut = message.len().min(MAX_STR_LEN);
-    while !message.is_char_boundary(cut) {
-        cut -= 1;
-    }
     let mut e = Enc::new(TAG_ERROR);
-    e.str(&message[..cut]);
+    e.str(clip(message));
     e.finish()
 }
 
@@ -474,6 +482,24 @@ mod tests {
         assert_eq!(decode_server_msg(&encode_done(&[1, 2, 300], "abc")).unwrap(), d);
         let e = ServerMsg::Error { message: "nope".into() };
         assert_eq!(decode_server_msg(&encode_error("nope")).unwrap(), e);
+    }
+
+    #[test]
+    fn oversize_strings_clipped_to_decodable_frames() {
+        // leading ASCII byte shifts every 'é' to an odd offset, so the
+        // cap lands mid-char and the clip must step back to a boundary
+        let big = format!("x{}", "é".repeat(MAX_STR_LEN));
+        for payload in [encode_done(&[1, 2], &big), encode_token(0, 1, &big), encode_error(&big)]
+        {
+            let s = match decode_server_msg(&payload).expect("clipped frame must decode") {
+                ServerMsg::Done { text, .. } => text,
+                ServerMsg::Token { piece, .. } => piece,
+                ServerMsg::Error { message } => message,
+            };
+            assert!(s.len() <= MAX_STR_LEN, "clip left {} bytes", s.len());
+            assert!(s.len() >= MAX_STR_LEN - 4, "clip removed too much: {} bytes", s.len());
+            assert!(big.starts_with(&s));
+        }
     }
 
     #[test]
